@@ -1,0 +1,47 @@
+"""Table 5 + §4.2.3: balancing memory between the recency buffer and sparse
+codes at a fixed total KV budget — and the no-buffer degradation (Figure 7).
+The paper's claim: neither extreme wins; intermediate (s, n_b) splits are
+best, and removing the buffer entirely hurts sharply at low KV sizes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, trained_params
+from benchmarks.memory_fidelity import rollout_fidelity, trained_bank
+from repro.configs.base import LexicoConfig
+from repro.models.cache_policy import LexicoPolicy
+from repro.data.synthetic import SyntheticCorpus
+
+
+def run(emit):
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    tokens = jnp.asarray(corpus.sample(4, 48, seed=555), jnp.int32)
+    Tp, m, N = 32, cfg.hd, 192
+    bank = trained_bank(params, cfg, N, 16)
+
+    # fixed budget ~= 25% of full: trade buffer slots for sparsity
+    combos = [(1, 16), (4, 12), (8, 8), (14, 2)]
+    scores = {}
+    for s, n_b in combos:
+        lex = LexicoConfig(N=N, s=s, n_b=max(n_b, 1), chunk=None, codec="fp8")
+        a, d = rollout_fidelity(cfg, params, LexicoPolicy(lex), bank, tokens, Tp)
+        scores[(s, n_b)] = a
+        emit(f"buffer_balance/s{s}_nb{n_b}/top1_agree", a)
+        emit(f"buffer_balance/s{s}_nb{n_b}/mean_dlogit", d)
+    best = max(scores, key=scores.get)
+    emit("buffer_balance/best_is_intermediate",
+         float(best not in [combos[0], combos[-1]]))
+
+    # no-buffer ablation (Figure 7): same s, n_b -> 1 (minimum ring slot)
+    for s in (4, 8):
+        with_buf = scores.get((s, 12 if s == 4 else 8))
+        lex = LexicoConfig(N=N, s=s, n_b=1, chunk=None, codec="fp8")
+        a_nb, _ = rollout_fidelity(cfg, params, LexicoPolicy(lex), bank, tokens, Tp)
+        emit(f"buffer_balance/no_buffer_s{s}/top1_agree", a_nb)
+        if with_buf is not None:
+            emit(f"buffer_balance/no_buffer_s{s}/buffer_helps",
+                 float(with_buf >= a_nb - 0.02))

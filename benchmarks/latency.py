@@ -1,0 +1,65 @@
+"""Table 7: latency decomposition — standard forward (qK^T) vs Lexico's
+compressed-score path vs OMP compression, per decode token.
+
+CPU wall-times are not TPU numbers; the deliverable is (a) the decomposition
+and (b) the *derived* v5e-time from the roofline byte counts — the dry-run
+§Roofline carries the production-scale version. N=192 vs N=768 reproduces the
+paper's observation that dictionary size mostly moves OMP time, barely the
+forward pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core.attention import compressed_scores, decode_attention
+from repro.core.omp import omp_batch
+from repro.core.dictionary import init_dictionary
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    B, KV, G, m, T, s, n_b = 2, 4, 2, 64, 1024, 16, 32
+    q = jnp.asarray(rng.normal(size=(B, KV, G, m)), jnp.float32)
+    K_cache = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.bfloat16)
+
+    @jax.jit
+    def std_scores(q, K):
+        return jnp.einsum("bkgm,bktm->bkgt", q.astype(jnp.float32),
+                          K.astype(jnp.float32))
+
+    t_std = timer(std_scores, q, K_cache)
+    emit("latency/std_qKT_us", t_std)
+
+    for N in (192, 768):
+        D = init_dictionary(jax.random.PRNGKey(0), m, N)
+        vals = jnp.asarray(rng.normal(size=(B, KV, T, s)), jnp.float8_e4m3fn)
+        idx = jnp.asarray(rng.integers(0, N, (B, KV, T, s)), jnp.int16)
+
+        @jax.jit
+        def lex_scores(q, vals, idx):
+            qd = jnp.einsum("bkgm,mn->bkgn", q.astype(jnp.float32), D)
+            return compressed_scores(qd, vals, idx, scale=1.0)
+
+        t_lex = timer(lex_scores, q, vals, idx)
+        emit(f"latency/lexico_scores_N{N}_us", t_lex)
+
+        X = jnp.asarray(rng.normal(size=(B * KV, m)), jnp.float32)
+        G_ = D.T @ D
+
+        @jax.jit
+        def omp_step(X):
+            return omp_batch(X, D, s, use_gram=True, G=G_).vals
+
+        t_omp = timer(omp_step, X)
+        emit(f"latency/omp_na{B*KV}_N{N}_us", t_omp)
+
+    # derived v5e decode-time bound from bytes: compressed read (3s+2)/token
+    # vs dense 2*m bytes/token at 819 GB/s
+    from repro.core.quant import payload_bytes
+    dense_bytes = 2 * m * 2 * T * B * KV
+    lex_bytes = 2 * payload_bytes(s) * T * B * KV
+    emit("latency/v5e_dense_cache_read_us", 1e6 * dense_bytes / 819e9)
+    emit("latency/v5e_lexico_cache_read_us", 1e6 * lex_bytes / 819e9)
+    emit("latency/v5e_read_speedup", dense_bytes / lex_bytes)

@@ -1,0 +1,81 @@
+"""End-to-end serving driver: batched requests through prefill + decode with
+the Lexico cache policy, reporting KV memory vs the full cache and fidelity
+against the uncompressed model.
+
+    PYTHONPATH=src python examples/serve_lexico.py [--s 8] [--new-tokens 24]
+
+This is the paper's deployment story in one file: one universal dictionary
+bank serves every request in the batch; the cache stores 3s+2 bytes/vector
+instead of 2*head_dim.
+"""
+import argparse
+import os
+import sys
+
+# examples use the benchmark substrate (trained toy model);
+# make the repo root importable regardless of invocation dir
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..'))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, trained_params
+from benchmarks.memory_fidelity import trained_bank
+from repro.configs.base import LexicoConfig
+from repro.core import sparse_cache
+from repro.data.synthetic import SyntheticCorpus
+from repro.models import model as M
+from repro.models.cache_policy import DensePolicy, LexicoPolicy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--s", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N = 192
+    bank = trained_bank(params, cfg, N, min(args.s, 16))
+    lex = LexicoConfig(N=N, s=args.s, n_b=8, chunk=None, codec="fp8")
+    policy = LexicoPolicy(lex)
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    prompts = jnp.asarray(corpus.sample(args.batch, args.prompt_len, seed=42),
+                          jnp.int32)
+    t_max = args.prompt_len + args.new_tokens + 8
+
+    print(f"prefill: batch={args.batch} prompt={args.prompt_len} s={args.s}")
+    lg, state = M.prefill(params, cfg, policy, {"tokens": prompts},
+                          bank=bank, t_max=t_max)
+    # greedy decode, Lexico vs full cache side by side
+    lg_d, state_d = M.prefill(params, cfg, DensePolicy(), {"tokens": prompts},
+                              bank=None, t_max=t_max)
+    tok, tok_d = jnp.argmax(lg, -1), jnp.argmax(lg_d, -1)
+    agree = [float(jnp.mean(tok == tok_d))]
+    outs = [tok]
+    for i in range(args.new_tokens - 1):
+        lg, state = M.decode_step(params, cfg, policy, state, tok, bank=bank)
+        lg_d, state_d = M.decode_step(params, cfg, DensePolicy(), state_d, tok_d,
+                                      bank=None)
+        tok, tok_d = jnp.argmax(lg, -1), jnp.argmax(lg_d, -1)
+        agree.append(float(jnp.mean(tok == tok_d)))
+        outs.append(tok)
+
+    total = args.prompt_len + args.new_tokens
+    pct = sparse_cache.kv_size_percent(t_c=total - lex.n_b, n_b=lex.n_b,
+                                       s=args.s, m=cfg.hd)
+    print(f"generated {args.new_tokens} tokens/request")
+    print(f"greedy-token agreement with full cache: {np.mean(agree):.2%}")
+    print(f"KV size: {pct:.1f}% of FP16 full cache "
+          f"(paper law: 1.17*s% + buffer)")
+    print("sample continuation (request 0):",
+          np.asarray(jnp.stack(outs))[:, 0].tolist())
+
+
+if __name__ == "__main__":
+    main()

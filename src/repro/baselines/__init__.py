@@ -1,0 +1,8 @@
+"""Baselines the paper compares against (Tables 2-3, Figure 1):
+KIVI (per-channel key / per-token value group quantization), HF-style
+per-token quantization, and SnapKV/H2O-flavoured eviction — all implemented
+as CachePolicy objects so they run through the same serving stack as Lexico.
+"""
+from repro.baselines.kivi import KIVIPolicy
+from repro.baselines.per_token_quant import PerTokenQuantPolicy
+from repro.baselines.eviction import EvictionPolicy

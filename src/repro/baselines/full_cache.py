@@ -1,0 +1,3 @@
+"""Full-precision cache baseline — re-export of DensePolicy (paper's
+'Full Cache' rows) for symmetric imports from benchmarks."""
+from repro.models.cache_policy import DenseCache, DensePolicy  # noqa: F401

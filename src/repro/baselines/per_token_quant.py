@@ -1,0 +1,115 @@
+"""HF-style per-token KV quantization (the paper's 'Per-Token' baseline).
+
+Every cached vector is quantized independently (asymmetric min/max over its
+channels) at ``bits`` precision, with a small residual window of recent
+tokens in full precision (HF's `KVQuant`-style residual_length).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines.kivi import _dequant, _quant
+
+Array = jax.Array
+
+
+class PTQCache(NamedTuple):
+    k_q: Array      # (B, KV, T_max, m) uint8
+    k_scale: Array  # (B, KV, T_max, 1)
+    k_zero: Array
+    v_q: Array
+    v_scale: Array
+    v_zero: Array
+    k_buf: Array    # (B, KV, n_b, m)
+    v_buf: Array
+    t_q: Array
+    buf_len: Array
+    buf_start: Array
+
+
+class PerTokenQuantPolicy:
+    def __init__(self, bits: int = 4, n_b: int = 128):
+        self.bits, self.n_b = bits, n_b
+
+    def init(self, batch, kv_heads, head_dim, t_max):
+        tq = max(t_max - self.n_b, 1)
+        z8 = jnp.zeros((batch, kv_heads, tq, head_dim), jnp.uint8)
+        zs = jnp.zeros((batch, kv_heads, tq, 1), jnp.float32)
+        zb = jnp.zeros((batch, kv_heads, self.n_b, head_dim), jnp.bfloat16)
+        return PTQCache(z8, zs, zs, z8, zs, zs, zb, zb,
+                        jnp.int32(0), jnp.int32(0), jnp.int32(0))
+
+    def prefill(self, cache, K, V, ctx):
+        B, KV, T, m = K.shape
+        n_q = T - self.n_b
+        kq, ks, kz = _quant(K[:, :, :n_q].astype(jnp.float32), self.bits, axis=-1)
+        vq, vs, vz = _quant(V[:, :, :n_q].astype(jnp.float32), self.bits, axis=-1)
+        upd = lambda a, b: jax.lax.dynamic_update_slice(a, b, (0, 0, 0, 0))
+        return cache._replace(
+            k_q=upd(cache.k_q, kq), k_scale=upd(cache.k_scale, ks),
+            k_zero=upd(cache.k_zero, kz),
+            v_q=upd(cache.v_q, vq), v_scale=upd(cache.v_scale, vs),
+            v_zero=upd(cache.v_zero, vz),
+            k_buf=K[:, :, n_q:].astype(cache.k_buf.dtype),
+            v_buf=V[:, :, n_q:].astype(cache.v_buf.dtype),
+            t_q=jnp.int32(n_q), buf_len=jnp.int32(self.n_b), buf_start=jnp.int32(0))
+
+    def decode(self, cache, k_t, v_t, ctx):
+        n_b = self.n_b
+        full = cache.buf_len >= n_b
+        old_k = jax.lax.dynamic_slice_in_dim(cache.k_buf, cache.buf_start, 1, axis=2)
+        old_v = jax.lax.dynamic_slice_in_dim(cache.v_buf, cache.buf_start, 1, axis=2)
+        kq, ks, kz = _quant(old_k.astype(jnp.float32), self.bits, axis=-1)
+        vq, vs, vz = _quant(old_v.astype(jnp.float32), self.bits, axis=-1)
+
+        def store(arr, new):
+            cur = jax.lax.dynamic_slice(arr, (0, 0, cache.t_q, 0), new.shape)
+            return jax.lax.dynamic_update_slice(
+                arr, jnp.where(full, new.astype(arr.dtype), cur), (0, 0, cache.t_q, 0))
+
+        cache = cache._replace(
+            k_q=store(cache.k_q, kq), k_scale=store(cache.k_scale, ks),
+            k_zero=store(cache.k_zero, kz),
+            v_q=store(cache.v_q, vq), v_scale=store(cache.v_scale, vs),
+            v_zero=store(cache.v_zero, vz),
+            t_q=jnp.where(full, cache.t_q + 1, cache.t_q))
+        write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
+        k_buf = jax.lax.dynamic_update_slice(
+            cache.k_buf, k_t[:, :, None].astype(cache.k_buf.dtype), (0, 0, write_pos, 0))
+        v_buf = jax.lax.dynamic_update_slice(
+            cache.v_buf, v_t[:, :, None].astype(cache.v_buf.dtype), (0, 0, write_pos, 0))
+        return cache._replace(
+            k_buf=k_buf, v_buf=v_buf,
+            buf_len=jnp.where(full, cache.buf_len, cache.buf_len + 1),
+            buf_start=jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start))
+
+    def attend(self, cache, q, ctx, *, window=None):
+        from repro.core.attention import NEG_INF
+        B, KV, G, m = q.shape
+        qf = q.astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(m))
+        k_deq = _dequant(cache.k_q, cache.k_scale, cache.k_zero)
+        v_deq = _dequant(cache.v_q, cache.v_scale, cache.v_zero)
+        Tq = k_deq.shape[2]
+        s_q = jnp.einsum("bkgm,bktm->bkgt", qf, k_deq) * scale
+        pos = jnp.arange(Tq)[None, None, None]
+        valid = pos < cache.t_q
+        if window is not None:
+            valid &= pos >= (cache.t_q + cache.buf_len - window)
+        s_q = jnp.where(valid, s_q, NEG_INF)
+        s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, cache.k_buf.astype(jnp.float32)) * scale
+        nb = cache.k_buf.shape[2]
+        s_b = jnp.where(jnp.arange(nb)[None, None, None] < cache.buf_len, s_b, NEG_INF)
+        p = jax.nn.softmax(jnp.concatenate([s_q, s_b], axis=-1), axis=-1)
+        out = jnp.einsum("bkgt,bktm->bkgm", p[..., :Tq], v_deq)
+        out += jnp.einsum("bkgr,bkrm->bkgm", p[..., Tq:], cache.v_buf.astype(jnp.float32))
+        return out
+
+    def length(self, cache):
+        return cache.t_q + cache.buf_len
+
+    def kv_size_fraction(self, m: int) -> float:
+        return (m * self.bits / 8 + 8) / (2 * m)

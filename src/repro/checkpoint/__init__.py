@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import (
+    CheckpointManager, restore_pytree, save_pytree,
+)

@@ -1,0 +1,38 @@
+"""Architecture registry: ``get(name)`` / ``get_smoke(name)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import LexicoConfig, MLAConfig, ModelConfig, MoEConfig, RWKVConfig, SSMConfig, SHAPES
+
+_MODULES = {
+    "chameleon-34b": "chameleon_34b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "llama3.2-1b": "llama3_2_1b",
+    "mistral-large-123b": "mistral_large_123b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "hymba-1.5b": "hymba_1_5b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-3b": "rwkv6_3b",
+}
+ARCHS = tuple(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _mod(name).smoke_config()
+
+
+__all__ = ["ARCHS", "SHAPES", "get", "get_smoke", "ModelConfig", "LexicoConfig",
+           "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig"]

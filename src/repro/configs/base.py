@@ -1,0 +1,183 @@
+"""Config system: architecture + technique + run configs.
+
+Every assigned architecture gets a module in this package exporting
+``CONFIG: ModelConfig`` (the exact assigned shape) and ``smoke_config()``
+(a reduced same-family config for CPU tests). ``repro.configs.get(name)``
+resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    d_ff_shared: int = 0          # hidden dim of the shared-expert MLP
+    router_dtype: str = "float32"
+    # Expert-bucket capacity = tokens*top_k/E * capacity_factor. Overflow is
+    # dropped (standard at scale; makes routing weakly non-causal). Tests and
+    # decode paths use a dropless factor (= num_experts/top_k upper bound).
+    capacity_factor: float = 1.25
+    # 'sort' = pjit scatter dispatch (baseline); 'ep_local' = shard_map
+    # zero-dispatch-comm EP (beyond-paper; see models/moe.py + §Perf)
+    dispatch: str = "sort"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    q_lora_rank: Optional[int] = None   # None = dense q projection (V2-Lite)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    conv_width: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None       # default ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    qk_norm: bool = False
+    norm: str = "rmsnorm"                   # rmsnorm | layernorm
+    act: str = "swiglu"                     # swiglu | gelu
+    use_rope: bool = True                   # whisper: learned/sinusoidal instead
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    sliding_window: Optional[int] = None    # SWA width (hymba non-global layers)
+    global_attn_layers: Tuple[int, ...] = ()  # layers exempt from SWA
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    attn_free: bool = False                 # rwkv6: no attention at all
+    parallel_ssm: bool = False              # hymba: attn + ssm heads in parallel
+    enc_dec: bool = False                   # whisper
+    enc_layers: int = 0
+    enc_max_frames: int = 1500
+    num_meta_tokens: int = 0                # hymba meta tokens (learnable prefix)
+    max_seq_len: int = 131_072
+    param_dtype: str = "bfloat16"
+    # store attention probabilities in bf16 inside the blocked kernel-stream
+    # (halves the dominant T^2 HBM traffic of long prefill; §Perf)
+    attn_probs_bf16: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def cached_vector_dim(self) -> int:
+        """Dim of the vector Lexico compresses per cached token.
+
+        MLA caches one latent (c_kv ‖ k_rope) per token; everything else
+        caches per-KV-head k/v of head_dim."""
+        if self.mla is not None:
+            return self.mla.kv_lora_rank + self.mla.rope_head_dim
+        return self.hd
+
+    @property
+    def cache_kv_heads(self) -> int:
+        return 1 if self.mla is not None else self.num_kv_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings included once if tied)."""
+        d, f, L, V = self.d_model, self.d_ff, self.num_layers, self.vocab_size
+        hd, H, KV = self.hd, self.num_heads, self.num_kv_heads
+        if self.rwkv is not None:
+            att = d * d * 4 + 3 * d * self.rwkv.decay_lora  # r,k,v,o + loras (approx)
+            ffn = 2 * d * self.d_ff + self.d_ff * d
+            core = L * (att + ffn)
+        else:
+            if self.mla is not None:
+                c = self.mla
+                att = (d * H * (c.nope_head_dim + c.rope_head_dim)
+                       + d * (c.kv_lora_rank + c.rope_head_dim)
+                       + c.kv_lora_rank * H * (c.nope_head_dim + c.v_head_dim)
+                       + H * c.v_head_dim * d)
+            else:
+                att = d * H * hd + 2 * d * KV * hd + H * hd * d
+            if self.moe is not None:
+                e = self.moe
+                mult = 3 if self.act == "swiglu" else 2
+                ffn = (e.num_experts * mult * d * e.d_ff_expert
+                       + e.num_shared * mult * d * max(e.d_ff_shared, e.d_ff_expert)
+                       + d * e.num_experts)
+            else:
+                mult = 3 if self.act == "swiglu" else 2
+                ffn = mult * d * f
+            ssm = 0
+            if self.ssm is not None:
+                di = self.ssm.expand * d
+                ssm = 2 * d * di + di * self.ssm.conv_width + di * (2 * self.ssm.state_dim) + di * d
+            core = L * (att + ffn + ssm)
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        enc = 0
+        if self.enc_dec:
+            enc = self.enc_layers * (4 * d * d + (3 if self.act == "swiglu" else 2) * d * f)
+            core += L * 2 * d * d  # cross-attn kv/out approx
+        return core + emb + enc
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        mult = 3 if self.act == "swiglu" else 2
+        full_ffn = e.num_experts * mult * self.d_model * e.d_ff_expert
+        act_ffn = (e.top_k + e.num_shared) * mult * self.d_model * e.d_ff_expert
+        return self.param_count() - self.num_layers * (full_ffn - act_ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class LexicoConfig:
+    """Technique config (paper defaults: N=4096, n_b=128, n_a=1, fp8 codec)."""
+    gram_dtype: str = "float32"   # 'bfloat16' halves stored-Gram traffic
+    N: int = 4096
+    s: int = 16
+    n_b: int = 128
+    n_a: int = 1
+    delta: float = 0.0            # 0 = fixed sparsity; >0 = error-threshold mode
+    codec: str = "fp8"            # fp8 | int8 | fp16
+    use_gram: bool = True
+    chunk: Optional[int] = 2048   # flash-decode chunk; None = paper-faithful
+    enabled: bool = True
+
+    @property
+    def val_dtype(self):
+        return {"fp8": jnp.float8_e4m3fn, "int8": jnp.int8, "fp16": jnp.bfloat16}[self.codec]
+
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode"),
+}

@@ -1,0 +1,38 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512 [arXiv:2405.04434].
+
+27L d_model=2048 16H d_ff=1408 (per expert) vocab=102400, MoE with 2 shared +
+64 routed experts top-6 (the assignment sheet lists both "64e top-6" and
+"2 shared+160 routed"; the published V2-Lite is 64 routed + 2 shared, top-6 —
+we use that; see DESIGN.md). MLA: kv_lora_rank=512, rope_head_dim=64,
+nope/v head dims 128. V2-Lite has a dense-FFN first layer; we keep all layers
+MoE for the scan-uniform stack (shared experts provide the dense path — noted
+in DESIGN.md).
+
+Lexico note: the cached vector is the MLA latent (c_kv ‖ k_rope), dim 576 —
+the dictionary lives in that space and query-side MLA absorption composes
+with the qD trick (see models/mla.py).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    num_layers=27, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=102_400,
+    rope_theta=10_000.0,
+    mla=MLAConfig(kv_lora_rank=512, rope_head_dim=64, nope_head_dim=128,
+                  v_head_dim=128, q_lora_rank=None),
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408, num_shared=2,
+                  d_ff_shared=1408),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=96, vocab_size=256, param_dtype="float32",
+        mla=MLAConfig(kv_lora_rank=32, rope_head_dim=16, nope_head_dim=16,
+                      v_head_dim=16, q_lora_rank=None),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96, num_shared=1,
+                      d_ff_shared=96, capacity_factor=4.0),
+    )

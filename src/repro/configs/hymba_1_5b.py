@@ -1,0 +1,30 @@
+"""hymba-1.5b [hybrid] — parallel attn + mamba heads [arXiv:2411.13676].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Each layer runs attention heads and Mamba (selective-SSM) heads in parallel
+on the same input and fuses (mean of per-path normed outputs). Most layers
+use sliding-window attention; layers {0, mid, last} stay global. Hymba's 128
+meta tokens are learnable prefix embeddings prepended to the sequence.
+Lexico compresses the attention path's KV; the SSM state is O(1) per layer.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    d_ff=5504, vocab_size=32001,
+    sliding_window=1024, global_attn_layers=(0, 15, 31),
+    parallel_ssm=True, ssm=SSMConfig(state_dim=16, conv_width=4, expand=2),
+    num_meta_tokens=128,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-smoke", family="hybrid",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=256, param_dtype="float32",
+        sliding_window=16, global_attn_layers=(0,),
+        parallel_ssm=True, ssm=SSMConfig(state_dim=4, conv_width=4, expand=2),
+        num_meta_tokens=4,
+    )

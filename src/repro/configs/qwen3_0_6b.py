@@ -1,0 +1,22 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B].
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    num_layers=28, d_model=1024, num_heads=16, num_kv_heads=8,
+    head_dim=128,  # qwen3 uses head_dim 128 (> d_model/heads)
+    d_ff=3072, vocab_size=151_936, qk_norm=True,
+    rope_theta=1_000_000.0, tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, qk_norm=True, tie_embeddings=True,
+        param_dtype="float32",
+    )

@@ -1,0 +1,25 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536 (per expert) vocab=151936,
+MoE 128e top-8, qk-norm. No shared experts (Qwen3 MoE).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536, vocab_size=151_936, qk_norm=True,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536, num_shared=0),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=96, vocab_size=256, qk_norm=True, param_dtype="float32",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96, num_shared=0,
+                      capacity_factor=4.0),
+    )

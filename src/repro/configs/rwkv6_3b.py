@@ -1,0 +1,26 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay [arXiv:2404.05892].
+
+32L d_model=2560 (attention-free) d_ff=8960 vocab=65536. Head dim 64
+(40 heads). No KV cache exists — Lexico is inapplicable (recorded in
+DESIGN.md §Arch-applicability); the serve path carries the constant-size
+wkv state, so long_500k decode runs at O(1) memory per token.
+"""
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    num_layers=32, d_model=2560, num_heads=40, num_kv_heads=40,
+    d_ff=8960, vocab_size=65536,
+    attn_free=True, rwkv=RWKVConfig(head_dim=64, decay_lora=64, mix_lora=32),
+    norm="layernorm",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=256, param_dtype="float32",
+        attn_free=True, rwkv=RWKVConfig(head_dim=16, decay_lora=8, mix_lora=8),
+        norm="layernorm",
+    )

@@ -1,0 +1,22 @@
+"""starcoder2-3b [dense] — GQA, RoPE [arXiv:2402.19173].
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152. StarCoder2 uses
+LayerNorm + GELU MLPs (not RMSNorm/SwiGLU).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    num_layers=30, d_model=3072, num_heads=24, num_kv_heads=2,
+    d_ff=12288, vocab_size=49152,
+    norm="layernorm", act="gelu", rope_theta=100_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=256, norm="layernorm", act="gelu",
+        param_dtype="float32",
+    )

@@ -1,0 +1,27 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865. The mel/conv frontend is a
+STUB per the assignment: input_specs() provides precomputed frame embeddings
+(B, T_frames, d_model). Whisper uses LayerNorm + GELU, learned positional
+embeddings on the decoder, sinusoidal on the encoder, no RoPE.
+Lexico compresses the decoder self-attention cache and the (once-computed)
+cross-attention KV.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    norm="layernorm", act="gelu", use_rope=False,
+    enc_dec=True, enc_layers=4, enc_max_frames=1500,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=256, norm="layernorm", act="gelu", use_rope=False,
+        enc_dec=True, enc_layers=2, enc_max_frames=32, param_dtype="float32",
+    )

@@ -1,0 +1,15 @@
+"""Lexico core: sparse-coded KV cache compression over universal dictionaries."""
+from repro.core.omp import OMPResult, omp_batch, omp_multi_dict, omp_single, reconstruct
+from repro.core.dictionary import (
+    DictionaryBank, init_bank, init_dictionary, normalize_atoms, project_gradient,
+)
+from repro.core.dict_learning import (
+    DictTrainState, dict_train_init, dict_train_step, relative_error,
+)
+from repro.core.sparse_cache import (
+    LexicoLayerCache, attend, decode_update, init_layer_cache, kv_size_percent,
+    paper_kv_bytes, prefill_compress,
+)
+from repro.core.attention import compressed_scores, compressed_values, decode_attention
+from repro.core.adaptive import AdaptiveDict, adaptive_encode, init_adaptive
+from repro.core import quant

@@ -1,0 +1,65 @@
+"""Adaptive dictionary growth (paper §4.2.4).
+
+Start from the universal dictionary occupying the first ``n_base`` columns of a
+fixed-capacity array D (m, N_total); the tail columns are empty slots. When a
+vector's OMP approximation misses the relative-error threshold δ, the vector
+itself (normalised) is appended as a new atom and its code is the 1-sparse
+(new-slot-index, ℓ2-norm) pair. Growth is sequential over the batch (the atom
+added for vector i is visible to vector i+1) — implemented as a lax.scan so
+the whole thing stays jittable with static shapes.
+
+Grown atoms are input-specific, so their storage counts toward the KV-size
+budget (the paper's accounting) — ``adaptive_extra_bytes`` reports it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import omp as omp_mod
+
+Array = jax.Array
+
+
+class AdaptiveDict(NamedTuple):
+    D: Array        # (m, N_total); columns >= n_used are zero
+    n_base: Array   # scalar int32 — universal atoms
+    n_used: Array   # scalar int32 — total atoms in use
+
+
+def init_adaptive(D_universal: Array, capacity: int) -> AdaptiveDict:
+    m, n_base = D_universal.shape
+    D = jnp.zeros((m, capacity), jnp.float32).at[:, :n_base].set(
+        D_universal.astype(jnp.float32))
+    return AdaptiveDict(D=D, n_base=jnp.int32(n_base), n_used=jnp.int32(n_base))
+
+
+def adaptive_encode(
+    ad: AdaptiveDict, K: Array, *, s: int, delta: float,
+) -> Tuple[AdaptiveDict, omp_mod.OMPResult]:
+    """Encode a batch K (B, m); grow the dictionary on threshold misses."""
+    capacity = ad.D.shape[1]
+
+    def step(carry, k):
+        D, n_used = carry
+        res = omp_mod.omp_single(k.astype(jnp.float32), D, s, delta=delta)
+        norm = jnp.linalg.norm(k)
+        fail = jnp.logical_and(jnp.sqrt(res.resid2) > delta * norm,
+                               n_used < capacity)
+        atom = (k / (norm + 1e-12)).astype(jnp.float32)
+        D_new = jnp.where(fail, D.at[:, n_used].set(atom), D)
+        vals = jnp.where(fail, jnp.zeros_like(res.vals).at[0].set(norm), res.vals)
+        idx = jnp.where(fail, jnp.zeros_like(res.idx).at[0].set(n_used), res.idx)
+        nnz = jnp.where(fail, 1, res.nnz)
+        r2 = jnp.where(fail, 0.0, res.resid2)
+        return (D_new, n_used + fail.astype(jnp.int32)), omp_mod.OMPResult(vals, idx, nnz, r2)
+
+    (D_fin, n_fin), res = jax.lax.scan(step, (ad.D, ad.n_used), K)
+    return ad._replace(D=D_fin, n_used=n_fin), res
+
+
+def adaptive_extra_bytes(ad: AdaptiveDict, dtype_bytes: int = 2) -> Array:
+    """Bytes of grown (non-universal) atoms — charged to the KV budget."""
+    return (ad.n_used - ad.n_base) * ad.D.shape[0] * dtype_bytes

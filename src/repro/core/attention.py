@@ -1,0 +1,163 @@
+"""Compressed-path attention math (paper §3.4, Eq. 7 and Algorithm 2).
+
+The two sparse primitives:
+
+  * ``compressed_scores``  — pre-softmax logits of queries against the sparse
+    key cache: the query is first projected into coefficient space
+    (``qd = q @ D_k``, O(N·m) once per query) and the per-token score is the
+    s-sparse dot ``sum_j vals[t,j] * qd[idx[t,j]]`` (O(s) per token). This is
+    the TPU-native analogue of the paper's ``q·D_k·K_csrᵀ`` SpMV.
+
+  * ``compressed_values``  — attention read-out through the sparse value
+    cache: probabilities are scatter-accumulated into coefficient space
+    (``c[n] += p[t]·vals[t,j]`` for ``n = idx[t,j]``, O(T·s)) and decoded with
+    one dense matmul ``c @ D_vᵀ`` (O(N·m)) — the paper's ``(a·V_csr)·D_vᵀ``.
+
+``decode_attention`` composes them with the full-precision recency buffer into
+the Eq. 7 joint softmax. Two execution modes:
+
+  * ``chunk=None`` — the paper-faithful layout: all compressed logits are
+    materialised, one softmax (what the PyTorch reference does).
+  * ``chunk=C``    — beyond-paper *flash-decode* over the compressed cache:
+    online-softmax scan over token chunks, with the value accumulator kept in
+    coefficient space (N floats/query, decoded once at the end). Peak memory
+    drops from O(T·s) per query-head to O(C·s + N).
+
+Both have Pallas kernel twins in ``repro.kernels``; these jnp forms double as
+the kernels' oracles. GQA layout everywhere: (B, KV, G, ·) — G query heads
+share one KV head.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def compressed_scores(qd: Array, vals: Array, idx: Array, *, scale) -> Array:
+    """Logits (B,KV,G,T) of pre-projected queries qd (B,KV,G,N) against the
+    sparse key cache vals/idx (B,KV,T,s)."""
+    v = vals.astype(jnp.float32)
+    g = jnp.take_along_axis(
+        qd.astype(jnp.float32)[:, :, :, None, :],  # (B,KV,G,1,N)
+        idx.astype(jnp.int32)[:, :, None, :, :],   # (B,KV,1,T,s)
+        axis=-1,
+    )  # (B,KV,G,T,s)
+    return jnp.einsum("bkgts,bkts->bkgt", g, v) * scale
+
+
+def scatter_coeffs(probs: Array, vals: Array, idx: Array, N: int) -> Array:
+    """Coefficient-space accumulation c (B,KV,G,N): c[n] += p[t]·vals[t,j]."""
+    contrib = probs.astype(jnp.float32)[..., None] * vals.astype(jnp.float32)[:, :, None, :, :]
+    flat_idx = jnp.broadcast_to(idx.astype(jnp.int32)[:, :, None, :, :], contrib.shape)
+    B, KV, G = contrib.shape[:3]
+    c0 = jnp.zeros((B, KV, G, N), jnp.float32)
+    return jax.vmap(jax.vmap(jax.vmap(
+        lambda cc, ii, vv: cc.at[ii.reshape(-1)].add(vv.reshape(-1))
+    )))(c0, flat_idx, contrib)
+
+
+def compressed_values(probs: Array, vals: Array, idx: Array, D_v: Array, N: int) -> Array:
+    """Attention output contribution (B,KV,G,m) of the compressed tokens."""
+    c = scatter_coeffs(probs, vals, idx, N)
+    return jnp.einsum("bkgn,mn->bkgm", c, D_v.astype(jnp.float32))
+
+
+def decode_attention(
+    q: Array,                         # (B, KV, G, m) new-token queries
+    k_vals: Array, k_idx: Array,      # compressed keys   (B, KV, T, s)
+    v_vals: Array, v_idx: Array,      # compressed values (B, KV, T, s)
+    k_buf: Array, v_buf: Array,       # (B, KV, n_b, m) full-precision buffer
+    D_k: Array, D_v: Array,           # (m, N)
+    *,
+    t_c: Array,                       # scalar int32: valid compressed tokens
+    buf_len: Array,                   # scalar int32: valid buffer entries
+    N: int,
+    chunk: Optional[int] = None,
+    window: Optional[Array] = None,   # sliding-window width (tokens); None = global
+) -> Array:
+    """One-token attention over [compressed cache || buffer] (Eq. 7).
+
+    The caller has already appended the new token's k/v to the buffer
+    (Algorithm 2 lines 15-16). Returns (B, KV, G, m) in float32.
+    ``window``: only cache positions >= length - window attend (compressed
+    token t sits at absolute position t; buffer entries are always the most
+    recent tokens, assumed inside any window >= n_b).
+    """
+    m = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(m))
+    qf = q.astype(jnp.float32)
+    qd = jnp.einsum("bkgm,mn->bkgn", qf, D_k.astype(jnp.float32))
+    T = k_vals.shape[2]
+    length = t_c + buf_len
+    min_pos = (length - window) if window is not None else jnp.int32(-1)
+
+    # --- buffer logits (always dense, small) ---
+    s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, k_buf.astype(jnp.float32)) * scale
+    n_b = s_b.shape[-1]
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < buf_len, s_b, NEG_INF)
+
+    if chunk is None or chunk >= T:
+        # Paper-faithful: materialise all compressed logits, single softmax.
+        s_c = compressed_scores(qd, k_vals, k_idx, scale=scale)
+        pos = jnp.arange(T)[None, None, None, :]
+        s_c = jnp.where((pos < t_c) & (pos >= min_pos), s_c, NEG_INF)
+        s_all = jnp.concatenate([s_c, s_b], axis=-1)
+        p = jax.nn.softmax(s_all, axis=-1)
+        p_c, p_b = p[..., :T], p[..., T:]
+        out_c = compressed_values(p_c, v_vals, v_idx, D_v, N)
+        out_b = jnp.einsum("bkgr,bkrm->bkgm", p_b, v_buf.astype(jnp.float32))
+        return out_c + out_b
+
+    # --- flash-decode: online softmax over T chunks, coeff-space values ---
+    # (remainder tokens are handled as a final partial block)
+    n_chunks = T // chunk
+    rem = T - n_chunks * chunk
+    B, KV, G = qd.shape[:3]
+
+    def block(carry, kv_c, ki_c, vv_c, vi_c, base):
+        m_run, l_run, c_acc = carry
+        s_chk = compressed_scores(qd, kv_c, ki_c, scale=scale)       # (B,KV,G,C)
+        pos = base + jnp.arange(kv_c.shape[2])
+        valid = (pos[None, None, None, :] < t_c) & (pos[None, None, None, :] >= min_pos)
+        s_chk = jnp.where(valid, s_chk, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s_chk, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s_chk - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        c_new = c_acc * alpha[..., None] + scatter_coeffs(p, vv_c, vi_c, N)
+        return (m_new, l_new, c_new)
+
+    def to_chunks(x):  # (B,KV,T,s) -> (n_chunks, B,KV,C,s)
+        return jnp.moveaxis(x[:, :, :n_chunks * chunk].reshape(
+            B, KV, n_chunks, chunk, -1), 2, 0)
+
+    init = (jnp.full((B, KV, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, G), jnp.float32),
+            jnp.zeros((B, KV, G, N), jnp.float32))
+    if n_chunks:
+        xs = (to_chunks(k_vals), to_chunks(k_idx), to_chunks(v_vals),
+              to_chunks(v_idx), jnp.arange(n_chunks) * chunk)
+        carry, _ = jax.lax.scan(
+            lambda c, x: (block(c, *x), None), init, xs)
+    else:
+        carry = init
+    if rem:
+        carry = block(carry, k_vals[:, :, -rem:], k_idx[:, :, -rem:],
+                      v_vals[:, :, -rem:], v_idx[:, :, -rem:],
+                      jnp.int32(n_chunks * chunk))
+    m_run, l_run, c_acc = carry
+
+    # --- buffer as the final block ---
+    m_new = jnp.maximum(m_run, jnp.max(s_b, axis=-1))
+    alpha = jnp.exp(m_run - m_new)
+    p_b = jnp.exp(s_b - m_new[..., None])
+    l_fin = l_run * alpha + jnp.sum(p_b, axis=-1)
+    out_b = jnp.einsum("bkgr,bkrm->bkgm", p_b, v_buf.astype(jnp.float32))
+    out_c = jnp.einsum("bkgn,mn->bkgm", c_acc * alpha[..., None], D_v.astype(jnp.float32))
+    return (out_c + out_b) / l_fin[..., None]

@@ -1,0 +1,44 @@
+"""Naive reference OMP (numpy, per-vector least squares) — the oracle.
+
+Matches Algorithm 1 in the paper verbatim: each iteration picks the atom with
+max |correlation to the residual| and re-solves the restricted least squares
+from scratch. O(s * (Nm + m s^2)) — slow, only for tests/benchmarks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def omp_ref(k: np.ndarray, D: np.ndarray, s: int, delta: float = 0.0):
+    """Returns (vals[s], idx[s], nnz, resid2) padded like core.omp.OMPResult."""
+    k = np.asarray(k, np.float64)
+    D = np.asarray(D, np.float64)
+    m, N = D.shape
+    sel: list[int] = []
+    y = np.zeros(0)
+    r = k.copy()
+    kk = float(k @ k)
+    for _ in range(s):
+        if r @ r <= (delta * delta) * kk:
+            break
+        c = np.abs(D.T @ r)
+        c[sel] = -np.inf
+        n = int(np.argmax(c))
+        sel.append(n)
+        Dsub = D[:, sel]
+        y, *_ = np.linalg.lstsq(Dsub, k, rcond=None)
+        r = k - Dsub @ y
+    vals = np.zeros(s)
+    idx = np.zeros(s, np.int64)
+    vals[: len(sel)] = y
+    idx[: len(sel)] = sel
+    return vals, idx, len(sel), float(r @ r)
+
+
+def omp_ref_batch(K: np.ndarray, D: np.ndarray, s: int, delta: float = 0.0):
+    outs = [omp_ref(k, D, s, delta) for k in K.reshape(-1, K.shape[-1])]
+    vals = np.stack([o[0] for o in outs]).reshape(K.shape[:-1] + (s,))
+    idx = np.stack([o[1] for o in outs]).reshape(K.shape[:-1] + (s,))
+    nnz = np.array([o[2] for o in outs]).reshape(K.shape[:-1])
+    r2 = np.array([o[3] for o in outs]).reshape(K.shape[:-1])
+    return vals, idx, nnz, r2

@@ -1,0 +1,170 @@
+"""Sequence-parallel decode via shard_map (beyond-paper, EXPERIMENTS.md §Perf).
+
+Plain pjit with a token-sharded compressed cache fails on the *write*: a
+dynamic-update-slice at (traced) position t_c on a sharded dim makes the SPMD
+partitioner all-gather the whole cache every step (measured: 79 GB/step on
+mistral-large decode_32k — worse than the replicated baseline's 55 GB).
+
+This module does the update + attention inside one shard_map so the cache
+stays shard-local end to end:
+
+  * each 'model' shard owns a contiguous T/|model| slice of the sparse store;
+  * the evicted buffer token is OMP-encoded (gram-free — trades abundant
+    decode FLOPs for not carrying the N x N Gram) redundantly on every shard
+    (it's n_a=1 token), and only the owner shard applies the local-index DUS;
+  * attention runs flash-style per shard: local logits -> (m, l, coeff) stats
+    -> pmax/psum combine over 'model' -> the replicated recency buffer is
+    folded in as the final block. Per-step collectives drop to the O(B·KV·G·N)
+    stat psums — no cache-sized transfers at all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LexicoConfig
+from repro.core import omp as omp_mod
+from repro.core.attention import NEG_INF, compressed_scores, scatter_coeffs
+from repro.core.sparse_cache import LexicoLayerCache
+
+Array = jax.Array
+
+
+def _decode_attend_local(cache: LexicoLayerCache, q, k_t, v_t, D_k, D_v,
+                         *, s: int, N: int, delta: float,
+                         window, model_axis: str = "model"):
+    """shard_map body. cache.{k,v}_{vals,idx} are LOCAL (B,KV,T_loc,s) slices;
+    buffers + scalars replicated. Returns (attn_out, new local cache)."""
+    B, KV, T_loc, _ = cache.k_vals.shape
+    n_b = cache.n_b
+    ax = jax.lax.axis_index(model_axis)
+    n_shards = jax.lax.axis_size(model_axis)
+    t_off = ax * T_loc
+    full = cache.buf_len >= n_b
+
+    # --- compress the evictee (replicated tiny work), write on owner only ---
+    old_k = jax.lax.dynamic_slice_in_dim(cache.k_buf, cache.buf_start, 1, axis=2)[:, :, 0]
+    old_v = jax.lax.dynamic_slice_in_dim(cache.v_buf, cache.buf_start, 1, axis=2)[:, :, 0]
+    rk = omp_mod.omp_batch(old_k.astype(jnp.float32), D_k, s, use_gram=False, delta=delta)
+    rv = omp_mod.omp_batch(old_v.astype(jnp.float32), D_v, s, use_gram=False, delta=delta)
+    owner = (cache.t_c >= t_off) & (cache.t_c < t_off + T_loc)
+    local_pos = jnp.clip(cache.t_c - t_off, 0, T_loc - 1)
+
+    def store(arr, new, dtype):
+        payload = new[:, :, None, :].astype(dtype)
+        cur = jax.lax.dynamic_slice(arr, (0, 0, local_pos, 0), payload.shape)
+        payload = jnp.where(full & owner, payload, cur)
+        return jax.lax.dynamic_update_slice(arr, payload, (0, 0, local_pos, 0))
+
+    k_vals = store(cache.k_vals, rk.vals, cache.k_vals.dtype)
+    k_idx = store(cache.k_idx, rk.idx, jnp.int16)
+    v_vals = store(cache.v_vals, rv.vals, cache.v_vals.dtype)
+    v_idx = store(cache.v_idx, rv.idx, jnp.int16)
+    t_c = jnp.where(full, cache.t_c + 1, cache.t_c)
+
+    # --- ring-write the new token (replicated buffers) ---
+    write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
+    k_buf = jax.lax.dynamic_update_slice(
+        cache.k_buf, k_t[:, :, None, :].astype(cache.k_buf.dtype), (0, 0, write_pos, 0))
+    v_buf = jax.lax.dynamic_update_slice(
+        cache.v_buf, v_t[:, :, None, :].astype(cache.v_buf.dtype), (0, 0, write_pos, 0))
+    new_cache = cache._replace(
+        k_vals=k_vals, k_idx=k_idx, v_vals=v_vals, v_idx=v_idx,
+        k_buf=k_buf, v_buf=v_buf, t_c=t_c,
+        buf_len=jnp.where(full, cache.buf_len, cache.buf_len + 1),
+        buf_start=jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start))
+
+    # --- flash attention over the local slice ---
+    m_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(m_dim))
+    qf = q.astype(jnp.float32)
+    qd = jnp.einsum("bkgm,mn->bkgn", qf, D_k.astype(jnp.float32))
+    s_loc = compressed_scores(qd, k_vals, k_idx, scale=scale)   # (B,KV,G,T_loc)
+    pos = t_off + jnp.arange(T_loc)
+    length = t_c + new_cache.buf_len
+    min_pos = (length - window) if window is not None else jnp.int32(-1)
+    valid = (pos[None, None, None, :] < t_c) & (pos[None, None, None, :] >= min_pos)
+    s_loc = jnp.where(valid, s_loc, NEG_INF)
+    m_loc = jnp.max(s_loc, axis=-1)
+    p_loc = jnp.where(valid, jnp.exp(s_loc - m_loc[..., None]), 0.0)
+    l_loc = jnp.sum(p_loc, axis=-1)
+    c_loc = scatter_coeffs(p_loc, v_vals, v_idx, D_k.shape[1])  # (B,KV,G,N)
+
+    # combine across shards (the only per-step collectives)
+    m_g = jax.lax.pmax(m_loc, model_axis)
+    corr = jnp.exp(m_loc - m_g)
+    l_g = jax.lax.psum(l_loc * corr, model_axis)
+    c_g = jax.lax.psum(c_loc * corr[..., None], model_axis)
+
+    # replicated buffer as the final block
+    s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, k_buf.astype(jnp.float32)) * scale
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < new_cache.buf_len,
+                    s_b, NEG_INF)
+    m_f = jnp.maximum(m_g, jnp.max(s_b, axis=-1))
+    alpha = jnp.exp(m_g - m_f)
+    p_b = jnp.exp(s_b - m_f[..., None])
+    l_f = l_g * alpha + jnp.sum(p_b, axis=-1)
+    out = jnp.einsum("bkgn,mn->bkgm", c_g * alpha[..., None],
+                     D_v.astype(jnp.float32))
+    out = out + jnp.einsum("bkgr,bkrm->bkgm", p_b, v_buf.astype(jnp.float32))
+    return out / l_f[..., None], new_cache
+
+
+class SeqShardLexicoPolicy:
+    """LexicoPolicy variant whose decode+attend run fused inside shard_map
+    with a token-sharded cache. Falls back to unsharded math off-mesh."""
+
+    def __init__(self, cfg: LexicoConfig):
+        self.cfg = cfg
+
+    # prefill/init identical to LexicoPolicy
+    def init(self, batch, kv_heads, head_dim, t_max):
+        from repro.models.cache_policy import LexicoPolicy
+        return LexicoPolicy(self.cfg).init(batch, kv_heads, head_dim, t_max)
+
+    def prefill(self, cache, K, V, ctx):
+        from repro.models.cache_policy import LexicoPolicy
+        return LexicoPolicy(self.cfg).prefill(cache, K, V, ctx)
+
+    def length(self, cache):
+        return cache.t_c + cache.buf_len
+
+    def decode_attend(self, cache: LexicoLayerCache, q, k_t, v_t, ctx, *,
+                      window=None) -> Tuple[Array, LexicoLayerCache]:
+        D_k, D_v = ctx[0], ctx[1]
+        am = jax.sharding.get_abstract_mesh()
+        body = lambda c, qq, kk, vv, dk, dv: _decode_attend_local(
+            c, qq, kk, vv, dk, dv, s=self.cfg.s, N=self.cfg.N,
+            delta=self.cfg.delta, window=window)
+        if (am is None or am.empty or "model" not in am.axis_names
+                or cache.k_vals.shape[2] % am.shape["model"] != 0):
+            # off-mesh fallback: single-shard semantics
+            from repro.core import sparse_cache as sc
+            new_cache = sc.decode_update(cache, k_t, v_t, D_k, D_v, s=self.cfg.s,
+                                         use_gram=False, delta=self.cfg.delta)
+            out = sc.attend(new_cache, q, D_k, D_v, N=self.cfg.N,
+                            chunk=self.cfg.chunk, window=window)
+            return out, new_cache
+
+        batch_axes = tuple(a for a in ("pod", "data") if a in am.axis_names)
+        bspec = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
+            if batch_axes and q.shape[0] % math.prod(
+                am.shape[a] for a in batch_axes) == 0 else None
+        cache_specs = LexicoLayerCache(
+            k_vals=P(bspec, None, "model", None), k_idx=P(bspec, None, "model", None),
+            v_vals=P(bspec, None, "model", None), v_idx=P(bspec, None, "model", None),
+            k_buf=P(bspec, None, None, None), v_buf=P(bspec, None, None, None),
+            t_c=P(), buf_len=P(), buf_start=P())
+        vec = P(bspec, None, None)
+        out, new_cache = shard_map(
+            body, mesh=am,
+            in_specs=(cache_specs, P(bspec, None, None, None), vec, vec, P(), P()),
+            out_specs=(P(bspec, None, None, None), cache_specs),
+            check_rep=False,
+        )(cache, q, k_t, v_t, D_k, D_v)
+        return out, new_cache

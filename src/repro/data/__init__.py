@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticCorpus, synth_tokens
+from repro.data.pipeline import DataPipeline

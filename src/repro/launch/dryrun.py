@@ -1,0 +1,185 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines (jax locks device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_compiled, model_flops_for
+
+# cells: every arch runs train_4k / prefill_32k / decode_32k; long_500k only
+# for the sub-quadratic archs (SSM / hybrid-SWA) — see DESIGN.md.
+LONG_OK = ("hymba-1.5b", "rwkv6-3b")
+SKIPS = {(a, "long_500k"): "full-attention arch: 500k decode needs sub-quadratic attention"
+         for a in configs.ARCHS if a not in LONG_OK}
+
+
+def cells():
+    for arch in configs.ARCHS:
+        for shape in SHAPES:
+            if (arch, shape) in SKIPS:
+                continue
+            yield arch, shape
+
+
+def _shrink_for_serve(cfg, lex: LexicoConfig, shape: str) -> LexicoConfig:
+    """Paper defaults (N=4096, s=16 for ~21% KV, n_b=128)."""
+    return lex
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "baseline",
+             s: int = 16) -> dict:
+    cfg = configs.get(arch)
+    sh = SHAPES[shape]
+    seq_len, global_batch, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_desc = "x".join(str(v) for v in mesh.devices.shape)
+
+    # variant knobs (see EXPERIMENTS.md §Perf). 'baseline' is paper-faithful:
+    # compressed cache replicated over 'model', unchunked softmax, fp32 Gram,
+    # pjit scatter MoE dispatch. 'opt*' variants turn on the beyond-paper
+    # optimizations one at a time for the hillclimb:
+    #   opt-seq:   sequence-shard the compressed cache + flash-decode chunks
+    #   opt-gram:  bf16 stored Gram
+    #   opt-moe:   shard_map zero-dispatch-comm EP
+    #   opt:       all of the above
+    import dataclasses as _dc
+    seq_shard = variant in ("opt", "opt-seq", "opt-smap")
+    chunk = 2048 if variant in ("opt", "opt-seq") else None
+    gram_dtype = "bfloat16" if variant in ("opt", "opt-gram") else "float32"
+    if variant in ("opt", "opt-moe") and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, dispatch="ep_local"))
+    if variant in ("opt", "opt-bf16p"):
+        cfg = _dc.replace(cfg, attn_probs_bf16=True)
+    lex = LexicoConfig(N=4096, s=s, n_b=128, chunk=chunk, use_gram=True,
+                       gram_dtype=gram_dtype)
+
+    # FSDP for params only when TP-16 alone can't fit them
+    per_chip_tp = cfg.param_count() * 2 / 16
+    fsdp = kind == "train" or per_chip_tp > 6e9
+
+    t0 = time.time()
+    if kind == "train":
+        from repro.launch.train import lower_train_step
+        lowered = lower_train_step(cfg, mesh, seq_len, global_batch, fsdp=True)
+    elif kind == "prefill":
+        from repro.launch.serve import lower_prefill
+        lowered = lower_prefill(cfg, lex, mesh, seq_len, global_batch,
+                                seq_shard=seq_shard, fsdp=fsdp)
+    else:
+        from repro.launch.serve import lower_decode
+        policy = None
+        if variant in ("opt-smap", "opt") and not cfg.attn_free and cfg.mla is None:
+            from repro.core.sharded_decode import SeqShardLexicoPolicy
+            policy = SeqShardLexicoPolicy(lex)
+        lowered = lower_decode(cfg, lex, mesh, seq_len, global_batch,
+                               seq_shard=seq_shard, fsdp=fsdp, policy=policy)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mf = model_flops_for(cfg, kind, seq_len, global_batch)
+    rep = analyze_compiled(compiled, arch=arch, shape=shape, mesh_desc=mesh_desc,
+                           chips=chips, model_flops=mf)
+    ma = compiled.memory_analysis()
+    rec = rep.to_json()
+    rec.update({
+        "variant": variant,
+        "s": s,
+        "kind": kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "mem": {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", -1)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", -1)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", -1)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", -1)),
+        },
+    })
+    print(compiled.memory_analysis())
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in (ca[0] if isinstance(ca, list) else ca).items()
+           if k in ("flops", "bytes accessed")})
+    return rec
+
+
+def key_of(arch, shape, multi_pod, variant):
+    return f"{arch}|{shape}|{'multipod' if multi_pod else 'singlepod'}|{variant}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--s", type=int, default=16)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every pending cell in a fresh subprocess each")
+    ap.add_argument("--meshes", default="single,multi")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+
+    if args.sweep:
+        meshes = [m == "multi" for m in args.meshes.split(",")]
+        todo = [(a, s, mp) for a, s in cells() for mp in meshes]
+        for arch, shape, mp in todo:
+            k = key_of(arch, shape, mp, args.variant)
+            if k in results and "error" not in results[k]:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--variant", args.variant,
+                   "--s", str(args.s), "--out", args.out] + (
+                       ["--multi-pod"] if mp else [])
+            print(f"=== {k} ===", flush=True)
+            r = subprocess.run(cmd, env={**os.environ}, capture_output=True,
+                               text=True, timeout=3600)
+            if r.returncode != 0:
+                results = json.load(open(args.out)) if os.path.exists(args.out) else {}
+                results[k] = {"error": (r.stderr or r.stdout)[-2000:]}
+                json.dump(results, open(args.out, "w"), indent=1)
+                print(f"FAILED {k}: {(r.stderr or '')[-400:]}", flush=True)
+            else:
+                print(r.stdout[-400:], flush=True)
+        # summary
+        results = json.load(open(args.out))
+        bad = [k for k, v in results.items() if "error" in v]
+        print(f"done: {len(results) - len(bad)} ok, {len(bad)} failed")
+        for k in bad:
+            print("  FAIL", k)
+        return
+
+    assert args.arch and args.shape
+    k = key_of(args.arch, args.shape, args.multi_pod, args.variant)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   variant=args.variant, s=args.s)
+    results = json.load(open(args.out)) if os.path.exists(args.out) else {}
+    results[k] = rec
+    json.dump(results, open(args.out, "w"), indent=1)
+    print(json.dumps({kk: vv for kk, vv in rec.items()
+                      if kk in ("compute_s", "memory_s", "collective_s",
+                                "bottleneck", "useful_ratio", "compile_s")}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state — the dry-run sets XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — run via "
+            "launch/dryrun.py which forces XLA_FLAGS host device count first")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (used by elastic re-meshing and tests)."""
+    need = math.prod(shape)
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=jax.devices()[:need])
+
+
+def make_host_mesh():
+    """1x1 mesh over the real local device (smoke tests, benchmarks)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

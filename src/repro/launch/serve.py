@@ -1,0 +1,158 @@
+"""Serving step builders: prefill and decode under pjit, with Lexico (or any
+cache policy) and the production sharding layout.
+
+Decode sharding (the interesting part):
+  * batch          -> ('pod','data')
+  * params         -> TP ('model') + FSDP ('data') — same rules as training
+  * compressed cache token axis -> 'model' when ``seq_shard`` (beyond-paper
+    sequence-parallel flash-decode: XLA inserts the softmax-stat reductions)
+    or replicated when paper-faithful.
+  * dictionaries   -> replicated (the paper's universality argument: constant
+    memory, shared across batch/requests); Gram rows -> 'model'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LexicoConfig, ModelConfig
+from repro.models import model as M
+from repro.models.cache_policy import CachePolicy, LexicoPolicy
+from repro.runtime import sharding as shd
+
+
+def bank_shardings(mesh: Mesh, bank, *, shard_gram: bool = True):
+    if bank is None:
+        return None
+    from repro.core.dictionary import DictionaryBank
+    d_sh = NamedSharding(mesh, P())           # universal dicts: replicated
+    if bank.G is None:
+        return DictionaryBank(D=d_sh, G=None)
+    g_spec = P(None, None, "model", None) if shard_gram else P()
+    return DictionaryBank(D=d_sh, G=NamedSharding(mesh, g_spec))
+
+
+def serve_state_shardings(mesh: Mesh, state_shape: M.ServeState, *,
+                          seq_shard: bool = True) -> M.ServeState:
+    seq_axis = "model" if seq_shard else None
+    cache_sh = shd.cache_shardings(mesh, state_shape.cache, seq_axis=seq_axis)
+    cross_sh = (shd.cache_shardings(mesh, state_shape.cross, seq_axis=seq_axis)
+                if state_shape.cross is not None else None)
+    return M.ServeState(cache=cache_sh, length=NamedSharding(mesh, P()),
+                        cross=cross_sh)
+
+
+def input_specs_prefill(cfg: ModelConfig, seq_len: int, global_batch: int) -> dict:
+    spec = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    if cfg.enc_dec:
+        frames = min(seq_len, cfg.enc_max_frames)
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, frames, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def abstract_serve_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(M.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_bank(cfg: ModelConfig, lex_cfg: LexicoConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_dictionary_bank, cfg=cfg, lex_cfg=lex_cfg),
+        jax.random.PRNGKey(0))
+
+
+def lower_prefill(cfg: ModelConfig, lex_cfg: LexicoConfig, mesh: Mesh,
+                  seq_len: int, global_batch: int, *,
+                  policy: Optional[CachePolicy] = None,
+                  seq_shard: bool = True, fsdp: bool = True):
+    """AOT-lower prefill (full prompt -> compressed cache + first logits)."""
+    policy = policy or (LexicoPolicy(lex_cfg) if not cfg.attn_free else None)
+    t_max = seq_len + cfg.num_meta_tokens + 128
+    params_shape = abstract_serve_params(cfg)
+    bank_shape = abstract_bank(cfg, lex_cfg)
+    in_spec = input_specs_prefill(cfg, seq_len, global_batch)
+
+    def fn(params, bank, batch):
+        return M.prefill(params, cfg, policy, batch, bank=bank, t_max=t_max)
+
+    out_shape = jax.eval_shape(fn, params_shape, bank_shape, in_spec)
+    p_sh = shd.param_shardings(mesh, params_shape, moe=cfg.moe is not None,
+                               fsdp=fsdp)
+    b_sh = bank_shardings(mesh, bank_shape)
+    batch_sh = jax.tree.map(
+        lambda _: shd.data_sharding(mesh, batch_size=global_batch), in_spec)
+    out_sh = (shd.data_sharding(mesh, batch_size=global_batch),
+              serve_state_shardings(mesh, out_shape[1], seq_shard=seq_shard))
+    jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, batch_sh),
+                     out_shardings=out_sh)
+    with jax.set_mesh(mesh):
+        return jitted.lower(params_shape, bank_shape, in_spec)
+
+
+def abstract_decode_state(cfg: ModelConfig, policy: CachePolicy,
+                          global_batch: int, t_max: int) -> M.ServeState:
+    """ShapeDtypeStruct ServeState for a decode step with a cache of t_max."""
+    def mk():
+        cache = M.init_serve_cache(cfg, policy, global_batch, t_max)
+        cross = None
+        if cfg.enc_dec:
+            # cross cache over enc_max_frames, stacked per layer
+            lex = isinstance(policy, LexicoPolicy)
+            B, KV, Tf, hd = (global_batch, cfg.cache_kv_heads,
+                             cfg.enc_max_frames, cfg.hd)
+            if lex:
+                s = policy.cfg.s
+                z = jnp.zeros((cfg.num_layers, B, KV, Tf, 0), jnp.bfloat16)
+                cross = M.CrossCache(
+                    k_vals=jnp.zeros((cfg.num_layers, B, KV, Tf, s), jnp.float8_e4m3fn),
+                    k_idx=jnp.zeros((cfg.num_layers, B, KV, Tf, s), jnp.int16),
+                    v_vals=jnp.zeros((cfg.num_layers, B, KV, Tf, s), jnp.float8_e4m3fn),
+                    v_idx=jnp.zeros((cfg.num_layers, B, KV, Tf, s), jnp.int16),
+                    dense_k=z, dense_v=z,
+                    length=jnp.zeros((cfg.num_layers,), jnp.int32))
+            else:
+                zc = jnp.zeros((cfg.num_layers, B, KV, Tf, 0), jnp.float8_e4m3fn)
+                zi = jnp.zeros((cfg.num_layers, B, KV, Tf, 0), jnp.int16)
+                cross = M.CrossCache(
+                    k_vals=zc, k_idx=zi, v_vals=zc, v_idx=zi,
+                    dense_k=jnp.zeros((cfg.num_layers, B, KV, Tf, hd), jnp.bfloat16),
+                    dense_v=jnp.zeros((cfg.num_layers, B, KV, Tf, hd), jnp.bfloat16),
+                    length=jnp.zeros((cfg.num_layers,), jnp.int32))
+        return M.ServeState(cache=cache, length=jnp.int32(0), cross=cross)
+
+    return jax.eval_shape(mk)
+
+
+def lower_decode(cfg: ModelConfig, lex_cfg: LexicoConfig, mesh: Mesh,
+                 seq_len: int, global_batch: int, *,
+                 policy: Optional[CachePolicy] = None,
+                 seq_shard: bool = True, fsdp: bool = True):
+    """AOT-lower one decode step with a KV cache of ``seq_len`` tokens."""
+    policy = policy or LexicoPolicy(lex_cfg)
+    t_max = seq_len + cfg.num_meta_tokens + 128
+    params_shape = abstract_serve_params(cfg)
+    bank_shape = abstract_bank(cfg, lex_cfg)
+    state_shape = abstract_decode_state(cfg, policy, global_batch, t_max)
+    tok = jax.ShapeDtypeStruct((global_batch,), jnp.int32)
+
+    def fn(params, bank, state, token):
+        return M.decode_step(params, cfg, policy, state, token, bank=bank)
+
+    p_sh = shd.param_shardings(mesh, params_shape, moe=cfg.moe is not None,
+                               fsdp=fsdp)
+    b_sh = bank_shardings(mesh, bank_shape)
+    st_sh = serve_state_shardings(mesh, state_shape, seq_shard=seq_shard)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_sh, b_sh, st_sh,
+                      shd.data_sharding(mesh, batch_size=global_batch)),
+        out_shardings=(shd.data_sharding(mesh, batch_size=global_batch), st_sh),
+        donate_argnums=(2,),
+    )
+    with jax.set_mesh(mesh):
+        return jitted.lower(params_shape, bank_shape, state_shape, tok)

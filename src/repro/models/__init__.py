@@ -1,0 +1,3 @@
+from repro.models.model import (
+    init_params, forward_train, lm_loss, prefill, decode_step, init_serve_cache,
+)

@@ -1,0 +1,131 @@
+"""Blocked (flash-style) attention for training / prefill.
+
+Double-blocked online-softmax attention in pure jnp: the query axis is split
+into chunks (lax.map), and for each query chunk an inner lax.scan walks KV
+chunks accumulating (m, l, acc) — standard flash recurrence. Peak memory is
+O(Cq*Ck) per (batch, head) instead of O(T^2). Supports causal masking,
+sliding windows (hymba), and non-causal encoders (whisper).
+
+GQA layout: q (B, KV, G, T, hd), k/v (B, KV, T, hd).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def blocked_attention(
+    q: Array, k: Array, v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    remat_blocks: bool = True,
+    probs_bf16: bool = False,
+) -> Array:
+    """Returns (B, KV, G, T_q, hd) in q.dtype.
+
+    ``q_offset``: absolute position of q[..., 0, :] relative to k[..., 0, :]
+    (used when queries are a suffix of the cached sequence).
+
+    ``remat_blocks``: checkpoint each kv block — the backward pass recomputes
+    the block's (Cq x Ck) probabilities from the carried statistics instead
+    of saving them. Without it, training saves O(T^2) probabilities per layer
+    (flash-backward-style memory fix; see EXPERIMENTS.md §Perf).
+    """
+    B, KV, G, Tq, hd = q.shape
+    hd_v = v.shape[-1]           # may differ from hd (MLA)
+    Tk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def _pick(T, c):
+        """Largest divisor of T that is <= c (chunk must tile T exactly)."""
+        c = min(c, T)
+        while T % c != 0:
+            c -= 1
+        return c
+
+    q_chunk = _pick(Tq, q_chunk)
+    kv_chunk = _pick(Tk, kv_chunk)
+    nq, nk = Tq // q_chunk, Tk // kv_chunk
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, G, nq, q_chunk, hd)
+    kc = jnp.moveaxis(k.astype(jnp.float32).reshape(B, KV, nk, kv_chunk, hd), 2, 0)
+    vc = jnp.moveaxis(v.astype(jnp.float32).reshape(B, KV, nk, kv_chunk, hd_v), 2, 0)
+
+    def q_block(args):
+        qb, qi = args                                   # (B,KV,G,Cq,hd), scalar
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, xs):
+            m_run, l_run, acc = carry
+            kb, vb, ki = xs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            if probs_bf16:
+                # bf16 score/prob tensors: halves the dominant (Cq x Ck) HBM
+                # traffic of long prefill; stats stay f32 (see §Perf)
+                s = jnp.einsum("bkgqh,bkch->bkgqc", qb.astype(jnp.bfloat16),
+                               kb.astype(jnp.bfloat16),
+                               preferred_element_type=jnp.bfloat16)
+                s = s.astype(jnp.float32)
+            else:
+                s = jnp.einsum("bkgqh,bkch->bkgqc", qb, kb)  # (B,KV,G,Cq,Ck)
+            mask = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            if probs_bf16:
+                p = p.astype(jnp.bfloat16)
+                vb = vb.astype(jnp.bfloat16)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkch->bkgqh", p, vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, hd_v), jnp.float32))
+        step = jax.checkpoint(kv_step) if remat_blocks else kv_step
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            step, init, (kc, vc, jnp.arange(nk)))
+        return acc / jnp.maximum(l_run, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, (jnp.moveaxis(qf, 3, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, KV, G, Tq, hd_v)
+    return out.astype(q.dtype)
+
+
+def dense_decode_attention(
+    q: Array,              # (B, KV, G, hd) single new token
+    k_cache: Array, v_cache: Array,   # (B, KV, T, hd)
+    *,
+    length: Array,         # scalar int32 — valid cache entries
+    window: Optional[int] = None,
+) -> Array:
+    """Full-precision decode attention (baseline / buffer-only path)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    T = k_cache.shape[2]
+    pos = jnp.arange(T)
+    valid = pos[None, None, None, :] < length
+    if window is not None:
+        valid &= pos[None, None, None, :] >= (length - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,bkth->bkgh", p, v_cache.astype(jnp.float32))

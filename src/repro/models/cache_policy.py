@@ -1,0 +1,133 @@
+"""Pluggable KV-cache policies.
+
+The serving stack treats the KV cache as a policy object with four methods —
+``init / prefill / decode / attend`` — so Lexico, full-precision, KIVI-style
+quantization, and eviction baselines all run through the *same* model code
+(this is how the paper's comparison tables are produced, and how a deployment
+would switch policies per request class).
+
+All caches are per-layer pytrees with static shapes; the model stacks them
+along a leading layer axis and scans. ``ctx`` carries per-layer extras (the
+Lexico dictionaries ``(D_k, D_v)``); policies that don't need it ignore it.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LexicoConfig
+from repro.core import sparse_cache as sc
+
+Array = jax.Array
+
+
+class CachePolicy(Protocol):
+    def init(self, batch: int, kv_heads: int, head_dim: int, t_max: int) -> Any: ...
+    def prefill(self, cache: Any, K: Array, V: Array, ctx: Any) -> Any: ...
+    def decode(self, cache: Any, k_t: Array, v_t: Array, ctx: Any) -> Any: ...
+    def attend(self, cache: Any, q: Array, ctx: Any, *, window=None) -> Array: ...
+    def length(self, cache: Any) -> Array: ...
+
+
+# ---------------------------------------------------------------------------
+# Lexico (the paper)
+# ---------------------------------------------------------------------------
+
+class LexicoPolicy:
+    """The paper's policy: OMP sparse codes + recency buffer."""
+
+    def __init__(self, cfg: LexicoConfig):
+        self.cfg = cfg
+
+    def init(self, batch, kv_heads, head_dim, t_max):
+        c = self.cfg
+        return sc.init_layer_cache(
+            batch, kv_heads, head_dim,
+            t_max=max(t_max - c.n_b, 1), n_b=c.n_b, s=c.s, val_dtype=c.val_dtype)
+
+    @staticmethod
+    def _unpack(ctx):
+        if len(ctx) == 4:
+            return ctx
+        D_k, D_v = ctx
+        return D_k, D_v, None, None
+
+    def prefill(self, cache, K, V, ctx):
+        D_k, D_v, G_k, G_v = self._unpack(ctx)
+        return sc.prefill_compress(cache, K, V, D_k, D_v, s=self.cfg.s,
+                                   use_gram=self.cfg.use_gram, delta=self.cfg.delta,
+                                   G_k=G_k, G_v=G_v)
+
+    def decode(self, cache, k_t, v_t, ctx):
+        D_k, D_v, G_k, G_v = self._unpack(ctx)
+        return sc.decode_update(cache, k_t, v_t, D_k, D_v, s=self.cfg.s,
+                                use_gram=self.cfg.use_gram, delta=self.cfg.delta,
+                                G_k=G_k, G_v=G_v)
+
+    def attend(self, cache, q, ctx, *, window=None):
+        D_k, D_v = ctx[0], ctx[1]
+        return sc.attend(cache, q, D_k, D_v, N=self.cfg.N,
+                         chunk=self.cfg.chunk, window=window)
+
+    def length(self, cache):
+        return cache.t_c + cache.buf_len
+
+
+# ---------------------------------------------------------------------------
+# Full-precision baseline
+# ---------------------------------------------------------------------------
+
+class DenseCache(NamedTuple):
+    k: Array       # (B, KV, T_max, hd)
+    v: Array
+    length: Array  # scalar int32
+
+
+class DensePolicy:
+    """FP16/BF16 full cache — the paper's 'Full Cache' row."""
+
+    def __init__(self, dtype=jnp.bfloat16):
+        self.dtype = dtype
+
+    def init(self, batch, kv_heads, head_dim, t_max):
+        z = jnp.zeros((batch, kv_heads, t_max, head_dim), self.dtype)
+        return DenseCache(k=z, v=z, length=jnp.int32(0))
+
+    def prefill(self, cache, K, V, ctx):
+        T = K.shape[2]
+        k = jax.lax.dynamic_update_slice(cache.k, K.astype(self.dtype), (0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, V.astype(self.dtype), (0, 0, 0, 0))
+        return DenseCache(k=k, v=v, length=jnp.int32(T))
+
+    def decode(self, cache, k_t, v_t, ctx):
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_t[:, :, None, :].astype(self.dtype), (0, 0, cache.length, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_t[:, :, None, :].astype(self.dtype), (0, 0, cache.length, 0))
+        return DenseCache(k=k, v=v, length=cache.length + 1)
+
+    def attend(self, cache, q, ctx, *, window=None):
+        from repro.models.attention import dense_decode_attention
+        return dense_decode_attention(q, cache.k, cache.v,
+                                      length=cache.length, window=window)
+
+    def length(self, cache):
+        return cache.length
+
+
+def make_policy(name: str, lex_cfg: Optional[LexicoConfig] = None, **kw) -> CachePolicy:
+    if name == "lexico":
+        return LexicoPolicy(lex_cfg or LexicoConfig())
+    if name == "dense":
+        return DensePolicy(**kw)
+    # quantization / eviction baselines
+    from repro.baselines import kivi, per_token_quant, eviction
+    if name == "kivi":
+        return kivi.KIVIPolicy(**kw)
+    if name == "per_token":
+        return per_token_quant.PerTokenQuantPolicy(**kw)
+    if name == "eviction":
+        return eviction.EvictionPolicy(**kw)
+    raise KeyError(name)

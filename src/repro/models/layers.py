@@ -1,0 +1,68 @@
+"""Shared layer primitives (pure functions over param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_apply(cfg_norm: str, x: Array, p: dict) -> Array:
+    if cfg_norm == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def norm_init(cfg_norm: str, d: int, dtype) -> dict:
+    if cfg_norm == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None) -> Array:
+    scale = scale if scale is not None else (d_in ** -0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def mlp_init(key, d: int, f: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, f, dtype),
+                "w_up": dense_init(ks[1], d, f, dtype),
+                "w_down": dense_init(ks[2], f, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, f, dtype),
+            "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def mlp_apply(p: dict, x: Array, act: str) -> Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def sinusoidal_pos(T: int, d: int, dtype=jnp.float32) -> Array:
+    pos = jnp.arange(T)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10_000.0) * dim / (d // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,198 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with Lexico over the latents.
+
+MLA caches one vector per token: the low-rank latent ``c_kv`` (kv_lora_rank)
+concatenated with the shared RoPE key ``k_pe`` (rope_head_dim). With query-side
+absorption (fold W_uk into the query) the decode score is
+
+    score = (q_nope·W_ukᵀ) · c_kv + q_pe · k_pe = q_eff · (c_kv ‖ k_pe)
+
+so the *cached vector itself* is what attention dots against — which means
+Lexico composes perfectly: one dictionary over R^{kv_lora+rope} encodes the
+latent, the qD trick works on ``q_eff``, and the value read-out decodes the
+probability-weighted *coefficients* back through D[:kv_lora] before the W_uv
+up-projection. One OMP per token total (vs two for standard K/V caches).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.core import omp as omp_mod
+from repro.core.attention import NEG_INF, compressed_scores, scatter_coeffs
+from repro.models.attention import blocked_attention
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.rope import apply_rope
+
+Array = jax.Array
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    c = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    qd = c.nope_head_dim + c.rope_head_dim
+    return {
+        "w_q": dense_init(ks[0], d, H * qd, dtype),
+        "w_dkv": dense_init(ks[1], d, c.kv_lora_rank + c.rope_head_dim, dtype),
+        "kv_norm": jnp.ones((c.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[2], c.kv_lora_rank, H * c.nope_head_dim, dtype),
+        "w_uv": dense_init(ks[3], c.kv_lora_rank, H * c.v_head_dim, dtype),
+        "w_o": dense_init(ks[4], H * c.v_head_dim, d, dtype),
+    }
+
+
+def _project(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    """Shared q / latent computation. x (B, T, d) -> q_nope (B,T,H,nope),
+    q_pe (B,T,H,rope), latent (B,T, kv_lora+rope) with RoPE+norm applied."""
+    c = cfg.mla
+    B, T, d = x.shape
+    H = cfg.num_heads
+    q = (x @ p["w_q"]).reshape(B, T, H, c.nope_head_dim + c.rope_head_dim)
+    q_nope, q_pe = q[..., :c.nope_head_dim], q[..., c.nope_head_dim:]
+    q_pe = apply_rope(jnp.moveaxis(q_pe, 2, 1), positions, cfg.rope_theta)
+    q_pe = jnp.moveaxis(q_pe, 1, 2)
+
+    dkv = x @ p["w_dkv"]
+    c_kv = rmsnorm(dkv[..., :c.kv_lora_rank], p["kv_norm"])
+    k_pe = dkv[..., c.kv_lora_rank:]
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+    latent = jnp.concatenate([c_kv, k_pe], axis=-1)   # (B, T, kv_lora+rope)
+    return q_nope, q_pe, latent
+
+
+def mla_train_forward(p: dict, x: Array, cfg: ModelConfig, positions: Array) -> Array:
+    """Training / prefill attention (non-absorbed, flash-blocked). Returns
+    (attn_out (B,T,d), latent (B,T,lat_dim)) — latent is what prefill caches."""
+    c = cfg.mla
+    B, T, d = x.shape
+    H = cfg.num_heads
+    q_nope, q_pe, latent = _project(p, x, cfg, positions)
+    c_kv, k_pe = latent[..., :c.kv_lora_rank], latent[..., c.kv_lora_rank:]
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, T, H, c.nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, T, H, c.v_head_dim)
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (B, T, H, c.rope_head_dim))
+
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)   # (B,T,H,qd)
+    k_full = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    # layout (B, KV=H, G=1, T, hd)
+    qx = jnp.moveaxis(q_full, 2, 1)[:, :, None]
+    kx = jnp.moveaxis(k_full, 2, 1)
+    vx = jnp.moveaxis(v, 2, 1)
+    out = blocked_attention(qx, kx, vx, causal=True)[:, :, 0]   # (B,H,T,v_hd)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, T, H * c.v_head_dim)
+    return out @ p["w_o"], latent
+
+
+class MLACache(NamedTuple):
+    """Lexico-compressed latent cache. One code per token (no separate K/V)."""
+    vals: Array      # (B, T_max, s) storage dtype
+    idx: Array       # (B, T_max, s) int16
+    buf: Array       # (B, n_b, lat_dim) bf16
+    t_c: Array
+    buf_len: Array
+    buf_start: Array
+
+
+def init_mla_cache(batch: int, lat_dim: int, *, t_max: int, n_b: int, s: int,
+                   val_dtype=jnp.float8_e4m3fn, buf_dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        vals=jnp.zeros((batch, t_max, s), val_dtype),
+        idx=jnp.zeros((batch, t_max, s), jnp.int16),
+        buf=jnp.zeros((batch, n_b, lat_dim), buf_dtype),
+        t_c=jnp.int32(0), buf_len=jnp.int32(0), buf_start=jnp.int32(0))
+
+
+def mla_prefill_compress(cache: MLACache, latent: Array, D: Array, *, s: int,
+                         use_gram: bool = True, delta: float = 0.0, G=None) -> MLACache:
+    B, T, lat = latent.shape
+    n_b = cache.buf.shape[1]
+    n_comp = T - n_b
+    head, tail = latent[:, :n_comp], latent[:, n_comp:]
+    r = omp_mod.omp_batch(head.astype(jnp.float32), D, s, use_gram=use_gram,
+                          delta=delta, G=G)
+    vals = jax.lax.dynamic_update_slice(
+        cache.vals, r.vals.astype(cache.vals.dtype), (0, 0, 0))
+    idx = jax.lax.dynamic_update_slice(
+        cache.idx, r.idx.astype(jnp.int16), (0, 0, 0))
+    return cache._replace(vals=vals, idx=idx, buf=tail.astype(cache.buf.dtype),
+                          t_c=jnp.int32(n_comp), buf_len=jnp.int32(n_b),
+                          buf_start=jnp.int32(0))
+
+
+def mla_decode_update(cache: MLACache, latent_t: Array, D: Array, *, s: int,
+                      use_gram: bool = True, delta: float = 0.0, G=None) -> MLACache:
+    """latent_t (B, lat_dim): append to ring; compress evictee (n_a = 1)."""
+    B, lat = latent_t.shape
+    n_b = cache.buf.shape[1]
+    full = cache.buf_len >= n_b
+    old = jax.lax.dynamic_slice_in_dim(cache.buf, cache.buf_start, 1, axis=1)[:, 0]
+    r = omp_mod.omp_batch(old.astype(jnp.float32), D, s, use_gram=use_gram,
+                          delta=delta, G=G)
+
+    def store(arr, new):
+        cur = jax.lax.dynamic_slice(arr, (0, cache.t_c, 0), new[:, None, :].shape)
+        payload = jnp.where(full, new[:, None, :].astype(arr.dtype), cur)
+        return jax.lax.dynamic_update_slice(arr, payload, (0, cache.t_c, 0))
+
+    vals = store(cache.vals, r.vals)
+    idx = store(cache.idx, r.idx.astype(jnp.int16))
+    t_c = jnp.where(full, cache.t_c + 1, cache.t_c)
+    write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
+    buf = jax.lax.dynamic_update_slice(
+        cache.buf, latent_t[:, None, :].astype(cache.buf.dtype), (0, write_pos, 0))
+    return cache._replace(
+        vals=vals, idx=idx, buf=buf, t_c=t_c,
+        buf_len=jnp.where(full, cache.buf_len, cache.buf_len + 1),
+        buf_start=jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start))
+
+
+def mla_decode_step(
+    p: dict, cache: MLACache, x_t: Array, cfg: ModelConfig, position: Array,
+    D: Array, *, N: int, s: int, use_gram: bool = True, delta: float = 0.0,
+    chunk: Optional[int] = None, G=None,
+) -> Tuple[Array, MLACache]:
+    """One decode step: project, insert the latent (Algorithm 2 order —
+    the new token attends to itself via the buffer), absorbed attention.
+
+    x_t (B, d). Returns (attn_out (B, d), new cache)."""
+    c = cfg.mla
+    B, d = x_t.shape
+    H = cfg.num_heads
+    q_nope, q_pe, latent = _project(p, x_t[:, None], cfg, position[None])
+    q_nope, q_pe = q_nope[:, 0], q_pe[:, 0]        # (B,H,nope), (B,H,rope)
+    cache = mla_decode_update(cache, latent[:, 0], D, s=s,
+                              use_gram=use_gram, delta=delta, G=G)
+
+    # absorption: q_lat = q_nope @ W_uk^T  (per head)
+    w_uk = p["w_uk"].reshape(c.kv_lora_rank, H, c.nope_head_dim)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    q_eff = jnp.concatenate([q_lat, q_pe.astype(jnp.float32)], axis=-1)  # (B,H,lat_dim)
+    scale = 1.0 / jnp.sqrt(jnp.float32(c.nope_head_dim + c.rope_head_dim))
+
+    # layout (B, KV=1, G=H, ·)
+    qd = jnp.einsum("bhl,ln->bhn", q_eff, D.astype(jnp.float32))[:, None]  # (B,1,H,N)
+    s_c = compressed_scores(qd, cache.vals[:, None], cache.idx[:, None], scale=scale)
+    T = cache.vals.shape[1]
+    s_c = jnp.where(jnp.arange(T)[None, None, None, :] < cache.t_c, s_c, NEG_INF)
+
+    buf = cache.buf.astype(jnp.float32)            # (B, n_b, lat)
+    s_b = jnp.einsum("bhl,brl->bhr", q_eff, buf)[:, None] * scale
+    n_b = buf.shape[1]
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < cache.buf_len, s_b, NEG_INF)
+
+    pfull = jax.nn.softmax(jnp.concatenate([s_c, s_b], axis=-1), axis=-1)
+    p_c, p_b = pfull[..., :T], pfull[..., T:]
+
+    # value read-out: accumulate coefficients, decode through D[:kv_lora], W_uv
+    coeff = scatter_coeffs(p_c, cache.vals[:, None], cache.idx[:, None], N)  # (B,1,H,N)
+    lat_acc = jnp.einsum("bhn,ln->bhl", coeff[:, 0], D[:c.kv_lora_rank].astype(jnp.float32))
+    lat_acc = lat_acc + jnp.einsum("bhr,brl->bhl", p_b[:, 0], buf[..., :c.kv_lora_rank])
+    w_uv = p["w_uv"].reshape(c.kv_lora_rank, H, c.v_head_dim)
+    out = jnp.einsum("bhl,lhv->bhv", lat_acc, w_uv.astype(jnp.float32))
+    out = out.reshape(B, H * c.v_head_dim).astype(x_t.dtype)
+    return out @ p["w_o"], cache

@@ -1,0 +1,695 @@
+"""Composable model zoo: init / train-forward / prefill / decode for all ten
+assigned architectures, with Lexico (or any CachePolicy) as the serving cache.
+
+Design rules:
+  * scan-over-layers everywhere — per-layer params/caches/dicts are stacked on
+    a leading (L,) axis and consumed as lax.scan xs, so HLO size (and compile
+    time) is O(1) in depth. Layer-varying behaviour (hymba's global-attention
+    layers) rides along as an (L,) flag array.
+  * pure functions over param pytrees; dtypes from cfg.param_dtype.
+  * one code path per family: attention-stack (dense/vlm/moe/hybrid),
+    MLA (deepseek), RWKV (attn-free), enc-dec (whisper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LexicoConfig, ModelConfig
+from repro.core.attention import NEG_INF, compressed_scores, scatter_coeffs
+from repro.core.dictionary import DictionaryBank
+from repro.core import omp as omp_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import blocked_attention
+from repro.models.cache_policy import CachePolicy, DensePolicy, LexicoPolicy
+from repro.models.layers import (
+    dense_init, embed_init, mlp_apply, mlp_init, norm_apply, norm_init, rmsnorm,
+    sinusoidal_pos,
+)
+from repro.models.rope import apply_rope
+
+Array = jax.Array
+BIG_WINDOW = jnp.int32(1 << 30)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def shard_hint(x: Array, *entries) -> Array:
+    """Activation-sharding constraint that is a no-op outside a mesh context.
+
+    Without explicit activation hints XLA's sharding propagation can decide to
+    replicate the batch across the 'data' axis (observed: the embedding gather
+    output loses the batch sharding and the whole backbone runs replicated —
+    16x the memory/flops per device). Entries use axis names; axes missing
+    from the active mesh, or that don't divide the dim, are dropped.
+    """
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty:
+        return x
+    names = set(am.axis_names)
+
+    def ok(axes, dim):
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        axes = tuple(a for a in axes if a in names)
+        if not axes:
+            return None
+        size = 1
+        for a in axes:
+            size *= am.shape[a]
+        if dim % size != 0:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    cleaned = [None if e is None else ok(e, x.shape[i])
+               for i, e in enumerate(entries)]
+    if all(c is None for c in cleaned):
+        return x
+    from jax.sharding import PartitionSpec as _P
+    return jax.lax.with_sharding_constraint(x, _P(*cleaned))
+
+
+BATCH_AXES = ("pod", "data")
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig, dtype, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+                         "ln2": norm_init(cfg.norm, cfg.d_model, dtype)}
+    if cfg.rwkv is not None:
+        p["rwkv"] = ssm_mod.rwkv_init(ks[0], cfg, dtype)
+        return p
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    if cfg.parallel_ssm:
+        p["ssm"] = ssm_mod.mamba_init(ks[1], cfg, dtype)
+        p["attn_out_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["ssm_out_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.moe is not None:
+        p["mlp"] = moe_mod.moe_init(ks[2], cfg.d_model, cfg.moe, cfg.act, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    if cross:
+        p["ln_cross"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = _init_attn(ks[3], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_head, k_enc, k_meta, k_pos = jax.random.split(key, 6)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype, cross=cfg.enc_dec))(layer_keys)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.num_meta_tokens:
+        params["meta"] = (jax.random.normal(k_meta, (cfg.num_meta_tokens, cfg.d_model),
+                                            jnp.float32) * 0.02).astype(dtype)
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_layer(k, cfg, dtype))(enc_keys),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+        }
+        params["pos_embed"] = (jax.random.normal(k_pos, (cfg.max_seq_len if cfg.max_seq_len
+                                                         < 65536 else 65536, cfg.d_model),
+                                                 jnp.float32) * 0.02).astype(dtype)
+    return params
+
+
+def init_dictionary_bank(key, cfg: ModelConfig, lex_cfg: LexicoConfig) -> Optional[DictionaryBank]:
+    """Per-layer dictionaries sized for what this arch actually caches.
+    When ``lex_cfg.use_gram``, the Grams are precomputed and stored (the
+    paper's offline Cholesky setup)."""
+    if cfg.attn_free or not lex_cfg.enabled:
+        return None
+    from repro.core.dictionary import init_dictionary
+    roles = 1 if cfg.mla is not None else 2
+    m = cfg.cached_vector_dim
+    keys = jax.random.split(key, cfg.num_layers * roles)
+    D = jax.vmap(lambda k: init_dictionary(k, m, lex_cfg.N))(keys)
+    D = D.reshape(cfg.num_layers, roles, m, lex_cfg.N)
+    G = None
+    if lex_cfg.use_gram:
+        G = jnp.einsum("lrmn,lrmp->lrnp", D, D).astype(
+            jnp.dtype(lex_cfg.gram_dtype))
+    return DictionaryBank(D=D, G=G)
+
+
+# ===========================================================================
+# Attention sublayer (sequence form, GQA + qk-norm + RoPE)
+# ===========================================================================
+
+def _qkv_seq(lp: dict, cfg: ModelConfig, x: Array, positions: Array):
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    q = (x @ lp["wq"]).reshape(B, T, KV, G, hd)
+    k = (x @ lp["wk"]).reshape(B, T, KV, hd)
+    v = (x @ lp["wv"]).reshape(B, T, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"])
+        k = rmsnorm(k, lp["k_norm"])
+    q = jnp.transpose(q, (0, 2, 3, 1, 4))          # (B,KV,G,T,hd)
+    k = jnp.transpose(k, (0, 2, 1, 3))             # (B,KV,T,hd)
+    v = jnp.transpose(v, (0, 2, 1, 3))
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_seq(lp: dict, cfg: ModelConfig, x: Array, positions: Array,
+             window=None, *, causal: bool = True,
+             kv_override: Optional[Tuple[Array, Array]] = None) -> Tuple[Array, Array, Array]:
+    """Full-sequence attention sublayer. Returns (out (B,T,d), k, v)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q, k, v = _qkv_seq(lp, cfg, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    out = blocked_attention(q, k, v, causal=causal, window=window,
+                            probs_bf16=cfg.attn_probs_bf16)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, T, H * hd)
+    return out @ lp["wo"], k, v
+
+
+def _qkv_step(lp: dict, cfg: ModelConfig, x_t: Array, position: Array):
+    B, d = x_t.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    q = (x_t @ lp["wq"]).reshape(B, KV, G, hd)
+    k = (x_t @ lp["wk"]).reshape(B, KV, hd)
+    v = (x_t @ lp["wv"]).reshape(B, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"])
+        k = rmsnorm(k, lp["k_norm"])
+    if cfg.use_rope:
+        pos = position[None]
+        q = apply_rope(q[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+        k = apply_rope(k[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+    return q, k, v
+
+
+# ===========================================================================
+# Cross-attention with a compressed static KV (whisper decode path)
+# ===========================================================================
+
+class CrossCache(NamedTuple):
+    """Static (built-once) encoder KV for whisper decode. Exactly one of the
+    compressed (``*_vals/*_idx``) or dense (``dense_*``) sides has nonzero
+    trailing dim — the branch is resolved from *shapes* so it stays static."""
+    k_vals: Array   # (B, KV, T_enc, s) compressed, or (..., 0) when dense
+    k_idx: Array
+    v_vals: Array
+    v_idx: Array
+    dense_k: Array  # (B, KV, T_enc, hd) dense, or (..., 0) when compressed
+    dense_v: Array
+    length: Array
+
+    @property
+    def compressed(self) -> bool:
+        return self.dense_k.shape[-1] == 0
+
+    @classmethod
+    def build(cls, K, V, D_k, D_v, *, s, use_gram, compressed: bool):
+        if compressed:
+            rk = omp_mod.omp_batch(K.astype(jnp.float32), D_k, s, use_gram=use_gram)
+            rv = omp_mod.omp_batch(V.astype(jnp.float32), D_v, s, use_gram=use_gram)
+            z = jnp.zeros(K.shape[:3] + (0,), jnp.bfloat16)
+            return cls(rk.vals.astype(jnp.float8_e4m3fn), rk.idx.astype(jnp.int16),
+                       rv.vals.astype(jnp.float8_e4m3fn), rv.idx.astype(jnp.int16),
+                       z, z, jnp.int32(K.shape[2]))
+        zi = jnp.zeros(K.shape[:3] + (0,), jnp.int16)
+        zv = jnp.zeros(K.shape[:3] + (0,), jnp.float8_e4m3fn)
+        return cls(zv, zi, zv, zi, K.astype(jnp.bfloat16), V.astype(jnp.bfloat16),
+                   jnp.int32(K.shape[2]))
+
+
+def cross_attend_step(lp: dict, cfg: ModelConfig, x_t: Array, cc: CrossCache,
+                      D_k, D_v, N: int) -> Array:
+    """Single-token cross-attention against the (compressed) encoder KV."""
+    B, d = x_t.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    q = (x_t @ lp["wq"]).reshape(B, KV, G, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    if cc.compressed:
+        qd = jnp.einsum("bkgm,mn->bkgn", q, D_k.astype(jnp.float32))
+        s_c = compressed_scores(qd, cc.k_vals, cc.k_idx, scale=scale)
+        T = cc.k_vals.shape[2]
+        s_c = jnp.where(jnp.arange(T)[None, None, None] < cc.length, s_c, NEG_INF)
+        p = jax.nn.softmax(s_c, axis=-1)
+        coeff = scatter_coeffs(p, cc.v_vals, cc.v_idx, N)
+        out = jnp.einsum("bkgn,mn->bkgm", coeff, D_v.astype(jnp.float32))
+    else:
+        s_c = jnp.einsum("bkgm,bktm->bkgt", q, cc.dense_k.astype(jnp.float32)) * scale
+        T = cc.dense_k.shape[2]
+        s_c = jnp.where(jnp.arange(T)[None, None, None] < cc.length, s_c, NEG_INF)
+        p = jax.nn.softmax(s_c, axis=-1)
+        out = jnp.einsum("bkgt,bktm->bkgm", p, cc.dense_v.astype(jnp.float32))
+    out = out.reshape(B, H * hd).astype(x_t.dtype)
+    return out @ lp["wo"]
+
+
+def cross_attend_seq(lp: dict, cfg: ModelConfig, x: Array, enc_out: Array) -> Array:
+    """Full-precision cross-attention for training / prefill (non-causal)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    q = (x @ lp["wq"]).reshape(B, T, KV, G, hd)
+    k = (enc_out @ lp["wk"]).reshape(B, -1, KV, hd)
+    v = (enc_out @ lp["wv"]).reshape(B, -1, KV, hd)
+    q = jnp.transpose(q, (0, 2, 3, 1, 4))
+    k = jnp.transpose(k, (0, 2, 1, 3))
+    v = jnp.transpose(v, (0, 2, 1, 3))
+    out = blocked_attention(q, k, v, causal=False)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, T, H * hd)
+    return out @ lp["wo"], k, v
+
+
+# ===========================================================================
+# Layer bodies (sequence + step), shared by train / prefill / decode
+# ===========================================================================
+
+def _ffn(lp: dict, cfg: ModelConfig, h: Array) -> Array:
+    if cfg.moe is not None:
+        if cfg.moe.dispatch == "ep_local":
+            return moe_mod.moe_apply_sharded(lp["mlp"], h, cfg.moe, cfg.act)
+        return moe_mod.moe_apply(lp["mlp"], h, cfg.moe, cfg.act)
+    return mlp_apply(lp["mlp"], h, cfg.act)
+
+
+def _fuse_parallel(lp: dict, attn_out: Array, ssm_out: Array) -> Array:
+    return 0.5 * (rmsnorm(attn_out, lp["attn_out_norm"])
+                  + rmsnorm(ssm_out, lp["ssm_out_norm"]))
+
+
+def layer_seq(lp: dict, cfg: ModelConfig, x: Array, positions: Array,
+              window, ssm_state=None, *, causal=True, enc_out=None):
+    """One transformer layer over a full sequence.
+
+    Returns (x, (k, v), new_ssm_state) — k/v are the post-RoPE cache entries.
+    """
+    h = norm_apply(cfg.norm, x, lp["ln1"])
+    if cfg.mla is not None:
+        attn_out, latent = mla_mod.mla_train_forward(lp["attn"], h, cfg, positions)
+        kv = latent          # MLA caches the latent
+    else:
+        attn_out, k, v = attn_seq(lp["attn"], cfg, h, positions, window, causal=causal)
+        kv = (k, v)
+    new_ssm = None
+    if cfg.parallel_ssm:
+        ssm_out, new_ssm = ssm_mod.mamba_forward(lp["ssm"], h, cfg, ssm_state)
+        attn_out = _fuse_parallel(lp, attn_out, ssm_out)
+    x = x + attn_out
+    cross_kv = None
+    if enc_out is not None:
+        hc = norm_apply(cfg.norm, x, lp["ln_cross"])
+        c_out, ck, cv = cross_attend_seq(lp["cross"], cfg, hc, enc_out)
+        x = x + c_out
+        cross_kv = (ck, cv)
+    h2 = norm_apply(cfg.norm, x, lp["ln2"])
+    x = x + _ffn(lp, cfg, h2)
+    return x, kv, new_ssm, cross_kv
+
+
+# ===========================================================================
+# Public API: train forward
+# ===========================================================================
+
+def _encode(params: dict, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper encoder over stubbed frame embeddings (B, T_f, d)."""
+    x = frames.astype(_dtype(cfg))
+    x = x + sinusoidal_pos(frames.shape[1], cfg.d_model, x.dtype)[None]
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, lp):
+        h, _, _, _ = layer_seq(lp, cfg, h, positions, None, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return norm_apply(cfg.norm, x, params["encoder"]["final_norm"])
+
+
+def _window_arr(cfg: ModelConfig) -> Optional[Array]:
+    """(L,) per-layer window widths, or None if the arch is fully global."""
+    if cfg.sliding_window is None:
+        return None
+    w = jnp.full((cfg.num_layers,), cfg.sliding_window, jnp.int32)
+    for i in cfg.global_attn_layers:
+        w = w.at[i].set(BIG_WINDOW)
+    return w
+
+
+def _embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _unembed(params, cfg, x):
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def forward_train(params: dict, cfg: ModelConfig, batch: dict,
+                  *, remat: bool = False) -> Array:
+    """Teacher-forced logits (B, T, vocab). batch: {'tokens', ['frames']}."""
+    hidden = forward_hidden(params, cfg, batch, remat=remat)
+    return _unembed(params, cfg, hidden)
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict,
+                   *, remat: bool = False) -> Array:
+    """Backbone hidden states (B, T, d) before final norm / unembedding.
+    Hymba meta tokens are prepended internally and stripped from the output.
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    n_meta = cfg.num_meta_tokens
+    if n_meta:
+        meta = jnp.broadcast_to(params["meta"][None], (B, n_meta, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, BATCH_AXES, None, None)
+    Ttot = x.shape[1]
+    positions = jnp.arange(Ttot)
+    enc_out = _encode(params, cfg, batch["frames"]) if cfg.enc_dec else None
+    if cfg.enc_dec:
+        x = x + params["pos_embed"][:Ttot][None].astype(x.dtype)
+    windows = _window_arr(cfg)
+
+    if cfg.rwkv is not None:
+        state = ssm_mod.init_rwkv_state(B, cfg)
+        stacked_state = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (cfg.num_layers,) + s.shape),
+            state)
+
+        def body(h, xs):
+            lp, st = xs
+            h, _ = ssm_mod.rwkv_block_seq(lp["rwkv"], h, cfg, st,
+                                          lp["ln1"], lp["ln2"], cfg.norm)
+            return h, None
+
+        f = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(f, x, (params["layers"], stacked_state))
+        return x
+
+    ssm0 = (ssm_mod.init_mamba_state(B, cfg) if cfg.parallel_ssm else None)
+
+    def body(h, xs):
+        lp, win = xs
+        w = None if windows is None else win
+        h = shard_hint(h, BATCH_AXES, None, None)
+        h, _, _, _ = layer_seq(lp, cfg, h, positions, w,
+                               ssm_state=ssm0, enc_out=enc_out)
+        return shard_hint(h, BATCH_AXES, None, None), None
+
+    xs = (params["layers"],
+          windows if windows is not None else jnp.zeros((cfg.num_layers,), jnp.int32))
+    f = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(f, x, xs)
+    return x[:, n_meta:] if n_meta else x
+
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = False,
+            loss_chunk: int = 512):
+    """Next-token cross entropy; label -1 positions are masked.
+
+    The CE is computed in sequence chunks (scan) so the full (B, T, vocab)
+    logits tensor never materialises — at 150k vocab that tensor dominates
+    training memory otherwise (this took the llama train cell from 175 GB of
+    XLA temps per device to fitting in HBM; see EXPERIMENTS.md §Perf).
+    """
+    hidden = forward_hidden(params, cfg, batch, remat=remat)   # (B, T, d)
+    labels = batch["labels"]
+    B, T, d = hidden.shape
+    hidden = hidden[:, :-1]
+    labels = labels[:, 1:]
+
+    n = T - 1
+    chunk = min(loss_chunk, n)
+    n_chunks = n // chunk
+    rem = n - n_chunks * chunk
+
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def ce(h_chunk, l_chunk):
+        logits = norm_apply(cfg.norm, h_chunk, params["final_norm"]) @ head
+        logits = shard_hint(logits.astype(jnp.float32), BATCH_AXES, None, "model")
+        mask = l_chunk >= 0
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_chunk, 0)[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        h_chunk, l_chunk = xs
+        tot, cnt = ce(h_chunk, l_chunk)
+        return (carry[0] + tot, carry[1] + cnt), None
+
+    hs = jnp.moveaxis(hidden[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels[:, :n_chunks * chunk].reshape(B, n_chunks, chunk), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+    if rem:
+        t2, c2 = ce(hidden[:, -rem:], labels[:, -rem:])
+        tot, cnt = tot + t2, cnt + c2
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ===========================================================================
+# Public API: serving (prefill + decode) with a pluggable cache policy
+# ===========================================================================
+
+class ServeState(NamedTuple):
+    cache: Any        # stacked per-layer cache pytree
+    length: Array     # scalar int32 — tokens in cache (incl. meta tokens)
+    cross: Any = None  # whisper: stacked CrossCache
+
+
+def _dict_ctx(cfg: ModelConfig, bank: Optional[DictionaryBank], D_slice, G_slice):
+    """Per-layer dictionary context: (D_k, D_v[, G_k, G_v]) — or for MLA the
+    single latent dictionary (D[, G])."""
+    if bank is None:
+        return None
+    has_G = bank.G is not None
+    if cfg.mla is not None:
+        return (D_slice[0], G_slice[0]) if has_G else (D_slice[0], None)
+    if has_G:
+        return (D_slice[0], D_slice[1], G_slice[0], G_slice[1])
+    return (D_slice[0], D_slice[1], None, None)
+
+
+def init_serve_cache(cfg: ModelConfig, policy: CachePolicy, batch: int,
+                     t_max: int) -> Any:
+    """Stacked (L,) cache pytree for the decoder stack."""
+    L = cfg.num_layers
+    if cfg.rwkv is not None:
+        st = ssm_mod.init_rwkv_state(batch, cfg)
+        return jax.tree.map(lambda s: jnp.stack([s] * L), st)
+    if cfg.mla is not None:
+        lex: LexicoPolicy = policy  # MLA serving requires the Lexico policy
+        c = lex.cfg
+        one = mla_mod.init_mla_cache(batch, cfg.cached_vector_dim,
+                                     t_max=max(t_max - c.n_b, 1), n_b=c.n_b, s=c.s,
+                                     val_dtype=c.val_dtype)
+        cache = jax.tree.map(lambda s: jnp.stack([s] * L), one)
+    else:
+        one = policy.init(batch, cfg.cache_kv_heads, cfg.hd, t_max)
+        cache = jax.tree.map(lambda s: jnp.stack([s] * L), one)
+    if cfg.parallel_ssm:
+        st = ssm_mod.init_mamba_state(batch, cfg)
+        ssm = jax.tree.map(lambda s: jnp.stack([s] * L), st)
+        return {"attn": cache, "ssm": ssm}
+    return cache
+
+
+def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
+            *, bank: Optional[DictionaryBank], t_max: int) -> Tuple[Array, ServeState]:
+    """Run the prompt, build the (compressed) cache. Returns (last-token
+    logits (B, vocab), ServeState)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    n_meta = cfg.num_meta_tokens
+    if n_meta:
+        meta = jnp.broadcast_to(params["meta"][None], (B, n_meta, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, BATCH_AXES, None, None)
+    Ttot = x.shape[1]
+    positions = jnp.arange(Ttot)
+    enc_out = _encode(params, cfg, batch["frames"]) if cfg.enc_dec else None
+    if cfg.enc_dec:
+        x = x + params["pos_embed"][:Ttot][None].astype(x.dtype)
+    windows = _window_arr(cfg)
+    L = cfg.num_layers
+    bank_D = bank.D if bank is not None else jnp.zeros((L, 1))
+    bank_G = (bank.G if (bank is not None and bank.G is not None)
+              else jnp.zeros((L, 1)))
+    cache0 = init_serve_cache(cfg, policy, B, t_max)
+
+    if cfg.rwkv is not None:
+        def body(h, xs):
+            lp, st = xs
+            h, new_st = ssm_mod.rwkv_block_seq(lp["rwkv"], h, cfg, st,
+                                               lp["ln1"], lp["ln2"], cfg.norm)
+            return h, new_st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], cache0))
+        logits = _unembed(params, cfg, x[:, -1])
+        return logits, ServeState(cache=new_state, length=jnp.int32(Ttot))
+
+    attn_cache0 = cache0["attn"] if cfg.parallel_ssm else cache0
+    ssm_cache0 = cache0["ssm"] if cfg.parallel_ssm else None
+
+    def body(h, xs):
+        lp, win, Dl, Gl, cache_l, ssm_l = xs
+        w = None if windows is None else win
+        ssm_in = ssm_l if cfg.parallel_ssm else None
+        h = shard_hint(h, BATCH_AXES, None, None)
+        h, kv, new_ssm, cross_kv = layer_seq(lp, cfg, h, positions, w,
+                                             ssm_state=ssm_in, enc_out=enc_out)
+        ctx = _dict_ctx(cfg, bank, Dl, Gl)
+        if cfg.mla is not None:
+            new_cache = mla_mod.mla_prefill_compress(
+                cache_l, kv, ctx[0], s=policy.cfg.s, use_gram=policy.cfg.use_gram,
+                delta=policy.cfg.delta, G=ctx[1])
+        else:
+            new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx)
+        cross_c = None
+        if cfg.enc_dec:
+            compressed = isinstance(policy, LexicoPolicy)
+            ck, cv = cross_kv
+            cross_c = CrossCache.build(
+                ck, cv, ctx[0] if ctx else None, ctx[1] if ctx else None,
+                s=policy.cfg.s if compressed else 0,
+                use_gram=getattr(policy.cfg, "use_gram", True) if compressed else True,
+                compressed=compressed)
+        outs = (new_cache, new_ssm, cross_c)
+        return h, outs
+
+    xs = (params["layers"],
+          windows if windows is not None else jnp.zeros((cfg.num_layers,), jnp.int32),
+          bank_D, bank_G, attn_cache0, ssm_cache0 if cfg.parallel_ssm else
+          jnp.zeros((cfg.num_layers,), jnp.int32))
+    x, (new_cache, new_ssm, cross_c) = jax.lax.scan(body, x, xs)
+    logits = _unembed(params, cfg, x[:, -1])
+    cache_out = {"attn": new_cache, "ssm": new_ssm} if cfg.parallel_ssm else new_cache
+    return logits, ServeState(cache=cache_out, length=jnp.int32(Ttot), cross=cross_c)
+
+
+def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
+                state: ServeState, token: Array,
+                *, bank: Optional[DictionaryBank]) -> Tuple[Array, ServeState]:
+    """One autoregressive step. token (B,) int32 -> (logits (B,V), state)."""
+    B = token.shape[0]
+    x = _embed_tokens(params, cfg, token)           # (B, d)
+    x = shard_hint(x, BATCH_AXES, None)
+    position = state.length
+    if cfg.enc_dec:
+        # decoder position excludes encoder frames; length counts decoder tokens
+        x = x + params["pos_embed"][position][None].astype(x.dtype)
+    windows = _window_arr(cfg)
+    bank_D = bank.D if bank is not None else jnp.zeros((cfg.num_layers, 1))
+    bank_G = (bank.G if (bank is not None and bank.G is not None)
+              else jnp.zeros((cfg.num_layers, 1)))
+
+    if cfg.rwkv is not None:
+        def body(h, xs):
+            lp, st = xs
+            h, new_st = ssm_mod.rwkv_block_step(lp["rwkv"], h, cfg, st,
+                                                lp["ln1"], lp["ln2"], cfg.norm)
+            return h, new_st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state.cache))
+        return _unembed(params, cfg, x), ServeState(cache=new_state,
+                                                    length=state.length + 1)
+
+    attn_cache = state.cache["attn"] if cfg.parallel_ssm else state.cache
+    ssm_cache = state.cache["ssm"] if cfg.parallel_ssm else None
+
+    def body(h, xs):
+        lp, win, Dl, Gl, cache_l, ssm_l, cross_l = xs
+        w = None if windows is None else win
+        ctx = _dict_ctx(cfg, bank, Dl, Gl)
+        h = shard_hint(h, BATCH_AXES, None)
+        hn = norm_apply(cfg.norm, h, lp["ln1"])
+        new_ssm = None
+        if cfg.mla is not None:
+            attn_out, new_cache = mla_mod.mla_decode_step(
+                lp["attn"], cache_l, hn, cfg, position, ctx[0],
+                N=policy.cfg.N, s=policy.cfg.s, use_gram=policy.cfg.use_gram,
+                delta=policy.cfg.delta, chunk=policy.cfg.chunk, G=ctx[1])
+        else:
+            q, k_t, v_t = _qkv_step(lp["attn"], cfg, hn, position)
+            w_eff = win if windows is not None else None
+            if hasattr(policy, "decode_attend"):
+                # fused sequence-parallel update+attend (shard_map path)
+                att, new_cache = policy.decode_attend(cache_l, q, k_t, v_t, ctx,
+                                                      window=w_eff)
+            else:
+                new_cache = policy.decode(cache_l, k_t, v_t, ctx)
+                att = policy.attend(new_cache, q, ctx, window=w_eff)
+            H, hd = cfg.num_heads, cfg.hd
+            attn_out = att.reshape(B, H * hd).astype(h.dtype) @ lp["attn"]["wo"]
+        if cfg.parallel_ssm:
+            ssm_out, new_ssm = ssm_mod.mamba_step(lp["ssm"], hn, cfg, ssm_l)
+            attn_out = _fuse_parallel(lp, attn_out, ssm_out)
+        h = h + attn_out
+        if cfg.enc_dec:
+            hc = norm_apply(cfg.norm, h, lp["ln_cross"])
+            h = h + cross_attend_step(lp["cross"], cfg, hc, cross_l,
+                                      ctx[0] if ctx else None,
+                                      ctx[1] if ctx else None,
+                                      getattr(policy, "cfg", None).N
+                                      if isinstance(policy, LexicoPolicy) else 0)
+        h2 = norm_apply(cfg.norm, h, lp["ln2"])
+        h = h + _ffn(lp, cfg, h2)
+        return h, (new_cache, new_ssm)
+
+    L = cfg.num_layers
+    xs = (params["layers"],
+          windows if windows is not None else jnp.zeros((L,), jnp.int32),
+          bank_D, bank_G, attn_cache,
+          ssm_cache if cfg.parallel_ssm else jnp.zeros((L,), jnp.int32),
+          state.cross if cfg.enc_dec else jnp.zeros((L,), jnp.int32))
+    x, (new_cache, new_ssm) = jax.lax.scan(body, x, xs)
+    logits = _unembed(params, cfg, x)
+    cache_out = ({"attn": new_cache, "ssm": new_ssm} if cfg.parallel_ssm
+                 else new_cache)
+    return logits, ServeState(cache=cache_out, length=state.length + 1,
+                              cross=state.cross)

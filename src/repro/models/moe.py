@@ -1,0 +1,214 @@
+"""Mixture-of-Experts FFN (top-k routing, optional shared experts).
+
+Sort-based dropless-with-capacity dispatch (Megablocks-flavoured, the
+standard production shape): token×expert assignments are argsorted by expert
+id, bucketed into an (E, C, d) buffer (overflow dropped against capacity
+``C = ceil(tokens*top_k/E * capacity_factor)``), run through a grouped einsum
+(``(E,C,d) x (E,d,f)``), and scattered back weighted by router probabilities.
+
+Sharding: the expert axis of the weights and of the (E, C, d) buffer maps to
+the ``model`` mesh axis (EP); XLA lowers the gather/scatter across the sharded
+axis into the all-to-all pair of a classic MoE dispatch/combine.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+Array = jax.Array
+
+
+def moe_init(key, d: int, cfg: MoEConfig, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, f = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (E, f, d), jnp.float32) * f**-0.5).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[3], (E, d, f), jnp.float32) * d**-0.5).astype(dtype)
+    if cfg.num_shared:
+        f_sh = (cfg.d_ff_shared or cfg.d_ff_expert) * cfg.num_shared
+        p["shared"] = mlp_init(ks[4], d, f_sh, act, dtype)
+    return p
+
+
+def moe_apply(p: dict, x: Array, cfg: MoEConfig, act: str,
+              *, capacity_factor: Optional[float] = None) -> Array:
+    """x (..., d) -> (..., d). Flattens all leading axes into a token axis."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    S, E, k = xt.shape[0], cfg.num_experts, cfg.top_k
+    capacity_factor = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (S, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)   # renormalise over top-k
+
+    # --- dispatch: sort (token, slot) pairs by expert ---
+    flat_e = top_e.reshape(-1)                               # (S*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(S), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    p_sorted = flat_p[order]
+
+    C = max(1, math.ceil(S * k / E * capacity_factor))
+    # position within the expert bucket
+    same = jnp.cumsum(jnp.ones_like(e_sorted), axis=0) - 1
+    start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    slot = same - start[e_sorted]
+    keep = slot < C
+
+    buf = jnp.zeros((E * C, d), xt.dtype)
+    dest = jnp.where(keep, e_sorted * C + slot, E * C)       # OOB drop
+    buf = buf.at[dest.astype(jnp.int32)].set(xt[tok_sorted], mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    # --- grouped expert MLP ---
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, d)
+
+    # --- combine: gather back and weight by router prob ---
+    gathered = jnp.where(keep[:, None], out_buf[jnp.clip(dest, 0, E * C - 1).astype(jnp.int32)], 0.0)
+    contrib = gathered.astype(jnp.float32) * p_sorted[:, None]
+    out = jnp.zeros((S, d), jnp.float32).at[tok_sorted].add(contrib)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], xt, act).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(orig_shape)
+
+
+def moe_apply_ep_local(p_local: dict, x_local: Array, cfg: MoEConfig, act: str,
+                       *, model_axis: str = "model",
+                       fsdp_axis: Optional[str] = "data",
+                       capacity_factor: Optional[float] = None) -> Array:
+    """EP dispatch body — runs INSIDE shard_map.
+
+    Beyond-paper optimization for the collective-bound MoE training cells
+    (EXPERIMENTS.md §Perf): tokens are replicated across the 'model' axis
+    (standard TP activation layout), so each model shard can serve its local
+    E/|model| experts with **zero dispatch communication** — it masks the
+    global top-k assignments to its local expert range, buckets locally, and
+    the only collective is one psum of the (tokens, d) output over 'model'
+    (the same all-reduce a dense TP MLP pays). This replaces the
+    scatter-into-sharded-buffer dispatch that XLA lowers into TB-scale
+    all-reduces.
+
+    ``p_local`` weights arrive as local (E_loc, d/|fsdp|, f) shards; the FSDP
+    axis is all-gathered here (per layer, transient) like XLA would.
+    """
+    capacity_factor = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    orig_shape = x_local.shape
+    d = x_local.shape[-1]
+    xt = x_local.reshape(-1, d)
+    S, E, k = xt.shape[0], cfg.num_experts, cfg.top_k
+
+    def gather_w(w):
+        if fsdp_axis is None:
+            return w
+        return jax.lax.all_gather(w, fsdp_axis, axis=1, tiled=True)
+
+    w_up = gather_w(p_local["w_up"])
+    w_down = jax.lax.all_gather(p_local["w_down"], fsdp_axis, axis=2, tiled=True) \
+        if fsdp_axis is not None else p_local["w_down"]
+    w_gate = gather_w(p_local["w_gate"]) if "w_gate" in p_local else None
+    E_loc = w_up.shape[0]
+    e_lo = jax.lax.axis_index(model_axis) * E_loc
+
+    logits = (xt.astype(jnp.float32) @ p_local["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    flat_e = top_e.reshape(-1)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(S), k)
+    local = (flat_e >= e_lo) & (flat_e < e_lo + E_loc)
+    loc_e = jnp.where(local, flat_e - e_lo, E_loc)          # E_loc = drop bin
+    order = jnp.argsort(loc_e, stable=True)
+    e_sorted = loc_e[order]
+    tok_sorted = flat_tok[order]
+    p_sorted = jnp.where(local[order], flat_p[order], 0.0)
+
+    C = max(1, math.ceil(S * k / E * capacity_factor))
+    same = jnp.cumsum(jnp.ones_like(e_sorted)) - 1
+    start = jnp.searchsorted(e_sorted, jnp.arange(E_loc + 1), side="left")
+    slot = same - start[jnp.minimum(e_sorted, E_loc)]
+    keep = (slot < C) & (e_sorted < E_loc)
+    dest = jnp.where(keep, e_sorted * C + slot, E_loc * C)
+    buf = jnp.zeros((E_loc * C, d), xt.dtype)
+    buf = buf.at[dest.astype(jnp.int32)].set(xt[tok_sorted], mode="drop")
+    buf = buf.reshape(E_loc, C, d)
+
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) \
+            * jnp.einsum("ecd,edf->ecf", buf, w_up)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, w_up))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * C, d)
+
+    gathered = jnp.where(keep[:, None],
+                         out_buf[jnp.clip(dest, 0, E_loc * C - 1).astype(jnp.int32)], 0.0)
+    contrib = gathered.astype(jnp.float32) * p_sorted[:, None]
+    out = jnp.zeros((S, d), jnp.float32).at[tok_sorted].add(contrib)
+    out = jax.lax.psum(out, model_axis)          # the only EP collective
+    return out.astype(x_local.dtype).reshape(orig_shape)
+
+
+def moe_apply_sharded(p: dict, x: Array, cfg: MoEConfig, act: str) -> Array:
+    """shard_map wrapper around ``moe_apply_ep_local``. Falls back to the
+    plain dispatch when no 'model' mesh axis is active (smoke tests)."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty or "model" not in am.axis_names:
+        return moe_apply(p, x, cfg, act)
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in am.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    fsdp = "data" if "data" in am.axis_names else None
+    x_spec = P(*([bspec] + [None] * (x.ndim - 1))) \
+        if x.shape[0] % max(1, math.prod(am.shape[a] for a in batch_axes)) == 0 \
+        else P(*([None] * x.ndim))
+    w_specs = {
+        "router": P(None, None),
+        "w_up": P("model", fsdp, None),
+        "w_down": P("model", None, fsdp),
+    }
+    if "w_gate" in p:
+        w_specs["w_gate"] = P("model", fsdp, None)
+    shared = p.get("shared")
+    p_experts = {k_: v for k_, v in p.items() if k_ != "shared"}
+
+    out = shard_map(
+        lambda pl, xl: moe_apply_ep_local(pl, xl, cfg, act, fsdp_axis=fsdp),
+        mesh=am, in_specs=(w_specs, x_spec), out_specs=x_spec,
+        check_rep=False,
+    )(p_experts, x)
+    if shared is not None:
+        out = out + mlp_apply(shared, x.reshape(-1, x.shape[-1]), act).reshape(x.shape)
+    return out
+
+
+def aux_load_balance_loss(logits: Array, top_e: Array, num_experts: int) -> Array:
+    """Switch-style load-balancing auxiliary loss (fraction * probability)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    S = logits.shape[0]
+    frac = jnp.zeros((num_experts,)).at[top_e.reshape(-1)].add(1.0) / top_e.size
+    imp = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(frac * imp)

@@ -1,0 +1,234 @@
+"""State-space sequence mixers: Mamba-style selective SSM (for Hymba's
+parallel heads) and RWKV6 "Finch" (data-dependent decay linear attention).
+
+Both expose a (sequence-scan, single-step) pair so training/prefill and
+decode share weights and exact math. States are O(1) in sequence length —
+these are the sub-quadratic paths that make ``long_500k`` runnable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Mamba-style selective SSM
+# ===========================================================================
+
+class MambaState(NamedTuple):
+    h: Array           # (B, d_inner, d_state)
+    conv: Array        # (B, conv_width-1, d_inner) — trailing inputs
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = s.dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * s.state_dim, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig) -> MambaState:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return MambaState(h=jnp.zeros((batch, di, s.state_dim), jnp.float32),
+                      conv=jnp.zeros((batch, s.conv_width - 1, di), jnp.float32))
+
+
+def _mamba_core(p: dict, xs: Array, z: Array, h0: Array, cfg: ModelConfig
+                ) -> Tuple[Array, Array]:
+    """xs (B, T, di) post-conv inputs; returns (y (B,T,di), h_T)."""
+    s = cfg.ssm
+    dt_rank = s.dt_rank or max(1, cfg.d_model // 16)
+    proj = xs @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"]
+                         + p["dt_bias"].astype(jnp.float32))          # (B,T,di)
+    Bmat = proj[..., dt_rank:dt_rank + s.state_dim].astype(jnp.float32)
+    Cmat = proj[..., dt_rank + s.state_dim:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                      # (di, n)
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t
+        dA = jnp.exp(dt_t[..., None] * A)                             # (B,di,n)
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xsf = xs.astype(jnp.float32)
+    (hT, ys) = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bmat, 1, 0),
+         jnp.moveaxis(Cmat, 1, 0), jnp.moveaxis(xsf, 1, 0)))
+    ys = jnp.moveaxis(ys, 0, 1)                                       # (B,T,di)
+    y = ys + p["D"].astype(jnp.float32) * xsf
+    return (y * jax.nn.silu(z.astype(jnp.float32))), hT
+
+
+def mamba_forward(p: dict, x: Array, cfg: ModelConfig,
+                  state: MambaState) -> Tuple[Array, MambaState]:
+    """Sequence form. x (B, T, d) -> (out (B, T, d), new state)."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                                 # (B,T,di)
+    # causal depthwise conv over time, seeded by the carried conv state
+    pad = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)  # (B,T+cw-1,di)
+    cw = s.conv_width
+    conv = sum(pad[:, i:i + T] * p["conv_w"][i] for i in range(cw)) + p["conv_b"]
+    xs = jax.nn.silu(conv)
+    y, hT = _mamba_core(p, xs, z, state.h, cfg)
+    new_conv = pad[:, T:].astype(jnp.float32) if cw > 1 else state.conv
+    out = y.astype(x.dtype) @ p["w_out"]
+    return out, MambaState(h=hT, conv=new_conv)
+
+
+def mamba_step(p: dict, x_t: Array, cfg: ModelConfig,
+               state: MambaState) -> Tuple[Array, MambaState]:
+    """Single decode step. x_t (B, d)."""
+    out, st = mamba_forward(p, x_t[:, None], cfg, state)
+    return out[:, 0], st
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+class RWKVState(NamedTuple):
+    S: Array          # (B, H, hd, hd) wkv state
+    x_tm: Array       # (B, d) previous input of time-mix
+    x_cm: Array       # (B, d) previous input of channel-mix
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype) -> dict:
+    r = cfg.rwkv
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    H = d // r.head_dim
+    return {
+        # time-mix
+        "mu_base": (jax.random.uniform(ks[0], (d,), jnp.float32)).astype(dtype),
+        "mu": (jax.random.uniform(ks[1], (5, d), jnp.float32)).astype(dtype),
+        "w_mix1": dense_init(ks[2], d, 5 * r.mix_lora, dtype, scale=1e-2),
+        "w_mix2": (jax.random.normal(ks[3], (5, r.mix_lora, d), jnp.float32) * 1e-2).astype(dtype),
+        "w_r": dense_init(ks[4], d, d, dtype),
+        "w_k": dense_init(ks[5], d, d, dtype),
+        "w_v": dense_init(ks[6], d, d, dtype),
+        "w_g": dense_init(ks[7], d, d, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_dec1": dense_init(ks[8], d, r.decay_lora, dtype, scale=1e-2),
+        "w_dec2": dense_init(ks[9], r.decay_lora, d, dtype, scale=1e-2),
+        "u": jnp.zeros((d,), jnp.float32),
+        "ln_x_w": jnp.ones((r.head_dim,), dtype),
+        "w_o": dense_init(ks[10], d, d, dtype),
+        # channel-mix
+        "mu_k_cm": (jax.random.uniform(ks[11], (d,), jnp.float32)).astype(dtype),
+        "mu_r_cm": jnp.zeros((d,), dtype),
+        "w_k_cm": dense_init(jax.random.fold_in(key, 99), d, f, dtype),
+        "w_v_cm": dense_init(jax.random.fold_in(key, 98), f, d, dtype),
+        "w_r_cm": dense_init(jax.random.fold_in(key, 97), d, d, dtype),
+    }
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig) -> RWKVState:
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    return RWKVState(S=jnp.zeros((batch, H, r.head_dim, r.head_dim), jnp.float32),
+                     x_tm=jnp.zeros((batch, d), jnp.float32),
+                     x_cm=jnp.zeros((batch, d), jnp.float32))
+
+
+def _groupnorm_heads(x: Array, w: Array, eps: float = 64e-5) -> Array:
+    """Per-head layernorm of (B, H, hd)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w.astype(x.dtype)
+
+
+def rwkv_time_mix_step(p: dict, x_t: Array, cfg: ModelConfig, S: Array,
+                       x_prev: Array) -> Tuple[Array, Array]:
+    """One token of RWKV6 time-mix. x_t (B, d) fp32. Returns (out, new S)."""
+    r = cfg.rwkv
+    d = cfg.d_model
+    H, hd = d // r.head_dim, r.head_dim
+    B = x_t.shape[0]
+    delta = x_prev - x_t
+    xx = x_t + delta * p["mu_base"].astype(jnp.float32)
+    dyn = jnp.tanh(xx @ p["w_mix1"]).reshape(B, 5, -1)                # (B,5,lora)
+    dyn = jnp.einsum("bfl,fld->bfd", dyn, p["w_mix2"].astype(jnp.float32))
+    mix = p["mu"].astype(jnp.float32)[None] + dyn                     # (B,5,d)
+    x_w, x_k, x_v, x_r, x_g = [x_t + delta * mix[:, i] for i in range(5)]
+
+    rv = x_r @ p["w_r"]
+    kv = x_k @ p["w_k"]
+    vv = x_v @ p["w_v"]
+    gv = jax.nn.silu(x_g @ p["w_g"])
+    w_dec = jnp.exp(-jnp.exp(
+        p["w0"] + jnp.tanh(x_w @ p["w_dec1"]) @ p["w_dec2"].astype(jnp.float32)))
+
+    rh = rv.reshape(B, H, hd).astype(jnp.float32)
+    kh = kv.reshape(B, H, hd).astype(jnp.float32)
+    vh = vv.reshape(B, H, hd).astype(jnp.float32)
+    wh = w_dec.reshape(B, H, hd)
+    uh = p["u"].reshape(H, hd)
+
+    kv_outer = jnp.einsum("bhi,bhj->bhij", kh, vh)
+    o = jnp.einsum("bhi,bhij->bhj", rh, S + uh[None, :, :, None] * kv_outer)
+    S_new = wh[..., None] * S + kv_outer
+    o = _groupnorm_heads(o, p["ln_x_w"]).reshape(B, d)
+    return (o * gv.astype(jnp.float32)) @ p["w_o"], S_new
+
+
+def rwkv_channel_mix_step(p: dict, x_t: Array, x_prev: Array) -> Array:
+    delta = x_prev - x_t
+    x_k = x_t + delta * p["mu_k_cm"].astype(jnp.float32)
+    x_r = x_t + delta * p["mu_r_cm"].astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(x_k @ p["w_k_cm"]))
+    return jax.nn.sigmoid(x_r @ p["w_r_cm"]) * (k @ p["w_v_cm"])
+
+
+def rwkv_block_seq(p: dict, x: Array, cfg: ModelConfig, state: RWKVState,
+                   ln1: dict, ln2: dict, norm_kind: str) -> Tuple[Array, RWKVState]:
+    """Full RWKV layer over a sequence. x (B, T, d). Residuals included."""
+    from repro.models.layers import norm_apply
+    B, T, d = x.shape
+
+    def step(carry, x_t):
+        S, x_tm, x_cm, = carry
+        h = x_t.astype(jnp.float32)
+        hn = norm_apply(norm_kind, h, ln1).astype(jnp.float32)
+        att, S = rwkv_time_mix_step(p, hn, cfg, S, x_tm)
+        h = h + att
+        hn2 = norm_apply(norm_kind, h, ln2).astype(jnp.float32)
+        ffn = rwkv_channel_mix_step(p, hn2, x_cm)
+        h = h + ffn
+        return (S, hn, hn2), h
+
+    (S, x_tm, x_cm), ys = jax.lax.scan(
+        step, (state.S, state.x_tm, state.x_cm), jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), RWKVState(S=S, x_tm=x_tm, x_cm=x_cm)
+
+
+def rwkv_block_step(p: dict, x_t: Array, cfg: ModelConfig, state: RWKVState,
+                    ln1: dict, ln2: dict, norm_kind: str) -> Tuple[Array, RWKVState]:
+    out, st = rwkv_block_seq(p, x_t[:, None], cfg, state, ln1, ln2, norm_kind)
+    return out[:, 0], st

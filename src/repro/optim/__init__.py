@@ -1,0 +1,3 @@
+from repro.optim.adam import AdamState, adam_init, adam_update, adamw_tree_init, adamw_tree_update
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm

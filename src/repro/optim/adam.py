@@ -1,0 +1,88 @@
+"""Adam / AdamW in pure JAX (no optax in the container).
+
+Two interfaces:
+  * array-level (``adam_init``/``adam_update``) — used by dictionary learning;
+  * pytree-level (``adamw_tree_*``) — used by the LM training loop. Moments
+    live in the same sharding as the params (ZeRO-1-style sharding happens via
+    the param PartitionSpecs, not here).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: Array
+
+
+def adam_init(params: Array) -> AdamState:
+    z = jnp.zeros_like(params, dtype=jnp.float32)
+    return AdamState(mu=z, nu=z, count=jnp.int32(0))
+
+
+def adam_update(
+    params: Array,
+    grad: Array,
+    state: AdamState,
+    *,
+    lr: Array | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[Array, AdamState]:
+    count = state.count + 1
+    g = grad.astype(jnp.float32)
+    mu = b1 * state.mu + (1 - b1) * g
+    nu = b2 * state.nu + (1 - b2) * g * g
+    t = count.astype(jnp.float32)
+    mu_hat = mu / (1 - b1**t)
+    nu_hat = nu / (1 - b2**t)
+    new = params.astype(jnp.float32) - lr * mu_hat / (jnp.sqrt(nu_hat) + eps)
+    return new.astype(params.dtype), AdamState(mu=mu, nu=nu, count=count)
+
+
+def adamw_tree_init(params: Any) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros), count=jnp.int32(0))
+
+
+def adamw_tree_update(
+    params: Any,
+    grads: Any,
+    state: AdamState,
+    *,
+    lr: Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, AdamState]:
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    c1 = 1 - b1**t
+    c2 = 1 - b2**t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        newp = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(mu=new_mu, nu=new_nu, count=count)

@@ -1,0 +1,24 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.0):
+    def f(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(total_steps, 1), 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        stepf = step.astype(jnp.float32)
+        warm = base_lr * stepf / max(warmup_steps, 1)
+        return jnp.where(stepf < warmup_steps, warm, cos(step - warmup_steps))
+
+    return f

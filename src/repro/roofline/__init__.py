@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (
+    V5E, RooflineReport, analyze_compiled, collective_bytes_from_hlo,
+)

@@ -1,0 +1,153 @@
+"""Roofline terms from a compiled (AOT) module — no hardware required.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` supplies FLOPs / bytes-accessed of the
+*partitioned per-device* module (XLA SPMD reports the per-participant
+program), so the per-chip terms divide by peak per chip directly.
+Collective bytes are not in cost_analysis — we parse the post-partitioning
+HLO text and sum the result-shape bytes of every collective op, per class.
+
+Hardware model (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per direction; we charge each collective's full payload
+against one link, a conservative single-link model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # per chip, /s
+    hbm_bw: float          # per chip, B/s
+    link_bw: float         # per link, B/s
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of 'bf16[8,128]' / tuple '(f32[2], s32[4])' signatures."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective class from compiled HLO text."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result-typed op lines look like: '%name = bf16[..] all-reduce(...)'
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+([a-z\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalise fusion/start variants: all-reduce-start, all-gather-start...
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: Dict[str, int]
+    peak_memory_per_device: Optional[int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    useful_ratio: float            # MODEL_FLOPS / (HLO_FLOPs * chips)
+    bottleneck: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                     chips: int, model_flops: float, hw: HW = V5E,
+                     hlo_text: Optional[str] = None) -> RooflineReport:
+    # NOTE: compiled.cost_analysis() counts while-loop bodies ONCE — useless
+    # for scan-over-layers models. We use our own HLO cost model with loop
+    # multipliers (repro.roofline.hlo_cost, validated in tests).
+    from repro.roofline import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = hlo_cost.analyze(text)
+    flops = float(hc["flops"])
+    byts = float(hc["bytes"])
+    coll = {k: int(v) for k, v in hc["collectives"].items()}
+    coll["count"] = -1
+    coll_total = float(hc["collective_bytes"])
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = int(getattr(ma, "temp_size_in_bytes", 0)
+                  + getattr(ma, "argument_size_in_bytes", 0)
+                  + getattr(ma, "output_size_in_bytes", 0)
+                  - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    coll_s = coll_total / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes=coll, peak_memory_per_device=mem,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        model_flops=model_flops, useful_ratio=useful, bottleneck=bottleneck)
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    steps: int = 1) -> float:
+    """MODEL_FLOPS: 6·N·D training, 2·N_active·D inference (per step)."""
+    n_active = cfg.active_param_count()
+    tokens = seq_len * global_batch
+    if shape_kind == "train":
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * global_batch * steps   # decode: one token/seq

@@ -1,0 +1,272 @@
+"""HLO-text cost model with correct loop accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+under-reports scan-over-layers models by ~L× (verified in
+tests/test_roofline.py). This module re-derives the three roofline inputs
+from the compiled HLO text with call-graph multipliers:
+
+  * flops            — every ``dot`` op: 2 x prod(result dims) x contracted
+                       dims (operand shapes resolved through a per-computation
+                       symbol table), x loop multiplier.
+  * bytes accessed   — per top-level op of each *non-fusion* computation
+                       (fusion internals don't touch HBM): operand + result
+                       bytes, x loop multiplier — XLA's own per-op byte model
+                       with loop trips applied.
+  * collective bytes — result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       x loop multiplier.
+
+Loop trip counts come from the ``backend_config known_trip_count`` that XLA
+attaches to rolled loops (fallback: the integer constant in the loop cond).
+Multipliers propagate topologically over the call graph; bytes use a second
+multiplier that is zeroed through fusion edges (fusion internals are
+register/VMEM traffic, not HBM).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict, deque
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OP_KW = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops that move no HBM bytes themselves (bodies/consumers account for them)
+_NO_BYTES = ("parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "iota", "while", "conditional", "call", "custom-call",
+             "optimization-barrier", "partition-id", "replica-id")
+# ops whose traffic is result-sized (they read only a slice of the operand)
+_SLICE_OPS = ("dynamic-slice", "gather", "slice", "reshape", "broadcast",
+              "transpose", "concatenate", "pad", "reverse", "copy")
+_DUS_OPS = ("dynamic-update-slice", "scatter", "select-and-scatter")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(sig: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(sig)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",") if d) if dims else ()
+
+
+def _split_op(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """'%name = SIG opkw(rest...' -> (name, sig, op, rest)."""
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    rest0 = line[m.end():]
+    m2 = _OP_KW.search(rest0)
+    if not m2:
+        return None
+    return m.group(1), rest0[: m2.start()].strip(), m2.group(1), rest0[m2.end():]
+
+
+class Computation:
+    __slots__ = ("name", "flops", "bytes", "collective", "edges", "const_ints",
+                 "root_op")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.collective: Dict[str, float] = defaultdict(float)
+        # (callee, flop_weight, byte_weight) — trip counts already folded in
+        self.edges: List[Tuple[str, float, float]] = []
+        self.const_ints: List[int] = []
+        self.root_op: str = ""
+
+
+def _operands_sig(rest: str, table: Dict[str, str]) -> str:
+    depth = 1
+    end = len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    names = _OPERAND.findall(rest[:end])
+    return " ".join(table.get(n, "") for n in names)
+
+
+def parse_hlo(text: str):
+    comps: Dict[str, Computation] = {}
+    tables: Dict[str, Dict[str, str]] = {}
+    pending: List[Tuple[Computation, str, str, str, str]] = []
+    cur: Optional[Computation] = None
+    table: Dict[str, str] = {}
+    entry: Optional[str] = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and not _NAME_EQ.match(stripped):
+            name_part = stripped.split("(")[0].strip()
+            is_entry = name_part.startswith("ENTRY")
+            name = name_part.replace("ENTRY", "").strip().lstrip("%")
+            if name:
+                cur = Computation(name)
+                comps[name] = cur
+                table = {}
+                tables[name] = table
+                if is_entry:
+                    entry = name
+            continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        parts = _split_op(line)
+        if parts is None:
+            continue
+        name, sig, op, rest = parts
+        table[name] = sig
+        if stripped.startswith("ROOT"):
+            cur.root_op = op
+        for c in _CONST_INT.findall(line):
+            cur.const_ints.append(int(c))
+        pending.append((cur, line, sig, op, rest))
+
+    # second pass: costs + edges (symbol tables complete)
+    for comp, line, sig, op, rest in pending:
+        table = tables[comp.name]
+        if op == "dot":
+            res = _first_dims(sig)
+            shapes = _SHAPE_RE.findall(_operands_sig(rest, table))
+            contracted = 1
+            if shapes:
+                lhs_dims = ([int(d) for d in shapes[0][1].split(",") if d]
+                            if shapes[0][1] else [])
+                mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if mm and mm.group(1):
+                    for i in mm.group(1).split(","):
+                        idx = int(i)
+                        if idx < len(lhs_dims):
+                            contracted *= lhs_dims[idx]
+            comp.flops += 2.0 * math.prod(res or (0,)) * contracted
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                comp.collective[c] += _shape_bytes(sig)
+
+        # --- byte accounting (op-aware) ---
+        eff_op = op
+        if op == "fusion":
+            mcall = re.search(r"calls=%?([\w\.\-]+)", line)
+            callee = comps.get(mcall.group(1)) if mcall else None
+            if callee is not None and callee.root_op:
+                eff_op = callee.root_op
+        if op in _NO_BYTES:
+            pass
+        elif eff_op in _DUS_OPS:
+            # in-place update: read+write of the update payload only (the big
+            # aliased buffer is untouched except the slice)
+            op_sig = _operands_sig(rest, table)
+            sizes = sorted((_shape_bytes(s[0] + "[" + s[1] + "]")
+                            for s in _SHAPE_RE.findall(op_sig)), reverse=True)
+            comp.bytes += 2.0 * sum(sizes[1:]) if len(sizes) > 1 else _shape_bytes(sig)
+        elif eff_op in _SLICE_OPS:
+            comp.bytes += 2.0 * _shape_bytes(sig)
+        else:
+            comp.bytes += _shape_bytes(sig) + _shape_bytes(_operands_sig(rest, table))
+
+        if op == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            mt = _TRIP.search(line)
+            if mb and mc:
+                body, cond = mb.group(1), mc.group(1)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    cints = comps[cond].const_ints if cond in comps else []
+                    trip = max([c for c in cints if c > 0], default=1)
+                comp.edges.append((body, float(trip), float(trip)))
+                comp.edges.append((cond, float(trip + 1), 0.0))
+        elif op == "fusion":
+            mcall = re.search(r"calls=%?([\w\.\-]+)", line)
+            if mcall:
+                comp.edges.append((mcall.group(1), 1.0, 0.0))
+        else:
+            for attr in ("to_apply", "calls", "computation"):
+                mm = re.search(attr + r"=\{?%?([\w\.\-]+)", line)
+                if mm:
+                    comp.edges.append((mm.group(1), 1.0, 1.0))
+            mm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if mm:
+                for br in _OPERAND.findall(mm.group(1)):
+                    comp.edges.append((br, 1.0, 1.0))
+    return comps, entry
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_hlo(text)
+    if entry is None or entry not in comps:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0}
+
+    # topological propagation (Kahn) over the call DAG
+    indeg: Dict[str, int] = defaultdict(int)
+    for c in comps.values():
+        for callee, _, _ in c.edges:
+            indeg[callee] += 1
+    m_flops: Dict[str, float] = defaultdict(float)
+    m_bytes: Dict[str, float] = defaultdict(float)
+    m_flops[entry] = 1.0
+    m_bytes[entry] = 1.0
+    q = deque([n for n in comps if indeg[n] == 0])
+    processed = set()
+    while q:
+        n = q.popleft()
+        processed.add(n)
+        c = comps.get(n)
+        if c is None:
+            continue
+        for callee, wf, wb in c.edges:
+            m_flops[callee] += m_flops[n] * wf
+            m_bytes[callee] += m_bytes[n] * wb
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                q.append(callee)
+
+    flops = 0.0
+    byts = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+    for name, c in comps.items():
+        flops += m_flops.get(name, 0.0) * c.flops
+        byts += m_bytes.get(name, 0.0) * c.bytes
+        for k, v in c.collective.items():
+            coll[k] += m_flops.get(name, 0.0) * v
+    return {"flops": flops, "bytes": byts, "collectives": dict(coll),
+            "collective_bytes": float(sum(coll.values()))}

@@ -1,0 +1,89 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(results: dict, *, mesh: str = "singlepod",
+                   variant: str = "baseline") -> str:
+    rows = []
+    for key, r in sorted(results.items()):
+        if "error" in r:
+            continue
+        arch, shape, m, v = key.split("|")
+        if m != mesh or v != variant:
+            continue
+        dom = r["bottleneck"]
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = (min(r["compute_s"] / total, 1.0) if total else 0.0)
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{dom}** | {r['useful_ratio']:.2f} | {frac:.2f} |")
+    hdr = ("| arch | shape | compute | memory | collective | bottleneck | "
+           "MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def dryrun_table(results: dict, *, variant: str = "baseline") -> str:
+    rows = []
+    for key, r in sorted(results.items()):
+        if "error" in r:
+            rows.append(f"| {key} | FAILED | | | |")
+            continue
+        arch, shape, m, v = key.split("|")
+        if v != variant:
+            continue
+        mem = r.get("mem", {})
+        per_dev = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                   + mem.get("output_bytes", 0) - mem.get("alias_bytes", 0))
+        coll = r.get("collective_bytes", {})
+        coll_str = ", ".join(f"{k.split('-')[-1][:3]} {fmt_b(val)}"
+                             for k, val in coll.items()
+                             if k != "count" and val) or "none"
+        rows.append(f"| {arch} | {shape} | {m} | {fmt_b(per_dev)} | "
+                    f"{coll_str} | {r['compile_s']:.0f}s |")
+    hdr = ("| arch | shape | mesh | bytes/device (args+temp+out) | "
+           "collective schedule (bytes/step) | compile |\n"
+           "|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    results = json.load(open(path))
+    ok = [k for k, v in results.items() if "error" not in v]
+    bad = [k for k, v in results.items() if "error" in v]
+    print(f"## {len(ok)} cells compiled, {len(bad)} failed\n")
+    if bad:
+        for k in bad:
+            print(f"FAILED: {k}")
+    print("\n### Roofline (single-pod 16x16, baseline)\n")
+    print(roofline_table(results))
+    print("\n### Dry-run memory/collectives\n")
+    print(dryrun_table(results))
+
+
+if __name__ == "__main__":
+    main()

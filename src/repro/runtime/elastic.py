@@ -1,0 +1,51 @@
+"""Elastic scaling: re-mesh and re-shard after topology changes.
+
+When nodes die (or capacity is added) the job restarts with a different
+device count. The flow:
+
+  1. `plan_mesh(n_devices)` picks the largest supported (data, model) grid —
+     model-parallel width is kept if possible (weights reshard cheaply along
+     data), else the nearest divisor is chosen.
+  2. `reshard(tree, mesh, shardings)` device_puts every leaf against the new
+     mesh — combined with checkpoint.restore_pytree this is restore-to-any-
+     mesh (checkpoints store global logical arrays).
+  3. The data pipeline keys batches by step + process index, so the resumed
+     run replays the exact token stream regardless of the new process grid.
+
+Exercised in tests/test_fault_tolerance.py (save on one mesh, restore on
+another, bit-identical logical state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+
+def plan_mesh(n_devices: int, *, prefer_model: int = 16,
+              with_pod: bool = False) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (data, model) grid for n_devices, keeping model width if it
+    divides; otherwise fall back to the largest power-of-two divisor."""
+    model = prefer_model
+    while model > 1 and n_devices % model != 0:
+        model //= 2
+    data = n_devices // model
+    if with_pod and data % 2 == 0:
+        return (2, data // 2, model), ("pod", "data", "model")
+    return (data, model), ("data", "model")
+
+
+def remesh(n_devices: Optional[int] = None, *, prefer_model: int = 16):
+    n = n_devices if n_devices is not None else len(jax.devices())
+    shape, axes = plan_mesh(n, prefer_model=prefer_model)
+    return make_mesh(shape, axes)
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Move every leaf to the new shardings (cross-mesh resharding)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings,
+        is_leaf=lambda x: x is None)

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules (MaxText-style, regex over tree paths).
+
+Parallelism mapping on the production mesh (pod, data, model):
+  * ``model``  — tensor parallel (attention heads / MLP hidden / vocab) and
+    expert parallel (MoE expert axis), and *sequence parallel* for the
+    compressed-cache token axis during decode (beyond-paper optimization).
+  * ``data``   — batch data-parallel AND FSDP-style parameter sharding (the
+    second-to-last weight axis shards over ``data``; XLA SPMD inserts the
+    per-layer all-gathers). Needed to fit the 123B/235B configs.
+  * ``pod``    — outer data parallelism across pods (gradient reduction is
+    hierarchical: reduce-scatter in-pod then all-reduce across pods, which is
+    what XLA emits for a ('pod','data') batch axis).
+
+Rules are (regex over '/'-joined tree path) -> PartitionSpec. First match
+wins; default is replicate. Caches get their own rule-set (batch on
+('pod','data'), compressed-token axis optionally on 'model').
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules. Layer-stacked weights carry a leading (L,) axis => rules
+# below include it as the first (None) entry when the path starts 'layers'.
+# ---------------------------------------------------------------------------
+
+def param_rules(fsdp: bool = True):
+    d = "data" if fsdp else None
+    return [
+        # embeddings / head
+        (r"^embed$",                 P("model", d)),
+        (r"^lm_head$",               P(d, "model")),
+        (r"^pos_embed$",             P(None, None)),
+        (r"^meta$",                  P(None, None)),
+        # MoE experts (L, E, d, f) / (L, E, f, d): expert-parallel + FSDP
+        (r"mlp/w_(gate|up)$.*",      None),  # placeholder; resolved below by ndim
+        # MLA
+        (r"attn/w_q$",               P(None, d, "model")),
+        (r"attn/w_dkv$",             P(None, d, None)),
+        (r"attn/w_uk$",              P(None, d, "model")),
+        (r"attn/w_uv$",              P(None, d, "model")),
+        (r"attn/kv_norm$",           P(None, None)),
+        # attention
+        (r"(attn|cross)/w[qkv]$",    P(None, d, "model")),
+        (r"(attn|cross)/wo$",        P(None, "model", d)),
+        (r"(attn|cross)/[qk]_norm$", P(None, None)),
+        # dense MLP
+        (r"mlp/(w_gate|w_up)$",      P(None, d, "model")),
+        (r"mlp/w_down$",             P(None, "model", d)),
+        (r"mlp/shared/(w_gate|w_up)$", P(None, d, "model")),
+        (r"mlp/shared/w_down$",      P(None, "model", d)),
+        (r"mlp/router$",             P(None, None, None)),
+        # mamba
+        (r"ssm/w_in$",               P(None, d, "model")),
+        (r"ssm/conv_[wb]$",          P(None, None, "model")),
+        (r"ssm/x_proj$",             P(None, "model", None)),
+        (r"ssm/dt_proj$",            P(None, None, "model")),
+        (r"ssm/dt_bias$",            P(None, "model")),
+        (r"ssm/A_log$",              P(None, "model", None)),
+        (r"ssm/D$",                  P(None, "model")),
+        (r"ssm/w_out$",              P(None, "model", d)),
+        # rwkv
+        (r"rwkv/w_[rkvg]$",          P(None, d, "model")),
+        (r"rwkv/w_o$",               P(None, "model", d)),
+        (r"rwkv/w_k_cm$",            P(None, d, "model")),
+        (r"rwkv/w_v_cm$",            P(None, "model", d)),
+        (r"rwkv/w_r_cm$",            P(None, d, "model")),
+        (r"rwkv/(w_dec[12]|w_mix[12]|mu.*|w0|u|ln_x_w)$", None),  # small, replicate
+    ]
+
+
+_MOE_EXPERT_RE = re.compile(r"mlp/w_(gate|up|down)$")
+
+
+def spec_for_param(path_str: str, ndim: int, *, moe: bool, fsdp: bool = True) -> P:
+    d = "data" if fsdp else None
+    if moe and _MOE_EXPERT_RE.search(path_str) and ndim == 4:
+        # (L, E, d_model, f) or (L, E, f, d_model): EP on E, FSDP on dim 2
+        return P(None, "model", d, None)
+    for pat, spec in param_rules(fsdp):
+        if spec is None:
+            continue
+        if re.search(pat, path_str):
+            # trim/extend spec to ndim (layer-stacked tensors already include
+            # the leading None; non-stacked (embed) match exactly)
+            entries = list(spec)
+            if len(entries) < ndim:
+                entries = [None] * (ndim - len(entries)) + entries
+            if len(entries) > ndim:
+                entries = entries[len(entries) - ndim:]
+            return P(*entries)
+    return P()  # replicate
+
+
+def param_shardings(mesh: Mesh, params: Any, *, moe: bool, fsdp: bool = True) -> Any:
+    def f(path, leaf):
+        ps = _path_str(path)
+        spec = spec_for_param(ps, leaf.ndim, moe=moe, fsdp=fsdp)
+        # drop axes that don't divide
+        entries = []
+        for dim, ax in zip(leaf.shape, list(spec) + [None] * (leaf.ndim - len(spec))):
+            if ax is None:
+                entries.append(None)
+            else:
+                size = mesh.shape[ax] if isinstance(ax, str) else 1
+                entries.append(ax if dim % size == 0 and dim >= size else None)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# Cache / activation shardings
+# ---------------------------------------------------------------------------
+
+def cache_shardings(mesh: Mesh, cache: Any, *, batch_axes=("pod", "data"),
+                    seq_axis: Optional[str] = "model") -> Any:
+    """Serve-cache shardings. All cache tensors are (L, B, ...); batch on
+    ('pod','data'). Compressed-token axes (T_max slot) go on ``seq_axis``
+    (sequence-parallel decode) when set — the paper-faithful baseline uses
+    ``seq_axis=None`` (cache replicated over 'model', single-host semantics).
+    """
+    batch = tuple(a for a in batch_axes if a in mesh.shape)
+    batch = batch if len(batch) > 1 else (batch[0] if batch else None)
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim <= 1:
+            # scalars / per-layer (L,) bookkeeping: replicate
+            return NamedSharding(mesh, P())
+        entries = [None] * leaf.ndim
+        entries[1] = batch  # (L, B, ...) batch axis
+        # token axis of the big compressed stores: k_vals/k_idx/v_vals/v_idx
+        # (L, B, KV, T, s) at dim 3; mla vals/idx (L, B, T, s) at dim 2
+        if seq_axis is not None and re.search(r"(k_|v_)?(vals|idx|q|scale|zero)$", ps):
+            tdim = leaf.ndim - 2
+            if tdim >= 2 and leaf.shape[tdim] % mesh.shape[seq_axis] == 0:
+                entries[tdim] = seq_axis
+        if re.search(r"(dense_k|dense_v)$", ps) and seq_axis is not None:
+            tdim = leaf.ndim - 2
+            if leaf.shape[tdim] % mesh.shape[seq_axis] == 0:
+                entries[tdim] = seq_axis
+        # validate divisibility on batch axis
+        bdim = 1
+        ax = entries[bdim]
+        if ax is not None:
+            size = (mesh.shape[ax] if isinstance(ax, str)
+                    else int(jax.numpy.prod(jax.numpy.array([mesh.shape[a] for a in ax]))))
+            if leaf.shape[bdim] % size != 0:
+                entries[bdim] = None
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def data_sharding(mesh: Mesh, *, batch_axes=("pod", "data"),
+                  batch_size: Optional[int] = None) -> NamedSharding:
+    """Batch sharding over ('pod','data'); axes that don't divide the batch
+    are dropped greedily (long_500k has batch=1 — fully replicated)."""
+    batch = [a for a in batch_axes if a in mesh.shape]
+    if batch_size is not None:
+        while batch:
+            size = 1
+            for a in batch:
+                size *= mesh.shape[a]
+            if batch_size % size == 0:
+                break
+            batch.pop()
+    if not batch:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(tuple(batch) if len(batch) > 1 else batch[0]))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_unit_dict(rng, m, N):
+    D = rng.normal(size=(m, N))
+    return D / np.linalg.norm(D, axis=0, keepdims=True)

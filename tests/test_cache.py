@@ -1,0 +1,115 @@
+"""LexicoCache: prefill/decode vs dense-reconstruction oracle; ring buffer;
+flash-decode == naive softmax; window masking; memory accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core.omp import OMPResult, reconstruct
+from tests.conftest import make_unit_dict
+
+
+def _mk(rng, B=2, KV=2, m=16, N=64, s=6, n_b=4, T_max=32):
+    D_k = jnp.asarray(make_unit_dict(rng, m, N), jnp.float32)
+    D_v = jnp.asarray(make_unit_dict(rng, m, N), jnp.float32)
+    cache = core.init_layer_cache(B, KV, m, t_max=T_max, n_b=n_b, s=s,
+                                  val_dtype=jnp.float32)
+    return D_k, D_v, cache
+
+
+def _oracle_attend(cache, q, D_k, D_v, m):
+    rk = OMPResult(cache.k_vals.astype(jnp.float32), cache.k_idx.astype(jnp.int32), None, None)
+    rv = OMPResult(cache.v_vals.astype(jnp.float32), cache.v_idx.astype(jnp.int32), None, None)
+    K_hat = reconstruct(rk, D_k)[:, :, :int(cache.t_c)]
+    V_hat = reconstruct(rv, D_v)[:, :, :int(cache.t_c)]
+    # ring order is irrelevant to softmax; restrict to valid entries
+    kb = cache.k_buf.astype(jnp.float32)[:, :, :int(cache.buf_len)]
+    vb = cache.v_buf.astype(jnp.float32)[:, :, :int(cache.buf_len)]
+    K_all = jnp.concatenate([K_hat, kb], axis=2)
+    V_all = jnp.concatenate([V_hat, vb], axis=2)
+    s_ = jnp.einsum("bkgm,bktm->bkgt", q, K_all) / np.sqrt(m)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bkgt,bktm->bkgm", p, V_all)
+
+
+def test_prefill_attend_matches_oracle(rng):
+    B, KV, G, m, N, s, n_b = 2, 2, 2, 16, 64, 6, 4
+    D_k, D_v, cache = _mk(rng, B=B, KV=KV, m=m, N=N, s=s, n_b=n_b)
+    T = 12
+    K = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    cache = core.prefill_compress(cache, K, V, D_k, D_v, s=s)
+    assert int(cache.t_c) == T - n_b and int(cache.buf_len) == n_b
+    q = jnp.asarray(rng.normal(size=(B, KV, G, m)), jnp.float32)
+    out = core.attend(cache, q, D_k, D_v, N=N)
+    ref = _oracle_attend(cache, q, D_k, D_v, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_decode_ring_and_flash(rng):
+    B, KV, G, m, N, s, n_b = 2, 2, 2, 16, 64, 6, 4
+    D_k, D_v, cache = _mk(rng, B=B, KV=KV, m=m, N=N, s=s, n_b=n_b)
+    T = 8
+    K = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    cache = core.prefill_compress(cache, K, V, D_k, D_v, s=s)
+    for i in range(7):
+        kt = jnp.asarray(rng.normal(size=(B, KV, m)), jnp.float32)
+        cache = core.decode_update(cache, kt, kt, D_k, D_v, s=s)
+    assert int(cache.t_c) == (T - n_b) + 7
+    assert int(cache.buf_len) == n_b
+    assert int(cache.buf_start) == 7 % n_b
+    q = jnp.asarray(rng.normal(size=(B, KV, G, m)), jnp.float32)
+    naive = core.attend(cache, q, D_k, D_v, N=N, chunk=None)
+    flash = core.attend(cache, q, D_k, D_v, N=N, chunk=5)   # non-dividing chunk
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(flash), atol=1e-5)
+    ref = _oracle_attend(cache, q, D_k, D_v, m)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(ref), atol=1e-5)
+
+
+def test_window_masking(rng):
+    B, KV, G, m, N, s, n_b = 1, 1, 1, 16, 64, 8, 2
+    D_k, D_v, cache = _mk(rng, B=B, KV=KV, m=m, N=N, s=s, n_b=n_b, T_max=32)
+    T = 10
+    K = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    cache = core.prefill_compress(cache, K, K, D_k, D_v, s=s)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, m)), jnp.float32)
+    win = 4  # only last 4 tokens (2 compressed + 2 buffer)
+    out = core.attend(cache, q, D_k, D_v, N=N, window=jnp.int32(win))
+    # oracle: mask compressed positions < length-win
+    rk = OMPResult(cache.k_vals.astype(jnp.float32), cache.k_idx.astype(jnp.int32), None, None)
+    rv = OMPResult(cache.v_vals.astype(jnp.float32), cache.v_idx.astype(jnp.int32), None, None)
+    K_hat = reconstruct(rk, D_k)[:, :, :int(cache.t_c)]
+    V_hat = reconstruct(rv, D_v)[:, :, :int(cache.t_c)]
+    lo = T - win
+    K_all = jnp.concatenate([K_hat[:, :, lo:], cache.k_buf.astype(jnp.float32)], axis=2)
+    V_all = jnp.concatenate([V_hat[:, :, lo:], cache.v_buf.astype(jnp.float32)], axis=2)
+    s_ = jnp.einsum("bkgm,bktm->bkgt", q, K_all) / np.sqrt(m)
+    p = jax.nn.softmax(s_, axis=-1)
+    ref = jnp.einsum("bkgt,bktm->bkgm", p, V_all)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_memory_accounting():
+    # paper's law: payload = 3s+2 bytes per vector -> 1.17s% of fp16 at m=128
+    from repro.core.quant import kv_size_fraction, payload_bytes
+    assert payload_bytes(16, "fp8") == 50
+    assert abs(kv_size_fraction(16, 128) - 0.1953) < 1e-3
+    assert abs(100 * kv_size_fraction(32, 128) - 38.28) < 0.1
+    pct = core.kv_size_percent(t_c=1000, n_b=128, s=16, m=128)
+    assert 19.0 < pct < 29.0
+
+
+def test_fp8_storage_roundtrip(rng):
+    B, KV, m, N, s, n_b = 1, 1, 16, 64, 6, 2
+    D_k = jnp.asarray(make_unit_dict(rng, m, N), jnp.float32)
+    cache = core.init_layer_cache(B, KV, m, t_max=16, n_b=n_b, s=s)  # fp8 default
+    K = jnp.asarray(rng.normal(size=(B, KV, 6, m)), jnp.float32)
+    cache = core.prefill_compress(cache, K, K, D_k, D_k, s=s)
+    assert cache.k_vals.dtype == jnp.float8_e4m3fn
+    assert cache.k_idx.dtype == jnp.int16
+    rk = OMPResult(cache.k_vals.astype(jnp.float32), cache.k_idx.astype(jnp.int32), None, None)
+    K_hat = reconstruct(rk, D_k)[:, :, :4]
+    rel = jnp.linalg.norm(K_hat - K[:, :, :4], axis=-1) / jnp.linalg.norm(K[:, :, :4], axis=-1)
+    assert float(jnp.max(rel)) < 0.6   # fp8 coefficients still approximate

@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+All kernels run in interpret=True on CPU (the TPU path shares the body)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.omp_corr import omp_corr_argmax
+from repro.kernels.sparse_scores import sparse_scores
+from repro.kernels.sparse_values import sparse_values
+from tests.conftest import make_unit_dict
+
+
+@pytest.mark.parametrize("T,s,N,blk", [(64, 8, 256, 16), (128, 4, 512, 32),
+                                       (32, 16, 128, 32), (96, 8, 256, 32)])
+@pytest.mark.parametrize("vdtype", [jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn])
+@pytest.mark.parametrize("idtype", [jnp.int32, jnp.int16])
+def test_sparse_scores_sweep(rng, T, s, N, blk, vdtype, idtype):
+    qd = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(T, s)), jnp.float32).astype(vdtype)
+    idx = jnp.asarray(rng.integers(0, N, (T, s)), idtype)
+    out = sparse_scores(qd, vals, idx, block_t=blk, interpret=True)
+    exp = ref.sparse_scores_ref(qd, vals, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+@pytest.mark.parametrize("T,s,N,blk", [(64, 8, 256, 16), (32, 16, 128, 32)])
+@pytest.mark.parametrize("vdtype", [jnp.float32, jnp.float8_e4m3fn])
+def test_sparse_values_sweep(rng, T, s, N, blk, vdtype):
+    probs = jnp.asarray(rng.random(T), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(T, s)), jnp.float32).astype(vdtype)
+    idx = jnp.asarray(rng.integers(0, N, (T, s)), jnp.int16)
+    out = sparse_values(probs, vals, idx, N=N, block_t=blk, interpret=True)
+    exp = ref.sparse_values_ref(probs, vals, idx, N)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,m,N,bb,bn", [(16, 32, 256, 8, 64), (8, 16, 128, 8, 128),
+                                         (32, 64, 512, 16, 256)])
+def test_omp_corr_sweep(rng, B, m, N, bb, bn):
+    D = jnp.asarray(make_unit_dict(rng, m, N), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(B, m)), jnp.float32)
+    sel = jnp.zeros((B, N), bool)
+    sel = sel.at[:, rng.integers(0, N, 3)].set(True)
+    arg, mx = omp_corr_argmax(r, D, sel, block_b=bb, block_n=bn, interpret=True)
+    rarg, rmx = ref.omp_corr_ref(D, r, sel)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(rarg))
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(rmx), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), T=st.sampled_from([16, 48, 64]),
+       s=st.sampled_from([2, 8]))
+def test_scores_property(seed, T, s):
+    """Kernel == oracle for random shapes; scores are linear in vals."""
+    rng = np.random.default_rng(seed)
+    N = 128
+    qd = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(T, s)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, N, (T, s)), jnp.int32)
+    out = sparse_scores(qd, vals, idx, block_t=16, interpret=True)
+    exp = ref.sparse_scores_ref(qd, vals, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+    out2 = sparse_scores(qd, 2.0 * vals, idx, block_t=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out2), 2 * np.asarray(out), atol=1e-4)
+
+
+def test_values_mass_conservation(rng):
+    """sum_n c[n] == sum_t probs[t] * sum_j vals[t,j]."""
+    T, s, N = 64, 8, 256
+    probs = jnp.asarray(rng.random(T), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(T, s)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, N, (T, s)), jnp.int32)
+    c = sparse_values(probs, vals, idx, N=N, block_t=16, interpret=True)
+    lhs = float(jnp.sum(c))
+    rhs = float(jnp.sum(probs[:, None] * vals))
+    assert abs(lhs - rhs) < 1e-3

@@ -1,0 +1,84 @@
+"""Per-arch smoke tests: reduced configs, one train forward + loss + one
+prefill + decode steps on CPU, asserting shapes and no NaNs. (Deliverable f.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.models import model as M
+from repro.models.cache_policy import LexicoPolicy
+
+LEX = LexicoConfig(N=64, s=4, n_b=4, chunk=8)
+
+
+@pytest.mark.parametrize("name", configs.ARCHS)
+def test_arch_smoke(name, rng):
+    cfg = configs.get_smoke(name)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), cfg, LEX)
+    if cfg.attn_free:
+        assert bank is None
+    B, T = 2, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, 8, cfg.d_model)), jnp.float32)
+
+    logits = M.forward_train(params, cfg, batch)
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    loss = float(M.lm_loss(params, cfg, batch))
+    assert 0 < loss < 20
+
+    policy = LexicoPolicy(LEX)
+    lg, state = M.prefill(params, cfg, policy, batch, bank=bank,
+                          t_max=T + cfg.num_meta_tokens + 8)
+    assert lg.shape == (B, cfg.vocab_size)
+    for _ in range(3):
+        lg, state = M.decode_step(params, cfg, policy, state, tokens[:, 0], bank=bank)
+    assert not bool(jnp.isnan(lg).any())
+    assert int(state.length) == T + cfg.num_meta_tokens + 3
+
+
+@pytest.mark.parametrize("name", ["llama3.2-1b", "qwen3-0.6b", "hymba-1.5b",
+                                  "deepseek-v2-lite-16b", "whisper-tiny"])
+def test_serve_matches_teacher_forcing(name, rng):
+    """Golden test: at s = cached_dim (full-rank OMP) the compressed serving
+    path reproduces the teacher-forced logits (up to codec rounding)."""
+    cfg = configs.get_smoke(name)
+    m = cfg.cached_vector_dim
+    lex = LexicoConfig(N=128, s=m, n_b=4, chunk=None, codec="fp16")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), cfg, lex)
+    B, T, Tp = 2, 12, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, 8, cfg.d_model)), jnp.float32)
+    full = M.forward_train(params, cfg, batch)
+    scale = float(jnp.max(jnp.abs(full)))
+
+    pb = {"tokens": tokens[:, :Tp], **({"frames": batch["frames"]} if cfg.enc_dec else {})}
+    policy = LexicoPolicy(lex)
+    lg, state = M.prefill(params, cfg, policy, pb, bank=bank,
+                          t_max=T + cfg.num_meta_tokens + 4)
+    assert float(jnp.max(jnp.abs(lg - full[:, Tp - 1]))) < 1e-3 * max(scale, 1)
+    worst = 0.0
+    for t in range(Tp, T):
+        lg, state = M.decode_step(params, cfg, policy, state, tokens[:, t], bank=bank)
+        worst = max(worst, float(jnp.max(jnp.abs(lg - full[:, t]))))
+    assert worst < 0.05 * max(scale, 1), worst
+
+
+def test_param_counts_sane():
+    for name in configs.ARCHS:
+        cfg = configs.get(name)
+        n = cfg.param_count()
+        assert n > 3e7, (name, n)   # whisper-tiny is ~57M; everything else >0.5B
+    assert 1.0e11 < configs.get("mistral-large-123b").param_count() < 1.4e11
+    assert 2.6e9 < configs.get("starcoder2-3b").param_count() < 3.6e9
+    moe = configs.get("qwen3-moe-235b-a22b")
+    assert 1.8e11 < moe.param_count() < 2.9e11
+    assert moe.active_param_count() < 0.2 * moe.param_count()

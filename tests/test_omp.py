@@ -1,0 +1,98 @@
+"""OMP correctness: against the naive oracle + hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.omp import omp_batch, omp_multi_dict, reconstruct
+from repro.core.ref_omp import omp_ref_batch
+from tests.conftest import make_unit_dict
+
+
+@pytest.mark.parametrize("use_gram", [True, False])
+@pytest.mark.parametrize("m,N,s", [(16, 64, 6), (32, 128, 8), (8, 32, 8)])
+def test_omp_matches_reference(rng, use_gram, m, N, s):
+    D = make_unit_dict(rng, m, N)
+    K = rng.normal(size=(6, m)).astype(np.float32)
+    res = omp_batch(jnp.asarray(K), jnp.asarray(D, jnp.float32), s, use_gram=use_gram)
+    rv, ri, rn, rr2 = omp_ref_batch(K, D, s)
+    np.testing.assert_array_equal(np.sort(np.asarray(res.idx), -1), np.sort(ri, -1))
+    np.testing.assert_allclose(np.asarray(res.vals), rv, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(res.resid2), rr2, rtol=1e-2, atol=1e-4)
+
+
+def test_omp_precomputed_gram_matches(rng):
+    D = jnp.asarray(make_unit_dict(rng, 16, 64), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    G = D.T @ D
+    a = omp_batch(K, D, 5, use_gram=True)
+    b = omp_batch(K, D, 5, use_gram=True, G=G)
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    np.testing.assert_allclose(np.asarray(a.vals), np.asarray(b.vals), atol=1e-6)
+
+
+def test_exact_recovery_of_sparse_signals(rng):
+    """A signal that IS s-sparse in D is recovered (near-)exactly."""
+    m, N, s = 32, 128, 4
+    D = make_unit_dict(rng, m, N)
+    true_idx = rng.choice(N, size=(8, s), replace=False)
+    coef = rng.normal(size=(8, s)) + np.sign(rng.normal(size=(8, s))) * 1.0
+    K = np.einsum("bs,mbs->bm", coef, D[:, true_idx.T].transpose(0, 2, 1))
+    res = omp_batch(jnp.asarray(K, jnp.float32), jnp.asarray(D, jnp.float32), s)
+    rel = np.sqrt(np.asarray(res.resid2)) / np.linalg.norm(K, axis=-1)
+    assert np.all(rel < 0.05), rel
+
+
+@settings(max_examples=20, deadline=None)
+@given(s1=st.integers(1, 4), extra=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_error_monotone_in_sparsity(s1, extra, seed):
+    """Residual is non-increasing in s (greedy nesting property)."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(make_unit_dict(rng, 12, 48), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(3, 12)), jnp.float32)
+    r1 = omp_batch(K, D, s1)
+    r2 = omp_batch(K, D, s1 + extra)
+    assert np.all(np.asarray(r2.resid2) <= np.asarray(r1.resid2) + 1e-5)
+    # greedy nesting: first s1 indices agree
+    np.testing.assert_array_equal(np.asarray(r1.idx)[:, :s1],
+                                  np.asarray(r2.idx)[:, :s1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(delta=st.floats(0.1, 0.9), seed=st.integers(0, 2**16))
+def test_threshold_semantics(delta, seed):
+    """With early stop at delta, either the target error is met or all s_max
+    slots are used; nnz reflects the used slots; truncation == smaller-s run."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(make_unit_dict(rng, 12, 48), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(4, 12)), jnp.float32)
+    s_max = 10
+    res = omp_batch(K, D, s_max, delta=delta)
+    nnz = np.asarray(res.nnz)
+    rel = np.sqrt(np.asarray(res.resid2)) / np.linalg.norm(np.asarray(K), axis=-1)
+    assert np.all((rel <= delta + 1e-5) | (nnz == s_max))
+    # unused slots are zeroed
+    vals = np.asarray(res.vals)
+    for b in range(vals.shape[0]):
+        assert np.all(vals[b, nnz[b]:] == 0)
+
+
+def test_multi_dict_batching(rng):
+    d, B, m, N, s = 3, 5, 16, 64, 4
+    D = np.stack([make_unit_dict(rng, m, N) for _ in range(d)])
+    K = rng.normal(size=(d, B, m)).astype(np.float32)
+    res = omp_multi_dict(jnp.asarray(K), jnp.asarray(D, jnp.float32), s)
+    for i in range(d):
+        single = omp_batch(jnp.asarray(K[i]), jnp.asarray(D[i], jnp.float32), s)
+        np.testing.assert_array_equal(np.asarray(res.idx[i]), np.asarray(single.idx))
+
+
+def test_reconstruct_shapes(rng):
+    D = jnp.asarray(make_unit_dict(rng, 16, 64), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(2, 3, 16)), jnp.float32)
+    res = omp_batch(K, D, 4)
+    rec = reconstruct(res, D)
+    assert rec.shape == (2, 3, 16)
+    rel = jnp.linalg.norm(rec - K, axis=-1) / jnp.linalg.norm(K, axis=-1)
+    assert float(jnp.max(rel)) < 1.0

@@ -1,0 +1,74 @@
+"""Cache-policy baselines through the serving stack: interface conformance and
+the expected fidelity ordering (dense < kivi-4 ~ ptq-4 < kivi-2 < eviction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.baselines import EvictionPolicy, KIVIPolicy, PerTokenQuantPolicy
+from repro.models import model as M
+from repro.models.cache_policy import DensePolicy, make_policy
+
+
+def _decode_errs(cfg, params, tokens, full, policy, T, Tp):
+    pb = {"tokens": tokens[:, :Tp]}
+    lg, state = M.prefill(params, cfg, policy, pb, bank=None, t_max=T + 8)
+    errs = [float(jnp.max(jnp.abs(lg - full[:, Tp - 1])))]
+    for t in range(Tp, T):
+        lg, state = M.decode_step(params, cfg, policy, state, tokens[:, t], bank=None)
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t]))))
+    return max(errs)
+
+
+def test_policy_fidelity_ordering(rng):
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, T, Tp = 2, 24, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    full = M.forward_train(params, cfg, {"tokens": tokens, "labels": tokens})
+    errs = {}
+    for name, pol in [
+        ("dense", DensePolicy()),
+        ("kivi4", KIVIPolicy(bits=4, group=8, n_b=8)),
+        ("kivi2", KIVIPolicy(bits=2, group=8, n_b=8)),
+        ("ptq4", PerTokenQuantPolicy(bits=4, n_b=4)),
+        ("evict", EvictionPolicy(budget=12, recent=4)),
+    ]:
+        errs[name] = _decode_errs(cfg, params, tokens, full, pol, T, Tp)
+    assert errs["dense"] < errs["kivi4"] < errs["kivi2"]
+    assert errs["dense"] < errs["ptq4"]
+    assert errs["kivi2"] < errs["evict"]  # eviction drops tokens entirely
+
+
+def test_make_policy_registry():
+    from repro.configs.base import LexicoConfig
+    assert make_policy("lexico", LexicoConfig()).__class__.__name__ == "LexicoPolicy"
+    assert make_policy("dense").__class__.__name__ == "DensePolicy"
+    assert make_policy("kivi", bits=2).bits == 2
+    assert make_policy("per_token").bits == 4
+    assert make_policy("eviction", budget=64).budget == 64
+    with pytest.raises(KeyError):
+        make_policy("nope")
+
+
+def test_kivi_memory_fraction():
+    k2 = KIVIPolicy(bits=2, group=32)
+    # 2-bit + per-group scales at m=128: 32B payload + 32B meta = 25% of 256B
+    assert abs(k2.kv_size_fraction(128) - 0.25) < 0.01
+    k4 = KIVIPolicy(bits=4, group=32)
+    assert abs(k4.kv_size_fraction(128) - 0.375) < 0.01
+
+
+def test_eviction_budget_respected(rng):
+    cfg = configs.get_smoke("llama3.2-1b")
+    pol = EvictionPolicy(budget=8, recent=2)
+    cache = pol.init(2, cfg.num_kv_heads, cfg.hd, t_max=64)
+    K = jnp.asarray(rng.normal(size=(2, cfg.num_kv_heads, 32, cfg.hd)), jnp.float32)
+    cache = pol.prefill(cache, K, K, None)
+    assert cache.k.shape[2] == 8                    # budget slots only
+    assert int(cache.length) == 32                  # but tracks true length
+    kt = jnp.asarray(rng.normal(size=(2, cfg.num_kv_heads, cfg.hd)), jnp.float32)
+    cache = pol.decode(cache, kt, kt, None)
+    assert int(cache.length) == 33
+    assert int(jnp.max(cache.pos)) == 32            # newest kept

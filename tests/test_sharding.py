@@ -1,0 +1,51 @@
+"""Sharding rules: param specs by path, cache specs, batch fallback."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.sharding import data_sharding, spec_for_param
+
+
+def test_param_specs():
+    # stacked layer weights: (L, d_in, d_out) -> FSDP on d_in, TP on d_out
+    assert spec_for_param("layers/attn/wq", 3, moe=False) == P(None, "data", "model")
+    assert spec_for_param("layers/attn/wo", 3, moe=False) == P(None, "model", "data")
+    assert spec_for_param("layers/mlp/w_up", 3, moe=False) == P(None, "data", "model")
+    assert spec_for_param("layers/mlp/w_down", 3, moe=False) == P(None, "model", "data")
+    # MoE experts: EP on E
+    assert spec_for_param("layers/mlp/w_up", 4, moe=True) == P(None, "model", "data", None)
+    assert spec_for_param("layers/mlp/w_down", 4, moe=True) == P(None, "model", "data", None)
+    assert spec_for_param("layers/mlp/router", 3, moe=True) == P(None, None, None)
+    # embeddings
+    assert spec_for_param("embed", 2, moe=False) == P("model", "data")
+    assert spec_for_param("lm_head", 2, moe=False) == P("data", "model")
+    # norms replicate
+    assert spec_for_param("layers/ln1/w", 2, moe=False) == P()
+    # no-FSDP mode drops the data axis
+    assert spec_for_param("layers/attn/wq", 3, moe=False, fsdp=False) == P(None, None, "model")
+    # MLA
+    assert spec_for_param("layers/attn/w_uk", 3, moe=False) == P(None, "data", "model")
+    # rwkv
+    assert spec_for_param("layers/rwkv/w_r", 3, moe=False) == P(None, "data", "model")
+    assert spec_for_param("layers/rwkv/w0", 2, moe=False) == P()
+
+
+def test_data_sharding_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    s = data_sharding(mesh, batch_size=1)
+    assert s.spec == P("data") or s.spec == P()  # 1 % 1 == 0 -> keeps axis
+    s2 = data_sharding(mesh, batch_size=7)
+    assert s2.spec in (P("data"), P())
+
+
+def test_cache_shardings_single_device():
+    from repro.core.sparse_cache import init_layer_cache
+    from repro.runtime.sharding import cache_shardings
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    cache = init_layer_cache(2, 2, 16, t_max=32, n_b=4, s=4)
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * 3), cache)
+    sh = cache_shardings(mesh, stacked, seq_axis="model")
+    # vals get a token-axis entry; scalars replicate
+    assert sh.k_vals.spec[3] == "model"
+    assert sh.t_c.spec == P()
