@@ -19,6 +19,7 @@ MODULES = [
     ("buffer_balance", "Table 5 + Fig 7: buffer/sparsity balance, no-buffer"),
     ("adaptive_dict", "Table 6 / 4.2.4: adaptive dictionary growth"),
     ("latency", "Table 7: forward vs OMP latency decomposition"),
+    ("serving_throughput", "Beyond-paper: continuous-batching engine load"),
 ]
 
 

@@ -1,0 +1,84 @@
+"""Serving-throughput benchmark: the continuous-batching engine under load.
+
+Emits a JSON document (stdout, plus ``name,value`` CSV rows when driven by
+``benchmarks.run``) with decode tokens/s, per-step batch efficiency, slot
+occupancy, KV-bytes-in-flight (paper 3s+2 accounting), and queue latency —
+the numbers that track whether the serving stack is getting faster and
+denser over the bench trajectory.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--json-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..'))
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, trained_params
+from benchmarks.memory_fidelity import trained_bank
+from repro.configs.base import LexicoConfig
+from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+
+
+def run_serving_bench(*, n_requests: int = 12, n_slots: int = 4,
+                      t_max: int = 96, seed: int = 0) -> dict:
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+    eng = ContinuousBatchingEngine(
+        params, cfg, lex, bank,
+        EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8))
+
+    rng = np.random.default_rng(seed)
+    for rid in range(n_requests):
+        prompt_len = int(rng.integers(9, 64))
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 16)),
+            tier=int(rng.choice([2, 4, 8, 16]))))
+
+    done = eng.run()
+    stats = eng.metrics.to_dict()
+    stats.update(
+        n_requests=n_requests,
+        n_slots=n_slots,
+        completed=len(done),
+        compile_counts=eng.compile_counts,
+    )
+    return stats
+
+
+def run(emit):
+    """Entry point for benchmarks.run: flat name,value rows."""
+    stats = run_serving_bench()
+    for key in ("tokens_per_s", "decode_tokens_per_step",
+                "slot_occupancy_mean", "kv_bytes_in_flight_peak",
+                "queue_latency_s_mean", "requests_completed"):
+        emit(f"serving/{key}", stats[key])
+    emit("serving/compiles_decode", stats["compile_counts"]["decode"])
+    emit("serving/compiles_prefill", stats["compile_counts"]["prefill"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--t-max", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-only", action="store_true")
+    args = ap.parse_args()
+    stats = run_serving_bench(n_requests=args.n_requests, n_slots=args.n_slots,
+                              t_max=args.t_max, seed=args.seed)
+    print(json.dumps(stats, indent=2, default=float))
+
+
+if __name__ == "__main__":
+    main()

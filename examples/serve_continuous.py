@@ -1,0 +1,88 @@
+"""Continuous-batching serving demo: heterogeneous requests, one engine.
+
+    PYTHONPATH=src python examples/serve_continuous.py [--n-requests 10]
+
+Eight-plus requests with different prompt lengths, generation lengths and
+Lexico sparsity tiers stream through one fixed pool of cache slots. The
+engine interleaves prefill and decode — prompts longer than their prefill
+bucket finish streaming through the pooled decode step while other requests
+are already generating — and the FCFS scheduler packs admissions against a
+global KV-byte budget using the paper's 3s+2 bytes/vector accounting.
+
+Everything runs through three compiled functions (one prefill per
+power-of-two bucket, one pooled decode, one slot splice): watch the compile
+counts stay flat as requests join and leave.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..'))
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, trained_params
+from benchmarks.memory_fidelity import trained_bank
+from repro.configs.base import LexicoConfig
+from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-requests", type=int, default=10)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--t-max", type=int, default=96)
+    ap.add_argument("--budget-kb", type=int, default=None,
+                    help="global KV byte budget (KiB); default: unlimited")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+
+    eng = ContinuousBatchingEngine(
+        params, cfg, lex, bank,
+        EngineConfig(n_slots=args.n_slots, t_max=args.t_max, min_bucket=8,
+                     kv_byte_budget=(args.budget_kb * 1024
+                                     if args.budget_kb else None)))
+
+    rng = np.random.default_rng(args.seed)
+    tiers = [2, 4, 8, 16]
+    print(f"{args.n_requests} requests -> {args.n_slots} slots "
+          f"(s_max={s_max}, tiers {tiers})")
+    for rid in range(args.n_requests):
+        prompt_len = int(rng.integers(9, 64))
+        req = Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 16)),
+            tier=int(rng.choice(tiers)))
+        eng.submit(req)
+        print(f"  req {rid}: prompt={prompt_len:3d} "
+              f"new={req.max_new_tokens:2d} tier=s{req.tier}")
+
+    done = eng.run()
+    stats = eng.metrics.to_dict()
+
+    print(f"\ncompleted {len(done)}/{args.n_requests} requests "
+          f"in {stats['steps']} pooled decode steps")
+    for rid in sorted(done):
+        toks = done[rid].generated_tokens
+        print(f"  req {rid} (tier s{done[rid].request.tier}): {toks}")
+    print(f"\ncompile counts (flat in #requests): {eng.compile_counts}")
+    print(f"decode throughput: {stats['tokens_per_s']:.1f} tok/s, "
+          f"{stats['decode_tokens_per_step']:.2f} tok/step")
+    print(f"slot occupancy: mean {stats['slot_occupancy_mean']:.2f} / "
+          f"peak {stats['slot_occupancy_peak']}")
+    print(f"KV bytes in flight: mean {stats['kv_bytes_in_flight_mean']:.0f} / "
+          f"peak {stats['kv_bytes_in_flight_peak']} "
+          f"(paper 3s+2 accounting)")
+    print(f"queue latency: mean {stats['queue_latency_s_mean'] * 1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

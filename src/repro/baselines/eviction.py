@@ -27,7 +27,7 @@ class EvictionCache(NamedTuple):
     v: Array
     score: Array    # (B, KV, budget) accumulated attention mass
     pos: Array      # (B, KV, budget) absolute position of each slot (-1 empty)
-    length: Array   # scalar — tokens seen (not tokens kept)
+    length: Array   # (B,) — tokens seen per batch element (not tokens kept)
 
 
 class EvictionPolicy:
@@ -41,7 +41,7 @@ class EvictionPolicy:
             v=jnp.zeros((batch, kv_heads, b, head_dim), jnp.bfloat16),
             score=jnp.zeros((batch, kv_heads, b), jnp.float32),
             pos=jnp.full((batch, kv_heads, b), -1, jnp.int32),
-            length=jnp.int32(0))
+            length=jnp.zeros((batch,), jnp.int32))
 
     def prefill(self, cache, K, V, ctx):
         """SnapKV-style: score prompt tokens by attention mass from the last
@@ -60,27 +60,29 @@ class EvictionPolicy:
             pos = jnp.pad(jnp.broadcast_to(jnp.arange(T)[None, None], (B, KV, T)),
                           ((0, 0), (0, 0), (0, pad)), constant_values=-1)
             sc = jnp.pad(jnp.where(jnp.isinf(sal), 0.0, -sal), ((0, 0), (0, 0), (0, pad)))
-            return EvictionCache(k, v, sc, pos, jnp.int32(T))
+            return EvictionCache(k, v, sc, pos, jnp.full((B,), T, jnp.int32))
         _, keep = jax.lax.top_k(sal, b)                          # (B,KV,b)
         take = lambda x: jnp.take_along_axis(x, keep[..., None], axis=2)
         pos = keep.astype(jnp.int32)
         sc = jnp.take_along_axis(jnp.where(jnp.isinf(sal), 0.0, -sal), keep, axis=2)
         return EvictionCache(take(K).astype(jnp.bfloat16), take(V).astype(jnp.bfloat16),
-                             sc, pos, jnp.int32(T))
+                             sc, pos, jnp.full((B,), T, jnp.int32))
 
-    def decode(self, cache, k_t, v_t, ctx):
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         B, KV, bsz, m = cache.k.shape
+        act = (jnp.ones((B,), jnp.bool_) if active is None
+               else jnp.asarray(active, jnp.bool_))
         # victim = lowest score among unprotected slots (empty slots score -inf)
-        protected = cache.pos >= (cache.length - self.recent)
+        protected = cache.pos >= (cache.length[:, None, None] - self.recent)
         eff = jnp.where(cache.pos < 0, -jnp.inf,
                         jnp.where(protected, jnp.inf, cache.score))
         victim = jnp.argmin(eff, axis=-1)                        # (B,KV)
-        oh = jax.nn.one_hot(victim, bsz, dtype=jnp.bool_)        # (B,KV,bsz)
+        oh = jax.nn.one_hot(victim, bsz, dtype=jnp.bool_) & act[:, None, None]
         k = jnp.where(oh[..., None], k_t[:, :, None].astype(cache.k.dtype), cache.k)
         v = jnp.where(oh[..., None], v_t[:, :, None].astype(cache.v.dtype), cache.v)
         score = jnp.where(oh, 0.0, cache.score)
-        pos = jnp.where(oh, cache.length, cache.pos)
-        return EvictionCache(k, v, score, pos, cache.length + 1)
+        pos = jnp.where(oh, cache.length[:, None, None], cache.pos)
+        return EvictionCache(k, v, score, pos, cache.length + act.astype(jnp.int32))
 
     def attend(self, cache, q, ctx, *, window=None):
         B, KV, G, m = q.shape
@@ -89,7 +91,7 @@ class EvictionPolicy:
         s = jnp.einsum("bkgm,bktm->bkgt", qf, cache.k.astype(jnp.float32)) * scale
         valid = cache.pos[:, :, None] >= 0
         if window is not None:
-            valid &= cache.pos[:, :, None] >= (cache.length - window)
+            valid &= cache.pos[:, :, None] >= (cache.length[:, None, None, None] - window)
         s = jnp.where(valid, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bkgt,bktm->bkgm", p, cache.v.astype(jnp.float32))

@@ -44,8 +44,8 @@ class KIVICache(NamedTuple):
     v_zero: Array
     k_buf: Array    # (B, KV, n_b, m) residual full-precision
     v_buf: Array
-    t_q: Array      # quantized tokens (multiple of g)
-    buf_len: Array
+    t_q: Array      # (B,) quantized tokens (multiple of g)
+    buf_len: Array  # (B,)
 
 
 class KIVIPolicy:
@@ -56,6 +56,7 @@ class KIVIPolicy:
         g, n_b = self.g, self.n_b
         tq = max(((t_max - n_b) // g) * g, g)
         z8 = jnp.zeros((batch, kv_heads, tq, head_dim), jnp.uint8)
+        zc = jnp.zeros((batch,), jnp.int32)
         return KIVICache(
             k_q=z8, k_scale=jnp.zeros((batch, kv_heads, tq // g, head_dim), jnp.float32),
             k_zero=jnp.zeros((batch, kv_heads, tq // g, head_dim), jnp.float32),
@@ -63,7 +64,7 @@ class KIVIPolicy:
             v_zero=jnp.zeros((batch, kv_heads, tq, head_dim // g), jnp.float32),
             k_buf=jnp.zeros((batch, kv_heads, n_b + g, head_dim), jnp.bfloat16),
             v_buf=jnp.zeros((batch, kv_heads, n_b + g, head_dim), jnp.bfloat16),
-            t_q=jnp.int32(0), buf_len=jnp.int32(0))
+            t_q=zc, buf_len=zc)
 
     def _quant_tokens(self, K, V):
         """K/V (B, KV, Tg, m) with Tg multiple of g -> quantized fields."""
@@ -89,7 +90,7 @@ class KIVIPolicy:
                 v_q=jax.lax.dynamic_update_slice(cache.v_q, vq, (0, 0, 0, 0)),
                 v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, 0, 0, 0)),
                 v_zero=jax.lax.dynamic_update_slice(cache.v_zero, vz, (0, 0, 0, 0)),
-                t_q=jnp.int32(n_q))
+                t_q=jnp.full((B,), n_q, jnp.int32))
         rest = T - n_q
         k_buf = jnp.zeros_like(cache.k_buf)
         v_buf = jnp.zeros_like(cache.v_buf)
@@ -97,40 +98,70 @@ class KIVIPolicy:
             k_buf, K[:, :, n_q:].astype(k_buf.dtype), (0, 0, 0, 0))
         v_buf = jax.lax.dynamic_update_slice(
             v_buf, V[:, :, n_q:].astype(v_buf.dtype), (0, 0, 0, 0))
-        return cache._replace(k_buf=k_buf, v_buf=v_buf, buf_len=jnp.int32(rest))
+        return cache._replace(k_buf=k_buf, v_buf=v_buf,
+                              buf_len=jnp.full((B,), rest, jnp.int32))
 
-    def decode(self, cache, k_t, v_t, ctx):
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
+        """Per-row bookkeeping: rows flush their oldest group independently.
+        The flush work is computed every step and selected per row (a baseline
+        trade: no lax.cond on a batched predicate)."""
         g = self.g
-        k_buf = jax.lax.dynamic_update_slice(
-            cache.k_buf, k_t[:, :, None].astype(cache.k_buf.dtype),
-            (0, 0, cache.buf_len, 0))
-        v_buf = jax.lax.dynamic_update_slice(
-            cache.v_buf, v_t[:, :, None].astype(cache.v_buf.dtype),
-            (0, 0, cache.buf_len, 0))
-        buf_len = cache.buf_len + 1
-        cache = cache._replace(k_buf=k_buf, v_buf=v_buf, buf_len=buf_len)
+        B = k_t.shape[0]
+        b_idx = jnp.arange(B)
+        act = (jnp.ones((B,), jnp.bool_) if active is None
+               else jnp.asarray(active, jnp.bool_))
+        nbuf = cache.k_buf.shape[2]
+        wp = jnp.clip(cache.buf_len, 0, nbuf - 1)
 
-        # when the buffer exceeds n_b by a full group, quantize the oldest g
-        def flush(c):
-            kq, ks, kz, vq, vs, vz = self._quant_tokens(
-                c.k_buf[:, :, :g], c.v_buf[:, :, :g])
-            c = c._replace(
-                k_q=jax.lax.dynamic_update_slice(c.k_q, kq, (0, 0, c.t_q, 0)),
-                k_scale=jax.lax.dynamic_update_slice(c.k_scale, ks, (0, 0, c.t_q // g, 0)),
-                k_zero=jax.lax.dynamic_update_slice(c.k_zero, kz, (0, 0, c.t_q // g, 0)),
-                v_q=jax.lax.dynamic_update_slice(c.v_q, vq, (0, 0, c.t_q, 0)),
-                v_scale=jax.lax.dynamic_update_slice(c.v_scale, vs, (0, 0, c.t_q, 0)),
-                v_zero=jax.lax.dynamic_update_slice(c.v_zero, vz, (0, 0, c.t_q, 0)),
-                t_q=c.t_q + g,
-                k_buf=jnp.roll(c.k_buf, -g, axis=2),
-                v_buf=jnp.roll(c.v_buf, -g, axis=2),
-                buf_len=c.buf_len - g)
-            return c
+        def put(buf, x_t):
+            cur = buf[b_idx, :, wp]
+            payload = jnp.where(act[:, None, None], x_t.astype(buf.dtype), cur)
+            return buf.at[b_idx, :, wp].set(payload)
 
-        return jax.lax.cond(buf_len >= self.n_b + g, flush, lambda c: c, cache)
+        k_buf = put(cache.k_buf, k_t)
+        v_buf = put(cache.v_buf, v_t)
+        buf_len = cache.buf_len + act.astype(jnp.int32)
+
+        # rows whose buffer exceeds n_b by a full group quantize their oldest g
+        do = buf_len >= self.n_b + g                              # (B,)
+        kq, ks, kz, vq, vs, vz = self._quant_tokens(
+            k_buf[:, :, :g], v_buf[:, :, :g])
+        Tq = cache.k_q.shape[2]
+        tok_w = jnp.clip(cache.t_q, 0, Tq - g)                    # group-aligned
+        tok_pos = tok_w[:, None] + jnp.arange(g)[None, :]         # (B, g)
+
+        def store_tokens(arr, new):
+            # advanced indices (dims 0, 2) move to the front: (B, g, KV, ·)
+            cur = arr[b_idx[:, None], :, tok_pos]
+            payload = jnp.where(do[:, None, None, None],
+                                jnp.moveaxis(new, 2, 1).astype(arr.dtype), cur)
+            return arr.at[b_idx[:, None], :, tok_pos].set(payload)
+
+        def store_group(arr, new):                                # (B, KV, 1, ·)
+            grp_w = tok_w // g
+            cur = arr[b_idx, :, grp_w]
+            payload = jnp.where(do[:, None, None], new[:, :, 0].astype(arr.dtype), cur)
+            return arr.at[b_idx, :, grp_w].set(payload)
+
+        k_q = store_tokens(cache.k_q, kq)
+        v_q = store_tokens(cache.v_q, vq)
+        v_scale = store_tokens(cache.v_scale, vs)
+        v_zero = store_tokens(cache.v_zero, vz)
+        k_scale = store_group(cache.k_scale, ks)   # (B, KV, 1, m)
+        k_zero = store_group(cache.k_zero, kz)
+
+        # per-row ring shift by g for flushed rows (gather; roll is lockstep)
+        shift = (jnp.arange(nbuf)[None, :] + g * do.astype(jnp.int32)[:, None]) % nbuf
+        reorder = lambda buf: jnp.moveaxis(buf[b_idx[:, None], :, shift], 1, 2)
+        return cache._replace(
+            k_q=k_q, k_scale=k_scale, k_zero=k_zero,
+            v_q=v_q, v_scale=v_scale, v_zero=v_zero,
+            k_buf=reorder(k_buf), v_buf=reorder(v_buf),
+            t_q=jnp.where(do, cache.t_q + g, cache.t_q),
+            buf_len=jnp.where(do, buf_len - g, buf_len))
 
     def attend(self, cache, q, ctx, *, window=None):
-        from repro.core.attention import NEG_INF
+        from repro.core.attention import NEG_INF, per_batch
         B, KV, G, m = q.shape
         g = self.g
         qf = q.astype(jnp.float32)
@@ -143,16 +174,17 @@ class KIVIPolicy:
         v_deq = _dequant(cache.v_q.reshape(B, KV, Tq, m // g, g),
                          cache.v_scale[..., None], cache.v_zero[..., None])
         v_deq = v_deq.reshape(B, KV, Tq, m)
+        t_qb, buf_lenb = per_batch(cache.t_q), per_batch(cache.buf_len)
         s_q = jnp.einsum("bkgm,bktm->bkgt", qf, k_deq) * scale
         pos = jnp.arange(Tq)[None, None, None]
-        valid = pos < cache.t_q
-        length = cache.t_q + cache.buf_len
+        valid = pos < t_qb
+        length = t_qb + buf_lenb
         if window is not None:
             valid &= pos >= (length - window)
         s_q = jnp.where(valid, s_q, NEG_INF)
         s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, cache.k_buf.astype(jnp.float32)) * scale
         nb = cache.k_buf.shape[2]
-        s_b = jnp.where(jnp.arange(nb)[None, None, None] < cache.buf_len, s_b, NEG_INF)
+        s_b = jnp.where(jnp.arange(nb)[None, None, None] < buf_lenb, s_b, NEG_INF)
         p = jax.nn.softmax(jnp.concatenate([s_q, s_b], axis=-1), axis=-1)
         out = jnp.einsum("bkgt,bktm->bkgm", p[..., :Tq], v_deq)
         out += jnp.einsum("bkgr,bkrm->bkgm", p[..., Tq:],

@@ -25,9 +25,9 @@ class PTQCache(NamedTuple):
     v_zero: Array
     k_buf: Array    # (B, KV, n_b, m)
     v_buf: Array
-    t_q: Array
-    buf_len: Array
-    buf_start: Array
+    t_q: Array      # (B,) int32
+    buf_len: Array  # (B,) int32
+    buf_start: Array  # (B,) int32
 
 
 class PerTokenQuantPolicy:
@@ -39,8 +39,8 @@ class PerTokenQuantPolicy:
         z8 = jnp.zeros((batch, kv_heads, tq, head_dim), jnp.uint8)
         zs = jnp.zeros((batch, kv_heads, tq, 1), jnp.float32)
         zb = jnp.zeros((batch, kv_heads, self.n_b, head_dim), jnp.bfloat16)
-        return PTQCache(z8, zs, zs, z8, zs, zs, zb, zb,
-                        jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        zc = jnp.zeros((batch,), jnp.int32)
+        return PTQCache(z8, zs, zs, z8, zs, zs, zb, zb, zc, zc, zc)
 
     def prefill(self, cache, K, V, ctx):
         B, KV, T, m = K.shape
@@ -48,6 +48,7 @@ class PerTokenQuantPolicy:
         kq, ks, kz = _quant(K[:, :, :n_q].astype(jnp.float32), self.bits, axis=-1)
         vq, vs, vz = _quant(V[:, :, :n_q].astype(jnp.float32), self.bits, axis=-1)
         upd = lambda a, b: jax.lax.dynamic_update_slice(a, b, (0, 0, 0, 0))
+        fill = lambda v: jnp.full((B,), v, jnp.int32)
         return cache._replace(
             k_q=upd(cache.k_q, kq), k_scale=upd(cache.k_scale, ks),
             k_zero=upd(cache.k_zero, kz),
@@ -55,54 +56,64 @@ class PerTokenQuantPolicy:
             v_zero=upd(cache.v_zero, vz),
             k_buf=K[:, :, n_q:].astype(cache.k_buf.dtype),
             v_buf=V[:, :, n_q:].astype(cache.v_buf.dtype),
-            t_q=jnp.int32(n_q), buf_len=jnp.int32(self.n_b), buf_start=jnp.int32(0))
+            t_q=fill(n_q), buf_len=fill(self.n_b), buf_start=fill(0))
 
-    def decode(self, cache, k_t, v_t, ctx):
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         n_b = self.n_b
+        B = k_t.shape[0]
+        b_idx = jnp.arange(B)
+        act = (jnp.ones((B,), jnp.bool_) if active is None
+               else jnp.asarray(active, jnp.bool_))
         full = cache.buf_len >= n_b
-        old_k = jax.lax.dynamic_slice_in_dim(cache.k_buf, cache.buf_start, 1, axis=2)
-        old_v = jax.lax.dynamic_slice_in_dim(cache.v_buf, cache.buf_start, 1, axis=2)
+        evict = full & act
+        old_k = cache.k_buf[b_idx, :, cache.buf_start][:, :, None]   # (B,KV,1,m)
+        old_v = cache.v_buf[b_idx, :, cache.buf_start][:, :, None]
         kq, ks, kz = _quant(old_k.astype(jnp.float32), self.bits, axis=-1)
         vq, vs, vz = _quant(old_v.astype(jnp.float32), self.bits, axis=-1)
+        t_w = jnp.clip(cache.t_q, 0, cache.k_q.shape[2] - 1)
 
         def store(arr, new):
-            cur = jax.lax.dynamic_slice(arr, (0, 0, cache.t_q, 0), new.shape)
-            return jax.lax.dynamic_update_slice(
-                arr, jnp.where(full, new.astype(arr.dtype), cur), (0, 0, cache.t_q, 0))
+            cur = arr[b_idx, :, t_w]                                # (B,KV,·)
+            payload = jnp.where(evict[:, None, None],
+                                new[:, :, 0].astype(arr.dtype), cur)
+            return arr.at[b_idx, :, t_w].set(payload)
 
         cache = cache._replace(
             k_q=store(cache.k_q, kq), k_scale=store(cache.k_scale, ks),
             k_zero=store(cache.k_zero, kz),
             v_q=store(cache.v_q, vq), v_scale=store(cache.v_scale, vs),
             v_zero=store(cache.v_zero, vz),
-            t_q=jnp.where(full, cache.t_q + 1, cache.t_q))
+            t_q=jnp.where(evict, cache.t_q + 1, cache.t_q))
         write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
-        k_buf = jax.lax.dynamic_update_slice(
-            cache.k_buf, k_t[:, :, None].astype(cache.k_buf.dtype), (0, 0, write_pos, 0))
-        v_buf = jax.lax.dynamic_update_slice(
-            cache.v_buf, v_t[:, :, None].astype(cache.v_buf.dtype), (0, 0, write_pos, 0))
+
+        def ring(buf, x_t):
+            cur = buf[b_idx, :, write_pos]
+            payload = jnp.where(act[:, None, None], x_t.astype(buf.dtype), cur)
+            return buf.at[b_idx, :, write_pos].set(payload)
+
         return cache._replace(
-            k_buf=k_buf, v_buf=v_buf,
-            buf_len=jnp.where(full, cache.buf_len, cache.buf_len + 1),
-            buf_start=jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start))
+            k_buf=ring(cache.k_buf, k_t), v_buf=ring(cache.v_buf, v_t),
+            buf_len=jnp.where(act & ~full, cache.buf_len + 1, cache.buf_len),
+            buf_start=jnp.where(evict, (cache.buf_start + 1) % n_b, cache.buf_start))
 
     def attend(self, cache, q, ctx, *, window=None):
-        from repro.core.attention import NEG_INF
+        from repro.core.attention import NEG_INF, per_batch
         B, KV, G, m = q.shape
         qf = q.astype(jnp.float32)
         scale = 1.0 / jnp.sqrt(jnp.float32(m))
         k_deq = _dequant(cache.k_q, cache.k_scale, cache.k_zero)
         v_deq = _dequant(cache.v_q, cache.v_scale, cache.v_zero)
         Tq = k_deq.shape[2]
+        t_qb, buf_lenb = per_batch(cache.t_q), per_batch(cache.buf_len)
         s_q = jnp.einsum("bkgm,bktm->bkgt", qf, k_deq) * scale
         pos = jnp.arange(Tq)[None, None, None]
-        valid = pos < cache.t_q
+        valid = pos < t_qb
         if window is not None:
-            valid &= pos >= (cache.t_q + cache.buf_len - window)
+            valid &= pos >= (t_qb + buf_lenb - window)
         s_q = jnp.where(valid, s_q, NEG_INF)
         s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, cache.k_buf.astype(jnp.float32)) * scale
         nb = cache.k_buf.shape[2]
-        s_b = jnp.where(jnp.arange(nb)[None, None, None] < cache.buf_len, s_b, NEG_INF)
+        s_b = jnp.where(jnp.arange(nb)[None, None, None] < buf_lenb, s_b, NEG_INF)
         p = jax.nn.softmax(jnp.concatenate([s_q, s_b], axis=-1), axis=-1)
         out = jnp.einsum("bkgt,bktm->bkgm", p[..., :Tq], v_deq)
         out += jnp.einsum("bkgr,bkrm->bkgm", p[..., Tq:], cache.v_buf.astype(jnp.float32))

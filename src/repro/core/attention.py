@@ -38,6 +38,16 @@ Array = jax.Array
 NEG_INF = -1e30
 
 
+def per_batch(x) -> Array:
+    """Lift a bookkeeping counter to broadcast against (B, KV, G, T) logits.
+
+    Scalars pass through (legacy lockstep batches); (B,) per-slot counters —
+    the continuous-batching layout — become (B, 1, 1, 1).
+    """
+    x = jnp.asarray(x)
+    return x.reshape((-1, 1, 1, 1)) if x.ndim == 1 else x
+
+
 def compressed_scores(qd: Array, vals: Array, idx: Array, *, scale) -> Array:
     """Logits (B,KV,G,T) of pre-projected queries qd (B,KV,G,N) against the
     sparse key cache vals/idx (B,KV,T,s)."""
@@ -74,8 +84,8 @@ def decode_attention(
     k_buf: Array, v_buf: Array,       # (B, KV, n_b, m) full-precision buffer
     D_k: Array, D_v: Array,           # (m, N)
     *,
-    t_c: Array,                       # scalar int32: valid compressed tokens
-    buf_len: Array,                   # scalar int32: valid buffer entries
+    t_c: Array,                       # int32 valid compressed tokens: scalar or (B,)
+    buf_len: Array,                   # int32 valid buffer entries: scalar or (B,)
     N: int,
     chunk: Optional[int] = None,
     window: Optional[Array] = None,   # sliding-window width (tokens); None = global
@@ -84,6 +94,8 @@ def decode_attention(
 
     The caller has already appended the new token's k/v to the buffer
     (Algorithm 2 lines 15-16). Returns (B, KV, G, m) in float32.
+    ``t_c``/``buf_len`` may be per-batch-element (B,) — heterogeneous slot
+    lengths in the continuous-batching engine — or legacy scalars.
     ``window``: only cache positions >= length - window attend (compressed
     token t sits at absolute position t; buffer entries are always the most
     recent tokens, assumed inside any window >= n_b).
@@ -93,19 +105,20 @@ def decode_attention(
     qf = q.astype(jnp.float32)
     qd = jnp.einsum("bkgm,mn->bkgn", qf, D_k.astype(jnp.float32))
     T = k_vals.shape[2]
-    length = t_c + buf_len
+    t_cb, buf_lenb = per_batch(t_c), per_batch(buf_len)
+    length = t_cb + buf_lenb
     min_pos = (length - window) if window is not None else jnp.int32(-1)
 
     # --- buffer logits (always dense, small) ---
     s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, k_buf.astype(jnp.float32)) * scale
     n_b = s_b.shape[-1]
-    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < buf_len, s_b, NEG_INF)
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < buf_lenb, s_b, NEG_INF)
 
     if chunk is None or chunk >= T:
         # Paper-faithful: materialise all compressed logits, single softmax.
         s_c = compressed_scores(qd, k_vals, k_idx, scale=scale)
         pos = jnp.arange(T)[None, None, None, :]
-        s_c = jnp.where((pos < t_c) & (pos >= min_pos), s_c, NEG_INF)
+        s_c = jnp.where((pos < t_cb) & (pos >= min_pos), s_c, NEG_INF)
         s_all = jnp.concatenate([s_c, s_b], axis=-1)
         p = jax.nn.softmax(s_all, axis=-1)
         p_c, p_b = p[..., :T], p[..., T:]
@@ -123,7 +136,7 @@ def decode_attention(
         m_run, l_run, c_acc = carry
         s_chk = compressed_scores(qd, kv_c, ki_c, scale=scale)       # (B,KV,G,C)
         pos = base + jnp.arange(kv_c.shape[2])
-        valid = (pos[None, None, None, :] < t_c) & (pos[None, None, None, :] >= min_pos)
+        valid = (pos[None, None, None, :] < t_cb) & (pos[None, None, None, :] >= min_pos)
         s_chk = jnp.where(valid, s_chk, NEG_INF)
         m_new = jnp.maximum(m_run, jnp.max(s_chk, axis=-1))
         alpha = jnp.exp(m_run - m_new)
@@ -160,4 +173,5 @@ def decode_attention(
     l_fin = l_run * alpha + jnp.sum(p_b, axis=-1)
     out_b = jnp.einsum("bkgr,bkrm->bkgm", p_b, v_buf.astype(jnp.float32))
     out_c = jnp.einsum("bkgn,mn->bkgm", c_acc * alpha[..., None], D_v.astype(jnp.float32))
-    return (out_c + out_b) / l_fin[..., None]
+    # empty slots (t_c == buf_len == 0) have zero mass; keep them finite
+    return (out_c + out_b) / jnp.maximum(l_fin, 1e-30)[..., None]

@@ -60,12 +60,17 @@ def omp_single(
     G: Optional[Array] = None,
     delta: float = 0.0,
     eps: float = 1e-12,
+    s_cap: Optional[Array] = None,
 ) -> OMPResult:
     """OMP for a single vector ``k`` (m,) against dictionary ``D`` (m, N).
 
     If ``G`` (N, N) is given it is used for residual correlations (paper's
     Cholesky path); otherwise correlations are recomputed from D.
     ``delta`` is the relative-error early-stop threshold (0 disables).
+    ``s_cap`` (scalar int32) caps the number of atoms below ``s_max`` — since
+    OMP is greedy with a fresh LS refit per step, stopping at ``s_cap`` yields
+    exactly the code of an ``s=s_cap`` run (per-request sparsity tiers ride on
+    one compiled s_max-shaped encoder).
     """
     m, N = D.shape
     k = k.astype(jnp.float32)
@@ -73,6 +78,7 @@ def omp_single(
     alpha0 = D.T @ k  # (N,)
     kk = jnp.dot(k, k)
     thresh2 = (delta * delta) * kk
+    cap = jnp.int32(s_max) if s_cap is None else jnp.asarray(s_cap, jnp.int32)
 
     # Padded state. L starts as identity so triangular solves on the full
     # (s,s) factor are exact for the filled prefix and inert elsewhere.
@@ -84,7 +90,7 @@ def omp_single(
 
     def body(i, state):
         L, idx, y, sel, nnz, r2 = state
-        active = jnp.logical_and(i == nnz, r2 > thresh2)
+        active = jnp.logical_and(i == nnz, r2 > thresh2) & (i < cap)
 
         # Residual correlations c = D^T r.
         if G is not None:
@@ -148,19 +154,28 @@ def omp_batch(
     use_gram: bool = True,
     delta: float = 0.0,
     G: Optional[Array] = None,
+    s_cap: Optional[Array] = None,
 ) -> OMPResult:
     """Batched OMP: ``K`` (..., m) against a single dictionary ``D`` (m, N).
 
     ``G``: optional precomputed Gram (paper precomputes it offline — at decode
     time recomputing N^2 m dominates everything else, so serving threads the
     stored Gram through). If None and use_gram, G is computed here.
+    ``s_cap``: optional per-vector atom cap, broadcastable to ``K.shape[:-1]``
+    (per-request sparsity tiers in the serving engine).
     """
     if G is None and use_gram:
         G = D.astype(jnp.float32).T @ D.astype(jnp.float32)
-    f = lambda k: omp_single(k, D, s_max, G=G, delta=delta)
     batch_shape = K.shape[:-1]
     flat = K.reshape((-1, K.shape[-1]))
-    out = jax.vmap(f)(flat)
+    if s_cap is None:
+        out = jax.vmap(lambda k: omp_single(k, D, s_max, G=G, delta=delta))(flat)
+    else:
+        cap_flat = jnp.broadcast_to(
+            jnp.asarray(s_cap, jnp.int32), batch_shape).reshape(-1)
+        out = jax.vmap(
+            lambda k, c: omp_single(k, D, s_max, G=G, delta=delta, s_cap=c)
+        )(flat, cap_flat)
     return OMPResult(
         vals=out.vals.reshape(batch_shape + (s_max,)),
         idx=out.idx.reshape(batch_shape + (s_max,)),

@@ -37,47 +37,59 @@ Array = jax.Array
 
 def _decode_attend_local(cache: LexicoLayerCache, q, k_t, v_t, D_k, D_v,
                          *, s: int, N: int, delta: float,
-                         window, model_axis: str = "model"):
+                         window, model_axis: str = "model",
+                         active=None, s_cap=None):
     """shard_map body. cache.{k,v}_{vals,idx} are LOCAL (B,KV,T_loc,s) slices;
-    buffers + scalars replicated. Returns (attn_out, new local cache)."""
+    buffers + per-row (B,) counters replicated. Returns (attn_out, new local
+    cache)."""
     B, KV, T_loc, _ = cache.k_vals.shape
     n_b = cache.n_b
+    b_idx = jnp.arange(B)
+    act = (jnp.ones((B,), jnp.bool_) if active is None
+           else jnp.asarray(active, jnp.bool_))
     ax = jax.lax.axis_index(model_axis)
-    n_shards = jax.lax.axis_size(model_axis)
     t_off = ax * T_loc
     full = cache.buf_len >= n_b
+    evict = full & act
 
     # --- compress the evictee (replicated tiny work), write on owner only ---
-    old_k = jax.lax.dynamic_slice_in_dim(cache.k_buf, cache.buf_start, 1, axis=2)[:, :, 0]
-    old_v = jax.lax.dynamic_slice_in_dim(cache.v_buf, cache.buf_start, 1, axis=2)[:, :, 0]
-    rk = omp_mod.omp_batch(old_k.astype(jnp.float32), D_k, s, use_gram=False, delta=delta)
-    rv = omp_mod.omp_batch(old_v.astype(jnp.float32), D_v, s, use_gram=False, delta=delta)
-    owner = (cache.t_c >= t_off) & (cache.t_c < t_off + T_loc)
-    local_pos = jnp.clip(cache.t_c - t_off, 0, T_loc - 1)
+    old_k = cache.k_buf[b_idx, :, cache.buf_start]
+    old_v = cache.v_buf[b_idx, :, cache.buf_start]
+    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None]
+    rk = omp_mod.omp_batch(old_k.astype(jnp.float32), D_k, s, use_gram=False,
+                           delta=delta, s_cap=cap)
+    rv = omp_mod.omp_batch(old_v.astype(jnp.float32), D_v, s, use_gram=False,
+                           delta=delta, s_cap=cap)
+    owner = (cache.t_c >= t_off) & (cache.t_c < t_off + T_loc)   # (B,)
+    local_pos = jnp.clip(cache.t_c - t_off, 0, T_loc - 1)        # (B,)
 
     def store(arr, new, dtype):
-        payload = new[:, :, None, :].astype(dtype)
-        cur = jax.lax.dynamic_slice(arr, (0, 0, local_pos, 0), payload.shape)
-        payload = jnp.where(full & owner, payload, cur)
-        return jax.lax.dynamic_update_slice(arr, payload, (0, 0, local_pos, 0))
+        cur = arr[b_idx, :, local_pos]                           # (B, KV, s)
+        payload = jnp.where((evict & owner)[:, None, None],
+                            new.astype(dtype), cur)
+        return arr.at[b_idx, :, local_pos].set(payload.astype(arr.dtype))
 
     k_vals = store(cache.k_vals, rk.vals, cache.k_vals.dtype)
     k_idx = store(cache.k_idx, rk.idx, jnp.int16)
     v_vals = store(cache.v_vals, rv.vals, cache.v_vals.dtype)
     v_idx = store(cache.v_idx, rv.idx, jnp.int16)
-    t_c = jnp.where(full, cache.t_c + 1, cache.t_c)
+    t_c = jnp.where(evict, cache.t_c + 1, cache.t_c)
 
     # --- ring-write the new token (replicated buffers) ---
     write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
-    k_buf = jax.lax.dynamic_update_slice(
-        cache.k_buf, k_t[:, :, None, :].astype(cache.k_buf.dtype), (0, 0, write_pos, 0))
-    v_buf = jax.lax.dynamic_update_slice(
-        cache.v_buf, v_t[:, :, None, :].astype(cache.v_buf.dtype), (0, 0, write_pos, 0))
+
+    def ring(buf, x_t):
+        cur = buf[b_idx, :, write_pos]
+        payload = jnp.where(act[:, None, None], x_t.astype(buf.dtype), cur)
+        return buf.at[b_idx, :, write_pos].set(payload)
+
+    k_buf = ring(cache.k_buf, k_t)
+    v_buf = ring(cache.v_buf, v_t)
     new_cache = cache._replace(
         k_vals=k_vals, k_idx=k_idx, v_vals=v_vals, v_idx=v_idx,
         k_buf=k_buf, v_buf=v_buf, t_c=t_c,
-        buf_len=jnp.where(full, cache.buf_len, cache.buf_len + 1),
-        buf_start=jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start))
+        buf_len=jnp.where(act & ~full, cache.buf_len + 1, cache.buf_len),
+        buf_start=jnp.where(evict, (cache.buf_start + 1) % n_b, cache.buf_start))
 
     # --- flash attention over the local slice ---
     m_dim = q.shape[-1]
@@ -86,9 +98,11 @@ def _decode_attend_local(cache: LexicoLayerCache, q, k_t, v_t, D_k, D_v,
     qd = jnp.einsum("bkgm,mn->bkgn", qf, D_k.astype(jnp.float32))
     s_loc = compressed_scores(qd, k_vals, k_idx, scale=scale)   # (B,KV,G,T_loc)
     pos = t_off + jnp.arange(T_loc)
-    length = t_c + new_cache.buf_len
+    from repro.core.attention import per_batch
+    t_cb = per_batch(t_c)
+    length = t_cb + per_batch(new_cache.buf_len)
     min_pos = (length - window) if window is not None else jnp.int32(-1)
-    valid = (pos[None, None, None, :] < t_c) & (pos[None, None, None, :] >= min_pos)
+    valid = (pos[None, None, None, :] < t_cb) & (pos[None, None, None, :] >= min_pos)
     s_loc = jnp.where(valid, s_loc, NEG_INF)
     m_loc = jnp.max(s_loc, axis=-1)
     p_loc = jnp.where(valid, jnp.exp(s_loc - m_loc[..., None]), 0.0)
@@ -103,7 +117,7 @@ def _decode_attend_local(cache: LexicoLayerCache, q, k_t, v_t, D_k, D_v,
 
     # replicated buffer as the final block
     s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, k_buf.astype(jnp.float32)) * scale
-    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < new_cache.buf_len,
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < per_batch(new_cache.buf_len),
                     s_b, NEG_INF)
     m_f = jnp.maximum(m_g, jnp.max(s_b, axis=-1))
     alpha = jnp.exp(m_g - m_f)
@@ -135,36 +149,46 @@ class SeqShardLexicoPolicy:
         return cache.t_c + cache.buf_len
 
     def decode_attend(self, cache: LexicoLayerCache, q, k_t, v_t, ctx, *,
-                      window=None) -> Tuple[Array, LexicoLayerCache]:
+                      window=None, active=None,
+                      s_cap=None) -> Tuple[Array, LexicoLayerCache]:
         D_k, D_v = ctx[0], ctx[1]
-        am = jax.sharding.get_abstract_mesh()
-        body = lambda c, qq, kk, vv, dk, dv: _decode_attend_local(
-            c, qq, kk, vv, dk, dv, s=self.cfg.s, N=self.cfg.N,
-            delta=self.cfg.delta, window=window)
-        if (am is None or am.empty or "model" not in am.axis_names
+        from repro.models.model import _abstract_mesh
+        am = _abstract_mesh()
+        if (am is None or "model" not in am.axis_names
                 or cache.k_vals.shape[2] % am.shape["model"] != 0):
             # off-mesh fallback: single-shard semantics
             from repro.core import sparse_cache as sc
             new_cache = sc.decode_update(cache, k_t, v_t, D_k, D_v, s=self.cfg.s,
-                                         use_gram=False, delta=self.cfg.delta)
+                                         use_gram=False, delta=self.cfg.delta,
+                                         active=active, s_cap=s_cap)
             out = sc.attend(new_cache, q, D_k, D_v, N=self.cfg.N,
                             chunk=self.cfg.chunk, window=window)
             return out, new_cache
 
+        B = q.shape[0]
+        act = (jnp.ones((B,), jnp.bool_) if active is None
+               else jnp.asarray(active, jnp.bool_))
+        cap = (jnp.full((B,), self.cfg.s, jnp.int32) if s_cap is None
+               else jnp.asarray(s_cap, jnp.int32))
+        body = lambda c, qq, kk, vv, dk, dv, aa, cc: _decode_attend_local(
+            c, qq, kk, vv, dk, dv, s=self.cfg.s, N=self.cfg.N,
+            delta=self.cfg.delta, window=window, active=aa, s_cap=cc)
         batch_axes = tuple(a for a in ("pod", "data") if a in am.axis_names)
         bspec = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
             if batch_axes and q.shape[0] % math.prod(
                 am.shape[a] for a in batch_axes) == 0 else None
+        ctr = P(bspec)   # per-row (B,) bookkeeping follows the batch sharding
         cache_specs = LexicoLayerCache(
             k_vals=P(bspec, None, "model", None), k_idx=P(bspec, None, "model", None),
             v_vals=P(bspec, None, "model", None), v_idx=P(bspec, None, "model", None),
             k_buf=P(bspec, None, None, None), v_buf=P(bspec, None, None, None),
-            t_c=P(), buf_len=P(), buf_start=P())
+            t_c=ctr, buf_len=ctr, buf_start=ctr)
         vec = P(bspec, None, None)
         out, new_cache = shard_map(
             body, mesh=am,
-            in_specs=(cache_specs, P(bspec, None, None, None), vec, vec, P(), P()),
+            in_specs=(cache_specs, P(bspec, None, None, None), vec, vec, P(), P(),
+                      ctr, ctr),
             out_specs=(P(bspec, None, None, None), cache_specs),
             check_rep=False,
-        )(cache, q, k_t, v_t, D_k, D_v)
+        )(cache, q, k_t, v_t, D_k, D_v, act, cap)
         return out, new_cache

@@ -36,9 +36,9 @@ class LexicoLayerCache(NamedTuple):
     v_idx: Array
     k_buf: Array    # (B, KV, n_b, m) bf16 ring buffer
     v_buf: Array
-    t_c: Array      # scalar int32 — valid compressed tokens
-    buf_len: Array  # scalar int32 — valid buffer entries
-    buf_start: Array  # scalar int32 — ring head (oldest entry)
+    t_c: Array      # (B,) int32 — valid compressed tokens per batch element
+    buf_len: Array  # (B,) int32 — valid buffer entries per batch element
+    buf_start: Array  # (B,) int32 — ring head (oldest entry) per batch element
 
     @property
     def T_max(self) -> int:
@@ -61,10 +61,11 @@ def init_layer_cache(
     zv = jnp.zeros((batch, kv_heads, t_max, s), val_dtype)
     zi = jnp.zeros((batch, kv_heads, t_max, s), jnp.int16)
     zb = jnp.zeros((batch, kv_heads, n_b, head_dim), buf_dtype)
+    zc = jnp.zeros((batch,), jnp.int32)
     return LexicoLayerCache(
         k_vals=zv, k_idx=zi, v_vals=zv, v_idx=zi,
         k_buf=zb, v_buf=zb,
-        t_c=jnp.int32(0), buf_len=jnp.int32(0), buf_start=jnp.int32(0),
+        t_c=zc, buf_len=zc, buf_start=zc,
     )
 
 
@@ -87,34 +88,38 @@ def prefill_compress(
     use_gram: bool = True,
     delta: float = 0.0,
     G_k=None, G_v=None,
+    s_cap: Optional[Array] = None,
 ) -> LexicoLayerCache:
     """Compress a prefilled prompt into the cache (Algorithm 2, Prefilling).
 
     The last n_b tokens go to the buffer; the first T-n_b are OMP-compressed.
     Assumes T >= n_b and T - n_b <= T_max.
+    ``s_cap`` (B,) optionally caps the per-request sparsity tier below ``s``.
     """
     B, KV, T, m = K.shape
     n_b = cache.n_b
     n_comp = T - n_b
     k_head, k_tail = K[:, :, :n_comp], K[:, :, n_comp:]
     v_head, v_tail = V[:, :, :n_comp], V[:, :, n_comp:]
+    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None, None]
 
     rk = omp_mod.omp_batch(k_head.astype(jnp.float32), D_k, s, use_gram=use_gram,
-                           delta=delta, G=G_k)
+                           delta=delta, G=G_k, s_cap=cap)
     rv = omp_mod.omp_batch(v_head.astype(jnp.float32), D_v, s, use_gram=use_gram,
-                           delta=delta, G=G_v)
+                           delta=delta, G=G_v, s_cap=cap)
     kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
     vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
 
     def put(store, new):
         return jax.lax.dynamic_update_slice(store, new, (0, 0, 0, 0))
 
+    fill = lambda v: jnp.full((B,), v, jnp.int32)
     return cache._replace(
         k_vals=put(cache.k_vals, kv), k_idx=put(cache.k_idx, ki),
         v_vals=put(cache.v_vals, vv), v_idx=put(cache.v_idx, vi),
         k_buf=k_tail.astype(cache.k_buf.dtype),
         v_buf=v_tail.astype(cache.v_buf.dtype),
-        t_c=jnp.int32(n_comp), buf_len=jnp.int32(n_b), buf_start=jnp.int32(0),
+        t_c=fill(n_comp), buf_len=fill(n_b), buf_start=fill(0),
     )
 
 
@@ -127,44 +132,64 @@ def decode_update(
     use_gram: bool = True,
     delta: float = 0.0,
     G_k=None, G_v=None,
+    active: Optional[Array] = None,
+    s_cap: Optional[Array] = None,
 ) -> LexicoLayerCache:
     """Insert the new token; if the buffer is full, OMP-compress the oldest
-    entry into the sparse store first (Algorithm 2, Decoding, n_a = 1)."""
+    entry into the sparse store first (Algorithm 2, Decoding, n_a = 1).
+
+    Bookkeeping is per batch element: every row has its own ``t_c``,
+    ``buf_len`` and ring head, so heterogeneous-length requests advance
+    independently inside one jitted step.
+    ``active`` (B,) bool: rows set False are left untouched (idle slots of the
+    continuous-batching pool). ``s_cap`` (B,) caps the per-row sparsity tier.
+    """
     B, KV, m = k_t.shape
     n_b = cache.n_b
+    b_idx = jnp.arange(B)
+    act = (jnp.ones((B,), jnp.bool_) if active is None
+           else jnp.asarray(active, jnp.bool_))
     full = cache.buf_len >= n_b
 
     # --- compress the oldest buffer slot if evicting ---
-    old_k = jax.lax.dynamic_slice_in_dim(cache.k_buf, cache.buf_start, 1, axis=2)[:, :, 0]
-    old_v = jax.lax.dynamic_slice_in_dim(cache.v_buf, cache.buf_start, 1, axis=2)[:, :, 0]
+    old_k = cache.k_buf[b_idx, :, cache.buf_start]          # (B, KV, m)
+    old_v = cache.v_buf[b_idx, :, cache.buf_start]
+    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None]
     rk = omp_mod.omp_batch(old_k.astype(jnp.float32), D_k, s, use_gram=use_gram,
-                           delta=delta, G=G_k)
+                           delta=delta, G=G_k, s_cap=cap)
     rv = omp_mod.omp_batch(old_v.astype(jnp.float32), D_v, s, use_gram=use_gram,
-                           delta=delta, G=G_v)
+                           delta=delta, G=G_v, s_cap=cap)
     kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
     vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
 
+    # per-row write positions; rows that aren't evicting (or are idle) get
+    # their current contents written back (read-select-write, no full select)
+    t_w = jnp.clip(cache.t_c, 0, cache.T_max - 1)
+    evict = full & act
+
     def maybe_store(store, new):
-        # write-at-t_c unconditionally, but keep the previous contents when the
-        # buffer wasn't full yet (avoids a full-array select on the store).
-        cur = jax.lax.dynamic_slice(store, (0, 0, cache.t_c, 0), new[:, :, None, :].shape)
-        payload = jnp.where(full, new[:, :, None, :].astype(store.dtype), cur)
-        return jax.lax.dynamic_update_slice(store, payload, (0, 0, cache.t_c, 0))
+        cur = store[b_idx, :, t_w]                          # (B, KV, s)
+        payload = jnp.where(evict[:, None, None], new.astype(store.dtype), cur)
+        return store.at[b_idx, :, t_w].set(payload)
 
     k_vals = maybe_store(cache.k_vals, kv)
     k_idx = maybe_store(cache.k_idx, ki)
     v_vals = maybe_store(cache.v_vals, vv)
     v_idx = maybe_store(cache.v_idx, vi)
-    t_c = jnp.where(full, cache.t_c + 1, cache.t_c)
+    t_c = jnp.where(evict, cache.t_c + 1, cache.t_c)
 
     # --- write the new token into the ring ---
     write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
-    k_buf = jax.lax.dynamic_update_slice(
-        cache.k_buf, k_t[:, :, None, :].astype(cache.k_buf.dtype), (0, 0, write_pos, 0))
-    v_buf = jax.lax.dynamic_update_slice(
-        cache.v_buf, v_t[:, :, None, :].astype(cache.v_buf.dtype), (0, 0, write_pos, 0))
-    buf_start = jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start)
-    buf_len = jnp.where(full, cache.buf_len, cache.buf_len + 1)
+
+    def ring_write(buf, x_t):
+        cur = buf[b_idx, :, write_pos]                      # (B, KV, m)
+        payload = jnp.where(act[:, None, None], x_t.astype(buf.dtype), cur)
+        return buf.at[b_idx, :, write_pos].set(payload)
+
+    k_buf = ring_write(cache.k_buf, k_t)
+    v_buf = ring_write(cache.v_buf, v_t)
+    buf_start = jnp.where(evict, (cache.buf_start + 1) % n_b, cache.buf_start)
+    buf_len = jnp.where(act & ~full, cache.buf_len + 1, cache.buf_len)
 
     return cache._replace(
         k_vals=k_vals, k_idx=k_idx, v_vals=v_vals, v_idx=v_idx,

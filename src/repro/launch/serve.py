@@ -25,6 +25,12 @@ from repro.models.cache_policy import CachePolicy, LexicoPolicy
 from repro.runtime import sharding as shd
 
 
+def _mesh_ctx(mesh: Mesh):
+    """``jax.set_mesh`` on newer JAX; the Mesh context manager elsewhere."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def bank_shardings(mesh: Mesh, bank, *, shard_gram: bool = True):
     if bank is None:
         return None
@@ -42,8 +48,10 @@ def serve_state_shardings(mesh: Mesh, state_shape: M.ServeState, *,
     cache_sh = shd.cache_shardings(mesh, state_shape.cache, seq_axis=seq_axis)
     cross_sh = (shd.cache_shardings(mesh, state_shape.cross, seq_axis=seq_axis)
                 if state_shape.cross is not None else None)
-    return M.ServeState(cache=cache_sh, length=NamedSharding(mesh, P()),
-                        cross=cross_sh)
+    # length is (B,) per-slot bookkeeping — follows the batch sharding
+    len_sh = (shd.data_sharding(mesh, batch_size=state_shape.length.shape[0])
+              if state_shape.length.ndim else NamedSharding(mesh, P()))
+    return M.ServeState(cache=cache_sh, length=len_sh, cross=cross_sh)
 
 
 def input_specs_prefill(cfg: ModelConfig, seq_len: int, global_batch: int) -> dict:
@@ -90,7 +98,7 @@ def lower_prefill(cfg: ModelConfig, lex_cfg: LexicoConfig, mesh: Mesh,
               serve_state_shardings(mesh, out_shape[1], seq_shard=seq_shard))
     jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, batch_sh),
                      out_shardings=out_sh)
-    with jax.set_mesh(mesh):
+    with _mesh_ctx(mesh):
         return jitted.lower(params_shape, bank_shape, in_spec)
 
 
@@ -123,7 +131,9 @@ def abstract_decode_state(cfg: ModelConfig, policy: CachePolicy,
                     dense_k=jnp.zeros((cfg.num_layers, B, KV, Tf, hd), jnp.bfloat16),
                     dense_v=jnp.zeros((cfg.num_layers, B, KV, Tf, hd), jnp.bfloat16),
                     length=jnp.zeros((cfg.num_layers,), jnp.int32))
-        return M.ServeState(cache=cache, length=jnp.int32(0), cross=cross)
+        return M.ServeState(cache=cache,
+                            length=jnp.zeros((global_batch,), jnp.int32),
+                            cross=cross)
 
     return jax.eval_shape(mk)
 
@@ -154,5 +164,5 @@ def lower_decode(cfg: ModelConfig, lex_cfg: LexicoConfig, mesh: Mesh,
         out_shardings=(shd.data_sharding(mesh, batch_size=global_batch), st_sh),
         donate_argnums=(2,),
     )
-    with jax.set_mesh(mesh):
+    with _mesh_ctx(mesh):
         return jitted.lower(params_shape, bank_shape, state_shape, tok)

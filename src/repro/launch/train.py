@@ -111,7 +111,8 @@ def lower_train_step(cfg: ModelConfig, mesh: Mesh, seq_len: int,
         out_shardings=(st_sh, NamedSharding(mesh, P())),
         donate_argnums=(0,) if donate else (),
     )
-    with jax.set_mesh(mesh):
+    from repro.launch.serve import _mesh_ctx
+    with _mesh_ctx(mesh):
         lowered = jitted.lower(state_shape,
                                input_specs_train(cfg, seq_len, global_batch))
     return lowered

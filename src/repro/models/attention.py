@@ -113,15 +113,17 @@ def dense_decode_attention(
     q: Array,              # (B, KV, G, hd) single new token
     k_cache: Array, v_cache: Array,   # (B, KV, T, hd)
     *,
-    length: Array,         # scalar int32 — valid cache entries
+    length: Array,         # int32 valid cache entries — scalar or (B,)
     window: Optional[int] = None,
 ) -> Array:
     """Full-precision decode attention (baseline / buffer-only path)."""
+    from repro.core.attention import per_batch
     hd = q.shape[-1]
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
     T = k_cache.shape[2]
+    length = per_batch(length)
     pos = jnp.arange(T)
     valid = pos[None, None, None, :] < length
     if window is not None:

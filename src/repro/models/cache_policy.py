@@ -24,9 +24,15 @@ Array = jax.Array
 
 
 class CachePolicy(Protocol):
+    """``decode`` accepts ``active`` (B,) bool — rows set False must be left
+    unchanged (idle slots of the continuous-batching pool) — and may accept
+    ``s_cap`` (B,) per-request sparsity tiers (Lexico only). ``length`` is
+    per batch element: (B,) int32."""
+
     def init(self, batch: int, kv_heads: int, head_dim: int, t_max: int) -> Any: ...
     def prefill(self, cache: Any, K: Array, V: Array, ctx: Any) -> Any: ...
-    def decode(self, cache: Any, k_t: Array, v_t: Array, ctx: Any) -> Any: ...
+    def decode(self, cache: Any, k_t: Array, v_t: Array, ctx: Any, *,
+               active: Optional[Array] = None, s_cap: Optional[Array] = None) -> Any: ...
     def attend(self, cache: Any, q: Array, ctx: Any, *, window=None) -> Array: ...
     def length(self, cache: Any) -> Array: ...
 
@@ -54,17 +60,17 @@ class LexicoPolicy:
         D_k, D_v = ctx
         return D_k, D_v, None, None
 
-    def prefill(self, cache, K, V, ctx):
+    def prefill(self, cache, K, V, ctx, *, s_cap=None):
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.prefill_compress(cache, K, V, D_k, D_v, s=self.cfg.s,
                                    use_gram=self.cfg.use_gram, delta=self.cfg.delta,
-                                   G_k=G_k, G_v=G_v)
+                                   G_k=G_k, G_v=G_v, s_cap=s_cap)
 
-    def decode(self, cache, k_t, v_t, ctx):
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.decode_update(cache, k_t, v_t, D_k, D_v, s=self.cfg.s,
                                 use_gram=self.cfg.use_gram, delta=self.cfg.delta,
-                                G_k=G_k, G_v=G_v)
+                                G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
 
     def attend(self, cache, q, ctx, *, window=None):
         D_k, D_v = ctx[0], ctx[1]
@@ -82,7 +88,7 @@ class LexicoPolicy:
 class DenseCache(NamedTuple):
     k: Array       # (B, KV, T_max, hd)
     v: Array
-    length: Array  # scalar int32
+    length: Array  # (B,) int32
 
 
 class DensePolicy:
@@ -93,20 +99,28 @@ class DensePolicy:
 
     def init(self, batch, kv_heads, head_dim, t_max):
         z = jnp.zeros((batch, kv_heads, t_max, head_dim), self.dtype)
-        return DenseCache(k=z, v=z, length=jnp.int32(0))
+        return DenseCache(k=z, v=z, length=jnp.zeros((batch,), jnp.int32))
 
     def prefill(self, cache, K, V, ctx):
-        T = K.shape[2]
+        B, _, T, _ = K.shape
         k = jax.lax.dynamic_update_slice(cache.k, K.astype(self.dtype), (0, 0, 0, 0))
         v = jax.lax.dynamic_update_slice(cache.v, V.astype(self.dtype), (0, 0, 0, 0))
-        return DenseCache(k=k, v=v, length=jnp.int32(T))
+        return DenseCache(k=k, v=v, length=jnp.full((B,), T, jnp.int32))
 
-    def decode(self, cache, k_t, v_t, ctx):
-        k = jax.lax.dynamic_update_slice(
-            cache.k, k_t[:, :, None, :].astype(self.dtype), (0, 0, cache.length, 0))
-        v = jax.lax.dynamic_update_slice(
-            cache.v, v_t[:, :, None, :].astype(self.dtype), (0, 0, cache.length, 0))
-        return DenseCache(k=k, v=v, length=cache.length + 1)
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
+        B = k_t.shape[0]
+        b_idx = jnp.arange(B)
+        act = (jnp.ones((B,), jnp.bool_) if active is None
+               else jnp.asarray(active, jnp.bool_))
+        pos = jnp.clip(cache.length, 0, cache.k.shape[2] - 1)
+
+        def put(buf, x_t):
+            cur = buf[b_idx, :, pos]
+            payload = jnp.where(act[:, None, None], x_t.astype(self.dtype), cur)
+            return buf.at[b_idx, :, pos].set(payload)
+
+        return DenseCache(k=put(cache.k, k_t), v=put(cache.v, v_t),
+                          length=cache.length + act.astype(jnp.int32))
 
     def attend(self, cache, q, ctx, *, window=None):
         from repro.models.attention import dense_decode_attention

@@ -46,13 +46,17 @@ def mla_init(key, cfg: ModelConfig, dtype) -> dict:
 
 def _project(p: dict, x: Array, cfg: ModelConfig, positions: Array):
     """Shared q / latent computation. x (B, T, d) -> q_nope (B,T,H,nope),
-    q_pe (B,T,H,rope), latent (B,T, kv_lora+rope) with RoPE+norm applied."""
+    q_pe (B,T,H,rope), latent (B,T, kv_lora+rope) with RoPE+norm applied.
+
+    ``positions``: (T,) shared across the batch (train/prefill), or (B, T)
+    per batch element (decode with heterogeneous slot lengths)."""
     c = cfg.mla
     B, T, d = x.shape
     H = cfg.num_heads
     q = (x @ p["w_q"]).reshape(B, T, H, c.nope_head_dim + c.rope_head_dim)
     q_nope, q_pe = q[..., :c.nope_head_dim], q[..., c.nope_head_dim:]
-    q_pe = apply_rope(jnp.moveaxis(q_pe, 2, 1), positions, cfg.rope_theta)
+    pos_q = positions if positions.ndim == 1 else positions[:, None]  # (B,1,T)
+    q_pe = apply_rope(jnp.moveaxis(q_pe, 2, 1), pos_q, cfg.rope_theta)
     q_pe = jnp.moveaxis(q_pe, 1, 2)
 
     dkv = x @ p["w_dkv"]
@@ -92,80 +96,99 @@ class MLACache(NamedTuple):
     vals: Array      # (B, T_max, s) storage dtype
     idx: Array       # (B, T_max, s) int16
     buf: Array       # (B, n_b, lat_dim) bf16
-    t_c: Array
-    buf_len: Array
-    buf_start: Array
+    t_c: Array       # (B,) int32
+    buf_len: Array   # (B,) int32
+    buf_start: Array  # (B,) int32
 
 
 def init_mla_cache(batch: int, lat_dim: int, *, t_max: int, n_b: int, s: int,
                    val_dtype=jnp.float8_e4m3fn, buf_dtype=jnp.bfloat16) -> MLACache:
+    zc = jnp.zeros((batch,), jnp.int32)
     return MLACache(
         vals=jnp.zeros((batch, t_max, s), val_dtype),
         idx=jnp.zeros((batch, t_max, s), jnp.int16),
         buf=jnp.zeros((batch, n_b, lat_dim), buf_dtype),
-        t_c=jnp.int32(0), buf_len=jnp.int32(0), buf_start=jnp.int32(0))
+        t_c=zc, buf_len=zc, buf_start=zc)
 
 
 def mla_prefill_compress(cache: MLACache, latent: Array, D: Array, *, s: int,
-                         use_gram: bool = True, delta: float = 0.0, G=None) -> MLACache:
+                         use_gram: bool = True, delta: float = 0.0, G=None,
+                         s_cap=None) -> MLACache:
     B, T, lat = latent.shape
     n_b = cache.buf.shape[1]
     n_comp = T - n_b
     head, tail = latent[:, :n_comp], latent[:, n_comp:]
+    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None]
     r = omp_mod.omp_batch(head.astype(jnp.float32), D, s, use_gram=use_gram,
-                          delta=delta, G=G)
+                          delta=delta, G=G, s_cap=cap)
+    B = latent.shape[0]
     vals = jax.lax.dynamic_update_slice(
         cache.vals, r.vals.astype(cache.vals.dtype), (0, 0, 0))
     idx = jax.lax.dynamic_update_slice(
         cache.idx, r.idx.astype(jnp.int16), (0, 0, 0))
+    fill = lambda v: jnp.full((B,), v, jnp.int32)
     return cache._replace(vals=vals, idx=idx, buf=tail.astype(cache.buf.dtype),
-                          t_c=jnp.int32(n_comp), buf_len=jnp.int32(n_b),
-                          buf_start=jnp.int32(0))
+                          t_c=fill(n_comp), buf_len=fill(n_b),
+                          buf_start=fill(0))
 
 
 def mla_decode_update(cache: MLACache, latent_t: Array, D: Array, *, s: int,
-                      use_gram: bool = True, delta: float = 0.0, G=None) -> MLACache:
-    """latent_t (B, lat_dim): append to ring; compress evictee (n_a = 1)."""
+                      use_gram: bool = True, delta: float = 0.0, G=None,
+                      active=None, s_cap=None) -> MLACache:
+    """latent_t (B, lat_dim): append to ring; compress evictee (n_a = 1).
+    Per-row bookkeeping: see ``sparse_cache.decode_update``."""
     B, lat = latent_t.shape
     n_b = cache.buf.shape[1]
+    b_idx = jnp.arange(B)
+    act = (jnp.ones((B,), jnp.bool_) if active is None
+           else jnp.asarray(active, jnp.bool_))
     full = cache.buf_len >= n_b
-    old = jax.lax.dynamic_slice_in_dim(cache.buf, cache.buf_start, 1, axis=1)[:, 0]
+    evict = full & act
+    old = cache.buf[b_idx, cache.buf_start]                 # (B, lat)
+    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)
     r = omp_mod.omp_batch(old.astype(jnp.float32), D, s, use_gram=use_gram,
-                          delta=delta, G=G)
+                          delta=delta, G=G, s_cap=cap)
+
+    t_w = jnp.clip(cache.t_c, 0, cache.vals.shape[1] - 1)
 
     def store(arr, new):
-        cur = jax.lax.dynamic_slice(arr, (0, cache.t_c, 0), new[:, None, :].shape)
-        payload = jnp.where(full, new[:, None, :].astype(arr.dtype), cur)
-        return jax.lax.dynamic_update_slice(arr, payload, (0, cache.t_c, 0))
+        cur = arr[b_idx, t_w]                               # (B, s)
+        payload = jnp.where(evict[:, None], new.astype(arr.dtype), cur)
+        return arr.at[b_idx, t_w].set(payload)
 
     vals = store(cache.vals, r.vals)
     idx = store(cache.idx, r.idx.astype(jnp.int16))
-    t_c = jnp.where(full, cache.t_c + 1, cache.t_c)
+    t_c = jnp.where(evict, cache.t_c + 1, cache.t_c)
     write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
-    buf = jax.lax.dynamic_update_slice(
-        cache.buf, latent_t[:, None, :].astype(cache.buf.dtype), (0, write_pos, 0))
+    cur = cache.buf[b_idx, write_pos]
+    buf = cache.buf.at[b_idx, write_pos].set(
+        jnp.where(act[:, None], latent_t.astype(cache.buf.dtype), cur))
     return cache._replace(
         vals=vals, idx=idx, buf=buf, t_c=t_c,
-        buf_len=jnp.where(full, cache.buf_len, cache.buf_len + 1),
-        buf_start=jnp.where(full, (cache.buf_start + 1) % n_b, cache.buf_start))
+        buf_len=jnp.where(act & ~full, cache.buf_len + 1, cache.buf_len),
+        buf_start=jnp.where(evict, (cache.buf_start + 1) % n_b, cache.buf_start))
 
 
 def mla_decode_step(
     p: dict, cache: MLACache, x_t: Array, cfg: ModelConfig, position: Array,
     D: Array, *, N: int, s: int, use_gram: bool = True, delta: float = 0.0,
-    chunk: Optional[int] = None, G=None,
+    chunk: Optional[int] = None, G=None, active=None, s_cap=None,
 ) -> Tuple[Array, MLACache]:
     """One decode step: project, insert the latent (Algorithm 2 order —
     the new token attends to itself via the buffer), absorbed attention.
 
-    x_t (B, d). Returns (attn_out (B, d), new cache)."""
+    x_t (B, d); position scalar or (B,). Returns (attn_out (B, d), new cache)."""
     c = cfg.mla
     B, d = x_t.shape
     H = cfg.num_heads
-    q_nope, q_pe, latent = _project(p, x_t[:, None], cfg, position[None])
+    position = jnp.asarray(position)
+    pos_bt = (position[:, None] if position.ndim == 1
+              else jnp.broadcast_to(position[None, None], (B, 1)))   # (B, 1)
+    q_nope, q_pe, latent = _project(p, x_t[:, None], cfg, pos_bt)
     q_nope, q_pe = q_nope[:, 0], q_pe[:, 0]        # (B,H,nope), (B,H,rope)
     cache = mla_decode_update(cache, latent[:, 0], D, s=s,
-                              use_gram=use_gram, delta=delta, G=G)
+                              use_gram=use_gram, delta=delta, G=G,
+                              active=active, s_cap=s_cap)
 
     # absorption: q_lat = q_nope @ W_uk^T  (per head)
     w_uk = p["w_uk"].reshape(c.kv_lora_rank, H, c.nope_head_dim)
@@ -176,14 +199,16 @@ def mla_decode_step(
 
     # layout (B, KV=1, G=H, ·)
     qd = jnp.einsum("bhl,ln->bhn", q_eff, D.astype(jnp.float32))[:, None]  # (B,1,H,N)
+    from repro.core.attention import per_batch
+    t_cb, buf_lenb = per_batch(cache.t_c), per_batch(cache.buf_len)
     s_c = compressed_scores(qd, cache.vals[:, None], cache.idx[:, None], scale=scale)
     T = cache.vals.shape[1]
-    s_c = jnp.where(jnp.arange(T)[None, None, None, :] < cache.t_c, s_c, NEG_INF)
+    s_c = jnp.where(jnp.arange(T)[None, None, None, :] < t_cb, s_c, NEG_INF)
 
     buf = cache.buf.astype(jnp.float32)            # (B, n_b, lat)
     s_b = jnp.einsum("bhl,brl->bhr", q_eff, buf)[:, None] * scale
     n_b = buf.shape[1]
-    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < cache.buf_len, s_b, NEG_INF)
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < buf_lenb, s_b, NEG_INF)
 
     pfull = jax.nn.softmax(jnp.concatenate([s_c, s_b], axis=-1), axis=-1)
     p_c, p_b = pfull[..., :T], pfull[..., T:]

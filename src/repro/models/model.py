@@ -37,6 +37,30 @@ Array = jax.Array
 BIG_WINDOW = jnp.int32(1 << 30)
 
 
+def _abstract_mesh():
+    """Version-tolerant current-mesh lookup (None when no mesh is active).
+
+    ``jax.sharding.get_abstract_mesh`` only exists on newer JAX; older
+    releases keep it in ``jax._src.mesh`` and return an empty tuple when no
+    mesh context is set.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        try:
+            from jax._src.mesh import get_abstract_mesh as get  # type: ignore
+        except ImportError:
+            return None
+    try:
+        am = get()
+    except Exception:
+        return None
+    if am is None or not hasattr(am, "axis_names"):
+        return None
+    if getattr(am, "empty", False) or not am.axis_names:
+        return None
+    return am
+
+
 def _dtype(cfg: ModelConfig):
     return jnp.dtype(cfg.param_dtype)
 
@@ -50,8 +74,8 @@ def shard_hint(x: Array, *entries) -> Array:
     16x the memory/flops per device). Entries use axis names; axes missing
     from the active mesh, or that don't divide the dim, are dropped.
     """
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or am.empty:
+    am = _abstract_mesh()
+    if am is None:
         return x
     names = set(am.axis_names)
 
@@ -208,6 +232,8 @@ def attn_seq(lp: dict, cfg: ModelConfig, x: Array, positions: Array,
 
 
 def _qkv_step(lp: dict, cfg: ModelConfig, x_t: Array, position: Array):
+    """Single-token QKV. ``position``: scalar (lockstep batch) or (B,)
+    per-slot absolute positions (continuous batching)."""
     B, d = x_t.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
     G = H // KV
@@ -218,9 +244,13 @@ def _qkv_step(lp: dict, cfg: ModelConfig, x_t: Array, position: Array):
         q = rmsnorm(q, lp["q_norm"])
         k = rmsnorm(k, lp["k_norm"])
     if cfg.use_rope:
-        pos = position[None]
-        q = apply_rope(q[..., None, :], pos, cfg.rope_theta)[..., 0, :]
-        k = apply_rope(k[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+        pos = jnp.asarray(position)
+        if pos.ndim == 1:
+            pos_q, pos_k = pos.reshape(B, 1, 1, 1), pos.reshape(B, 1, 1)
+        else:
+            pos_q = pos_k = pos[None]
+        q = apply_rope(q[..., None, :], pos_q, cfg.rope_theta)[..., 0, :]
+        k = apply_rope(k[..., None, :], pos_k, cfg.rope_theta)[..., 0, :]
     return q, k, v
 
 
@@ -497,7 +527,7 @@ def lm_loss(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = False,
 
 class ServeState(NamedTuple):
     cache: Any        # stacked per-layer cache pytree
-    length: Array     # scalar int32 — tokens in cache (incl. meta tokens)
+    length: Array     # (B,) int32 — tokens in cache per slot (incl. meta tokens)
     cross: Any = None  # whisper: stacked CrossCache
 
 
@@ -539,9 +569,11 @@ def init_serve_cache(cfg: ModelConfig, policy: CachePolicy, batch: int,
 
 
 def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
-            *, bank: Optional[DictionaryBank], t_max: int) -> Tuple[Array, ServeState]:
+            *, bank: Optional[DictionaryBank], t_max: int,
+            s_cap: Optional[Array] = None) -> Tuple[Array, ServeState]:
     """Run the prompt, build the (compressed) cache. Returns (last-token
-    logits (B, vocab), ServeState)."""
+    logits (B, vocab), ServeState). ``s_cap`` (B,): per-request sparsity
+    tiers (Lexico policies only)."""
     tokens = batch["tokens"]
     B, T = tokens.shape
     x = _embed_tokens(params, cfg, tokens)
@@ -571,7 +603,8 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
 
         x, new_state = jax.lax.scan(body, x, (params["layers"], cache0))
         logits = _unembed(params, cfg, x[:, -1])
-        return logits, ServeState(cache=new_state, length=jnp.int32(Ttot))
+        return logits, ServeState(cache=new_state,
+                                  length=jnp.full((B,), Ttot, jnp.int32))
 
     attn_cache0 = cache0["attn"] if cfg.parallel_ssm else cache0
     ssm_cache0 = cache0["ssm"] if cfg.parallel_ssm else None
@@ -587,7 +620,9 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
         if cfg.mla is not None:
             new_cache = mla_mod.mla_prefill_compress(
                 cache_l, kv, ctx[0], s=policy.cfg.s, use_gram=policy.cfg.use_gram,
-                delta=policy.cfg.delta, G=ctx[1])
+                delta=policy.cfg.delta, G=ctx[1], s_cap=s_cap)
+        elif s_cap is not None:
+            new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx, s_cap=s_cap)
         else:
             new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx)
         cross_c = None
@@ -609,20 +644,32 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
     x, (new_cache, new_ssm, cross_c) = jax.lax.scan(body, x, xs)
     logits = _unembed(params, cfg, x[:, -1])
     cache_out = {"attn": new_cache, "ssm": new_ssm} if cfg.parallel_ssm else new_cache
-    return logits, ServeState(cache=cache_out, length=jnp.int32(Ttot), cross=cross_c)
+    return logits, ServeState(cache=cache_out,
+                              length=jnp.full((B,), Ttot, jnp.int32),
+                              cross=cross_c)
 
 
 def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
                 state: ServeState, token: Array,
-                *, bank: Optional[DictionaryBank]) -> Tuple[Array, ServeState]:
-    """One autoregressive step. token (B,) int32 -> (logits (B,V), state)."""
+                *, bank: Optional[DictionaryBank],
+                active: Optional[Array] = None,
+                s_cap: Optional[Array] = None) -> Tuple[Array, ServeState]:
+    """One autoregressive step. token (B,) int32 -> (logits (B,V), state).
+
+    ``active`` (B,) bool: slots set False are carried through unchanged (their
+    cache, counters and length don't advance) — the continuous-batching
+    engine decodes a partially-occupied slot pool with one compiled step.
+    ``s_cap`` (B,) int32: per-request sparsity tiers (Lexico policies only).
+    """
     B = token.shape[0]
     x = _embed_tokens(params, cfg, token)           # (B, d)
     x = shard_hint(x, BATCH_AXES, None)
-    position = state.length
+    position = state.length                          # (B,)
+    step_inc = (jnp.ones((B,), jnp.int32) if active is None
+                else jnp.asarray(active, jnp.bool_).astype(jnp.int32))
     if cfg.enc_dec:
         # decoder position excludes encoder frames; length counts decoder tokens
-        x = x + params["pos_embed"][position][None].astype(x.dtype)
+        x = x + params["pos_embed"][position].astype(x.dtype)
     windows = _window_arr(cfg)
     bank_D = bank.D if bank is not None else jnp.zeros((cfg.num_layers, 1))
     bank_G = (bank.G if (bank is not None and bank.G is not None)
@@ -637,7 +684,7 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
 
         x, new_state = jax.lax.scan(body, x, (params["layers"], state.cache))
         return _unembed(params, cfg, x), ServeState(cache=new_state,
-                                                    length=state.length + 1)
+                                                    length=state.length + step_inc)
 
     attn_cache = state.cache["attn"] if cfg.parallel_ssm else state.cache
     ssm_cache = state.cache["ssm"] if cfg.parallel_ssm else None
@@ -653,16 +700,19 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
             attn_out, new_cache = mla_mod.mla_decode_step(
                 lp["attn"], cache_l, hn, cfg, position, ctx[0],
                 N=policy.cfg.N, s=policy.cfg.s, use_gram=policy.cfg.use_gram,
-                delta=policy.cfg.delta, chunk=policy.cfg.chunk, G=ctx[1])
+                delta=policy.cfg.delta, chunk=policy.cfg.chunk, G=ctx[1],
+                active=active, s_cap=s_cap)
         else:
             q, k_t, v_t = _qkv_step(lp["attn"], cfg, hn, position)
             w_eff = win if windows is not None else None
             if hasattr(policy, "decode_attend"):
                 # fused sequence-parallel update+attend (shard_map path)
                 att, new_cache = policy.decode_attend(cache_l, q, k_t, v_t, ctx,
-                                                      window=w_eff)
+                                                      window=w_eff, active=active,
+                                                      s_cap=s_cap)
             else:
-                new_cache = policy.decode(cache_l, k_t, v_t, ctx)
+                new_cache = policy.decode(cache_l, k_t, v_t, ctx,
+                                          active=active, s_cap=s_cap)
                 att = policy.attend(new_cache, q, ctx, window=w_eff)
             H, hd = cfg.num_heads, cfg.hd
             attn_out = att.reshape(B, H * hd).astype(h.dtype) @ lp["attn"]["wo"]
@@ -691,5 +741,5 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
     logits = _unembed(params, cfg, x)
     cache_out = ({"attn": new_cache, "ssm": new_ssm} if cfg.parallel_ssm
                  else new_cache)
-    return logits, ServeState(cache=cache_out, length=state.length + 1,
+    return logits, ServeState(cache=cache_out, length=state.length + step_inc,
                               cross=state.cross)

@@ -6,14 +6,15 @@ device count. The flow:
   1. `plan_mesh(n_devices)` picks the largest supported (data, model) grid —
      model-parallel width is kept if possible (weights reshard cheaply along
      data), else the nearest divisor is chosen.
-  2. `reshard(tree, mesh, shardings)` device_puts every leaf against the new
-     mesh — combined with checkpoint.restore_pytree this is restore-to-any-
-     mesh (checkpoints store global logical arrays).
+  2. `reshard(tree, shardings)` device_puts every leaf against the new
+     shardings (built on the new mesh) — combined with
+     checkpoint.restore_pytree this is restore-to-any-mesh (checkpoints store
+     global logical arrays).
   3. The data pipeline keys batches by step + process index, so the resumed
      run replays the exact token stream regardless of the new process grid.
 
-Exercised in tests/test_fault_tolerance.py (save on one mesh, restore on
-another, bit-identical logical state).
+Exercised in tests/test_fault_tolerance.py::test_save_restore_across_meshes
+(save on one mesh, restore on another, bit-identical logical state).
 """
 from __future__ import annotations
 

@@ -137,7 +137,8 @@ def param_shardings(mesh: Mesh, params: Any, *, moe: bool, fsdp: bool = True) ->
 def cache_shardings(mesh: Mesh, cache: Any, *, batch_axes=("pod", "data"),
                     seq_axis: Optional[str] = "model") -> Any:
     """Serve-cache shardings. All cache tensors are (L, B, ...); batch on
-    ('pod','data'). Compressed-token axes (T_max slot) go on ``seq_axis``
+    ('pod','data'). Per-slot bookkeeping counters are (L, B) and follow the
+    batch sharding. Compressed-token axes (T_max slot) go on ``seq_axis``
     (sequence-parallel decode) when set — the paper-faithful baseline uses
     ``seq_axis=None`` (cache replicated over 'model', single-host semantics).
     """

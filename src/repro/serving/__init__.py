@@ -1,0 +1,18 @@
+"""Continuous-batching serving over Lexico cache slots.
+
+One universal dictionary bank + one fixed pool of per-request cache slots
+serve many heterogeneous requests concurrently: the vectorized (B,) cache
+bookkeeping lets each slot advance independently inside one compiled decode
+step, the scheduler packs requests against a global KV-byte budget using the
+paper's exact ``3s + 2`` bytes/vector accounting, and per-request sparsity
+tiers ride on a per-row atom cap inside the shared OMP encoder.
+"""
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import FCFSScheduler, Request, request_kv_bytes
+from repro.serving.slots import SlotInfo, SlotPool
+
+__all__ = [
+    "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
+    "FCFSScheduler", "Request", "request_kv_bytes", "SlotInfo", "SlotPool",
+]

@@ -1,0 +1,226 @@
+"""Continuous-batching engine over a fixed pool of Lexico cache slots.
+
+The deployment story of the paper at serving scale: ONE universal dictionary
+bank and ONE compiled decode step serve arbitrarily many heterogeneous
+requests. The pool of ``n_slots`` cache rows never changes shape — requests
+join by having their prompt prefilled at batch=1 and spliced into a free row
+(traced slot index), and leave by simply being masked out — so XLA compiles:
+
+  * one decode step for the whole pool (``active`` row mask, per-row
+    positions/counters, per-row sparsity caps), reused for every step of
+    every request mix;
+  * one prefill per prompt-length *bucket* (powers of two): the prompt's
+    largest bucket prefix goes through the parallel prefill path, the
+    remainder is streamed through the pooled decode step (chunked-prefill
+    style), so admission cost is bounded and compile count is
+    ``#buckets + O(1)`` for any number of requests.
+
+Interleaving: every engine step first admits what the FCFS + byte-budget
+scheduler allows, then advances ALL active slots one token — slots still
+consuming their prompt are fed prompt tokens (logits discarded), slots in
+generation are fed their previously sampled token. Requests retire the
+moment their ``max_new_tokens`` are sampled, freeing the slot for the queue
+head on the next step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LexicoConfig, ModelConfig
+from repro.core.dictionary import DictionaryBank
+from repro.models import model as M
+from repro.models.cache_policy import LexicoPolicy
+from repro.serving import slots as slots_mod
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import FCFSScheduler, Request, request_kv_bytes
+from repro.serving.slots import SlotInfo, SlotPool
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 8
+    t_max: int = 256              # cache capacity per slot (tokens)
+    kv_byte_budget: Optional[int] = None
+    min_bucket: int = 16          # smallest prefill bucket (must be > n_b)
+
+
+def _bucket(prompt_len: int, min_bucket: int) -> int:
+    """Largest power-of-two <= prompt_len, floored at min_bucket."""
+    b = min_bucket
+    while b * 2 <= prompt_len:
+        b *= 2
+    return b
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, params, cfg: ModelConfig, lex_cfg: LexicoConfig,
+                 bank: Optional[DictionaryBank], engine_cfg: EngineConfig):
+        if cfg.enc_dec or cfg.attn_free or cfg.parallel_ssm:
+            # parallel_ssm: the Mamba recurrent state has no per-row active
+            # gating yet, so idle slots would advance through garbage tokens
+            raise NotImplementedError(
+                "continuous batching supports decoder-only attention stacks")
+        if engine_cfg.min_bucket <= lex_cfg.n_b:
+            raise ValueError("min_bucket must exceed the recency buffer n_b")
+        self.params, self.cfg, self.lex_cfg = params, cfg, lex_cfg
+        self.bank = bank
+        self.engine_cfg = engine_cfg
+        self.policy = LexicoPolicy(lex_cfg)
+        self.pool = SlotPool(engine_cfg.n_slots)
+        self.completed: Dict[int, SlotInfo] = {}
+        self.scheduler = FCFSScheduler(
+            kv_byte_budget=engine_cfg.kv_byte_budget, n_b=lex_cfg.n_b,
+            m=cfg.cached_vector_dim, num_layers=cfg.num_layers,
+            kv_heads=cfg.cache_kv_heads, codec=lex_cfg.codec)
+        self.metrics = EngineMetrics()
+
+        B, t_max = engine_cfg.n_slots, engine_cfg.t_max
+        cache = M.init_serve_cache(cfg, self.policy, B, t_max)
+        self.state = M.ServeState(cache=cache,
+                                  length=jnp.zeros((B,), jnp.int32))
+
+        # --- the three compiled entry points ------------------------------
+        policy = self.policy
+
+        def prefill_fn(params, bank, tokens, s_cap):
+            return M.prefill(params, cfg, policy, {"tokens": tokens},
+                             bank=bank, t_max=t_max, s_cap=s_cap)
+
+        def decode_fn(params, bank, state, token, active, s_cap):
+            return M.decode_step(params, cfg, policy, state, token, bank=bank,
+                                 active=active, s_cap=s_cap)
+
+        self._prefill_fn = jax.jit(prefill_fn)          # one entry per bucket
+        self._decode_fn = jax.jit(decode_fn, donate_argnums=(2,))
+        self._write_fn = jax.jit(slots_mod.write_slot, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, req: Request) -> None:
+        if req.tier > self.lex_cfg.s:
+            raise ValueError(f"tier {req.tier} exceeds compiled s={self.lex_cfg.s}")
+        if req.prompt_len < self.engine_cfg.min_bucket:
+            raise ValueError(
+                f"prompt_len {req.prompt_len} < min_bucket "
+                f"{self.engine_cfg.min_bucket}")
+        need = req.total_tokens + self.cfg.num_meta_tokens
+        if need > self.engine_cfg.t_max:
+            raise ValueError(
+                f"request needs {need} cache tokens (incl. meta) > t_max "
+                f"{self.engine_cfg.t_max}")
+        budget = self.engine_cfg.kv_byte_budget
+        if budget is not None:
+            cost = self.scheduler.projected_bytes(req)
+            if cost > budget:
+                raise ValueError(
+                    f"request projects {cost} KV bytes > total budget {budget} "
+                    "— it could never be admitted")
+        if not req.arrival_time:
+            req.arrival_time = time.perf_counter()
+        self.scheduler.submit(req)
+
+    @property
+    def compile_counts(self) -> Dict[str, int]:
+        def n(fn):
+            get = getattr(fn, "_cache_size", None)
+            return int(get()) if callable(get) else -1
+        return {"prefill": n(self._prefill_fn), "decode": n(self._decode_fn),
+                "write_slot": n(self._write_fn)}
+
+    def kv_bytes_in_flight(self) -> int:
+        """Paper-accounting bytes of what the active slots hold RIGHT NOW."""
+        total = 0
+        for i in self.pool.active_slots():
+            info = self.pool.slots[i]
+            # resident tokens: meta prefix + fed prompt + generated tokens
+            # that were fed back (the pending one isn't in the cache yet)
+            tokens_now = (self.cfg.num_meta_tokens + info.fed
+                          + max(info.generated - 1, 0))
+            total += request_kv_bytes(
+                tokens_now, tier=info.request.tier, n_b=self.lex_cfg.n_b,
+                m=self.cfg.cached_vector_dim, num_layers=self.cfg.num_layers,
+                kv_heads=self.cfg.cache_kv_heads, codec=self.lex_cfg.codec)
+        return total
+
+    # ----------------------------------------------------------- internals
+
+    def _consume_logits(self, slot: int, logits_row: np.ndarray) -> None:
+        """Apply one step's logits to a slot: sample iff the prompt is fully
+        consumed; retire when max_new_tokens have been sampled."""
+        info = self.pool.slots[slot]
+        if info.in_prompt_phase:
+            return                      # prompt still streaming; discard
+        tok = int(np.argmax(logits_row))
+        info.pending = tok
+        info.generated += 1
+        info.generated_tokens.append(tok)
+        self.metrics.tokens_generated += 1
+        if info.done:
+            self.pool.retire(slot)
+            self.scheduler.release(info.request)
+            self.metrics.record_completion()
+            self.completed[info.request.rid] = info
+
+    def _admit(self) -> None:
+        now = time.perf_counter()
+        for req in self.scheduler.admit(len(self.pool.free_slots())):
+            bucket = _bucket(req.prompt_len, self.engine_cfg.min_bucket)
+            tokens = jnp.asarray(req.prompt[:bucket][None], jnp.int32)
+            cap = jnp.full((1,), req.tier, jnp.int32)
+            logits, one = self._prefill_fn(self.params, self.bank, tokens, cap)
+            info = SlotInfo(request=req, fed=bucket, admit_time=now)
+            slot = self.pool.allocate(info)
+            self.state = self._write_fn(self.state, one, jnp.int32(slot))
+            self.metrics.record_admission(now - req.arrival_time)
+            self.metrics.prompt_tokens_processed += bucket
+            self._consume_logits(slot, np.asarray(logits[0]))
+
+    def step(self) -> bool:
+        """Admit + advance every active slot one token. Returns True if any
+        work remains (queued or in flight)."""
+        self._admit()
+        active_ids = self.pool.active_slots()
+        if not active_ids:
+            return len(self.scheduler) > 0
+
+        B = self.engine_cfg.n_slots
+        token = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        s_cap = np.full((B,), self.lex_cfg.s, np.int32)
+        for i in active_ids:
+            info = self.pool.slots[i]
+            if info.in_prompt_phase:
+                token[i] = int(info.request.prompt[info.fed])
+            else:
+                token[i] = info.pending
+            active[i] = True
+            s_cap[i] = info.request.tier
+
+        logits, self.state = self._decode_fn(
+            self.params, self.bank, self.state,
+            jnp.asarray(token), jnp.asarray(active), jnp.asarray(s_cap))
+        logits_np = np.asarray(logits)
+
+        for i in active_ids:
+            info = self.pool.slots[i]
+            if info.in_prompt_phase:
+                info.fed += 1
+                self.metrics.prompt_tokens_processed += 1
+            self._consume_logits(i, logits_np[i])
+
+        self.metrics.sample_step(occupancy=self.pool.occupancy(),
+                                 kv_bytes_in_flight=self.kv_bytes_in_flight())
+        return bool(self.pool.active_slots()) or len(self.scheduler) > 0
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, SlotInfo]:
+        """Drive until the queue drains and all slots retire."""
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.completed

@@ -1,0 +1,65 @@
+"""Engine metrics: throughput, occupancy, KV bytes in flight, queue latency.
+
+Host-side counters sampled once per engine step — no device syncs beyond
+what the step already does. ``kv_bytes_in_flight`` uses the paper's exact
+accounting over the *current* per-slot token counts (not the projected
+completion-time bytes the scheduler reserves), so the gap between the two is
+the admission controller's safety margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    started_at: float = dataclasses.field(default_factory=time.perf_counter)
+    steps: int = 0
+    prefills: int = 0
+    tokens_generated: int = 0
+    prompt_tokens_processed: int = 0
+    requests_completed: int = 0
+    occupancy_samples: List[int] = dataclasses.field(default_factory=list)
+    kv_bytes_samples: List[int] = dataclasses.field(default_factory=list)
+    queue_latency_s: List[float] = dataclasses.field(default_factory=list)
+
+    def sample_step(self, *, occupancy: int, kv_bytes_in_flight: int) -> None:
+        self.steps += 1
+        self.occupancy_samples.append(occupancy)
+        self.kv_bytes_samples.append(kv_bytes_in_flight)
+
+    def record_admission(self, queue_latency_s: float) -> None:
+        self.prefills += 1
+        self.queue_latency_s.append(queue_latency_s)
+
+    def record_completion(self) -> None:
+        self.requests_completed += 1
+
+    @property
+    def elapsed_s(self) -> float:
+        return time.perf_counter() - self.started_at
+
+    def to_dict(self) -> Dict:
+        el = max(self.elapsed_s, 1e-9)
+        occ = self.occupancy_samples or [0]
+        kvb = self.kv_bytes_samples or [0]
+        lat = self.queue_latency_s or [0.0]
+        return {
+            "elapsed_s": el,
+            "steps": self.steps,
+            "prefills": self.prefills,
+            "requests_completed": self.requests_completed,
+            "tokens_generated": self.tokens_generated,
+            "prompt_tokens_processed": self.prompt_tokens_processed,
+            "tokens_per_s": self.tokens_generated / el,
+            "decode_tokens_per_step": (self.tokens_generated / self.steps
+                                       if self.steps else 0.0),
+            "slot_occupancy_mean": sum(occ) / len(occ),
+            "slot_occupancy_peak": max(occ),
+            "kv_bytes_in_flight_mean": sum(kvb) / len(kvb),
+            "kv_bytes_in_flight_peak": max(kvb),
+            "queue_latency_s_mean": sum(lat) / len(lat),
+            "queue_latency_s_max": max(lat),
+        }

@@ -1,0 +1,105 @@
+"""FCFS scheduler with memory-budgeted admission control.
+
+Requests declare a sparsity tier ``s`` up front, so their worst-case KV
+footprint is known exactly at submission time — the paper's ``3s + 2``
+bytes/vector law (plus the full-precision recency buffer) makes the
+projection sharp, unlike quantized caches whose metadata overhead varies
+with runtime group boundaries. Admission packs the FCFS queue head against a
+global byte budget: a request is admitted when (a) a slot is free and
+(b) its projected completion-time footprint fits in the remaining budget.
+
+FCFS is deliberately head-of-line blocking: a large request at the head
+waits for bytes rather than being starved by later small ones (predictable
+latency ordering; smarter packing is an open item in ROADMAP.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import sparse_cache
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``tier`` is the Lexico sparsity ``s`` for this request (must be <= the
+    engine's compiled ``s_max``); it controls both fidelity and the bytes
+    this request is charged against the admission budget.
+    """
+    rid: int
+    prompt: np.ndarray            # (T_prompt,) int32 token ids
+    max_new_tokens: int
+    tier: int
+    arrival_time: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+def request_kv_bytes(total_tokens: int, *, tier: int, n_b: int, m: int,
+                     num_layers: int, kv_heads: int, codec: str = "fp8") -> int:
+    """Projected completion-time KV bytes of a request, paper accounting.
+
+    ``sparse_cache.paper_kv_bytes`` counts one (K, V) pair of vectors per
+    token per head; the model total multiplies by layers and KV heads.
+    """
+    t_c = max(total_tokens - n_b, 0)
+    buf = min(total_tokens, n_b)
+    per_head = sparse_cache.paper_kv_bytes(t_c, buf, tier, m, codec=codec)
+    return num_layers * kv_heads * per_head
+
+
+class FCFSScheduler:
+    """First-come-first-served queue + byte-budget admission.
+
+    ``kv_byte_budget=None`` disables the byte check (slot-count only).
+    """
+
+    def __init__(self, *, kv_byte_budget: Optional[int], n_b: int, m: int,
+                 num_layers: int, kv_heads: int, codec: str = "fp8"):
+        self.kv_byte_budget = kv_byte_budget
+        self.n_b, self.m = n_b, m
+        self.num_layers, self.kv_heads = num_layers, kv_heads
+        self.codec = codec
+        self.queue: Deque[Request] = deque()
+        self.bytes_admitted = 0          # projected bytes of in-flight requests
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def projected_bytes(self, req: Request) -> int:
+        return request_kv_bytes(
+            req.total_tokens, tier=req.tier, n_b=self.n_b, m=self.m,
+            num_layers=self.num_layers, kv_heads=self.kv_heads, codec=self.codec)
+
+    def admit(self, free_slots: int) -> List[Request]:
+        """Pop the FCFS prefix that fits (slots and bytes). Head-of-line
+        blocking: stop at the first request that doesn't fit."""
+        admitted: List[Request] = []
+        while self.queue and len(admitted) < free_slots:
+            head = self.queue[0]
+            cost = self.projected_bytes(head)
+            if (self.kv_byte_budget is not None
+                    and self.bytes_admitted + cost > self.kv_byte_budget):
+                break
+            self.queue.popleft()
+            self.bytes_admitted += cost
+            admitted.append(head)
+        return admitted
+
+    def release(self, req: Request) -> None:
+        """Return a finished (or failed) request's projected bytes."""
+        self.bytes_admitted = max(0, self.bytes_admitted - self.projected_bytes(req))

@@ -1,0 +1,114 @@
+"""Slot lifecycle: allocate / step / retire / compact.
+
+A slot is one row of the pooled ``ServeState``: its (B,)-indexed cache
+bookkeeping advances independently of every other row, so the pool never
+recompiles as requests join and leave. Host-side ``SlotPool`` tracks the
+request <-> slot binding and per-slot progress; device-side ``write_slot``
+splices a freshly prefilled B=1 state into row ``slot`` of the pool with one
+jitted (traced-index) update — admitting a request is O(slot bytes), not
+O(pool bytes), and never triggers retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ServeState
+from repro.serving.scheduler import Request
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    """Host-side progress of the request bound to one slot."""
+    request: Request
+    fed: int                      # prompt tokens consumed so far
+    generated: int = 0
+    generated_tokens: Optional[List[int]] = None
+    admit_time: float = 0.0
+    pending: Optional[int] = None  # sampled token not yet fed back
+
+    def __post_init__(self):
+        if self.generated_tokens is None:
+            self.generated_tokens = []
+
+    @property
+    def in_prompt_phase(self) -> bool:
+        return self.fed < self.request.prompt_len
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.request.max_new_tokens
+
+
+class SlotPool:
+    """Fixed pool of ``n_slots`` request slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots: List[Optional[SlotInfo]] = [None] * n_slots
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def occupancy(self) -> int:
+        return self.n_slots - len(self.free_slots())
+
+    def allocate(self, info: SlotInfo) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        self.slots[slot] = info
+        return slot
+
+    def retire(self, slot: int) -> SlotInfo:
+        info = self.slots[slot]
+        if info is None:
+            raise KeyError(f"slot {slot} is empty")
+        self.slots[slot] = None
+        return info
+
+    def compact(self) -> dict:
+        """Host-side occupancy summary (the device pool needs no compaction —
+        idle rows are masked, and admission overwrites them in place)."""
+        return {
+            "n_slots": self.n_slots,
+            "occupied": self.occupancy(),
+            "free": len(self.free_slots()),
+            "prompt_phase": sum(1 for s in self.slots
+                                if s is not None and s.in_prompt_phase),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Device-side slot splicing (jittable, traced slot index => no recompiles)
+# ---------------------------------------------------------------------------
+
+def write_slot(pool: ServeState, one: ServeState, slot) -> ServeState:
+    """Write a B=1 ``ServeState`` into row ``slot`` of the pooled state.
+
+    Cache leaves are (L, B, ...) — update along axis 1 at a *traced* index;
+    ``length`` is (B,). Jit this once and admission never recompiles.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    cache = jax.tree.map(
+        lambda p, o: jax.lax.dynamic_update_slice_in_dim(p, o.astype(p.dtype),
+                                                         slot, axis=1),
+        pool.cache, one.cache)
+    length = jax.lax.dynamic_update_slice(pool.length, one.length, (slot,))
+    return ServeState(cache=cache, length=length, cross=pool.cross)
+
+
+def read_slot(pool: ServeState, slot) -> ServeState:
+    """Extract row ``slot`` as a B=1 ``ServeState`` (debug / migration)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    cache = jax.tree.map(
+        lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=1), pool.cache)
+    length = jax.lax.dynamic_slice(pool.length, (slot,), (1,))
+    return ServeState(cache=cache, length=length, cross=pool.cross)

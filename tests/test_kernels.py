@@ -1,10 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
-All kernels run in interpret=True on CPU (the TPU path shares the body)."""
+All kernels run in interpret=True on CPU (the TPU path shares the body).
+hypothesis is optional — property tests skip when it isn't installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.omp_corr import omp_corr_argmax

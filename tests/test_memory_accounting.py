@@ -1,0 +1,113 @@
+"""Pin the memory-accounting numbers and codec paths that gate admission.
+
+The serving engine's byte-budget admission controller trusts
+``paper_kv_bytes`` / ``kv_size_percent`` / ``request_kv_bytes`` exactly, and
+the stores it packs go through ``_encode_store`` — so these are contract
+tests, not smoke tests: the numbers are pinned to the paper's 3s+2 law.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant, sparse_cache
+from repro.core.sparse_cache import (
+    _encode_store, array_bytes, init_layer_cache, kv_size_percent,
+    paper_kv_bytes,
+)
+from repro.serving.scheduler import request_kv_bytes
+
+
+def test_paper_kv_bytes_law():
+    # per (head, K+V pair): 2 * (t_c * (3s+2) + n_b * m * fp_bytes)
+    assert paper_kv_bytes(t_c=1000, n_b=128, s=16, m=128) == \
+        2 * (1000 * 50 + 128 * 128 * 2)
+    # fp16 codec: 4s+2 per vector
+    assert paper_kv_bytes(t_c=10, n_b=0, s=8, m=128, codec="fp16") == \
+        2 * 10 * (4 * 8 + 2)
+    # int8 codec matches fp8 payload (1 byte/value)
+    assert paper_kv_bytes(t_c=10, n_b=0, s=8, m=128, codec="int8") == \
+        paper_kv_bytes(t_c=10, n_b=0, s=8, m=128, codec="fp8")
+    # buffer-only cache is exactly the dense footprint
+    assert paper_kv_bytes(t_c=0, n_b=64, s=16, m=128) == 2 * 64 * 128 * 2
+
+
+def test_kv_size_percent_asymptote():
+    # long-context limit -> payload/(2m) = (3s+2)/(2*128) = 19.53% at s=16
+    pct = kv_size_percent(t_c=10**7, n_b=128, s=16, m=128)
+    assert abs(pct - 100 * 50 / 256) < 0.01
+    # all-buffer cache is 100% of dense
+    assert kv_size_percent(t_c=0, n_b=128, s=16, m=128) == pytest.approx(100.0)
+
+
+def test_request_kv_bytes_composition():
+    # model total = L * KV * per-head-pair bytes, buffer clamped to total
+    per_head = paper_kv_bytes(26, 4, 8, 16)
+    assert request_kv_bytes(30, tier=8, n_b=4, m=16,
+                            num_layers=3, kv_heads=2) == 3 * 2 * per_head
+    # shorter than the buffer: nothing compressed
+    assert request_kv_bytes(3, tier=8, n_b=4, m=16,
+                            num_layers=1, kv_heads=1) == \
+        paper_kv_bytes(0, 3, 8, 16)
+
+
+def test_array_bytes_padded_layout():
+    cache = init_layer_cache(2, 3, 16, t_max=32, n_b=4, s=8)
+    # fp8 vals (1B) + int16 idx (2B) for K and V + two bf16 buffers
+    expect = (2 * 3 * 32 * 8) * (1 + 2) * 2 + (2 * 3 * 4 * 16) * 2 * 2
+    assert array_bytes(cache) == expect
+    # paper accounting is strictly smaller than the padded layout at low fill
+    assert paper_kv_bytes(4, 4, 8, 16) * 2 * 3 < array_bytes(cache)
+
+
+def test_payload_bytes_codecs():
+    assert quant.payload_bytes(16, "fp8") == 3 * 16 + 2
+    assert quant.payload_bytes(16, "int8") == 3 * 16 + 2
+    assert quant.payload_bytes(16, "fp16") == 4 * 16 + 2
+    with pytest.raises(KeyError):
+        quant.payload_bytes(16, "fp4")
+
+
+def test_encode_store_fp8_and_fp16(rng):
+    vals = jnp.asarray(rng.normal(size=(2, 3, 8)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, (2, 3, 8)), jnp.int32)
+    v8, i8 = _encode_store(vals, idx, jnp.float8_e4m3fn)
+    assert v8.dtype == jnp.float8_e4m3fn and i8.dtype == jnp.int16
+    # fp8 e4m3 keeps ~2 decimal digits around 1.0
+    np.testing.assert_allclose(np.asarray(v8, np.float32), np.asarray(vals),
+                               atol=0.25, rtol=0.07)
+    v16, i16 = _encode_store(vals, idx, jnp.bfloat16)
+    assert v16.dtype == jnp.bfloat16 and i16.dtype == jnp.int16
+
+
+def test_encode_store_int8_branch(rng):
+    """The int8 branch quantizes through quant.encode_int8: int8 codes on the
+    [-127, 127] grid with the per-vector scale folded out of the store (the
+    benchmark path carries the scale via quant.encode directly)."""
+    vals = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, (4, 8)), jnp.int32)
+    v, i = _encode_store(vals, idx, jnp.int8)
+    assert v.dtype == jnp.int8 and i.dtype == jnp.int16
+    arr = np.asarray(v, np.int32)
+    assert arr.min() >= -127 and arr.max() <= 127
+    # codes match the reference codec exactly
+    code = quant.encode_int8(vals, idx)
+    np.testing.assert_array_equal(arr, np.asarray(code.vals, np.int32))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(code.idx))
+    # each row's max-magnitude value hits the edge of the grid (scale = amax/127)
+    assert np.all(np.abs(arr).max(axis=-1) == 127)
+    # decode with the codec's scale round-trips to ~1% of the row max
+    deq = np.asarray(quant.decode_vals(code))
+    err = np.abs(deq - np.asarray(vals)).max(axis=-1)
+    assert np.all(err <= np.abs(np.asarray(vals)).max(axis=-1) / 127 + 1e-6)
+
+
+def test_int8_cache_end_to_end(rng):
+    """init_layer_cache with the int8 codec stores int8 through prefill."""
+    from tests.conftest import make_unit_dict
+    D = jnp.asarray(make_unit_dict(rng, 16, 64), jnp.float32)
+    cache = init_layer_cache(1, 1, 16, t_max=16, n_b=2, s=4,
+                             val_dtype=jnp.int8)
+    K = jnp.asarray(rng.normal(size=(1, 1, 6, 16)), jnp.float32)
+    cache = sparse_cache.prefill_compress(cache, K, K, D, D, s=4)
+    assert cache.k_vals.dtype == jnp.int8
+    assert int(cache.t_c[0]) == 4

@@ -39,7 +39,8 @@ def test_arch_smoke(name, rng):
     for _ in range(3):
         lg, state = M.decode_step(params, cfg, policy, state, tokens[:, 0], bank=bank)
     assert not bool(jnp.isnan(lg).any())
-    assert int(state.length) == T + cfg.num_meta_tokens + 3
+    assert state.length.shape == (B,)
+    assert int(state.length[0]) == T + cfg.num_meta_tokens + 3
 
 
 @pytest.mark.parametrize("name", ["llama3.2-1b", "qwen3-0.6b", "hymba-1.5b",

@@ -1,9 +1,11 @@
-"""OMP correctness: against the naive oracle + hypothesis invariants."""
+"""OMP correctness: against the naive oracle + hypothesis invariants.
+hypothesis is optional — property tests skip when it isn't installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, st
 
 from repro.core.omp import omp_batch, omp_multi_dict, reconstruct
 from repro.core.ref_omp import omp_ref_batch

@@ -67,8 +67,8 @@ def test_eviction_budget_respected(rng):
     K = jnp.asarray(rng.normal(size=(2, cfg.num_kv_heads, 32, cfg.hd)), jnp.float32)
     cache = pol.prefill(cache, K, K, None)
     assert cache.k.shape[2] == 8                    # budget slots only
-    assert int(cache.length) == 32                  # but tracks true length
+    assert int(cache.length[0]) == 32               # but tracks true length
     kt = jnp.asarray(rng.normal(size=(2, cfg.num_kv_heads, cfg.hd)), jnp.float32)
     cache = pol.decode(cache, kt, kt, None)
-    assert int(cache.length) == 33
+    assert int(cache.length[0]) == 33
     assert int(jnp.max(cache.pos)) == 32            # newest kept

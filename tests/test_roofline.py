@@ -24,9 +24,10 @@ def test_scan_flops_exact():
     r = hlo_cost.analyze(c.as_text())
     assert r["flops"] == 2 * 128 * 256 * 256 * 8
     # XLA's own counter counts the body once — document the discrepancy
+    # (exact value drifts a few scalar flops across XLA versions)
     ca = c.cost_analysis()
     ca = ca[0] if isinstance(ca, list) else ca
-    assert ca["flops"] == 2 * 128 * 256 * 256  # one iteration only
+    assert abs(ca["flops"] - 2 * 128 * 256 * 256) < 1e3  # one iteration only
 
 
 def test_nested_scan_flops():

@@ -39,6 +39,49 @@ def test_data_sharding_fallback():
     assert s2.spec in (P("data"), P())
 
 
+def test_seq_shard_body_matches_unsharded(rng):
+    """The shard_map decode body with per-row (B,) counters, active masks and
+    tier caps matches plain decode_update + attend on a 1-shard mesh."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from repro.configs.base import LexicoConfig
+    from repro.core import sparse_cache as sc
+    from repro.core.sharded_decode import SeqShardLexicoPolicy, _decode_attend_local
+
+    lex = LexicoConfig(N=64, s=4, n_b=4, chunk=None, use_gram=False)
+    pol = SeqShardLexicoPolicy(lex)
+    B, KV, m = 2, 2, 16
+    D = rng.normal(size=(m, 64))
+    D = jnp.asarray(D / np.linalg.norm(D, axis=0), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(B, KV, 8, m)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, KV, 2, m)), jnp.float32)
+    kt = jnp.asarray(rng.normal(size=(B, KV, m)), jnp.float32)
+    cache = pol.prefill(pol.init(B, KV, m, t_max=20), K, K, (D, D))
+    act = jnp.asarray([True, False])
+    cap = jnp.asarray([2, 4], jnp.int32)
+
+    mesh = jax.make_mesh((1,), ("model",), devices=jax.devices()[:1])
+    specs = type(cache)(
+        k_vals=P(None, None, "model", None), k_idx=P(None, None, "model", None),
+        v_vals=P(None, None, "model", None), v_idx=P(None, None, "model", None),
+        k_buf=P(), v_buf=P(), t_c=P(), buf_len=P(), buf_start=P())
+    body = lambda c, qq, kk, vv, aa, cc: _decode_attend_local(
+        c, qq, kk, vv, D, D, s=4, N=64, delta=0.0, window=None,
+        active=aa, s_cap=cc)
+    out, nc = shard_map(body, mesh=mesh,
+                        in_specs=(specs, P(), P(), P(), P(), P()),
+                        out_specs=(P(), specs), check_rep=False)(
+        cache, q, kt, kt, act, cap)
+    ref_cache = sc.decode_update(cache, kt, kt, D, D, s=4, use_gram=False,
+                                 active=act, s_cap=cap)
+    ref = sc.attend(ref_cache, q, D, D, N=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(nc.t_c), np.asarray(ref_cache.t_c))
+    np.testing.assert_array_equal(np.asarray(nc.buf_len),
+                                  np.asarray(ref_cache.buf_len))
+
+
 def test_cache_shardings_single_device():
     from repro.core.sparse_cache import init_layer_cache
     from repro.runtime.sharding import cache_shardings
@@ -46,6 +89,6 @@ def test_cache_shardings_single_device():
     cache = init_layer_cache(2, 2, 16, t_max=32, n_b=4, s=4)
     stacked = jax.tree.map(lambda x: jnp.stack([x] * 3), cache)
     sh = cache_shardings(mesh, stacked, seq_axis="model")
-    # vals get a token-axis entry; scalars replicate
+    # vals get a token-axis entry; (L, B) bookkeeping follows the batch axis
     assert sh.k_vals.spec[3] == "model"
-    assert sh.t_c.spec == P()
+    assert sh.t_c.spec in (P(None, "data"), P(None, ("pod", "data")))
