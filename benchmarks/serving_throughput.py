@@ -2,9 +2,16 @@
 
 Emits a JSON document (stdout, plus ``name,value`` CSV rows when driven by
 ``benchmarks.run``) with decode tokens/s, per-step batch efficiency, slot
-occupancy, KV-bytes-in-flight (paper 3s+2 accounting), and queue latency —
-the numbers that track whether the serving stack is getting faster and
-denser over the bench trajectory.
+occupancy, KV-bytes-in-flight (paper 3s+2 accounting), KV-bytes-resident
+(bytes the slots hold in their layout — the pool capacity a right-sized
+deployment must provision), and queue latency — the numbers
+that track whether the serving stack is getting faster and denser over the
+bench trajectory.
+
+The same short/long mixed workload runs through BOTH slot-storage layouts
+(contiguous stripes vs paged pool) and the JSON carries the comparison:
+paged slots must hold fewer KV bytes than the padded stripes do (the
+headroom an oversubscribed ``n_pages`` turns into extra admitted requests).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--json-only]
 """
@@ -25,8 +32,25 @@ from repro.configs.base import LexicoConfig
 from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
 
 
+def _submit_workload(eng, cfg, *, n_requests: int, seed: int) -> None:
+    """Short/long mixed workload: half the requests are short chats, half
+    long documents — the mix where per-slot padding wastes the most."""
+    rng = np.random.default_rng(seed)
+    for rid in range(n_requests):
+        if rid % 2 == 0:
+            prompt_len = int(rng.integers(9, 20))      # short
+        else:
+            prompt_len = int(rng.integers(48, 80))     # long
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 16)),
+            tier=int(rng.choice([2, 4, 8, 16]))))
+
+
 def run_serving_bench(*, n_requests: int = 12, n_slots: int = 4,
-                      t_max: int = 96, seed: int = 0) -> dict:
+                      t_max: int = 96, seed: int = 0,
+                      layout: str = "contiguous", page_size: int = 8) -> dict:
     cfg = BENCH_CFG
     params, _ = trained_params()
     N, s_max = 192, 16
@@ -34,37 +58,62 @@ def run_serving_bench(*, n_requests: int = 12, n_slots: int = 4,
     lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
     eng = ContinuousBatchingEngine(
         params, cfg, lex, bank,
-        EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8))
-
-    rng = np.random.default_rng(seed)
-    for rid in range(n_requests):
-        prompt_len = int(rng.integers(9, 64))
-        eng.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
-            max_new_tokens=int(rng.integers(4, 16)),
-            tier=int(rng.choice([2, 4, 8, 16]))))
-
+        EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                     layout=layout, page_size=page_size))
+    _submit_workload(eng, cfg, n_requests=n_requests, seed=seed)
     done = eng.run()
     stats = eng.metrics.to_dict()
     stats.update(
         n_requests=n_requests,
         n_slots=n_slots,
+        layout=layout,
         completed=len(done),
         compile_counts=eng.compile_counts,
     )
+    if eng.paged:
+        stats["page_size"] = page_size
+        stats["pool_pages"] = eng.allocator.capacity
+        stats["pages_balanced"] = eng.allocator.check_balanced()
     return stats
+
+
+def run_layout_comparison(**kw) -> dict:
+    """Same workload through both layouts + the memory/throughput deltas."""
+    cont = run_serving_bench(layout="contiguous", **kw)
+    paged = run_serving_bench(layout="paged", **kw)
+    resident_ratio = (paged["kv_bytes_resident_peak"]
+                      / max(cont["kv_bytes_resident_peak"], 1))
+    return {
+        "contiguous": cont,
+        "paged": paged,
+        "paged_vs_contiguous": {
+            "kv_bytes_resident_peak_ratio": resident_ratio,
+            "kv_bytes_resident_peak_saved": (cont["kv_bytes_resident_peak"]
+                                             - paged["kv_bytes_resident_peak"]),
+            "tokens_per_s_ratio": (paged["tokens_per_s"]
+                                   / max(cont["tokens_per_s"], 1e-9)),
+            "same_token_counts": (cont["tokens_generated"]
+                                  == paged["tokens_generated"]),
+        },
+    }
 
 
 def run(emit):
     """Entry point for benchmarks.run: flat name,value rows."""
-    stats = run_serving_bench()
-    for key in ("tokens_per_s", "decode_tokens_per_step",
-                "slot_occupancy_mean", "kv_bytes_in_flight_peak",
-                "queue_latency_s_mean", "requests_completed"):
-        emit(f"serving/{key}", stats[key])
-    emit("serving/compiles_decode", stats["compile_counts"]["decode"])
-    emit("serving/compiles_prefill", stats["compile_counts"]["prefill"])
+    stats = run_layout_comparison()
+    for layout in ("contiguous", "paged"):
+        side = stats[layout]
+        for key in ("tokens_per_s", "decode_tokens_per_step",
+                    "slot_occupancy_mean", "kv_bytes_in_flight_peak",
+                    "kv_bytes_resident_peak", "queue_latency_s_mean",
+                    "requests_completed"):
+            emit(f"serving/{layout}/{key}", side[key])
+        emit(f"serving/{layout}/compiles_decode",
+             side["compile_counts"]["decode"])
+        emit(f"serving/{layout}/compiles_prefill",
+             side["compile_counts"]["prefill"])
+    emit("serving/paged_resident_peak_ratio",
+         stats["paged_vs_contiguous"]["kv_bytes_resident_peak_ratio"])
 
 
 def main():
@@ -73,10 +122,17 @@ def main():
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--t-max", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--layout", choices=["contiguous", "paged", "both"],
+                    default="both")
     ap.add_argument("--json-only", action="store_true")
     args = ap.parse_args()
-    stats = run_serving_bench(n_requests=args.n_requests, n_slots=args.n_slots,
-                              t_max=args.t_max, seed=args.seed)
+    kw = dict(n_requests=args.n_requests, n_slots=args.n_slots,
+              t_max=args.t_max, seed=args.seed, page_size=args.page_size)
+    if args.layout == "both":
+        stats = run_layout_comparison(**kw)
+    else:
+        stats = run_serving_bench(layout=args.layout, **kw)
     print(json.dumps(stats, indent=2, default=float))
 
 

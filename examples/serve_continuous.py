@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--t-max", type=int, default=96)
     ap.add_argument("--budget-kb", type=int, default=None,
                     help="global KV byte budget (KiB); default: unlimited")
+    ap.add_argument("--layout", choices=["contiguous", "paged"],
+                    default="contiguous",
+                    help="slot storage: padded per-slot stripes or a shared "
+                         "page pool with per-slot page tables")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per pool page (paged layout)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -47,6 +53,7 @@ def main():
     eng = ContinuousBatchingEngine(
         params, cfg, lex, bank,
         EngineConfig(n_slots=args.n_slots, t_max=args.t_max, min_bucket=8,
+                     layout=args.layout, page_size=args.page_size,
                      kv_byte_budget=(args.budget_kb * 1024
                                      if args.budget_kb else None)))
 
@@ -81,6 +88,11 @@ def main():
     print(f"KV bytes in flight: mean {stats['kv_bytes_in_flight_mean']:.0f} / "
           f"peak {stats['kv_bytes_in_flight_peak']} "
           f"(paper 3s+2 accounting)")
+    print(f"KV bytes resident ({args.layout}): "
+          f"peak {stats['kv_bytes_resident_peak']}")
+    if args.layout == "paged":
+        print(f"pool pages: peak {stats['pages_in_use_peak']} in use, "
+              f"balanced={eng.allocator.check_balanced()}")
     print(f"queue latency: mean {stats['queue_latency_s_mean'] * 1e3:.0f} ms")
 
 

@@ -38,6 +38,23 @@ Array = jax.Array
 NEG_INF = -1e30
 
 
+def gather_pages(pool: Array, page_table: Array) -> Array:
+    """Materialise per-row contiguous views of a shared page pool.
+
+    ``pool`` (n_pages, KV, P, ·) + ``page_table`` (B, max_pages) int32 →
+    (B, KV, max_pages·P, ·). Null (0) and out-of-range entries clamp onto
+    page 0, whose contents are garbage by design — callers must mask reads by
+    ``t_c`` (``decode_attention`` already does). This is the read half of the
+    paged layout: attention gathers pages, then masks.
+    """
+    pg = jnp.clip(page_table, 0, pool.shape[0] - 1)
+    g = pool[pg]                                   # (B, MP, KV, P, ·)
+    B, MP = page_table.shape
+    _, KV, P = pool.shape[:3]
+    g = jnp.moveaxis(g, 2, 1)                      # (B, KV, MP, P, ·)
+    return g.reshape((B, KV, MP * P) + pool.shape[3:])
+
+
 def per_batch(x) -> Array:
     """Lift a bookkeeping counter to broadcast against (B, KV, G, T) logits.
 

@@ -151,6 +151,15 @@ class SeqShardLexicoPolicy:
     def decode_attend(self, cache: LexicoLayerCache, q, k_t, v_t, ctx, *,
                       window=None, active=None,
                       s_cap=None) -> Tuple[Array, LexicoLayerCache]:
+        from repro.core.sparse_cache import PagedLexicoLayerCache
+        if isinstance(cache, PagedLexicoLayerCache):
+            # the shard_map body owns a contiguous T/|model| stripe per shard;
+            # a shared page pool has no such stripe to own. Paged serving
+            # shards by replica (one pool per data-parallel replica), not by
+            # token — see ROADMAP "multi-host request routing".
+            raise NotImplementedError(
+                "SeqShardLexicoPolicy requires the contiguous cache layout; "
+                "paged pools shard per-replica, not per-token")
         D_k, D_v = ctx[0], ctx[1]
         from repro.models.model import _abstract_mesh
         am = _abstract_mesh()

@@ -6,12 +6,28 @@ TPU adaptation of the paper's CSR layout: a *padded fixed-s dense* layout —
 Static shapes keep the whole serving step jittable/pjit-able; the recency
 buffer is a ring so the eviction path is one dynamic-slice per step.
 
+Two storage layouts share one compression/bookkeeping core:
+
+  * ``LexicoLayerCache`` — one contiguous ``(B, KV, T_max, s)`` stripe per
+    batch row. Simple, but a serving pool pays the full padded stripe for
+    every slot regardless of fill.
+  * ``PagedLexicoLayerCache`` — a *shared* page pool ``(n_pages, KV,
+    page_size, s)`` plus a per-row page table ``(B, max_pages)`` int32.
+    Rows own only the pages their ``t_c`` actually covers, so a pool's real
+    footprint tracks the paper's 3s+2 accounting instead of the padded
+    worst case. Page ids come from the host-side allocator in
+    ``repro.serving.pages``; id 0 is the reserved null/trash page (writes by
+    rows without a live destination are clamped onto it and never read).
+
+The contiguous layout stays fully supported — it is the differential-test
+oracle for the paged one (``tests/test_paged_cache.py``).
+
 All fields carry a leading layer axis when stacked into a model cache
 (``jax.lax.scan`` over layers consumes/produces one layer's slice).
 
 Memory accounting: ``paper_bytes_per_vector = 3s+2`` (fp8 codec) — the number
 we report KV-size %, matching the paper; ``array_bytes`` reports the actual
-padded-layout footprint.
+padded-layout footprint, ``paged_array_bytes`` the shared-pool footprint.
 """
 from __future__ import annotations
 
@@ -69,6 +85,82 @@ def init_layer_cache(
     )
 
 
+class PagedLexicoLayerCache(NamedTuple):
+    """Paged cache for one attention layer (or one (L,...) stack).
+
+    The four sparse stores are a page pool shared by every batch row;
+    ``page_table[b, i]`` names the pool page holding row ``b``'s compressed
+    tokens ``[i*page_size, (i+1)*page_size)``. Entry 0 = unallocated (the
+    null page). Buffers and counters stay per-row, identical to the
+    contiguous layout.
+    """
+
+    k_vals: Array      # (n_pages, KV, page_size, s) storage dtype
+    k_idx: Array       # (n_pages, KV, page_size, s) int16
+    v_vals: Array
+    v_idx: Array
+    page_table: Array  # (B, max_pages) int32; 0 = null/unallocated
+    k_buf: Array       # (B, KV, n_b, m) bf16 ring buffer
+    v_buf: Array
+    t_c: Array         # (B,) int32 — valid compressed tokens per batch element
+    buf_len: Array     # (B,) int32
+    buf_start: Array   # (B,) int32 — ring head per batch element
+
+    @property
+    def n_pages(self) -> int:
+        return self.k_vals.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_vals.shape[-2]
+
+    @property
+    def max_pages(self) -> int:
+        return self.page_table.shape[-1]
+
+    @property
+    def T_max(self) -> int:
+        """Per-row capacity of the page table (tokens)."""
+        return self.max_pages * self.page_size
+
+    @property
+    def n_b(self) -> int:
+        return self.k_buf.shape[-2]
+
+    @property
+    def s(self) -> int:
+        return self.k_vals.shape[-1]
+
+
+def init_paged_layer_cache(
+    batch: int, kv_heads: int, head_dim: int, *,
+    n_pages: int, page_size: int, max_pages: int, n_b: int, s: int,
+    val_dtype=jnp.float8_e4m3fn, buf_dtype=jnp.bfloat16,
+) -> PagedLexicoLayerCache:
+    zv = jnp.zeros((n_pages, kv_heads, page_size, s), val_dtype)
+    zi = jnp.zeros((n_pages, kv_heads, page_size, s), jnp.int16)
+    zb = jnp.zeros((batch, kv_heads, n_b, head_dim), buf_dtype)
+    zc = jnp.zeros((batch,), jnp.int32)
+    return PagedLexicoLayerCache(
+        k_vals=zv, k_idx=zi, v_vals=zv, v_idx=zi,
+        page_table=jnp.zeros((batch, max_pages), jnp.int32),
+        k_buf=zb, v_buf=zb, t_c=zc, buf_len=zc, buf_start=zc,
+    )
+
+
+def _page_dest(page_table: Array, pos: Array, page_size: int, n_pages: int):
+    """Map per-row token positions (B,) to (page (B,), offset (B,)).
+
+    Null/out-of-range table entries are clamped onto the trash page 0, which
+    is never read — attention masks by ``t_c`` — so a row without a live
+    destination can still issue its (no-op) write inside the shared step.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    slot_idx = jnp.clip(pos // page_size, 0, page_table.shape[-1] - 1)
+    pg = jnp.take_along_axis(page_table, slot_idx[:, None], axis=1)[:, 0]
+    return jnp.clip(pg, 0, n_pages - 1), pos % page_size
+
+
 def _encode_store(vals: Array, idx: Array, val_dtype) -> Tuple[Array, Array]:
     if val_dtype == jnp.int8:
         code = quant.encode_int8(vals, idx)
@@ -77,6 +169,30 @@ def _encode_store(vals: Array, idx: Array, val_dtype) -> Tuple[Array, Array]:
         # benchmarks via quant.encode directly.
         return code.vals, code.idx
     return vals.astype(val_dtype), idx.astype(jnp.int16)
+
+
+def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
+                          G_k, G_v, s_cap):
+    """Shared prefill core: OMP-encode the first T-n_b prompt tokens.
+
+    Returns ``(kv, ki, vv, vi, k_tail, v_tail, n_comp)`` — the encoded sparse
+    stores plus the buffer tail — identically for both storage layouts, so
+    the layouts can only differ in *where* the codes land.
+    """
+    B, KV, T, m = K.shape
+    n_b = cache.n_b
+    n_comp = T - n_b
+    k_head, k_tail = K[:, :, :n_comp], K[:, :, n_comp:]
+    v_head, v_tail = V[:, :, :n_comp], V[:, :, n_comp:]
+    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None, None]
+
+    rk = omp_mod.omp_batch(k_head.astype(jnp.float32), D_k, s, use_gram=use_gram,
+                           delta=delta, G=G_k, s_cap=cap)
+    rv = omp_mod.omp_batch(v_head.astype(jnp.float32), D_v, s, use_gram=use_gram,
+                           delta=delta, G=G_v, s_cap=cap)
+    kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
+    vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
+    return kv, ki, vv, vi, k_tail, v_tail, n_comp
 
 
 def prefill_compress(
@@ -96,19 +212,10 @@ def prefill_compress(
     Assumes T >= n_b and T - n_b <= T_max.
     ``s_cap`` (B,) optionally caps the per-request sparsity tier below ``s``.
     """
-    B, KV, T, m = K.shape
-    n_b = cache.n_b
-    n_comp = T - n_b
-    k_head, k_tail = K[:, :, :n_comp], K[:, :, n_comp:]
-    v_head, v_tail = V[:, :, :n_comp], V[:, :, n_comp:]
-    cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None, None]
-
-    rk = omp_mod.omp_batch(k_head.astype(jnp.float32), D_k, s, use_gram=use_gram,
-                           delta=delta, G=G_k, s_cap=cap)
-    rv = omp_mod.omp_batch(v_head.astype(jnp.float32), D_v, s, use_gram=use_gram,
-                           delta=delta, G=G_v, s_cap=cap)
-    kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
-    vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
+    B = K.shape[0]
+    kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
+        cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
+        G_k=G_k, G_v=G_v, s_cap=s_cap)
 
     def put(store, new):
         return jax.lax.dynamic_update_slice(store, new, (0, 0, 0, 0))
@@ -119,7 +226,61 @@ def prefill_compress(
         v_vals=put(cache.v_vals, vv), v_idx=put(cache.v_idx, vi),
         k_buf=k_tail.astype(cache.k_buf.dtype),
         v_buf=v_tail.astype(cache.v_buf.dtype),
-        t_c=fill(n_comp), buf_len=fill(n_b), buf_start=fill(0),
+        t_c=fill(n_comp), buf_len=fill(cache.n_b), buf_start=fill(0),
+    )
+
+
+def scatter_into_pages(pool: Array, page_table: Array, dense: Array,
+                       *, start: int = 0) -> Array:
+    """Write a contiguous (B, KV, T, ·) block into the shared page pool at
+    token positions ``[start, start+T)`` of each row's page table.
+
+    Rows whose table doesn't cover a position write onto the trash page 0
+    (masked out of every read by ``t_c``).
+    """
+    B, KV, T, _ = dense.shape
+    n_pages, _, P, _ = pool.shape
+    t = start + jnp.arange(T)
+    slot_idx = jnp.clip(t // P, 0, page_table.shape[-1] - 1)
+    pg = jnp.clip(page_table[:, slot_idx], 0, n_pages - 1)   # (B, T)
+    off = jnp.broadcast_to(t % P, (B, T))
+    payload = jnp.moveaxis(dense.astype(pool.dtype), 1, 2)   # (B, T, KV, ·)
+    return pool.at[pg, :, off].set(payload)
+
+
+def paged_prefill_compress(
+    cache: PagedLexicoLayerCache,
+    K: Array, V: Array,
+    D_k: Array, D_v: Array,
+    *,
+    s: int,
+    use_gram: bool = True,
+    delta: float = 0.0,
+    G_k=None, G_v=None,
+    s_cap: Optional[Array] = None,
+) -> PagedLexicoLayerCache:
+    """Paged twin of :func:`prefill_compress`.
+
+    The caller owns page placement: every row's ``page_table`` must already
+    name pages covering its first ``T - n_b`` positions (the serving engine
+    installs rows via ``repro.serving.slots``; tests build them directly).
+    Encoding is bit-identical to the contiguous path — only the scatter
+    destination differs.
+    """
+    B = K.shape[0]
+    kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
+        cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
+        G_k=G_k, G_v=G_v, s_cap=s_cap)
+
+    fill = lambda v: jnp.full((B,), v, jnp.int32)
+    return cache._replace(
+        k_vals=scatter_into_pages(cache.k_vals, cache.page_table, kv),
+        k_idx=scatter_into_pages(cache.k_idx, cache.page_table, ki),
+        v_vals=scatter_into_pages(cache.v_vals, cache.page_table, vv),
+        v_idx=scatter_into_pages(cache.v_idx, cache.page_table, vi),
+        k_buf=k_tail.astype(cache.k_buf.dtype),
+        v_buf=v_tail.astype(cache.v_buf.dtype),
+        t_c=fill(n_comp), buf_len=fill(cache.n_b), buf_start=fill(0),
     )
 
 
@@ -144,14 +305,40 @@ def decode_update(
     ``active`` (B,) bool: rows set False are left untouched (idle slots of the
     continuous-batching pool). ``s_cap`` (B,) caps the per-row sparsity tier.
     """
-    B, KV, m = k_t.shape
-    n_b = cache.n_b
+    kv, ki, vv, vi, act, full, evict = _compress_evictee(
+        cache, k_t, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
+        G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+    B = k_t.shape[0]
+    b_idx = jnp.arange(B)
+
+    # per-row write positions; rows that aren't evicting (or are idle) get
+    # their current contents written back (read-select-write, no full select)
+    t_w = jnp.clip(cache.t_c, 0, cache.T_max - 1)
+
+    def maybe_store(store, new):
+        cur = store[b_idx, :, t_w]                          # (B, KV, s)
+        payload = jnp.where(evict[:, None, None], new.astype(store.dtype), cur)
+        return store.at[b_idx, :, t_w].set(payload)
+
+    return cache._replace(
+        k_vals=maybe_store(cache.k_vals, kv), k_idx=maybe_store(cache.k_idx, ki),
+        v_vals=maybe_store(cache.v_vals, vv), v_idx=maybe_store(cache.v_idx, vi),
+        **_ring_append(cache, k_t, v_t, act, full, evict))
+
+
+def _compress_evictee(cache, k_t, D_k, D_v, *, s, use_gram, delta, G_k, G_v,
+                      active, s_cap):
+    """Shared decode core: OMP-encode the oldest ring-buffer entry.
+
+    Returns the encoded stores plus the (act, full, evict) row masks; both
+    storage layouts consume these, differing only in the write destination.
+    """
+    B = k_t.shape[0]
     b_idx = jnp.arange(B)
     act = (jnp.ones((B,), jnp.bool_) if active is None
            else jnp.asarray(active, jnp.bool_))
-    full = cache.buf_len >= n_b
+    full = cache.buf_len >= cache.n_b
 
-    # --- compress the oldest buffer slot if evicting ---
     old_k = cache.k_buf[b_idx, :, cache.buf_start]          # (B, KV, m)
     old_v = cache.v_buf[b_idx, :, cache.buf_start]
     cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None]
@@ -161,24 +348,13 @@ def decode_update(
                            delta=delta, G=G_v, s_cap=cap)
     kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
     vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
+    return kv, ki, vv, vi, act, full, full & act
 
-    # per-row write positions; rows that aren't evicting (or are idle) get
-    # their current contents written back (read-select-write, no full select)
-    t_w = jnp.clip(cache.t_c, 0, cache.T_max - 1)
-    evict = full & act
 
-    def maybe_store(store, new):
-        cur = store[b_idx, :, t_w]                          # (B, KV, s)
-        payload = jnp.where(evict[:, None, None], new.astype(store.dtype), cur)
-        return store.at[b_idx, :, t_w].set(payload)
-
-    k_vals = maybe_store(cache.k_vals, kv)
-    k_idx = maybe_store(cache.k_idx, ki)
-    v_vals = maybe_store(cache.v_vals, vv)
-    v_idx = maybe_store(cache.v_idx, vi)
-    t_c = jnp.where(evict, cache.t_c + 1, cache.t_c)
-
-    # --- write the new token into the ring ---
+def _ring_append(cache, k_t, v_t, act, full, evict) -> dict:
+    """Shared decode core: ring-write the new token + advance the counters."""
+    B = k_t.shape[0]
+    b_idx = jnp.arange(B)
     write_pos = jnp.where(full, cache.buf_start, cache.buf_len)
 
     def ring_write(buf, x_t):
@@ -186,14 +362,52 @@ def decode_update(
         payload = jnp.where(act[:, None, None], x_t.astype(buf.dtype), cur)
         return buf.at[b_idx, :, write_pos].set(payload)
 
-    k_buf = ring_write(cache.k_buf, k_t)
-    v_buf = ring_write(cache.v_buf, v_t)
-    buf_start = jnp.where(evict, (cache.buf_start + 1) % n_b, cache.buf_start)
-    buf_len = jnp.where(act & ~full, cache.buf_len + 1, cache.buf_len)
+    return dict(
+        k_buf=ring_write(cache.k_buf, k_t),
+        v_buf=ring_write(cache.v_buf, v_t),
+        t_c=jnp.where(evict, cache.t_c + 1, cache.t_c),
+        buf_start=jnp.where(evict, (cache.buf_start + 1) % cache.n_b,
+                            cache.buf_start),
+        buf_len=jnp.where(act & ~full, cache.buf_len + 1, cache.buf_len))
+
+
+def paged_decode_update(
+    cache: PagedLexicoLayerCache,
+    k_t: Array, v_t: Array,
+    D_k: Array, D_v: Array,
+    *,
+    s: int,
+    use_gram: bool = True,
+    delta: float = 0.0,
+    G_k=None, G_v=None,
+    active: Optional[Array] = None,
+    s_cap: Optional[Array] = None,
+) -> PagedLexicoLayerCache:
+    """Paged twin of :func:`decode_update`.
+
+    The evicted token lands at position ``t_c`` of the row's page table —
+    always inside the row's *tail page*, so a decode append touches one
+    (page, offset) cell of the shared pool. Rows that aren't evicting write
+    their current contents back (evicting rows own their destination page
+    exclusively; non-evicting rows resolve to the trash page or their own
+    cell, so same-payload writes are the only possible collisions).
+    """
+    kv, ki, vv, vi, act, full, evict = _compress_evictee(
+        cache, k_t, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
+        G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+
+    t_w = jnp.clip(cache.t_c, 0, cache.T_max - 1)
+    pg, off = _page_dest(cache.page_table, t_w, cache.page_size, cache.n_pages)
+
+    def maybe_store(pool, new):
+        cur = pool[pg, :, off]                              # (B, KV, s)
+        payload = jnp.where(evict[:, None, None], new.astype(pool.dtype), cur)
+        return pool.at[pg, :, off].set(payload)
 
     return cache._replace(
-        k_vals=k_vals, k_idx=k_idx, v_vals=v_vals, v_idx=v_idx,
-        k_buf=k_buf, v_buf=v_buf, t_c=t_c, buf_len=buf_len, buf_start=buf_start)
+        k_vals=maybe_store(cache.k_vals, kv), k_idx=maybe_store(cache.k_idx, ki),
+        v_vals=maybe_store(cache.v_vals, vv), v_idx=maybe_store(cache.v_idx, vi),
+        **_ring_append(cache, k_t, v_t, act, full, evict))
 
 
 def attend(
@@ -213,6 +427,69 @@ def attend(
         t_c=cache.t_c, buf_len=cache.buf_len, N=N, chunk=chunk, window=window)
 
 
+def paged_attend(
+    cache: PagedLexicoLayerCache,
+    q: Array,
+    D_k: Array, D_v: Array,
+    *,
+    N: int,
+    chunk: Optional[int] = None,
+    window=None,
+) -> Array:
+    """Eq. 7 attention over the paged cache: gather each row's pages into a
+    per-row contiguous view, then run the same masked softmax — positions
+    beyond ``t_c`` (including anything a null table entry resolved to) carry
+    NEG_INF logits, so garbage in gathered padding can't contribute."""
+    from repro.core.attention import gather_pages
+    return decode_attention(
+        q,
+        gather_pages(cache.k_vals, cache.page_table),
+        gather_pages(cache.k_idx, cache.page_table),
+        gather_pages(cache.v_vals, cache.page_table),
+        gather_pages(cache.v_idx, cache.page_table),
+        cache.k_buf, cache.v_buf, D_k, D_v,
+        t_c=cache.t_c, buf_len=cache.buf_len, N=N, chunk=chunk, window=window)
+
+
+# ---------------------------------------------------------------------------
+# layout conversion (differential-test harness + slot migration)
+# ---------------------------------------------------------------------------
+
+def to_paged(cache: LexicoLayerCache, page_table: Array,
+             n_pages: int, page_size: int) -> PagedLexicoLayerCache:
+    """Re-lay a contiguous cache out onto a page pool through ``page_table``.
+
+    Every row's table must cover its ``t_c`` tokens; the stripe's padding
+    beyond the last table entry lands on the trash page.
+    """
+    page_table = jnp.asarray(page_table, jnp.int32)
+    B, KV, T_max, s = cache.k_vals.shape
+
+    def pool_of(store):
+        pool = jnp.zeros((n_pages, KV, page_size, s), store.dtype)
+        return scatter_into_pages(pool, page_table, store)
+
+    return PagedLexicoLayerCache(
+        k_vals=pool_of(cache.k_vals), k_idx=pool_of(cache.k_idx),
+        v_vals=pool_of(cache.v_vals), v_idx=pool_of(cache.v_idx),
+        page_table=page_table, k_buf=cache.k_buf, v_buf=cache.v_buf,
+        t_c=cache.t_c, buf_len=cache.buf_len, buf_start=cache.buf_start)
+
+
+def to_contiguous(cache: PagedLexicoLayerCache) -> LexicoLayerCache:
+    """Gather a paged cache back into the contiguous layout
+    (T_max = max_pages * page_size; positions beyond t_c are garbage, exactly
+    like the contiguous layout's own padding)."""
+    from repro.core.attention import gather_pages
+    return LexicoLayerCache(
+        k_vals=gather_pages(cache.k_vals, cache.page_table),
+        k_idx=gather_pages(cache.k_idx, cache.page_table),
+        v_vals=gather_pages(cache.v_vals, cache.page_table),
+        v_idx=gather_pages(cache.v_idx, cache.page_table),
+        k_buf=cache.k_buf, v_buf=cache.v_buf,
+        t_c=cache.t_c, buf_len=cache.buf_len, buf_start=cache.buf_start)
+
+
 # ---------------------------------------------------------------------------
 # memory accounting
 # ---------------------------------------------------------------------------
@@ -226,11 +503,37 @@ def paper_kv_bytes(t_c: int, n_b: int, s: int, m: int, *, codec: str = "fp8",
 
 def kv_size_percent(t_c: int, n_b: int, s: int, m: int, **kw) -> float:
     total = t_c + n_b
+    if total == 0:
+        # empty cache: 0 compressed bytes of 0 dense bytes — report 0%, not
+        # a ZeroDivisionError (hit by freshly cleared serving slots)
+        return 0.0
     full = 2 * total * m * kw.get("fp_bytes", 2)
     return 100.0 * paper_kv_bytes(t_c, n_b, s, m, **kw) / full
 
 
-def array_bytes(cache: LexicoLayerCache) -> int:
-    return sum(x.size * x.dtype.itemsize for x in
-               [cache.k_vals, cache.k_idx, cache.v_vals, cache.v_idx,
-                cache.k_buf, cache.v_buf])
+def array_bytes(cache) -> int:
+    """Actual padded-layout footprint. For a paged cache this is the whole
+    shared pool + tables + buffers (what the device really holds)."""
+    leaves = [cache.k_vals, cache.k_idx, cache.v_vals, cache.v_idx,
+              cache.k_buf, cache.v_buf]
+    if isinstance(cache, PagedLexicoLayerCache):
+        leaves.append(cache.page_table)
+    return sum(x.size * x.dtype.itemsize for x in leaves)
+
+
+def page_store_bytes(kv_heads: int, page_size: int, s: int, *,
+                     val_bytes: int = 1, idx_bytes: int = 2) -> int:
+    """Array bytes one pool page holds across the four sparse stores
+    (K and V, values + indices)."""
+    return 2 * kv_heads * page_size * s * (val_bytes + idx_bytes)
+
+
+def slot_resident_bytes(n_pages_held: int, *, kv_heads: int, page_size: int,
+                        s: int, n_b: int, m: int, val_bytes: int = 1,
+                        idx_bytes: int = 2, buf_bytes: int = 2) -> int:
+    """Real per-layer footprint of one slot under paged storage: the pages it
+    holds plus its full-precision ring buffers (K and V)."""
+    return (n_pages_held * page_store_bytes(kv_heads, page_size, s,
+                                            val_bytes=val_bytes,
+                                            idx_bytes=idx_bytes)
+            + 2 * kv_heads * n_b * m * buf_bytes)

@@ -81,6 +81,63 @@ class LexicoPolicy:
         return cache.t_c + cache.buf_len
 
 
+class PagedLexicoPolicy:
+    """Lexico over paged slot storage (``sc.PagedLexicoLayerCache``).
+
+    Same OMP encoder and attention math as :class:`LexicoPolicy`; only the
+    sparse-store layout differs — a shared ``(n_pages, KV, page_size, s)``
+    pool plus per-row page tables, so a serving pool's real footprint is the
+    pages actually held, not ``B`` padded stripes. Page placement is host
+    business (``repro.serving.pages`` + ``repro.serving.slots``); this policy
+    only reads/writes through whatever tables the cache carries.
+
+    ``prefill`` scatters through the cache's *existing* page tables — callers
+    must install row tables first. The serving engine never uses it: it
+    prefills at B=1 through the contiguous oracle and splices pages in via
+    ``slots.write_slot_paged``.
+    """
+
+    def __init__(self, cfg: LexicoConfig, *, n_pages: int, page_size: int):
+        self.cfg = cfg
+        self.n_pages = n_pages
+        self.page_size = page_size
+
+    def max_pages_for(self, t_max: int) -> int:
+        """Page-table width covering a slot of ``t_max`` tokens (t_max - n_b
+        compressed positions; the rest live in the ring buffer)."""
+        t_comp = max(t_max - self.cfg.n_b, 1)
+        return -(-t_comp // self.page_size)
+
+    def init(self, batch, kv_heads, head_dim, t_max):
+        c = self.cfg
+        return sc.init_paged_layer_cache(
+            batch, kv_heads, head_dim, n_pages=self.n_pages,
+            page_size=self.page_size, max_pages=self.max_pages_for(t_max),
+            n_b=c.n_b, s=c.s, val_dtype=c.val_dtype)
+
+    _unpack = staticmethod(LexicoPolicy._unpack)
+
+    def prefill(self, cache, K, V, ctx, *, s_cap=None):
+        D_k, D_v, G_k, G_v = self._unpack(ctx)
+        return sc.paged_prefill_compress(
+            cache, K, V, D_k, D_v, s=self.cfg.s, use_gram=self.cfg.use_gram,
+            delta=self.cfg.delta, G_k=G_k, G_v=G_v, s_cap=s_cap)
+
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
+        D_k, D_v, G_k, G_v = self._unpack(ctx)
+        return sc.paged_decode_update(
+            cache, k_t, v_t, D_k, D_v, s=self.cfg.s, use_gram=self.cfg.use_gram,
+            delta=self.cfg.delta, G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+
+    def attend(self, cache, q, ctx, *, window=None):
+        D_k, D_v = ctx[0], ctx[1]
+        return sc.paged_attend(cache, q, D_k, D_v, N=self.cfg.N,
+                               chunk=self.cfg.chunk, window=window)
+
+    def length(self, cache):
+        return cache.t_c + cache.buf_len
+
+
 # ---------------------------------------------------------------------------
 # Full-precision baseline
 # ---------------------------------------------------------------------------
@@ -134,6 +191,8 @@ class DensePolicy:
 def make_policy(name: str, lex_cfg: Optional[LexicoConfig] = None, **kw) -> CachePolicy:
     if name == "lexico":
         return LexicoPolicy(lex_cfg or LexicoConfig())
+    if name == "lexico_paged":
+        return PagedLexicoPolicy(lex_cfg or LexicoConfig(), **kw)
     if name == "dense":
         return DensePolicy(**kw)
     # quantization / eviction baselines

@@ -531,6 +531,14 @@ class ServeState(NamedTuple):
     cross: Any = None  # whisper: stacked CrossCache
 
 
+def _is_lexico(policy) -> bool:
+    """True for any policy speaking the Lexico sparse-code format — the
+    contiguous ``LexicoPolicy``, the paged variant, and the shard_map fused
+    one all carry a ``LexicoConfig`` as ``.cfg`` (the serving paths key
+    format decisions off this, not off a concrete class)."""
+    return isinstance(getattr(policy, "cfg", None), LexicoConfig)
+
+
 def _dict_ctx(cfg: ModelConfig, bank: Optional[DictionaryBank], D_slice, G_slice):
     """Per-layer dictionary context: (D_k, D_v[, G_k, G_v]) — or for MLA the
     single latent dictionary (D[, G])."""
@@ -546,7 +554,12 @@ def _dict_ctx(cfg: ModelConfig, bank: Optional[DictionaryBank], D_slice, G_slice
 
 def init_serve_cache(cfg: ModelConfig, policy: CachePolicy, batch: int,
                      t_max: int) -> Any:
-    """Stacked (L,) cache pytree for the decoder stack."""
+    """Stacked (L,) cache pytree for the decoder stack.
+
+    Layout is the policy's business: ``PagedLexicoPolicy`` yields one shared
+    page pool per layer (leaves without a batch axis) plus per-row tables —
+    the scan over layers is identical either way.
+    """
     L = cfg.num_layers
     if cfg.rwkv is not None:
         st = ssm_mod.init_rwkv_state(batch, cfg)
@@ -627,7 +640,7 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
             new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx)
         cross_c = None
         if cfg.enc_dec:
-            compressed = isinstance(policy, LexicoPolicy)
+            compressed = _is_lexico(policy)
             ck, cv = cross_kv
             cross_c = CrossCache.build(
                 ck, cv, ctx[0] if ctx else None, ctx[1] if ctx else None,
@@ -725,8 +738,7 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
             h = h + cross_attend_step(lp["cross"], cfg, hc, cross_l,
                                       ctx[0] if ctx else None,
                                       ctx[1] if ctx else None,
-                                      getattr(policy, "cfg", None).N
-                                      if isinstance(policy, LexicoPolicy) else 0)
+                                      policy.cfg.N if _is_lexico(policy) else 0)
         h2 = norm_apply(cfg.norm, h, lp["ln2"])
         h = h + _ffn(lp, cfg, h2)
         return h, (new_cache, new_ssm)

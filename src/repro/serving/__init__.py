@@ -6,13 +6,26 @@ bookkeeping lets each slot advance independently inside one compiled decode
 step, the scheduler packs requests against a global KV-byte budget using the
 paper's exact ``3s + 2`` bytes/vector accounting, and per-request sparsity
 tiers ride on a per-row atom cap inside the shared OMP encoder.
+
+Slot storage is pluggable (``EngineConfig.layout``): the contiguous
+per-slot stripe, or paged storage — a shared page pool + per-slot page
+tables (``pages.py`` allocator, ``slots.py`` device splices) whose admission
+and footprint are page-granular instead of ``t_max``-padded.
 """
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
 from repro.serving.metrics import EngineMetrics
-from repro.serving.scheduler import FCFSScheduler, Request, request_kv_bytes
+from repro.serving.pages import (
+    NULL_PAGE, PageAllocator, PagePoolExhausted, pages_needed,
+)
+from repro.serving.scheduler import (
+    FCFSScheduler, Request, request_kv_bytes, request_kv_bytes_paged,
+    request_page_count,
+)
 from repro.serving.slots import SlotInfo, SlotPool
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
-    "FCFSScheduler", "Request", "request_kv_bytes", "SlotInfo", "SlotPool",
+    "FCFSScheduler", "NULL_PAGE", "PageAllocator", "PagePoolExhausted",
+    "Request", "SlotInfo", "SlotPool", "pages_needed", "request_kv_bytes",
+    "request_kv_bytes_paged", "request_page_count",
 ]

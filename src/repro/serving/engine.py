@@ -21,6 +21,25 @@ consuming their prompt are fed prompt tokens (logits discarded), slots in
 generation are fed their previously sampled token. Requests retire the
 moment their ``max_new_tokens`` are sampled, freeing the slot for the queue
 head on the next step.
+
+Slot storage (``EngineConfig.layout``):
+
+  * ``"contiguous"`` — every slot owns a full ``(t_max, s)`` stripe: a
+    64-token request pays the same padded footprint as a 4k-token one.
+  * ``"paged"`` — slots borrow fixed-size pages from one shared pool and a
+    per-slot page table maps token positions to pages. Prompts are prefilled
+    through the contiguous oracle at B=1 and scattered into freshly
+    allocated pages on splice; decode appends grow a slot by one page
+    exactly when its ``t_c`` crosses a page boundary (one traced-index
+    table write, no recompile); retirement clears the slot row and returns
+    its pages. Admission reserves each request's completion-time page count
+    up front, so lazy growth can never exhaust the pool mid-decode. The
+    decode step itself stays ONE compiled trace for any admit/retire mix —
+    only the table contents change.
+
+The contiguous layout is the differential-test oracle for the paged one:
+same requests through both layouts must produce identical tokens
+(tests/test_paged_cache.py).
 """
 from __future__ import annotations
 
@@ -33,11 +52,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LexicoConfig, ModelConfig
+from repro.core import sparse_cache
 from repro.core.dictionary import DictionaryBank
 from repro.models import model as M
-from repro.models.cache_policy import LexicoPolicy
+from repro.models.cache_policy import LexicoPolicy, PagedLexicoPolicy
 from repro.serving import slots as slots_mod
 from repro.serving.metrics import EngineMetrics
+from repro.serving.pages import PageAllocator, pages_needed
 from repro.serving.scheduler import FCFSScheduler, Request, request_kv_bytes
 from repro.serving.slots import SlotInfo, SlotPool
 
@@ -48,6 +69,11 @@ class EngineConfig:
     t_max: int = 256              # cache capacity per slot (tokens)
     kv_byte_budget: Optional[int] = None
     min_bucket: int = 16          # smallest prefill bucket (must be > n_b)
+    layout: str = "contiguous"    # "contiguous" | "paged"
+    page_size: int = 16           # tokens per pool page (paged layout)
+    # total pool pages incl. the null page; None = full provisioning
+    # (n_slots * max_pages_per_slot + 1) — size it down to oversubscribe
+    n_pages: Optional[int] = None
 
 
 def _bucket(prompt_len: int, min_bucket: int) -> int:
@@ -68,24 +94,49 @@ class ContinuousBatchingEngine:
                 "continuous batching supports decoder-only attention stacks")
         if engine_cfg.min_bucket <= lex_cfg.n_b:
             raise ValueError("min_bucket must exceed the recency buffer n_b")
+        if engine_cfg.layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown layout {engine_cfg.layout!r}")
+        self.paged = engine_cfg.layout == "paged"
+        if self.paged and cfg.mla is not None:
+            raise NotImplementedError(
+                "paged slot storage covers the attention-stack Lexico cache; "
+                "the MLA latent cache still uses contiguous slots")
         self.params, self.cfg, self.lex_cfg = params, cfg, lex_cfg
         self.bank = bank
         self.engine_cfg = engine_cfg
+        # the contiguous policy always exists: it runs B=1 prefill in both
+        # layouts (and is the paged layout's differential oracle)
         self.policy = LexicoPolicy(lex_cfg)
         self.pool = SlotPool(engine_cfg.n_slots)
         self.completed: Dict[int, SlotInfo] = {}
-        self.scheduler = FCFSScheduler(
-            kv_byte_budget=engine_cfg.kv_byte_budget, n_b=lex_cfg.n_b,
-            m=cfg.cached_vector_dim, num_layers=cfg.num_layers,
-            kv_heads=cfg.cache_kv_heads, codec=lex_cfg.codec)
         self.metrics = EngineMetrics()
 
         B, t_max = engine_cfg.n_slots, engine_cfg.t_max
-        cache = M.init_serve_cache(cfg, self.policy, B, t_max)
+        self.allocator: Optional[PageAllocator] = None
+        decode_policy = self.policy
+        if self.paged:
+            P = engine_cfg.page_size
+            max_pages = -(-max(t_max - lex_cfg.n_b, 1) // P)
+            n_pages = (engine_cfg.n_pages if engine_cfg.n_pages is not None
+                       else engine_cfg.n_slots * max_pages + 1)
+            self.allocator = PageAllocator(n_pages, P)
+            decode_policy = PagedLexicoPolicy(lex_cfg, n_pages=n_pages,
+                                              page_size=P)
+            self._max_pages = max_pages
+        self.decode_policy = decode_policy
+        self.scheduler = FCFSScheduler(
+            kv_byte_budget=engine_cfg.kv_byte_budget, n_b=lex_cfg.n_b,
+            m=cfg.cached_vector_dim, num_layers=cfg.num_layers,
+            kv_heads=cfg.cache_kv_heads, codec=lex_cfg.codec,
+            page_size=engine_cfg.page_size if self.paged else None,
+            page_budget=self.allocator.capacity if self.paged else None,
+            meta_tokens=cfg.num_meta_tokens)
+
+        cache = M.init_serve_cache(cfg, decode_policy, B, t_max)
         self.state = M.ServeState(cache=cache,
                                   length=jnp.zeros((B,), jnp.int32))
 
-        # --- the three compiled entry points ------------------------------
+        # --- the compiled entry points ------------------------------------
         policy = self.policy
 
         def prefill_fn(params, bank, tokens, s_cap):
@@ -93,12 +144,25 @@ class ContinuousBatchingEngine:
                              bank=bank, t_max=t_max, s_cap=s_cap)
 
         def decode_fn(params, bank, state, token, active, s_cap):
-            return M.decode_step(params, cfg, policy, state, token, bank=bank,
-                                 active=active, s_cap=s_cap)
+            return M.decode_step(params, cfg, decode_policy, state, token,
+                                 bank=bank, active=active, s_cap=s_cap)
+
+        # every jitted entry point closes over a function object unique to
+        # THIS engine: jax.jit keyed on a shared module-level function would
+        # share one trace cache across engines, and compile_counts would
+        # report other engines' (other pool shapes') traces
+        def _own(fn):
+            return jax.jit(lambda *a: fn(*a), donate_argnums=(0,))
 
         self._prefill_fn = jax.jit(prefill_fn)          # one entry per bucket
         self._decode_fn = jax.jit(decode_fn, donate_argnums=(2,))
-        self._write_fn = jax.jit(slots_mod.write_slot, donate_argnums=(0,))
+        if self.paged:
+            self._write_fn = _own(slots_mod.write_slot_paged)
+            self._assign_fn = _own(slots_mod.assign_page)
+            self._clear_fn = _own(slots_mod.clear_slot_paged)
+        else:
+            self._write_fn = _own(slots_mod.write_slot)
+            self._assign_fn = self._clear_fn = None
 
     # ------------------------------------------------------------------ API
 
@@ -121,6 +185,12 @@ class ContinuousBatchingEngine:
                 raise ValueError(
                     f"request projects {cost} KV bytes > total budget {budget} "
                     "— it could never be admitted")
+        if self.paged:
+            pages = self.scheduler.projected_pages(req)
+            if pages > self.allocator.capacity:
+                raise ValueError(
+                    f"request projects {pages} pages > pool capacity "
+                    f"{self.allocator.capacity} — it could never be admitted")
         if not req.arrival_time:
             req.arrival_time = time.perf_counter()
         self.scheduler.submit(req)
@@ -130,8 +200,12 @@ class ContinuousBatchingEngine:
         def n(fn):
             get = getattr(fn, "_cache_size", None)
             return int(get()) if callable(get) else -1
-        return {"prefill": n(self._prefill_fn), "decode": n(self._decode_fn),
-                "write_slot": n(self._write_fn)}
+        counts = {"prefill": n(self._prefill_fn), "decode": n(self._decode_fn),
+                  "write_slot": n(self._write_fn)}
+        if self.paged:
+            counts["assign_page"] = n(self._assign_fn)
+            counts["clear_slot"] = n(self._clear_fn)
+        return counts
 
     def kv_bytes_in_flight(self) -> int:
         """Paper-accounting bytes of what the active slots hold RIGHT NOW."""
@@ -146,6 +220,28 @@ class ContinuousBatchingEngine:
                 tokens_now, tier=info.request.tier, n_b=self.lex_cfg.n_b,
                 m=self.cfg.cached_vector_dim, num_layers=self.cfg.num_layers,
                 kv_heads=self.cfg.cache_kv_heads, codec=self.lex_cfg.codec)
+        return total
+
+    def kv_bytes_resident(self) -> int:
+        """Bytes the active slots' sparse stores + buffers *hold*: pages
+        actually bound under paging, full padded stripes under the contiguous
+        layout. Note the device pool itself is preallocated (``n_pages``
+        pages), so this is the occupancy a right-sized pool must provision —
+        the paged/contiguous gap on a mixed workload is the padding waste an
+        oversubscribed pool (``n_pages`` sized down) reclaims as capacity,
+        not bytes the default fully-provisioned pool hands back."""
+        lex, cfg = self.lex_cfg, self.cfg
+        val_bytes = jnp.dtype(lex.val_dtype).itemsize
+        total = 0
+        for i in self.pool.active_slots():
+            info = self.pool.slots[i]
+            if self.paged:
+                held, span = len(info.pages), self.engine_cfg.page_size
+            else:   # one "page" = the whole padded stripe
+                held, span = 1, max(self.engine_cfg.t_max - lex.n_b, 1)
+            total += cfg.num_layers * sparse_cache.slot_resident_bytes(
+                held, kv_heads=cfg.cache_kv_heads, page_size=span, s=lex.s,
+                n_b=lex.n_b, m=cfg.cached_vector_dim, val_bytes=val_bytes)
         return total
 
     # ----------------------------------------------------------- internals
@@ -163,9 +259,30 @@ class ContinuousBatchingEngine:
         self.metrics.tokens_generated += 1
         if info.done:
             self.pool.retire(slot)
+            if self.paged:
+                # zero the row's counters/table BEFORE its pages go back to
+                # the free list — a re-bound page must never receive the idle
+                # row's write-backs
+                self.state = self._clear_fn(self.state, jnp.int32(slot))
+                self.allocator.free(info.pages)
+                info.pages = []
             self.scheduler.release(info.request)
             self.metrics.record_completion()
             self.completed[info.request.rid] = info
+
+    def _grow_pages(self, slot: int) -> None:
+        """Lazy page growth: make sure ``slot``'s next compressed-token write
+        position is covered by an allocated page (at most one new page per
+        step — decode appends only ever touch the tail page)."""
+        info = self.pool.slots[slot]
+        write_pos = info.cache_len - self.lex_cfg.n_b
+        need = pages_needed(write_pos + 1, self.engine_cfg.page_size)
+        while len(info.pages) < need:
+            (page,) = self.allocator.alloc(1)
+            self.state = self._assign_fn(self.state, jnp.int32(slot),
+                                         jnp.int32(len(info.pages)),
+                                         jnp.int32(page))
+            info.pages.append(page)
 
     def _admit(self) -> None:
         now = time.perf_counter()
@@ -174,9 +291,24 @@ class ContinuousBatchingEngine:
             tokens = jnp.asarray(req.prompt[:bucket][None], jnp.int32)
             cap = jnp.full((1,), req.tier, jnp.int32)
             logits, one = self._prefill_fn(self.params, self.bank, tokens, cap)
-            info = SlotInfo(request=req, fed=bucket, admit_time=now)
+            cache_len = self.cfg.num_meta_tokens + bucket
+            info = SlotInfo(request=req, fed=bucket, admit_time=now,
+                            cache_len=cache_len,
+                            pages_reserved=self.scheduler.projected_pages(req))
             slot = self.pool.allocate(info)
-            self.state = self._write_fn(self.state, one, jnp.int32(slot))
+            if self.paged:
+                # pages covering the prefilled prompt's compressed span; the
+                # scheduler reserved the completion-time count, so this (and
+                # every later growth step) cannot exhaust the pool
+                n_prompt = pages_needed(cache_len - self.lex_cfg.n_b,
+                                        self.engine_cfg.page_size)
+                info.pages = self.allocator.alloc(n_prompt)
+                row = np.zeros((self._max_pages,), np.int32)
+                row[:n_prompt] = info.pages
+                self.state = self._write_fn(self.state, one, jnp.int32(slot),
+                                            jnp.asarray(row))
+            else:
+                self.state = self._write_fn(self.state, one, jnp.int32(slot))
             self.metrics.record_admission(now - req.arrival_time)
             self.metrics.prompt_tokens_processed += bucket
             self._consume_logits(slot, np.asarray(logits[0]))
@@ -201,6 +333,8 @@ class ContinuousBatchingEngine:
                 token[i] = info.pending
             active[i] = True
             s_cap[i] = info.request.tier
+            if self.paged:
+                self._grow_pages(i)
 
         logits, self.state = self._decode_fn(
             self.params, self.bank, self.state,
@@ -209,13 +343,17 @@ class ContinuousBatchingEngine:
 
         for i in active_ids:
             info = self.pool.slots[i]
+            info.cache_len += 1          # host mirror of the device length row
             if info.in_prompt_phase:
                 info.fed += 1
                 self.metrics.prompt_tokens_processed += 1
             self._consume_logits(i, logits_np[i])
 
-        self.metrics.sample_step(occupancy=self.pool.occupancy(),
-                                 kv_bytes_in_flight=self.kv_bytes_in_flight())
+        self.metrics.sample_step(
+            occupancy=self.pool.occupancy(),
+            kv_bytes_in_flight=self.kv_bytes_in_flight(),
+            kv_bytes_resident=self.kv_bytes_resident(),
+            pages_in_use=self.allocator.n_used if self.paged else 0)
         return bool(self.pool.active_slots()) or len(self.scheduler) > 0
 
     def run(self, max_steps: int = 100_000) -> Dict[int, SlotInfo]:

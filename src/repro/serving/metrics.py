@@ -4,7 +4,11 @@ Host-side counters sampled once per engine step — no device syncs beyond
 what the step already does. ``kv_bytes_in_flight`` uses the paper's exact
 accounting over the *current* per-slot token counts (not the projected
 completion-time bytes the scheduler reserves), so the gap between the two is
-the admission controller's safety margin.
+the admission controller's safety margin. ``kv_bytes_resident`` is what the
+same slots *hold* in their storage layout — pages actually bound under paged
+storage, full padded stripes under contiguous — i.e. the capacity a
+right-sized pool must provision; resident-vs-paper is the fragmentation cost
+of the storage layout.
 """
 from __future__ import annotations
 
@@ -23,12 +27,17 @@ class EngineMetrics:
     requests_completed: int = 0
     occupancy_samples: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_samples: List[int] = dataclasses.field(default_factory=list)
+    kv_bytes_resident_samples: List[int] = dataclasses.field(default_factory=list)
+    pages_in_use_samples: List[int] = dataclasses.field(default_factory=list)
     queue_latency_s: List[float] = dataclasses.field(default_factory=list)
 
-    def sample_step(self, *, occupancy: int, kv_bytes_in_flight: int) -> None:
+    def sample_step(self, *, occupancy: int, kv_bytes_in_flight: int,
+                    kv_bytes_resident: int = 0, pages_in_use: int = 0) -> None:
         self.steps += 1
         self.occupancy_samples.append(occupancy)
         self.kv_bytes_samples.append(kv_bytes_in_flight)
+        self.kv_bytes_resident_samples.append(kv_bytes_resident)
+        self.pages_in_use_samples.append(pages_in_use)
 
     def record_admission(self, queue_latency_s: float) -> None:
         self.prefills += 1
@@ -45,6 +54,8 @@ class EngineMetrics:
         el = max(self.elapsed_s, 1e-9)
         occ = self.occupancy_samples or [0]
         kvb = self.kv_bytes_samples or [0]
+        res = self.kv_bytes_resident_samples or [0]
+        pgs = self.pages_in_use_samples or [0]
         lat = self.queue_latency_s or [0.0]
         return {
             "elapsed_s": el,
@@ -60,6 +71,9 @@ class EngineMetrics:
             "slot_occupancy_peak": max(occ),
             "kv_bytes_in_flight_mean": sum(kvb) / len(kvb),
             "kv_bytes_in_flight_peak": max(kvb),
+            "kv_bytes_resident_mean": sum(res) / len(res),
+            "kv_bytes_resident_peak": max(res),
+            "pages_in_use_peak": max(pgs),
             "queue_latency_s_mean": sum(lat) / len(lat),
             "queue_latency_s_max": max(lat),
         }

@@ -1,0 +1,99 @@
+"""Host-side page allocator for the paged Lexico slot pool.
+
+The device-side paged cache (``repro.core.sparse_cache.PagedLexicoLayerCache``)
+is a shared pool of fixed-size pages plus a per-slot page table; *which* page
+a slot owns is pure host bookkeeping, decided here. Pages are identified by
+their index into the pool's leading ``n_pages`` axis.
+
+Conventions:
+
+  * page ``NULL_PAGE`` (= 0) is reserved as the null/trash page — page-table
+    entries equal to ``NULL_PAGE`` mean "unallocated", and device-side writes
+    by idle rows are clamped onto it so they can never race with a live
+    slot's data. It is never handed out, so usable capacity is
+    ``n_pages - 1``.
+  * pages are refcounted. Plain admission takes one ref; ``incref`` exists so
+    future prefix-sharing can pin one page under several slots without the
+    allocator changing shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+NULL_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when ``alloc`` is asked for more pages than are free."""
+
+
+def pages_needed(n_compressed_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``n_compressed_tokens`` sparse-coded vectors."""
+    if n_compressed_tokens <= 0:
+        return 0
+    return -(-n_compressed_tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list + refcount allocator over page ids ``1..n_pages-1``."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need n_pages >= 2 (page 0 is the null page)")
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
+        self._refs: Dict[int, int] = {}
+
+    @property
+    def capacity(self) -> int:
+        """Total usable pages (the null page is excluded)."""
+        return self.n_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.capacity - self.n_free
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Take ``n`` pages (refcount 1 each). All-or-nothing."""
+        if n < 0:
+            raise ValueError("cannot allocate a negative page count")
+        if n > self.n_free:
+            raise PagePoolExhausted(
+                f"requested {n} pages, only {self.n_free} free "
+                f"of {self.capacity}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def incref(self, page: int) -> None:
+        if page not in self._refs:
+            raise KeyError(f"page {page} is not allocated")
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> None:
+        """Drop one reference; the page returns to the free list at zero."""
+        if page not in self._refs:
+            raise KeyError(f"page {page} is not allocated (double free?)")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            self.decref(p)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def check_balanced(self) -> bool:
+        """True iff every allocated page has been returned (leak check)."""
+        return not self._refs and self.n_free == self.capacity

@@ -59,20 +59,53 @@ def request_kv_bytes(total_tokens: int, *, tier: int, n_b: int, m: int,
     return num_layers * kv_heads * per_head
 
 
+def request_page_count(total_tokens: int, *, n_b: int, page_size: int) -> int:
+    """Completion-time page count of a request: its compressed positions
+    rounded up to whole pages (the buffer lives outside the pool)."""
+    from repro.serving.pages import pages_needed
+    return pages_needed(max(total_tokens - n_b, 0), page_size)
+
+
+def request_kv_bytes_paged(total_tokens: int, *, tier: int, n_b: int, m: int,
+                           num_layers: int, kv_heads: int, page_size: int,
+                           codec: str = "fp8") -> int:
+    """Paged projection: like :func:`request_kv_bytes` but the compressed
+    span is rounded up to whole pages — exactly what the slot will hold when
+    it completes, page-granular fragmentation included."""
+    pages = request_page_count(total_tokens, n_b=n_b, page_size=page_size)
+    t_c = pages * page_size
+    buf = min(total_tokens, n_b)
+    per_head = sparse_cache.paper_kv_bytes(t_c, buf, tier, m, codec=codec)
+    return num_layers * kv_heads * per_head
+
+
 class FCFSScheduler:
     """First-come-first-served queue + byte-budget admission.
 
     ``kv_byte_budget=None`` disables the byte check (slot-count only).
+
+    Paged mode (``page_size`` set): byte projections round the compressed
+    span up to whole pages — the real page-granular footprint a slot reaches,
+    not a ``t_max``-padded worst case — and ``page_budget`` additionally caps
+    the *pages* admitted in flight, so lazy per-step page growth can never
+    exhaust the device pool mid-decode. ``meta_tokens`` (model meta-token
+    prefix) rides along in every projection.
     """
 
     def __init__(self, *, kv_byte_budget: Optional[int], n_b: int, m: int,
-                 num_layers: int, kv_heads: int, codec: str = "fp8"):
+                 num_layers: int, kv_heads: int, codec: str = "fp8",
+                 page_size: Optional[int] = None,
+                 page_budget: Optional[int] = None, meta_tokens: int = 0):
         self.kv_byte_budget = kv_byte_budget
         self.n_b, self.m = n_b, m
         self.num_layers, self.kv_heads = num_layers, kv_heads
         self.codec = codec
+        self.page_size = page_size
+        self.page_budget = page_budget
+        self.meta_tokens = meta_tokens
         self.queue: Deque[Request] = deque()
         self.bytes_admitted = 0          # projected bytes of in-flight requests
+        self.pages_admitted = 0          # projected pages (paged mode only)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -81,25 +114,48 @@ class FCFSScheduler:
         return len(self.queue)
 
     def projected_bytes(self, req: Request) -> int:
+        total = req.total_tokens + self.meta_tokens
+        if self.page_size is not None:
+            return request_kv_bytes_paged(
+                total, tier=req.tier, n_b=self.n_b, m=self.m,
+                num_layers=self.num_layers, kv_heads=self.kv_heads,
+                page_size=self.page_size, codec=self.codec)
         return request_kv_bytes(
-            req.total_tokens, tier=req.tier, n_b=self.n_b, m=self.m,
+            total, tier=req.tier, n_b=self.n_b, m=self.m,
             num_layers=self.num_layers, kv_heads=self.kv_heads, codec=self.codec)
 
+    def projected_pages(self, req: Request) -> int:
+        if self.page_size is None:
+            return 0
+        return request_page_count(req.total_tokens + self.meta_tokens,
+                                  n_b=self.n_b, page_size=self.page_size)
+
+    def _fits(self, req: Request) -> bool:
+        if (self.kv_byte_budget is not None and
+                self.bytes_admitted + self.projected_bytes(req)
+                > self.kv_byte_budget):
+            return False
+        if (self.page_budget is not None and
+                self.pages_admitted + self.projected_pages(req)
+                > self.page_budget):
+            return False
+        return True
+
     def admit(self, free_slots: int) -> List[Request]:
-        """Pop the FCFS prefix that fits (slots and bytes). Head-of-line
-        blocking: stop at the first request that doesn't fit."""
+        """Pop the FCFS prefix that fits (slots, bytes and pages). Head-of-
+        line blocking: stop at the first request that doesn't fit."""
         admitted: List[Request] = []
         while self.queue and len(admitted) < free_slots:
             head = self.queue[0]
-            cost = self.projected_bytes(head)
-            if (self.kv_byte_budget is not None
-                    and self.bytes_admitted + cost > self.kv_byte_budget):
+            if not self._fits(head):
                 break
             self.queue.popleft()
-            self.bytes_admitted += cost
+            self.bytes_admitted += self.projected_bytes(head)
+            self.pages_admitted += self.projected_pages(head)
             admitted.append(head)
         return admitted
 
     def release(self, req: Request) -> None:
-        """Return a finished (or failed) request's projected bytes."""
+        """Return a finished (or failed) request's projected bytes/pages."""
         self.bytes_admitted = max(0, self.bytes_admitted - self.projected_bytes(req))
+        self.pages_admitted = max(0, self.pages_admitted - self.projected_pages(req))

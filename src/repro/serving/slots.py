@@ -7,6 +7,21 @@ request <-> slot binding and per-slot progress; device-side ``write_slot``
 splices a freshly prefilled B=1 state into row ``slot`` of the pool with one
 jitted (traced-index) update — admitting a request is O(slot bytes), not
 O(pool bytes), and never triggers retracing.
+
+Paged storage adds four more traced-index device ops (each compiled once):
+
+  * ``write_slot_paged``  — splice a B=1 contiguous prefill result into the
+    shared page pool through a freshly allocated page-table row;
+  * ``assign_page``       — grow a live slot by one page (decode crossed a
+    page boundary);
+  * ``clear_slot_paged``  — zero a retired slot's counters + table row so its
+    now-freed pages can be rebound to another slot without the idle row's
+    write-backs racing the new owner;
+  * ``read_slot_paged``   — gather one slot back out as a contiguous B=1
+    state (debug / migration).
+
+Which page ids a slot holds is decided host-side (``SlotInfo.pages`` +
+``repro.serving.pages.PageAllocator``); the device only ever sees table rows.
 """
 from __future__ import annotations
 
@@ -16,6 +31,8 @@ from typing import Any, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.attention import gather_pages
+from repro.core.sparse_cache import LexicoLayerCache
 from repro.models.model import ServeState
 from repro.serving.scheduler import Request
 
@@ -29,10 +46,18 @@ class SlotInfo:
     generated_tokens: Optional[List[int]] = None
     admit_time: float = 0.0
     pending: Optional[int] = None  # sampled token not yet fed back
+    # paged layout: pool pages this slot holds (host mirror of its table row),
+    # how many the scheduler reserved for it, and a host mirror of the
+    # device-side length row (drives lazy page growth without a device sync)
+    pages: Optional[List[int]] = None
+    pages_reserved: int = 0
+    cache_len: int = 0
 
     def __post_init__(self):
         if self.generated_tokens is None:
             self.generated_tokens = []
+        if self.pages is None:
+            self.pages = []
 
     @property
     def in_prompt_phase(self) -> bool:
@@ -110,5 +135,120 @@ def read_slot(pool: ServeState, slot) -> ServeState:
     slot = jnp.asarray(slot, jnp.int32)
     cache = jax.tree.map(
         lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=1), pool.cache)
+    length = jax.lax.dynamic_slice(pool.length, (slot,), (1,))
+    return ServeState(cache=cache, length=length, cross=pool.cross)
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool slot splicing (jittable, traced indices => no recompiles)
+# ---------------------------------------------------------------------------
+
+def write_slot_paged(pool: ServeState, one: ServeState, slot,
+                     page_row) -> ServeState:
+    """Splice a B=1 *contiguous* prefill result into the paged pool.
+
+    ``pool.cache`` is a stacked ``PagedLexicoLayerCache``; ``one.cache`` is
+    the stacked contiguous B=1 state the (oracle) prefill path produced.
+    ``page_row`` (max_pages,) int32 names the pages the host allocated for
+    this slot, padded with the null page — stripe positions past the
+    allocated pages land on the trash page (they are beyond ``t_c``).
+    The splice is O(slot bytes): the prompt stripe scatters into the slot's
+    own pages, every other leaf is a row update at a traced index.
+    """
+    pc, oc = pool.cache, one.cache
+    slot = jnp.asarray(slot, jnp.int32)
+    page_row = jnp.asarray(page_row, jnp.int32)
+    L = pc.page_table.shape[0]
+    n_pages, _, P = pc.k_vals.shape[1:4]
+    T1 = oc.k_vals.shape[3]
+
+    t = jnp.arange(T1)
+    pg = jnp.clip(page_row[jnp.clip(t // P, 0, page_row.shape[0] - 1)],
+                  0, n_pages - 1)                        # (T1,)
+    off = t % P
+
+    def scatter(pool_l, dense_l):
+        # pool_l (n_pages, KV, P, s); dense_l (1, KV, T1, s)
+        payload = jnp.moveaxis(dense_l[0].astype(pool_l.dtype), 0, 1)
+        return pool_l.at[pg, :, off].set(payload)        # (T1, KV, s) payload
+
+    scatter_layers = jax.vmap(scatter)
+
+    def row_splice(p, o):
+        return jax.lax.dynamic_update_slice_in_dim(p, o.astype(p.dtype),
+                                                   slot, axis=1)
+
+    table = jax.lax.dynamic_update_slice(
+        pc.page_table, jnp.broadcast_to(page_row, (L, 1, page_row.shape[0])),
+        (jnp.int32(0), slot, jnp.int32(0)))
+    cache = pc._replace(
+        k_vals=scatter_layers(pc.k_vals, oc.k_vals),
+        k_idx=scatter_layers(pc.k_idx, oc.k_idx),
+        v_vals=scatter_layers(pc.v_vals, oc.v_vals),
+        v_idx=scatter_layers(pc.v_idx, oc.v_idx),
+        page_table=table,
+        k_buf=row_splice(pc.k_buf, oc.k_buf),
+        v_buf=row_splice(pc.v_buf, oc.v_buf),
+        t_c=row_splice(pc.t_c, oc.t_c),
+        buf_len=row_splice(pc.buf_len, oc.buf_len),
+        buf_start=row_splice(pc.buf_start, oc.buf_start))
+    length = jax.lax.dynamic_update_slice(pool.length, one.length, (slot,))
+    return ServeState(cache=cache, length=length, cross=pool.cross)
+
+
+def assign_page(pool: ServeState, slot, page_pos, page_id) -> ServeState:
+    """Bind pool page ``page_id`` as entry ``page_pos`` of ``slot``'s table
+    (decode grew past a page boundary). All indices traced — one compile."""
+    pc = pool.cache
+    L = pc.page_table.shape[0]
+    upd = jnp.broadcast_to(jnp.asarray(page_id, jnp.int32), (L, 1, 1))
+    table = jax.lax.dynamic_update_slice(
+        pc.page_table, upd,
+        (jnp.int32(0), jnp.asarray(slot, jnp.int32),
+         jnp.asarray(page_pos, jnp.int32)))
+    return ServeState(cache=pc._replace(page_table=table),
+                      length=pool.length, cross=pool.cross)
+
+
+def clear_slot_paged(pool: ServeState, slot) -> ServeState:
+    """Zero a retired slot's counters and page-table row.
+
+    Required before its pages are handed to another slot: an idle row still
+    issues (no-op) write-backs through its table every step, and those must
+    resolve to the trash page once the pages have a new owner — otherwise a
+    same-cell write could race the new owner's append.
+    """
+    pc = pool.cache
+    L, _, MP = pc.page_table.shape
+    slot = jnp.asarray(slot, jnp.int32)
+    table = jax.lax.dynamic_update_slice(
+        pc.page_table, jnp.zeros((L, 1, MP), jnp.int32),
+        (jnp.int32(0), slot, jnp.int32(0)))
+    zero_row = lambda p: jax.lax.dynamic_update_slice(
+        p, jnp.zeros((L, 1), p.dtype), (jnp.int32(0), slot))
+    cache = pc._replace(page_table=table, t_c=zero_row(pc.t_c),
+                        buf_len=zero_row(pc.buf_len),
+                        buf_start=zero_row(pc.buf_start))
+    length = jax.lax.dynamic_update_slice(pool.length,
+                                          jnp.zeros((1,), jnp.int32), (slot,))
+    return ServeState(cache=cache, length=length, cross=pool.cross)
+
+
+def read_slot_paged(pool: ServeState, slot) -> ServeState:
+    """Gather row ``slot`` of a paged pool as a contiguous B=1 state
+    (T_max = max_pages * page_size; debug / migration / differential tests).
+    """
+    pc = pool.cache
+    slot = jnp.asarray(slot, jnp.int32)
+    table_row = jax.lax.dynamic_slice_in_dim(pc.page_table, slot, 1, axis=1)
+    gather_layers = jax.vmap(gather_pages)
+    row = lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=1)
+    cache = LexicoLayerCache(
+        k_vals=gather_layers(pc.k_vals, table_row),
+        k_idx=gather_layers(pc.k_idx, table_row),
+        v_vals=gather_layers(pc.v_vals, table_row),
+        v_idx=gather_layers(pc.v_idx, table_row),
+        k_buf=row(pc.k_buf), v_buf=row(pc.v_buf),
+        t_c=row(pc.t_c), buf_len=row(pc.buf_len), buf_start=row(pc.buf_start))
     length = jax.lax.dynamic_slice(pool.length, (slot,), (1,))
     return ServeState(cache=cache, length=length, cross=pool.cross)

@@ -11,10 +11,12 @@ import pytest
 
 from repro.core import quant, sparse_cache
 from repro.core.sparse_cache import (
-    _encode_store, array_bytes, init_layer_cache, kv_size_percent,
-    paper_kv_bytes,
+    _encode_store, array_bytes, init_layer_cache, init_paged_layer_cache,
+    kv_size_percent, page_store_bytes, paper_kv_bytes, slot_resident_bytes,
 )
-from repro.serving.scheduler import request_kv_bytes
+from repro.serving.scheduler import (
+    request_kv_bytes, request_kv_bytes_paged, request_page_count,
+)
 
 
 def test_paper_kv_bytes_law():
@@ -39,6 +41,15 @@ def test_kv_size_percent_asymptote():
     assert kv_size_percent(t_c=0, n_b=128, s=16, m=128) == pytest.approx(100.0)
 
 
+def test_kv_size_percent_empty_cache():
+    """t_c + n_b == 0 (a freshly cleared serving slot) must report 0%, not
+    raise ZeroDivisionError."""
+    assert kv_size_percent(t_c=0, n_b=0, s=16, m=128) == 0.0
+    # every codec path hits the same guard
+    for codec in ("fp8", "int8", "fp16"):
+        assert kv_size_percent(t_c=0, n_b=0, s=8, m=64, codec=codec) == 0.0
+
+
 def test_request_kv_bytes_composition():
     # model total = L * KV * per-head-pair bytes, buffer clamped to total
     per_head = paper_kv_bytes(26, 4, 8, 16)
@@ -57,6 +68,50 @@ def test_array_bytes_padded_layout():
     assert array_bytes(cache) == expect
     # paper accounting is strictly smaller than the padded layout at low fill
     assert paper_kv_bytes(4, 4, 8, 16) * 2 * 3 < array_bytes(cache)
+
+
+def test_paged_request_accounting():
+    """Paged admission charges whole pages: the compressed span rounds up to
+    page multiples, the buffer stays page-free, and the page count matches
+    what the engine's lazy growth will actually allocate."""
+    # 26 compressed positions at page_size 8 -> 4 pages (ceil)
+    assert request_page_count(30, n_b=4, page_size=8) == 4
+    assert request_page_count(4, n_b=4, page_size=8) == 0   # buffer-only
+    assert request_kv_bytes_paged(30, tier=8, n_b=4, m=16, num_layers=3,
+                                  kv_heads=2, page_size=8) == \
+        3 * 2 * paper_kv_bytes(32, 4, 8, 16)
+    # page-aligned span: paged == exact paper accounting
+    assert request_kv_bytes_paged(36, tier=8, n_b=4, m=16, num_layers=3,
+                                  kv_heads=2, page_size=8) == \
+        request_kv_bytes(36, tier=8, n_b=4, m=16, num_layers=3, kv_heads=2)
+    # fragmentation overhead is bounded by one page per request
+    frag = (request_kv_bytes_paged(30, tier=8, n_b=4, m=16, num_layers=1,
+                                   kv_heads=1, page_size=8)
+            - request_kv_bytes(30, tier=8, n_b=4, m=16, num_layers=1,
+                               kv_heads=1))
+    assert 0 < frag <= paper_kv_bytes(8, 0, 8, 16)
+
+
+def test_paged_pool_array_bytes():
+    """The shared pool's device footprint is n_pages * page bytes + tables +
+    buffers — independent of how many slots exist or how full they are."""
+    cache = init_paged_layer_cache(2, 3, 16, n_pages=10, page_size=4,
+                                   max_pages=8, n_b=4, s=8)
+    pool_bytes = 10 * page_store_bytes(3, 4, 8)          # fp8 vals + int16 idx
+    buf_bytes = 2 * (2 * 3 * 4 * 16) * 2                 # two bf16 ring buffers
+    table_bytes = 2 * 8 * 4
+    assert array_bytes(cache) == pool_bytes + buf_bytes + table_bytes
+    # per-page store bytes: K+V, vals (1B) + idx (2B) per coefficient
+    assert page_store_bytes(3, 4, 8) == 2 * 3 * 4 * 8 * 3
+
+
+def test_slot_resident_bytes_tracks_pages():
+    one_page = slot_resident_bytes(1, kv_heads=2, page_size=4, s=8, n_b=4, m=16)
+    two_pages = slot_resident_bytes(2, kv_heads=2, page_size=4, s=8, n_b=4, m=16)
+    assert two_pages - one_page == page_store_bytes(2, 4, 8)
+    # zero pages = just the ring buffers
+    assert slot_resident_bytes(0, kv_heads=2, page_size=4, s=8, n_b=4, m=16) \
+        == 2 * 2 * 4 * 16 * 2
 
 
 def test_payload_bytes_codecs():

@@ -1,0 +1,422 @@
+"""Paged slot storage vs the contiguous oracle: the differential harness.
+
+The paged layout rewires every decode hot path (prefill scatter, decode
+append, attention gather, slot splice), so the proof obligations are:
+
+  * differential — the same prefill→decode→evict trace through both layouts
+    produces *identical* attention outputs and bookkeeping (the shared
+    compression core makes this exact, not approximate), including ragged
+    per-row lengths and per-row ``s_cap`` tiers;
+  * compile counts — decode over the paged pool is ONE trace no matter how
+    page tables and counters move;
+  * engine — the full continuous-batching engine emits identical greedy
+    tokens under both layouts, with page-granular admission and a lower real
+    footprint;
+  * hypothesis invariants for ``decode_update``/``paged_decode_update``
+    (ring bounds, idle-row bit-identity, ``t_c`` monotone, row independence)
+    — skip cleanly when hypothesis is absent (conftest fallback).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.conftest import given, make_unit_dict, settings, st
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.core import sparse_cache as sc
+from repro.core.attention import gather_pages
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, NULL_PAGE, PageAllocator,
+    PagePoolExhausted, Request, pages_needed,
+)
+
+B, KV, m, s, n_b = 3, 2, 16, 4, 3
+P, MP = 4, 6                      # page_size, max pages per row
+N_PAGES = 1 + B * MP
+N_DICT = 64
+
+
+def unit_dict(rng):
+    return jnp.asarray(make_unit_dict(rng, m, N_DICT), jnp.float32)
+
+
+def shuffled_tables(rng):
+    """Every row's pages drawn shuffled from one shared pool — adjacency in
+    token space never implies adjacency in the pool."""
+    perm = rng.permutation(np.arange(1, N_PAGES))
+    return jnp.asarray(perm[: B * MP].reshape(B, MP), jnp.int32)
+
+
+def fresh_pair(rng, T=12):
+    """(contiguous, paged) caches holding the same prefilled prompt."""
+    D = unit_dict(rng)
+    K = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    cont = sc.init_layer_cache(B, KV, m, t_max=MP * P, n_b=n_b, s=s)
+    cont = sc.prefill_compress(cont, K, V, D, D, s=s)
+    paged = sc.init_paged_layer_cache(B, KV, m, n_pages=N_PAGES, page_size=P,
+                                      max_pages=MP, n_b=n_b, s=s)
+    paged = paged._replace(page_table=shuffled_tables(rng))
+    paged = sc.paged_prefill_compress(paged, K, V, D, D, s=s)
+    return cont, paged, D
+
+
+def assert_same_bookkeeping(cont, paged):
+    for f in ("t_c", "buf_len", "buf_start"):
+        np.testing.assert_array_equal(np.asarray(getattr(cont, f)),
+                                      np.asarray(getattr(paged, f)), err_msg=f)
+
+
+def assert_same_stores(cont, paged):
+    """Valid positions (< t_c per row) of the gathered paged view must equal
+    the contiguous stripe; beyond t_c both layouts hold don't-care padding."""
+    g = sc.to_contiguous(paged)
+    t_c = np.asarray(cont.t_c)
+    for f in ("k_vals", "k_idx", "v_vals", "v_idx"):
+        a = np.asarray(getattr(cont, f)).astype(np.float32)
+        b = np.asarray(getattr(g, f)).astype(np.float32)
+        for row in range(B):
+            np.testing.assert_array_equal(a[row, :, :t_c[row]],
+                                          b[row, :, :t_c[row]], err_msg=f)
+    np.testing.assert_array_equal(np.asarray(cont.k_buf), np.asarray(paged.k_buf))
+    np.testing.assert_array_equal(np.asarray(cont.v_buf), np.asarray(paged.v_buf))
+
+
+# ---------------------------------------------------------------------------
+# page allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_free_refcount():
+    a = PageAllocator(8, 4)
+    assert a.capacity == 7 and a.n_free == 7
+    pages = a.alloc(3)
+    assert len(set(pages)) == 3 and NULL_PAGE not in pages
+    assert a.n_used == 3
+    a.incref(pages[0])
+    a.decref(pages[0])
+    assert a.refcount(pages[0]) == 1      # still held by the original ref
+    a.free(pages)
+    assert a.check_balanced()
+
+
+def test_allocator_double_free_and_exhaustion():
+    a = PageAllocator(4, 2)
+    pages = a.alloc(3)
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(1)
+    a.free(pages)
+    with pytest.raises(KeyError, match="double free"):
+        a.decref(pages[0])
+    assert a.check_balanced()
+
+
+def test_pages_needed():
+    assert pages_needed(0, 4) == 0
+    assert pages_needed(1, 4) == 1
+    assert pages_needed(4, 4) == 1
+    assert pages_needed(5, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# differential: cache level
+# ---------------------------------------------------------------------------
+
+def test_prefill_differential(rng):
+    cont, paged, D = fresh_pair(rng)
+    assert_same_bookkeeping(cont, paged)
+    assert_same_stores(cont, paged)
+    q = jnp.asarray(rng.normal(size=(B, KV, 2, m)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sc.attend(cont, q, D, D, N=N_DICT)),
+        np.asarray(sc.paged_attend(paged, q, D, D, N=N_DICT)))
+
+
+@pytest.mark.parametrize("chunk", [None, 8])
+def test_decode_evict_differential_ragged(rng, chunk):
+    """prefill → decode/evict with ragged per-row activity and per-row s_cap
+    tiers: bookkeeping identical, outputs identical at every step."""
+    cont, paged, D = fresh_pair(rng)
+    caps = jnp.asarray([2, 3, 4], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, KV, 2, m)), jnp.float32)
+    for step in range(10):
+        act = jnp.asarray(rng.random(B) < 0.7)
+        k_t = jnp.asarray(rng.normal(size=(B, KV, m)), jnp.float32)
+        v_t = jnp.asarray(rng.normal(size=(B, KV, m)), jnp.float32)
+        cont = sc.decode_update(cont, k_t, v_t, D, D, s=s, active=act,
+                                s_cap=caps)
+        paged = sc.paged_decode_update(paged, k_t, v_t, D, D, s=s, active=act,
+                                       s_cap=caps)
+        assert_same_bookkeeping(cont, paged)
+        np.testing.assert_array_equal(
+            np.asarray(sc.attend(cont, q, D, D, N=N_DICT, chunk=chunk)),
+            np.asarray(sc.paged_attend(paged, q, D, D, N=N_DICT, chunk=chunk)))
+    # rows advanced raggedly, and decode appends crossed page boundaries
+    t_c = np.asarray(cont.t_c)
+    assert len(set(t_c.tolist())) > 1
+    assert t_c.max() >= 13          # prefill ends at 9; page span is 4
+    assert_same_stores(cont, paged)
+
+
+def test_to_paged_round_trip(rng):
+    cont, _, D = fresh_pair(rng)
+    paged = sc.to_paged(cont, shuffled_tables(rng), N_PAGES, P)
+    assert_same_stores(cont, paged)
+    q = jnp.asarray(rng.normal(size=(B, KV, 2, m)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sc.attend(cont, q, D, D, N=N_DICT)),
+        np.asarray(sc.paged_attend(paged, q, D, D, N=N_DICT)))
+
+
+def test_gather_pages_null_entries_are_clamped(rng):
+    pool = jnp.asarray(rng.normal(size=(5, KV, P, s)), jnp.float32)
+    table = jnp.asarray([[2, 0, -1]], jnp.int32)     # null + out-of-range
+    g = gather_pages(pool, table)
+    assert g.shape == (1, KV, 3 * P, s)
+    np.testing.assert_array_equal(np.asarray(g[0, :, :P]), np.asarray(pool[2]))
+    # both invalid entries resolve to page 0 (the trash page)
+    np.testing.assert_array_equal(np.asarray(g[0, :, P:2 * P]),
+                                  np.asarray(pool[0]))
+    np.testing.assert_array_equal(np.asarray(g[0, :, 2 * P:]),
+                                  np.asarray(pool[0]))
+
+
+def test_paged_decode_single_trace(rng):
+    """One jitted paged decode step serves every (page table, counters)
+    configuration — moving pages around never retraces."""
+    _, paged, D = fresh_pair(rng)
+
+    @jax.jit
+    def step(cache, k_t, v_t, act):
+        return sc.paged_decode_update(cache, k_t, v_t, D, D, s=s, active=act)
+
+    for i in range(4):
+        k_t = jnp.asarray(np.full((B, KV, m), float(i)), jnp.float32)
+        act = jnp.asarray([True, i % 2 == 0, False])
+        paged = step(paged, k_t, k_t, act)
+        # shuffle the table between steps: same trace must serve it
+        paged = paged._replace(page_table=shuffled_tables(np.random.default_rng(i)))
+    assert step._cache_size() == 1
+
+
+def test_write_read_slot_paged_round_trip(rng):
+    """Splicing a B=1 contiguous prefill into the paged pool and reading the
+    slot back reproduces the stripe exactly (valid positions + buffers +
+    counters + length)."""
+    from repro.serving import slots as slots_mod
+
+    D = unit_dict(rng)
+    T = 10
+    K1 = jnp.asarray(rng.normal(size=(1, KV, T, m)), jnp.float32)
+    one_layer = sc.init_layer_cache(1, KV, m, t_max=MP * P, n_b=n_b, s=s)
+    one_layer = sc.prefill_compress(one_layer, K1, K1, D, D, s=s)
+    stack = lambda layer: jax.tree.map(lambda *xs: jnp.stack(xs), layer, layer)
+    one = M.ServeState(cache=stack(one_layer),
+                       length=jnp.full((1,), T, jnp.int32))
+
+    pool_layer = sc.init_paged_layer_cache(B, KV, m, n_pages=N_PAGES,
+                                           page_size=P, max_pages=MP,
+                                           n_b=n_b, s=s)
+    pool = M.ServeState(cache=stack(pool_layer),
+                        length=jnp.zeros((B,), jnp.int32))
+    row = np.zeros(MP, np.int32)
+    row[:2] = [3, 5]                       # t_c = 7 -> 2 pages of 4
+    pool = slots_mod.write_slot_paged(pool, one, 1, jnp.asarray(row))
+    np.testing.assert_array_equal(
+        np.asarray(pool.cache.page_table)[:, 1], np.tile(row, (2, 1)))
+
+    back = slots_mod.read_slot_paged(pool, 1)
+    t_c = T - n_b
+    for f in ("k_vals", "k_idx", "v_vals", "v_idx"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(one.cache, f)).astype(np.float32)[:, :, :, :t_c],
+            np.asarray(getattr(back.cache, f)).astype(np.float32)[:, :, :, :t_c],
+            err_msg=f)
+    for f in ("k_buf", "v_buf", "t_c", "buf_len", "buf_start"):
+        np.testing.assert_array_equal(np.asarray(getattr(one.cache, f)),
+                                      np.asarray(getattr(back.cache, f)),
+                                      err_msg=f)
+    np.testing.assert_array_equal(np.asarray(back.length), [T])
+
+    # clearing the slot zeroes its counters and unbinds its pages
+    cleared = slots_mod.clear_slot_paged(pool, 1)
+    assert int(cleared.cache.t_c[0, 1]) == 0
+    assert int(cleared.cache.buf_len[0, 1]) == 0
+    np.testing.assert_array_equal(np.asarray(cleared.cache.page_table)[:, 1], 0)
+    # other rows untouched
+    np.testing.assert_array_equal(np.asarray(cleared.cache.page_table)[:, 0],
+                                  np.asarray(pool.cache.page_table)[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# differential: engine level (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _requests(rng):
+    # short/long mix: the workload where padded stripes waste the most
+    spec = [(9, 3, 2), (30, 4, 8), (12, 2, 4), (26, 3, 6), (8, 2, 2)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, tier=tier)
+            for i, (pl, mn, tier) in enumerate(spec)]
+
+
+def test_engine_paged_matches_contiguous_oracle(served):
+    """The acceptance gate: identical greedy tokens under both layouts, ONE
+    decode trace with admit/retire of mixed-length requests, zero page leaks,
+    and a strictly lower real footprint under paging."""
+    params, bank = served
+    base = EngineConfig(n_slots=3, t_max=64, min_bucket=8)
+    results, engines = {}, {}
+    for layout in ("contiguous", "paged"):
+        eng = ContinuousBatchingEngine(
+            params, CFG, LEX, bank,
+            dataclasses.replace(base, layout=layout, page_size=8))
+        for r in _requests(np.random.default_rng(7)):
+            eng.submit(r)
+        results[layout] = eng.run()
+        engines[layout] = eng
+    assert sorted(results["paged"]) == sorted(results["contiguous"])
+    for rid in results["contiguous"]:
+        assert (results["paged"][rid].generated_tokens
+                == results["contiguous"][rid].generated_tokens), rid
+
+    cc = engines["paged"].compile_counts
+    assert cc["decode"] == 1, cc          # zero retraces across admit/retire
+    assert cc["write_slot"] == 1 and cc["assign_page"] == 1, cc
+    assert engines["paged"].allocator.check_balanced()
+
+    m_cont = engines["contiguous"].metrics.to_dict()
+    m_paged = engines["paged"].metrics.to_dict()
+    assert (m_paged["kv_bytes_resident_peak"]
+            < m_cont["kv_bytes_resident_peak"])
+    # paper accounting is layout-independent — same workload, same bytes
+    assert (m_paged["kv_bytes_in_flight_peak"]
+            == m_cont["kv_bytes_in_flight_peak"])
+
+
+def test_engine_paged_oversubscribed_pool(served):
+    """A pool smaller than n_slots * max_pages still completes every request:
+    page-granular admission head-of-line blocks instead of overflowing."""
+    params, bank = served
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, n_pages=11))   # 10 usable pages < 3*8
+    reqs = _requests(np.random.default_rng(3))
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(done) == [r.rid for r in reqs]
+    assert eng.allocator.check_balanced()
+    assert eng.metrics.to_dict()["pages_in_use_peak"] <= 10
+
+
+def test_engine_paged_rejects_never_admissible(served):
+    params, bank = served
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=2, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, n_pages=3))    # 2 usable pages
+    rng = np.random.default_rng(5)
+    req = Request(rid=0, prompt=rng.integers(0, 64, 30).astype(np.int32),
+                  max_new_tokens=8, tier=8)
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: decode_update invariants (both layouts)
+# ---------------------------------------------------------------------------
+
+def _mk_cache(layout, rng, prefill_T):
+    D = unit_dict(rng)
+    K = jnp.asarray(rng.normal(size=(B, KV, prefill_T, m)), jnp.float32)
+    if layout == "paged":
+        cache = sc.init_paged_layer_cache(B, KV, m, n_pages=N_PAGES,
+                                          page_size=P, max_pages=MP,
+                                          n_b=n_b, s=s)
+        cache = cache._replace(page_table=shuffled_tables(rng))
+        return sc.paged_prefill_compress(cache, K, K, D, D, s=s), D
+    cache = sc.init_layer_cache(B, KV, m, t_max=MP * P, n_b=n_b, s=s)
+    return sc.prefill_compress(cache, K, K, D, D, s=s), D
+
+
+def _step(cache, D, k_t, act):
+    fn = (sc.paged_decode_update if isinstance(cache, sc.PagedLexicoLayerCache)
+          else sc.decode_update)
+    return fn(cache, k_t, k_t, D, D, s=s, active=act)
+
+
+def _row_state(cache, row):
+    """Everything one batch row owns (its gathered store view, buffers,
+    counters) as numpy, for bit-identity checks."""
+    c = cache if isinstance(cache, sc.LexicoLayerCache) else sc.to_contiguous(cache)
+    t_c = int(c.t_c[row])
+    return [np.asarray(x)[row][..., :t_c, :] if x.ndim == 4 else np.asarray(x)[row]
+            for x in (c.k_vals, c.k_idx, c.v_vals, c.v_idx)] + \
+           [np.asarray(c.k_buf)[row], np.asarray(c.v_buf)[row],
+            np.asarray(c.t_c)[row], np.asarray(c.buf_len)[row],
+            np.asarray(c.buf_start)[row]]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), layout=st.sampled_from(["contiguous", "paged"]),
+       n_steps=st.integers(1, 6))
+def test_decode_update_invariants(seed, layout, n_steps):
+    """Ring head/len stay in bounds, t_c is monotone, idle rows are
+    bit-identical, and no row's step writes into another row's state."""
+    rng = np.random.default_rng(seed)
+    cache, D = _mk_cache(layout, rng, prefill_T=int(rng.integers(n_b + 1, 10)))
+    for _ in range(n_steps):
+        act_np = rng.random(B) < 0.6
+        act = jnp.asarray(act_np)
+        k_t = jnp.asarray(rng.normal(size=(B, KV, m)), jnp.float32)
+        before = [_row_state(cache, r) for r in range(B)]
+        t_c_before = np.asarray(cache.t_c)
+        cache = _step(cache, D, k_t, act)
+        # bounds + monotonicity
+        assert np.all(np.asarray(cache.buf_len) <= n_b)
+        assert np.all(np.asarray(cache.buf_len) >= 0)
+        assert np.all((np.asarray(cache.buf_start) >= 0)
+                      & (np.asarray(cache.buf_start) < n_b))
+        assert np.all(np.asarray(cache.t_c) >= t_c_before)
+        # idle rows bit-identical
+        for r in np.flatnonzero(~act_np):
+            for a, b in zip(before[r], _row_state(cache, r)):
+                np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), layout=st.sampled_from(["contiguous", "paged"]))
+def test_decode_update_row_independence(seed, layout):
+    """A batched step with mask M equals composing per-row solo steps — rows
+    cannot observe (or clobber) each other through the shared pool."""
+    rng = np.random.default_rng(seed)
+    cache, D = _mk_cache(layout, rng, prefill_T=8)
+    k_t = jnp.asarray(rng.normal(size=(B, KV, m)), jnp.float32)
+    act_np = rng.random(B) < 0.6
+    batched = _step(cache, D, k_t, jnp.asarray(act_np))
+    solo = cache
+    for r in range(B):
+        mask = np.zeros(B, bool)
+        mask[r] = act_np[r]
+        solo = _step(solo, D, k_t, jnp.asarray(mask))
+    for r in range(B):
+        for a, b in zip(_row_state(batched, r), _row_state(solo, r)):
+            np.testing.assert_array_equal(a, b)

@@ -1,0 +1,133 @@
+"""Randomized slot-lifecycle fuzz: admit / step / retire under paged storage.
+
+Drives the exact host-side bookkeeping loop the engine runs (FCFS admission
+with page-granular budgets, prompt-page allocation at splice, lazy one-page
+growth per decode step, free-on-retire) over hundreds of randomized traces,
+without the model — the device arrays are irrelevant to the allocation
+contract. Invariants checked at every step:
+
+  * the allocator never exhausts (admission reserved completion-time pages);
+  * a slot never holds more pages than its reservation;
+  * bytes/pages admitted never exceed the configured budgets;
+  * no page is double-freed (the allocator raises), and every trace ends
+    with the allocator exactly balanced — zero leaked pages.
+
+The engine-integrated version of the same contract (real device pool) is
+``tests/test_paged_cache.py::test_engine_paged_matches_contiguous_oracle``.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import (
+    FCFSScheduler, PageAllocator, Request, SlotInfo, SlotPool, pages_needed,
+)
+from repro.serving.engine import _bucket   # the engine's own bucketing
+
+M_DIM, N_LAYERS, KV_HEADS = 16, 2, 2
+
+
+def _run_trace(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    n_b = int(rng.integers(2, 6))
+    min_bucket = n_b + int(rng.integers(1, 5))
+    page_size = int(rng.choice([2, 4, 8]))
+    n_slots = int(rng.integers(1, 5))
+    n_pages = int(rng.integers(6, 40))
+    allocator = PageAllocator(n_pages, page_size)
+    byte_budget = (None if rng.random() < 0.3
+                   else int(rng.integers(20_000, 200_000)))
+    sched = FCFSScheduler(
+        kv_byte_budget=byte_budget, n_b=n_b, m=M_DIM, num_layers=N_LAYERS,
+        kv_heads=KV_HEADS, page_size=page_size,
+        page_budget=allocator.capacity)
+    pool = SlotPool(n_slots)
+
+    n_requests = int(rng.integers(3, 14))
+    submitted = 0
+    for rid in range(n_requests):
+        prompt_len = int(rng.integers(min_bucket, 6 * page_size + min_bucket))
+        req = Request(rid=rid, prompt=np.zeros(prompt_len, np.int32),
+                      max_new_tokens=int(rng.integers(1, 12)),
+                      tier=int(rng.choice([2, 4, 8])))
+        # engine.submit contract: drop never-admissible requests up front
+        if sched.projected_pages(req) > allocator.capacity:
+            continue
+        if byte_budget is not None and sched.projected_bytes(req) > byte_budget:
+            continue
+        sched.submit(req)
+        submitted += 1
+
+    completed, steps, peak_pages = 0, 0, 0
+    while (len(sched) or pool.active_slots()) and steps < 10_000:
+        steps += 1
+        # --- admit (mirrors ContinuousBatchingEngine._admit) ---
+        for req in sched.admit(len(pool.free_slots())):
+            bucket = _bucket(req.prompt_len, min_bucket)
+            info = SlotInfo(request=req, fed=bucket, cache_len=bucket,
+                            pages_reserved=sched.projected_pages(req))
+            slot = pool.allocate(info)
+            n_prompt = pages_needed(info.cache_len - n_b, page_size)
+            info.pages = allocator.alloc(n_prompt)   # must never exhaust
+            assert len(info.pages) <= info.pages_reserved
+
+        # --- advance every active slot one token (lazy page growth) ---
+        for slot in pool.active_slots():
+            info = pool.slots[slot]
+            need = pages_needed(info.cache_len - n_b + 1, page_size)
+            while len(info.pages) < need:
+                info.pages += allocator.alloc(1)
+            assert len(info.pages) <= info.pages_reserved, \
+                "slot outgrew its admission reservation"
+            info.cache_len += 1
+            if info.in_prompt_phase:
+                info.fed += 1
+            else:
+                info.generated += 1
+            if info.done:
+                pool.retire(slot)
+                allocator.free(info.pages)
+                info.pages = []
+                sched.release(info.request)
+                completed += 1
+
+        # --- per-step global invariants ---
+        peak_pages = max(peak_pages, allocator.n_used)
+        assert allocator.n_used <= allocator.capacity
+        assert sched.pages_admitted <= allocator.capacity
+        if byte_budget is not None:
+            assert sched.bytes_admitted <= byte_budget
+        held = sum(len(pool.slots[i].pages) for i in pool.active_slots())
+        assert held == allocator.n_used, "pages leaked outside live slots"
+
+    assert completed == submitted, (completed, submitted, seed)
+    assert allocator.check_balanced(), f"page leak (seed {seed})"
+    assert sched.bytes_admitted == 0 and sched.pages_admitted == 0
+    return {"steps": steps, "completed": completed, "peak_pages": peak_pages}
+
+
+def test_lifecycle_fuzz_many_traces():
+    stats = [_run_trace(seed) for seed in range(150)]
+    # the fuzz actually exercised contention: some trace had to queue on
+    # pages/bytes while others sailed through
+    assert max(x["peak_pages"] for x in stats) > 4
+    assert sum(x["completed"] for x in stats) > 300
+
+
+def test_double_free_is_detected():
+    allocator = PageAllocator(6, 4)
+    pages = allocator.alloc(2)
+    allocator.free(pages)
+    with pytest.raises(KeyError, match="double free"):
+        allocator.free(pages)
+
+
+def test_refcounted_page_survives_one_owner_retiring():
+    """Prefix-sharing contract: a page pinned by two owners only returns to
+    the free list when the second ref drops."""
+    allocator = PageAllocator(6, 4)
+    (page,) = allocator.alloc(1)
+    allocator.incref(page)          # second owner
+    allocator.decref(page)
+    assert allocator.refcount(page) == 1 and allocator.n_used == 1
+    allocator.decref(page)
+    assert allocator.check_balanced()
