@@ -13,7 +13,12 @@ The same short/long mixed workload runs through BOTH slot-storage layouts
 paged slots must hold fewer KV bytes than the padded stripes do (the
 headroom an oversubscribed ``n_pages`` turns into extra admitted requests).
 
-    PYTHONPATH=src python benchmarks/serving_throughput.py [--json-only]
+A second scenario (``--scenario prefix``) is many clients sharing one
+system prompt — the workload copy-on-write prefix sharing exists for — and
+reports shared vs unshared resident KV bytes, dedup'd bytes, hit rate, and
+the prefill OMP positions skipped.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario both]
 """
 from __future__ import annotations
 
@@ -77,6 +82,70 @@ def run_serving_bench(*, n_requests: int = 12, n_slots: int = 4,
     return stats
 
 
+def _submit_same_system_prompt(eng, cfg, *, n_requests: int, seed: int) -> None:
+    """Many clients, one system prompt: every request starts with the same
+    32-token prefix (page-aligned at page_size 8) and appends its own short
+    question. One tier — sharing requires equal OMP atom caps."""
+    rng = np.random.default_rng(seed)
+    system_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    for rid in range(n_requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, 14))).astype(np.int32)
+        eng.submit(Request(
+            rid=rid, prompt=np.concatenate([system_prompt, tail]),
+            max_new_tokens=int(rng.integers(4, 12)), tier=16))
+
+
+def run_prefix_sharing_bench(*, n_requests: int = 12, n_slots: int = 4,
+                             t_max: int = 96, seed: int = 0,
+                             page_size: int = 8) -> dict:
+    """The many-clients-same-system-prompt scenario through the paged
+    engine with sharing off vs on; tokens must match exactly."""
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+    sides = {}
+    tokens = {}
+    for share in (False, True):
+        eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                         layout="paged", page_size=page_size,
+                         share_prefixes=share))
+        _submit_same_system_prompt(eng, cfg, n_requests=n_requests, seed=seed)
+        done = eng.run()
+        stats = eng.metrics.to_dict()
+        stats.update(n_requests=n_requests, completed=len(done),
+                     compile_counts=eng.compile_counts)
+        if share:
+            stats["prefix_cache_pages"] = eng.prefix_index.n_cached_pages()
+            eng.prefix_index.clear(eng.allocator)
+        stats["pages_balanced"] = eng.allocator.check_balanced()
+        sides["shared" if share else "unshared"] = stats
+        tokens[share] = {rid: done[rid].generated_tokens for rid in done}
+    sh, un = sides["shared"], sides["unshared"]
+    return {
+        "unshared": un,
+        "shared": sh,
+        "sharing": {
+            # the headline: resident KV bytes with vs without dedup
+            "kv_bytes_resident_peak_unshared": un["kv_bytes_resident_peak"],
+            "kv_bytes_resident_peak_shared": sh["kv_bytes_resident_peak"],
+            "kv_bytes_resident_peak_ratio": (
+                sh["kv_bytes_resident_peak"]
+                / max(un["kv_bytes_resident_peak"], 1)),
+            "bytes_deduped": sh["bytes_deduped"],
+            "shared_page_hit_rate": sh["shared_page_hit_rate"],
+            "pages_aliased": sh["pages_aliased"],
+            "pages_copied": sh["pages_copied"],
+            "prefill_tokens_skipped": sh["prefill_tokens_skipped"],
+            "same_tokens": tokens[False] == tokens[True],
+        },
+    }
+
+
 def run_layout_comparison(**kw) -> dict:
     """Same workload through both layouts + the memory/throughput deltas."""
     cont = run_serving_bench(layout="contiguous", **kw)
@@ -114,6 +183,9 @@ def run(emit):
              side["compile_counts"]["prefill"])
     emit("serving/paged_resident_peak_ratio",
          stats["paged_vs_contiguous"]["kv_bytes_resident_peak_ratio"])
+    prefix = run_prefix_sharing_bench()
+    for key, val in prefix["sharing"].items():
+        emit(f"serving/prefix/{key}", float(val))
 
 
 def main():
@@ -125,14 +197,25 @@ def main():
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--layout", choices=["contiguous", "paged", "both"],
                     default="both")
+    ap.add_argument("--scenario", choices=["mix", "prefix", "both"],
+                    default="mix",
+                    help="mix: short/long layout comparison; prefix: many "
+                         "clients sharing one system prompt (shared vs "
+                         "unshared resident KV bytes)")
     ap.add_argument("--json-only", action="store_true")
     args = ap.parse_args()
     kw = dict(n_requests=args.n_requests, n_slots=args.n_slots,
               t_max=args.t_max, seed=args.seed, page_size=args.page_size)
-    if args.layout == "both":
-        stats = run_layout_comparison(**kw)
-    else:
-        stats = run_serving_bench(layout=args.layout, **kw)
+    stats = {}
+    if args.scenario in ("mix", "both"):
+        if args.layout == "both":
+            stats["mix"] = run_layout_comparison(**kw)
+        else:
+            stats["mix"] = run_serving_bench(layout=args.layout, **kw)
+    if args.scenario in ("prefix", "both"):
+        stats["prefix"] = run_prefix_sharing_bench(**kw)
+    if len(stats) == 1:
+        stats = next(iter(stats.values()))
     print(json.dumps(stats, indent=2, default=float))
 
 

@@ -12,6 +12,11 @@ global KV-byte budget using the paper's 3s+2 bytes/vector accounting.
 Everything runs through three compiled functions (one prefill per
 power-of-two bucket, one pooled decode, one slot splice): watch the compile
 counts stay flat as requests join and leave.
+
+With ``--share-prefixes`` (paged layout) half the requests start from one
+shared system prompt: their page-aligned prefix pages are deduplicated in
+the pool via copy-on-write prefix sharing, and the dedup metrics (hit rate,
+pages aliased, prefill OMP skipped, bytes saved) are printed at the end.
 """
 import argparse
 import os
@@ -41,8 +46,14 @@ def main():
                          "page pool with per-slot page tables")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per pool page (paged layout)")
+    ap.add_argument("--share-prefixes", action="store_true",
+                    help="copy-on-write prefix sharing over the page pool "
+                         "(implies --layout paged); half the demo requests "
+                         "share a system-prompt prefix so pages dedup")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.share_prefixes:
+        args.layout = "paged"
 
     cfg = BENCH_CFG
     params, _ = trained_params()
@@ -54,23 +65,34 @@ def main():
         params, cfg, lex, bank,
         EngineConfig(n_slots=args.n_slots, t_max=args.t_max, min_bucket=8,
                      layout=args.layout, page_size=args.page_size,
+                     share_prefixes=args.share_prefixes,
                      kv_byte_budget=(args.budget_kb * 1024
                                      if args.budget_kb else None)))
 
     rng = np.random.default_rng(args.seed)
     tiers = [2, 4, 8, 16]
+    # a common "system prompt": with --share-prefixes, every even request
+    # starts with it, so their page-aligned prefixes dedup in the pool
+    system_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
     print(f"{args.n_requests} requests -> {args.n_slots} slots "
           f"(s_max={s_max}, tiers {tiers})")
     for rid in range(args.n_requests):
-        prompt_len = int(rng.integers(9, 64))
-        req = Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
-            max_new_tokens=int(rng.integers(4, 16)),
-            tier=int(rng.choice(tiers)))
+        if args.share_prefixes and rid % 2 == 0:
+            tail = rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(1, 16))).astype(np.int32)
+            prompt = np.concatenate([system_prompt, tail])
+            tier = 16          # sharing requires equal tiers
+        else:
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  int(rng.integers(9, 64))).astype(np.int32)
+            tier = int(rng.choice(tiers))
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(rng.integers(4, 16)), tier=tier)
         eng.submit(req)
-        print(f"  req {rid}: prompt={prompt_len:3d} "
-              f"new={req.max_new_tokens:2d} tier=s{req.tier}")
+        print(f"  req {rid}: prompt={len(prompt):3d} "
+              f"new={req.max_new_tokens:2d} tier=s{req.tier}"
+              + ("  [shared system prompt]"
+                 if args.share_prefixes and rid % 2 == 0 else ""))
 
     done = eng.run()
     stats = eng.metrics.to_dict()
@@ -92,6 +114,20 @@ def main():
           f"peak {stats['kv_bytes_resident_peak']}")
     if args.layout == "paged":
         print(f"pool pages: peak {stats['pages_in_use_peak']} in use, "
+              f"balanced={eng.allocator.check_balanced()}")
+    if args.share_prefixes:
+        print(f"prefix sharing: hit rate "
+              f"{stats['shared_page_hit_rate']:.0%} "
+              f"({stats['prefix_hits']}/{stats['prefix_hits'] + stats['prefix_misses']} admissions)")
+        print(f"  pages aliased {stats['pages_aliased']}, CoW copies "
+              f"{stats['pages_copied']}, peak {stats['shared_pages_peak']} "
+              f"pages held by >=2 slots")
+        print(f"  prefill OMP skipped for {stats['prefill_tokens_skipped']} "
+              f"of "
+              f"{stats['prefill_tokens_skipped'] + stats['prefill_tokens_compressed']} "
+              f"compressed positions, {stats['bytes_deduped']} B deduplicated")
+        eng.prefix_index.clear(eng.allocator)
+        print(f"  after dropping prefix-cache pins: "
               f"balanced={eng.allocator.check_balanced()}")
     print(f"queue latency: mean {stats['queue_latency_s_mean'] * 1e3:.0f} ms")
 

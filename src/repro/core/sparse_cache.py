@@ -74,6 +74,9 @@ def init_layer_cache(
     t_max: int, n_b: int, s: int,
     val_dtype=jnp.float8_e4m3fn, buf_dtype=jnp.bfloat16,
 ) -> LexicoLayerCache:
+    """Zero-initialised contiguous cache: ``(B, KV, t_max, s)`` sparse
+    stores (``t_max`` = compressed capacity, buffer excluded), ``(B, KV,
+    n_b, head_dim)`` ring buffers, and ``(B,)`` int32 counters."""
     zv = jnp.zeros((batch, kv_heads, t_max, s), val_dtype)
     zi = jnp.zeros((batch, kv_heads, t_max, s), jnp.int16)
     zb = jnp.zeros((batch, kv_heads, n_b, head_dim), buf_dtype)
@@ -137,6 +140,10 @@ def init_paged_layer_cache(
     n_pages: int, page_size: int, max_pages: int, n_b: int, s: int,
     val_dtype=jnp.float8_e4m3fn, buf_dtype=jnp.bfloat16,
 ) -> PagedLexicoLayerCache:
+    """Zero-initialised paged cache: a shared ``(n_pages, KV, page_size,
+    s)`` pool (page 0 = null/trash), an all-null ``(B, max_pages)`` int32
+    page table, per-row ``(B, KV, n_b, head_dim)`` ring buffers and ``(B,)``
+    int32 counters."""
     zv = jnp.zeros((n_pages, kv_heads, page_size, s), val_dtype)
     zi = jnp.zeros((n_pages, kv_heads, page_size, s), jnp.int16)
     zb = jnp.zeros((batch, kv_heads, n_b, head_dim), buf_dtype)
@@ -172,18 +179,36 @@ def _encode_store(vals: Array, idx: Array, val_dtype) -> Tuple[Array, Array]:
 
 
 def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
-                          G_k, G_v, s_cap):
-    """Shared prefill core: OMP-encode the first T-n_b prompt tokens.
+                          G_k, G_v, s_cap, start=0):
+    """Shared prefill core: OMP-encode prompt positions ``[start, T - n_b)``.
 
-    Returns ``(kv, ki, vv, vi, k_tail, v_tail, n_comp)`` — the encoded sparse
-    stores plus the buffer tail — identically for both storage layouts, so
-    the layouts can only differ in *where* the codes land.
+    Args:
+      cache: either cache layout (only ``n_b`` and store dtypes are read).
+      K, V: ``(B, KV, T, m)`` full-precision prompt K/V (RoPE applied).
+      s_cap: optional ``(B,)`` per-row sparsity caps (``<= s``).
+      start: static Python int — first compressed position to encode. Prefix
+        sharing restarts prefill here: positions ``[0, start)`` are already
+        held as shared pages, so their OMP is skipped entirely. OMP is
+        per-vector independent, so the tail codes are bitwise identical to
+        the same positions of a full (``start=0``) encode.
+
+    Returns ``(kv, ki, vv, vi, k_tail, v_tail, n_comp)`` — encoded sparse
+    stores for positions ``[start, n_comp)`` (shape ``(B, KV, n_comp-start,
+    s)``) plus the ``(B, KV, n_b, m)`` buffer tail — identically for both
+    storage layouts, so the layouts can only differ in *where* codes land.
+    ``start >= n_comp`` (everything shared) returns ``None`` stores.
     """
     B, KV, T, m = K.shape
     n_b = cache.n_b
     n_comp = T - n_b
-    k_head, k_tail = K[:, :, :n_comp], K[:, :, n_comp:]
-    v_head, v_tail = V[:, :, :n_comp], V[:, :, n_comp:]
+    start = int(start)
+    if start < 0:
+        raise ValueError(f"start must be >= 0, got {start}")
+    k_tail, v_tail = K[:, :, n_comp:], V[:, :, n_comp:]
+    if start >= n_comp:       # fully shared prefix: nothing left to encode
+        return None, None, None, None, k_tail, v_tail, n_comp
+    k_head = K[:, :, start:n_comp]
+    v_head = V[:, :, start:n_comp]
     cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None, None]
 
     rk = omp_mod.omp_batch(k_head.astype(jnp.float32), D_k, s, use_gram=use_gram,
@@ -205,28 +230,46 @@ def prefill_compress(
     delta: float = 0.0,
     G_k=None, G_v=None,
     s_cap: Optional[Array] = None,
+    start: int = 0,
 ) -> LexicoLayerCache:
     """Compress a prefilled prompt into the cache (Algorithm 2, Prefilling).
 
-    The last n_b tokens go to the buffer; the first T-n_b are OMP-compressed.
-    Assumes T >= n_b and T - n_b <= T_max.
-    ``s_cap`` (B,) optionally caps the per-request sparsity tier below ``s``.
+    Args:
+      cache: ``LexicoLayerCache`` to fill (typically freshly initialised).
+      K, V: ``(B, KV, T, m)`` full-precision prompt K/V (RoPE applied).
+      D_k, D_v: ``(m, N)`` dictionaries.
+      s_cap: optional ``(B,)`` int32 per-request sparsity tiers (``<= s``).
+      start: static int — restart offset in compressed-position space.
+        Positions ``[0, start)`` are left untouched (a prefix-sharing caller
+        already holds their codes elsewhere); only ``[start, T - n_b)`` are
+        OMP-encoded and written. ``start=0`` is the full prefill.
+
+    The last ``n_b`` tokens go to the ring buffer; positions ``[start,
+    T - n_b)`` are OMP-compressed into the sparse stores. Bookkeeping
+    (``t_c = T - n_b``, full buffer) is set as if the whole prompt were
+    compressed — the skipped prefix is the caller's responsibility.
+    Assumes ``T >= n_b`` and ``T - n_b <= T_max``.
+
+    Returns the updated ``LexicoLayerCache``.
     """
     B = K.shape[0]
     kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
         cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, s_cap=s_cap)
+        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
 
     def put(store, new):
-        return jax.lax.dynamic_update_slice(store, new, (0, 0, 0, 0))
+        return jax.lax.dynamic_update_slice(store, new, (0, 0, int(start), 0))
 
+    stores = {}
+    if kv is not None:
+        stores = dict(k_vals=put(cache.k_vals, kv), k_idx=put(cache.k_idx, ki),
+                      v_vals=put(cache.v_vals, vv), v_idx=put(cache.v_idx, vi))
     fill = lambda v: jnp.full((B,), v, jnp.int32)
     return cache._replace(
-        k_vals=put(cache.k_vals, kv), k_idx=put(cache.k_idx, ki),
-        v_vals=put(cache.v_vals, vv), v_idx=put(cache.v_idx, vi),
         k_buf=k_tail.astype(cache.k_buf.dtype),
         v_buf=v_tail.astype(cache.v_buf.dtype),
         t_c=fill(n_comp), buf_len=fill(cache.n_b), buf_start=fill(0),
+        **stores,
     )
 
 
@@ -258,29 +301,38 @@ def paged_prefill_compress(
     delta: float = 0.0,
     G_k=None, G_v=None,
     s_cap: Optional[Array] = None,
+    start: int = 0,
 ) -> PagedLexicoLayerCache:
-    """Paged twin of :func:`prefill_compress`.
+    """Paged twin of :func:`prefill_compress` (restartable).
 
     The caller owns page placement: every row's ``page_table`` must already
-    name pages covering its first ``T - n_b`` positions (the serving engine
+    name pages covering positions ``[start, T - n_b)`` (the serving engine
     installs rows via ``repro.serving.slots``; tests build them directly).
+    ``start`` (static int, page-aligned in the sharing flow) skips encoding
+    of an already-shared prefix — table entries below ``start // page_size``
+    are never written, so they may alias pages owned by other rows.
     Encoding is bit-identical to the contiguous path — only the scatter
     destination differs.
     """
     B = K.shape[0]
     kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
         cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, s_cap=s_cap)
+        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
 
+    stores = {}
+    if kv is not None:
+        table = cache.page_table
+        stores = dict(
+            k_vals=scatter_into_pages(cache.k_vals, table, kv, start=start),
+            k_idx=scatter_into_pages(cache.k_idx, table, ki, start=start),
+            v_vals=scatter_into_pages(cache.v_vals, table, vv, start=start),
+            v_idx=scatter_into_pages(cache.v_idx, table, vi, start=start))
     fill = lambda v: jnp.full((B,), v, jnp.int32)
     return cache._replace(
-        k_vals=scatter_into_pages(cache.k_vals, cache.page_table, kv),
-        k_idx=scatter_into_pages(cache.k_idx, cache.page_table, ki),
-        v_vals=scatter_into_pages(cache.v_vals, cache.page_table, vv),
-        v_idx=scatter_into_pages(cache.v_idx, cache.page_table, vi),
         k_buf=k_tail.astype(cache.k_buf.dtype),
         v_buf=v_tail.astype(cache.v_buf.dtype),
         t_c=fill(n_comp), buf_len=fill(cache.n_b), buf_start=fill(0),
+        **stores,
     )
 
 
@@ -419,7 +471,17 @@ def attend(
     chunk: Optional[int] = None,
     window=None,
 ) -> Array:
-    """Eq. 7 attention over the cache (buffer already contains the new token)."""
+    """Eq. 7 attention over the cache (buffer already contains the new
+    token).
+
+    Args:
+      q: ``(B, KV, G, m)`` query heads (G = query groups per KV head).
+      D_k, D_v: ``(m, N)`` dictionaries; ``N`` atoms.
+      chunk: optional score-chunking width; ``window``: sliding window.
+
+    Returns ``(B, KV, G, m)`` attention output; positions ``>= t_c`` per
+    row carry NEG_INF logits and cannot contribute.
+    """
     return decode_attention(
         q,
         cache.k_vals, cache.k_idx, cache.v_vals, cache.v_idx,
@@ -502,6 +564,8 @@ def paper_kv_bytes(t_c: int, n_b: int, s: int, m: int, *, codec: str = "fp8",
 
 
 def kv_size_percent(t_c: int, n_b: int, s: int, m: int, **kw) -> float:
+    """Compressed-cache size as % of the dense bf16 cache for the same
+    ``t_c + n_b`` tokens (the paper's KV size % columns)."""
     total = t_c + n_b
     if total == 0:
         # empty cache: 0 compressed bytes of 0 dense bytes — report 0%, not

@@ -60,11 +60,17 @@ class LexicoPolicy:
         D_k, D_v = ctx
         return D_k, D_v, None, None
 
-    def prefill(self, cache, K, V, ctx, *, s_cap=None):
+    def prefill(self, cache, K, V, ctx, *, s_cap=None, start=0):
+        """Compress prompt K/V ``(B, KV, T, m)`` into ``cache``.
+
+        ``s_cap`` (B,) caps per-row sparsity tiers; ``start`` (static int)
+        restarts compression at that compressed position (prefix sharing) —
+        positions below it are left untouched.
+        """
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.prefill_compress(cache, K, V, D_k, D_v, s=self.cfg.s,
                                    use_gram=self.cfg.use_gram, delta=self.cfg.delta,
-                                   G_k=G_k, G_v=G_v, s_cap=s_cap)
+                                   G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
 
     def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         D_k, D_v, G_k, G_v = self._unpack(ctx)
@@ -117,11 +123,14 @@ class PagedLexicoPolicy:
 
     _unpack = staticmethod(LexicoPolicy._unpack)
 
-    def prefill(self, cache, K, V, ctx, *, s_cap=None):
+    def prefill(self, cache, K, V, ctx, *, s_cap=None, start=0):
+        """Paged twin of :meth:`LexicoPolicy.prefill`: scatters through the
+        cache's existing page tables. ``start`` must be page-aligned when the
+        skipped prefix aliases pages owned by other rows."""
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.paged_prefill_compress(
             cache, K, V, D_k, D_v, s=self.cfg.s, use_gram=self.cfg.use_gram,
-            delta=self.cfg.delta, G_k=G_k, G_v=G_v, s_cap=s_cap)
+            delta=self.cfg.delta, G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
 
     def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         D_k, D_v, G_k, G_v = self._unpack(ctx)

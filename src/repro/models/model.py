@@ -583,10 +583,23 @@ def init_serve_cache(cfg: ModelConfig, policy: CachePolicy, batch: int,
 
 def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
             *, bank: Optional[DictionaryBank], t_max: int,
-            s_cap: Optional[Array] = None) -> Tuple[Array, ServeState]:
-    """Run the prompt, build the (compressed) cache. Returns (last-token
-    logits (B, vocab), ServeState). ``s_cap`` (B,): per-request sparsity
-    tiers (Lexico policies only)."""
+            s_cap: Optional[Array] = None,
+            compress_start: int = 0) -> Tuple[Array, ServeState]:
+    """Run the prompt, build the (compressed) cache.
+
+    Args:
+      batch: ``{"tokens": (B, T) int32[, "frames": ...]}``.
+      s_cap: ``(B,)`` int32 per-request sparsity tiers (Lexico policies only).
+      compress_start: static int — restart the cache *compression* at this
+        compressed position (prefix sharing: the skipped prefix's codes are
+        already held as shared pages). The transformer forward always runs
+        over the whole prompt — only the OMP encode is skipped — so logits
+        and the encoded tail are bitwise identical to a ``compress_start=0``
+        run. Lexico attention-stack policies only.
+
+    Returns ``(last-token logits (B, vocab), ServeState)`` where the state's
+    ``length`` is ``(B,)`` (meta tokens included).
+    """
     tokens = batch["tokens"]
     B, T = tokens.shape
     x = _embed_tokens(params, cfg, tokens)
@@ -631,9 +644,16 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
                                              ssm_state=ssm_in, enc_out=enc_out)
         ctx = _dict_ctx(cfg, bank, Dl, Gl)
         if cfg.mla is not None:
+            if compress_start:
+                raise NotImplementedError(
+                    "prefix sharing (compress_start) covers attention-stack "
+                    "Lexico caches; the MLA latent cache has no paged layout")
             new_cache = mla_mod.mla_prefill_compress(
                 cache_l, kv, ctx[0], s=policy.cfg.s, use_gram=policy.cfg.use_gram,
                 delta=policy.cfg.delta, G=ctx[1], s_cap=s_cap)
+        elif compress_start:
+            new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx,
+                                       s_cap=s_cap, start=compress_start)
         elif s_cap is not None:
             new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx, s_cap=s_cap)
         else:

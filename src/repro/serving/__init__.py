@@ -10,13 +10,20 @@ tiers ride on a per-row atom cap inside the shared OMP encoder.
 Slot storage is pluggable (``EngineConfig.layout``): the contiguous
 per-slot stripe, or paged storage — a shared page pool + per-slot page
 tables (``pages.py`` allocator, ``slots.py`` device splices) whose admission
-and footprint are page-granular instead of ``t_max``-padded.
+and footprint are page-granular instead of ``t_max``-padded. On top of the
+paged layout, ``EngineConfig(share_prefixes=True)`` turns on copy-on-write
+prefix sharing (``prefix.py``): requests with a common page-aligned prompt
+prefix alias one set of physical pages and skip the prefix's prefill OMP.
+
+See docs/serving.md for the full subsystem design.
 """
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
 from repro.serving.metrics import EngineMetrics
 from repro.serving.pages import (
-    NULL_PAGE, PageAllocator, PagePoolExhausted, pages_needed,
+    NULL_PAGE, PageAllocator, PagePoolExhausted, RefcountOverflow,
+    pages_needed,
 )
+from repro.serving.prefix import PrefixIndex, SharePlan
 from repro.serving.scheduler import (
     FCFSScheduler, Request, request_kv_bytes, request_kv_bytes_paged,
     request_page_count,
@@ -26,6 +33,7 @@ from repro.serving.slots import SlotInfo, SlotPool
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
     "FCFSScheduler", "NULL_PAGE", "PageAllocator", "PagePoolExhausted",
-    "Request", "SlotInfo", "SlotPool", "pages_needed", "request_kv_bytes",
+    "PrefixIndex", "RefcountOverflow", "Request", "SharePlan", "SlotInfo",
+    "SlotPool", "pages_needed", "request_kv_bytes",
     "request_kv_bytes_paged", "request_page_count",
 ]

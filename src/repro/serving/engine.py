@@ -37,15 +37,28 @@ Slot storage (``EngineConfig.layout``):
     decode step itself stays ONE compiled trace for any admit/retire mix —
     only the table contents change.
 
+Prefix sharing (``EngineConfig.share_prefixes``, paged layout only): a
+host-side radix trie (``repro.serving.prefix.PrefixIndex``) keyed on
+page-granularity prompt-token-chunk hashes maps an admission's page-aligned
+shared prompt prefix onto physical pages that already hold those codes —
+full pages are aliased into the new slot's table (refcount++), the boundary
+partially-filled page is copied-on-write, and the restartable prefill
+(``M.prefill(compress_start=...)``) skips the prefix's OMP entirely. The
+scheduler charges only *new* pages/bytes, and when the free list runs dry
+the engine evicts cached (index-pinned) pages LRU-first. Sharing is exact:
+codes are deterministic in the token prefix, so a shared run must emit
+tokens bitwise-identical to an unshared run (tests/test_prefix_sharing.py).
+
 The contiguous layout is the differential-test oracle for the paged one:
 same requests through both layouts must produce identical tokens
-(tests/test_paged_cache.py).
+(tests/test_paged_cache.py). See docs/serving.md for the full design.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,13 +71,15 @@ from repro.models import model as M
 from repro.models.cache_policy import LexicoPolicy, PagedLexicoPolicy
 from repro.serving import slots as slots_mod
 from repro.serving.metrics import EngineMetrics
-from repro.serving.pages import PageAllocator, pages_needed
+from repro.serving.pages import NULL_PAGE, PageAllocator, pages_needed
+from repro.serving.prefix import PrefixIndex, SharePlan
 from repro.serving.scheduler import FCFSScheduler, Request, request_kv_bytes
 from repro.serving.slots import SlotInfo, SlotPool
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine shape and policy knobs (static over an engine's lifetime)."""
     n_slots: int = 8
     t_max: int = 256              # cache capacity per slot (tokens)
     kv_byte_budget: Optional[int] = None
@@ -74,6 +89,14 @@ class EngineConfig:
     # total pool pages incl. the null page; None = full provisioning
     # (n_slots * max_pages_per_slot + 1) — size it down to oversubscribe
     n_pages: Optional[int] = None
+    # copy-on-write prefix sharing over the page pool (paged layout only):
+    # admissions whose prompt shares a page-aligned prefix with a live or
+    # recently-retired slot alias those physical pages instead of
+    # re-compressing them
+    share_prefixes: bool = False
+    # cap on pages the prefix index may keep pinned (None = bounded only by
+    # the pool itself + LRU eviction when the free list runs dry)
+    prefix_cache_pages: Optional[int] = None
 
 
 def _bucket(prompt_len: int, min_bucket: int) -> int:
@@ -85,6 +108,14 @@ def _bucket(prompt_len: int, min_bucket: int) -> int:
 
 
 class ContinuousBatchingEngine:
+    """One slot pool + one compiled decode step serving many requests.
+
+    Construct with model params, a ``ModelConfig``, a ``LexicoConfig``
+    (compiled sparsity ceiling ``s``; per-request tiers cap below it), the
+    dictionary bank, and an :class:`EngineConfig`. Drive with ``submit`` +
+    ``step``/``run``; read ``metrics`` / ``compile_counts`` afterwards.
+    """
+
     def __init__(self, params, cfg: ModelConfig, lex_cfg: LexicoConfig,
                  bank: Optional[DictionaryBank], engine_cfg: EngineConfig):
         if cfg.enc_dec or cfg.attn_free or cfg.parallel_ssm:
@@ -97,6 +128,10 @@ class ContinuousBatchingEngine:
         if engine_cfg.layout not in ("contiguous", "paged"):
             raise ValueError(f"unknown layout {engine_cfg.layout!r}")
         self.paged = engine_cfg.layout == "paged"
+        if engine_cfg.share_prefixes and not self.paged:
+            raise ValueError(
+                "share_prefixes requires layout='paged' (sharing aliases "
+                "physical pool pages)")
         if self.paged and cfg.mla is not None:
             raise NotImplementedError(
                 "paged slot storage covers the attention-stack Lexico cache; "
@@ -113,6 +148,8 @@ class ContinuousBatchingEngine:
 
         B, t_max = engine_cfg.n_slots, engine_cfg.t_max
         self.allocator: Optional[PageAllocator] = None
+        self.prefix_index: Optional[PrefixIndex] = None
+        self._pending_plans: Dict[int, SharePlan] = {}
         decode_policy = self.policy
         if self.paged:
             P = engine_cfg.page_size
@@ -123,6 +160,9 @@ class ContinuousBatchingEngine:
             decode_policy = PagedLexicoPolicy(lex_cfg, n_pages=n_pages,
                                               page_size=P)
             self._max_pages = max_pages
+            if engine_cfg.share_prefixes:
+                self.prefix_index = PrefixIndex(
+                    P, max_cached_pages=engine_cfg.prefix_cache_pages)
         self.decode_policy = decode_policy
         self.scheduler = FCFSScheduler(
             kv_byte_budget=engine_cfg.kv_byte_budget, n_b=lex_cfg.n_b,
@@ -139,9 +179,14 @@ class ContinuousBatchingEngine:
         # --- the compiled entry points ------------------------------------
         policy = self.policy
 
-        def prefill_fn(params, bank, tokens, s_cap):
+        def prefill_fn(params, bank, tokens, s_cap, compress_start):
+            # compress_start is static: each distinct (bucket, start) pair is
+            # its own trace — starts are page-aligned (or the full span), so
+            # the count stays O(#buckets * max_pages) worst case, O(#buckets)
+            # in practice (start=0 dominates; see docs/serving.md)
             return M.prefill(params, cfg, policy, {"tokens": tokens},
-                             bank=bank, t_max=t_max, s_cap=s_cap)
+                             bank=bank, t_max=t_max, s_cap=s_cap,
+                             compress_start=compress_start)
 
         def decode_fn(params, bank, state, token, active, s_cap):
             return M.decode_step(params, cfg, decode_policy, state, token,
@@ -154,19 +199,26 @@ class ContinuousBatchingEngine:
         def _own(fn):
             return jax.jit(lambda *a: fn(*a), donate_argnums=(0,))
 
-        self._prefill_fn = jax.jit(prefill_fn)          # one entry per bucket
+        # one entry per (bucket, compress_start) pair; start is 0 unless
+        # prefix sharing skipped a page-aligned prefix
+        self._prefill_fn = jax.jit(prefill_fn, static_argnums=(4,))
         self._decode_fn = jax.jit(decode_fn, donate_argnums=(2,))
         if self.paged:
             self._write_fn = _own(slots_mod.write_slot_paged)
             self._assign_fn = _own(slots_mod.assign_page)
             self._clear_fn = _own(slots_mod.clear_slot_paged)
+            self._copy_fn = _own(slots_mod.copy_page)
         else:
             self._write_fn = _own(slots_mod.write_slot)
-            self._assign_fn = self._clear_fn = None
+            self._assign_fn = self._clear_fn = self._copy_fn = None
 
     # ------------------------------------------------------------------ API
 
     def submit(self, req: Request) -> None:
+        """Queue one request, rejecting anything that could never be
+        admitted (tier above the compiled ``s``, prompt below the smallest
+        prefill bucket, footprint beyond ``t_max`` or the configured
+        byte/page budgets). Raises ``ValueError`` with the reason."""
         if req.tier > self.lex_cfg.s:
             raise ValueError(f"tier {req.tier} exceeds compiled s={self.lex_cfg.s}")
         if req.prompt_len < self.engine_cfg.min_bucket:
@@ -188,6 +240,10 @@ class ContinuousBatchingEngine:
         if self.paged:
             pages = self.scheduler.projected_pages(req)
             if pages > self.allocator.capacity:
+                # holds under prefix sharing too: aliased pages are still
+                # bound in this request's own page table, so its
+                # completion-time table needs `pages` distinct physical
+                # pages no matter how many other holders they have
                 raise ValueError(
                     f"request projects {pages} pages > pool capacity "
                     f"{self.allocator.capacity} — it could never be admitted")
@@ -197,6 +253,10 @@ class ContinuousBatchingEngine:
 
     @property
     def compile_counts(self) -> Dict[str, int]:
+        """Trace counts of every compiled entry point (the serving stack's
+        no-recompile invariants are asserted against these in tests;
+        ``prefill`` counts one trace per (bucket, compress_start) pair, the
+        rest must stay at 1 regardless of the request mix)."""
         def n(fn):
             get = getattr(fn, "_cache_size", None)
             return int(get()) if callable(get) else -1
@@ -205,6 +265,7 @@ class ContinuousBatchingEngine:
         if self.paged:
             counts["assign_page"] = n(self._assign_fn)
             counts["clear_slot"] = n(self._clear_fn)
+            counts["copy_page"] = n(self._copy_fn)
         return counts
 
     def kv_bytes_in_flight(self) -> int:
@@ -224,23 +285,34 @@ class ContinuousBatchingEngine:
 
     def kv_bytes_resident(self) -> int:
         """Bytes the active slots' sparse stores + buffers *hold*: pages
-        actually bound under paging, full padded stripes under the contiguous
-        layout. Note the device pool itself is preallocated (``n_pages``
-        pages), so this is the occupancy a right-sized pool must provision —
-        the paged/contiguous gap on a mixed workload is the padding waste an
-        oversubscribed pool (``n_pages`` sized down) reclaims as capacity,
-        not bytes the default fully-provisioned pool hands back."""
+        actually bound under paging (each *physical* page counted once, no
+        matter how many slots alias it via prefix sharing), full padded
+        stripes under the contiguous layout. Note the device pool itself is
+        preallocated (``n_pages`` pages), so this is the occupancy a
+        right-sized pool must provision — the paged/contiguous gap on a
+        mixed workload is the padding waste an oversubscribed pool
+        (``n_pages`` sized down) reclaims as capacity, not bytes the default
+        fully-provisioned pool hands back."""
         lex, cfg = self.lex_cfg, self.cfg
         val_bytes = jnp.dtype(lex.val_dtype).itemsize
         total = 0
+        if self.paged:
+            unique_pages = {p for i in self.pool.active_slots()
+                            for p in self.pool.slots[i].pages}
+            total += cfg.num_layers * len(unique_pages) * \
+                sparse_cache.page_store_bytes(
+                    cfg.cache_kv_heads, self.engine_cfg.page_size, lex.s,
+                    val_bytes=val_bytes)
+            for _ in self.pool.active_slots():   # per-slot ring buffers
+                total += cfg.num_layers * sparse_cache.slot_resident_bytes(
+                    0, kv_heads=cfg.cache_kv_heads,
+                    page_size=self.engine_cfg.page_size, s=lex.s,
+                    n_b=lex.n_b, m=cfg.cached_vector_dim, val_bytes=val_bytes)
+            return total
+        span = max(self.engine_cfg.t_max - lex.n_b, 1)
         for i in self.pool.active_slots():
-            info = self.pool.slots[i]
-            if self.paged:
-                held, span = len(info.pages), self.engine_cfg.page_size
-            else:   # one "page" = the whole padded stripe
-                held, span = 1, max(self.engine_cfg.t_max - lex.n_b, 1)
             total += cfg.num_layers * sparse_cache.slot_resident_bytes(
-                held, kv_heads=cfg.cache_kv_heads, page_size=span, s=lex.s,
+                1, kv_heads=cfg.cache_kv_heads, page_size=span, s=lex.s,
                 n_b=lex.n_b, m=cfg.cached_vector_dim, val_bytes=val_bytes)
         return total
 
@@ -264,11 +336,25 @@ class ContinuousBatchingEngine:
                 # the free list — a re-bound page must never receive the idle
                 # row's write-backs
                 self.state = self._clear_fn(self.state, jnp.int32(slot))
+                # decref everything the slot held: exclusively-owned pages
+                # return to the free list, shared/aliased ones stay live
+                # under their other holders (surviving slots / prefix cache)
                 self.allocator.free(info.pages)
                 info.pages = []
+                info.pages_shared = 0
             self.scheduler.release(info.request)
             self.metrics.record_completion()
             self.completed[info.request.rid] = info
+
+    def _alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` pool pages, evicting cached (prefix-index-pinned)
+        pages LRU-first when the free list runs dry. Admission reserved
+        completion-time *new*-page counts against free + evictable, so the
+        eviction always recovers enough."""
+        if (n > self.allocator.n_free and self.prefix_index is not None):
+            self.prefix_index.evict(self.allocator,
+                                    max_pages=n - self.allocator.n_free)
+        return self.allocator.alloc(n)
 
     def _grow_pages(self, slot: int) -> None:
         """Lazy page growth: make sure ``slot``'s next compressed-token write
@@ -278,40 +364,141 @@ class ContinuousBatchingEngine:
         write_pos = info.cache_len - self.lex_cfg.n_b
         need = pages_needed(write_pos + 1, self.engine_cfg.page_size)
         while len(info.pages) < need:
-            (page,) = self.allocator.alloc(1)
+            (page,) = self._alloc(1)
             self.state = self._assign_fn(self.state, jnp.int32(slot),
                                          jnp.int32(len(info.pages)),
                                          jnp.int32(page))
             info.pages.append(page)
 
+    # -------------------------------------------------- prefix sharing bits
+
+    def _key_tokens(self, req: Request, bucket: int) -> np.ndarray:
+        """Cache-space token key for the prefix trie: the (identical for
+        every request) meta-token prefix as sentinels, then the prompt's
+        prefill bucket. Compressed position ``p`` holds the code of cache
+        token ``p``, so this sequence keys pages exactly."""
+        n_meta = self.cfg.num_meta_tokens
+        if n_meta:
+            meta = np.full((n_meta,), -1, np.int64)
+            return np.concatenate([meta, req.prompt[:bucket].astype(np.int64)])
+        return req.prompt[:bucket].astype(np.int64)
+
+    def _share_plan(self, req: Request) -> SharePlan:
+        """Look up the longest page-aligned shared prefix for ``req``'s
+        prefill bucket (codes past the bucket are decode-produced and never
+        shared — see ``PrefixIndex.register``)."""
+        bucket = _bucket(req.prompt_len, self.engine_cfg.min_bucket)
+        n_comp = self.cfg.num_meta_tokens + bucket - self.lex_cfg.n_b
+        return self.prefix_index.lookup(self._key_tokens(req, bucket),
+                                        req.tier, n_comp)
+
+    def _shared_peek(self, req: Request) -> Tuple[int, int, int]:
+        """Scheduler peek: (aliased pages, shared codes, pages the
+        admission will pin) for the head request. The pin count includes
+        the CoW source page — pinned pages can't be evicted to satisfy
+        this same admission's allocation, so the reservation check must
+        not count them as evictable. The plan is cached and consumed by
+        the subsequent ``_admit_one`` so lookup and commit can't
+        disagree."""
+        plan = self._share_plan(req)
+        self._pending_plans[req.rid] = plan
+        pinned = len(plan.aliased) + (1 if plan.copy_src is not None else 0)
+        return len(plan.aliased), plan.shared_codes, pinned
+
+    def _pool_state(self) -> Dict[str, int]:
+        """Live pool state for the scheduler's reservation check."""
+        owned = sum(self.pool.slots[i].pages_owned
+                    for i in self.pool.active_slots())
+        return {"free": self.allocator.n_free,
+                "evictable": self.prefix_index.evictable_pages(self.allocator),
+                "owned": owned}
+
+    # ------------------------------------------------------------ admission
+
     def _admit(self) -> None:
-        now = time.perf_counter()
-        for req in self.scheduler.admit(len(self.pool.free_slots())):
-            bucket = _bucket(req.prompt_len, self.engine_cfg.min_bucket)
-            tokens = jnp.asarray(req.prompt[:bucket][None], jnp.int32)
-            cap = jnp.full((1,), req.tier, jnp.int32)
-            logits, one = self._prefill_fn(self.params, self.bank, tokens, cap)
-            cache_len = self.cfg.num_meta_tokens + bucket
-            info = SlotInfo(request=req, fed=bucket, admit_time=now,
-                            cache_len=cache_len,
-                            pages_reserved=self.scheduler.projected_pages(req))
-            slot = self.pool.allocate(info)
-            if self.paged:
-                # pages covering the prefilled prompt's compressed span; the
-                # scheduler reserved the completion-time count, so this (and
-                # every later growth step) cannot exhaust the pool
-                n_prompt = pages_needed(cache_len - self.lex_cfg.n_b,
-                                        self.engine_cfg.page_size)
-                info.pages = self.allocator.alloc(n_prompt)
-                row = np.zeros((self._max_pages,), np.int32)
-                row[:n_prompt] = info.pages
-                self.state = self._write_fn(self.state, one, jnp.int32(slot),
-                                            jnp.asarray(row))
-            else:
-                self.state = self._write_fn(self.state, one, jnp.int32(slot))
-            self.metrics.record_admission(now - req.arrival_time)
-            self.metrics.prompt_tokens_processed += bucket
-            self._consume_logits(slot, np.asarray(logits[0]))
+        if self.prefix_index is None:
+            now = time.perf_counter()
+            for req in self.scheduler.admit(len(self.pool.free_slots())):
+                self._admit_one(req, now)
+            return
+        # sharing: admit one at a time so each reservation check and prefix
+        # lookup sees the pool state left by the previous splice
+        while self.pool.free_slots():
+            self._pending_plans.clear()
+            admitted = self.scheduler.admit(1, shared_fn=self._shared_peek,
+                                            pool_state_fn=self._pool_state)
+            if not admitted:
+                break
+            self._admit_one(admitted[0], time.perf_counter())
+
+    def _admit_one(self, req: Request, now: float) -> None:
+        """Prefill (possibly restarted past a shared prefix) + splice one
+        admitted request into a free slot."""
+        bucket = _bucket(req.prompt_len, self.engine_cfg.min_bucket)
+        cache_len = self.cfg.num_meta_tokens + bucket
+        n_comp = cache_len - self.lex_cfg.n_b
+        plan = self._pending_plans.pop(req.rid, None)
+        start = plan.shared_codes if plan is not None else 0
+
+        tokens = jnp.asarray(req.prompt[:bucket][None], jnp.int32)
+        cap = jnp.full((1,), req.tier, jnp.int32)
+        logits, one = self._prefill_fn(self.params, self.bank, tokens, cap,
+                                       int(start))
+        info = SlotInfo(request=req, fed=bucket, admit_time=now,
+                        cache_len=cache_len,
+                        pages_reserved=max(
+                            self.scheduler.projected_pages(req)
+                            - (len(plan.aliased) if plan else 0), 0))
+        slot = self.pool.allocate(info)
+        if self.paged:
+            # pages covering the prefilled prompt's compressed span; the
+            # scheduler reserved the completion-time count of NEW pages, so
+            # this (and every later growth step) cannot exhaust the pool
+            n_prompt = pages_needed(n_comp, self.engine_cfg.page_size)
+            aliased = list(plan.aliased) if plan is not None else []
+            copy_src = plan.copy_src if plan is not None else None
+            for p in aliased:
+                self.allocator.incref(p)
+            if copy_src is not None:
+                # pin the CoW source across the allocation: _alloc may evict
+                # index-only pages, and the source must not be freed and
+                # recycled as the very page we are about to copy into
+                self.allocator.incref(copy_src)
+            new_pages = self._alloc(n_prompt - len(aliased))
+            info.pages = aliased + new_pages
+            info.pages_shared = len(aliased)
+            if copy_src is not None:
+                # copy-on-write of the boundary page: the recipient appends
+                # into a private copy; the donor page stays immutable. The
+                # trash page can never be copied — it is never registered.
+                assert copy_src != NULL_PAGE and new_pages, \
+                    "CoW of the null/trash page is impossible"
+                self.state = self._copy_fn(self.state, jnp.int32(copy_src),
+                                           jnp.int32(new_pages[0]))
+                self.allocator.decref(copy_src)
+            row = np.zeros((self._max_pages,), np.int32)
+            row[:n_prompt] = info.pages
+            self.state = self._write_fn(self.state, one, jnp.int32(slot),
+                                        jnp.asarray(row),
+                                        jnp.int32(start))
+            if self.prefix_index is not None:
+                self.prefix_index.commit(plan if plan is not None
+                                         else SharePlan())
+                self.prefix_index.register(
+                    self._key_tokens(req, bucket), req.tier, info.pages,
+                    n_comp, self.allocator)
+                self.metrics.record_prefix_share(
+                    aliased=len(aliased),
+                    copied=1 if (plan and plan.copy_src is not None) else 0,
+                    skipped_codes=start,
+                    bytes_deduped=self.scheduler.shared_byte_discount(
+                        req, len(aliased)))
+        else:
+            self.state = self._write_fn(self.state, one, jnp.int32(slot))
+        self.metrics.record_admission(now - req.arrival_time)
+        self.metrics.prompt_tokens_processed += bucket
+        self.metrics.prefill_tokens_compressed += n_comp - start
+        self._consume_logits(slot, np.asarray(logits[0]))
 
     def step(self) -> bool:
         """Admit + advance every active slot one token. Returns True if any
@@ -349,11 +536,17 @@ class ContinuousBatchingEngine:
                 self.metrics.prompt_tokens_processed += 1
             self._consume_logits(i, logits_np[i])
 
+        shared_now = 0
+        if self.paged:
+            held = Counter(p for i in self.pool.active_slots()
+                           for p in self.pool.slots[i].pages)
+            shared_now = sum(1 for c in held.values() if c >= 2)
         self.metrics.sample_step(
             occupancy=self.pool.occupancy(),
             kv_bytes_in_flight=self.kv_bytes_in_flight(),
             kv_bytes_resident=self.kv_bytes_resident(),
-            pages_in_use=self.allocator.n_used if self.paged else 0)
+            pages_in_use=self.allocator.n_used if self.paged else 0,
+            shared_pages=shared_now)
         return bool(self.pool.active_slots()) or len(self.scheduler) > 0
 
     def run(self, max_steps: int = 100_000) -> Dict[int, SlotInfo]:

@@ -6,9 +6,14 @@ accounting over the *current* per-slot token counts (not the projected
 completion-time bytes the scheduler reserves), so the gap between the two is
 the admission controller's safety margin. ``kv_bytes_resident`` is what the
 same slots *hold* in their storage layout — pages actually bound under paged
-storage, full padded stripes under contiguous — i.e. the capacity a
+storage (deduplicated: a shared page counts once no matter how many slots
+alias it), full padded stripes under contiguous — i.e. the capacity a
 right-sized pool must provision; resident-vs-paper is the fragmentation cost
 of the storage layout.
+
+Prefix sharing adds admission-time counters: trie hits/misses, pages
+aliased / copied-on-write, compressed positions whose prefill OMP was
+skipped, and the paper-accounting bytes deduplicated by aliasing.
 """
 from __future__ import annotations
 
@@ -19,29 +24,67 @@ from typing import Dict, List
 
 @dataclasses.dataclass
 class EngineMetrics:
+    """Aggregates one engine's serving counters; ``to_dict`` summarizes.
+
+    Counter fields are plain ints bumped by the engine; ``*_samples`` lists
+    hold one entry per pooled decode step.
+    """
     started_at: float = dataclasses.field(default_factory=time.perf_counter)
     steps: int = 0
     prefills: int = 0
     tokens_generated: int = 0
     prompt_tokens_processed: int = 0
+    # compressed positions OMP-encoded at prefill vs skipped via sharing
+    prefill_tokens_compressed: int = 0
+    prefill_tokens_skipped: int = 0
     requests_completed: int = 0
+    # prefix sharing (admission-time)
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    pages_aliased: int = 0
+    pages_copied: int = 0
+    bytes_deduped: int = 0
     occupancy_samples: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_samples: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_resident_samples: List[int] = dataclasses.field(default_factory=list)
     pages_in_use_samples: List[int] = dataclasses.field(default_factory=list)
+    shared_pages_samples: List[int] = dataclasses.field(default_factory=list)
     queue_latency_s: List[float] = dataclasses.field(default_factory=list)
 
     def sample_step(self, *, occupancy: int, kv_bytes_in_flight: int,
-                    kv_bytes_resident: int = 0, pages_in_use: int = 0) -> None:
+                    kv_bytes_resident: int = 0, pages_in_use: int = 0,
+                    shared_pages: int = 0) -> None:
+        """Record one pooled decode step.
+
+        ``shared_pages``: physical pages currently referenced by >= 2
+        holders among live slots (the dedup the prefix cache is buying
+        right now).
+        """
         self.steps += 1
         self.occupancy_samples.append(occupancy)
         self.kv_bytes_samples.append(kv_bytes_in_flight)
         self.kv_bytes_resident_samples.append(kv_bytes_resident)
         self.pages_in_use_samples.append(pages_in_use)
+        self.shared_pages_samples.append(shared_pages)
 
     def record_admission(self, queue_latency_s: float) -> None:
+        """One request spliced into a slot (``queue_latency_s`` = time from
+        submission to admission)."""
         self.prefills += 1
         self.queue_latency_s.append(queue_latency_s)
+
+    def record_prefix_share(self, *, aliased: int, copied: int,
+                            skipped_codes: int, bytes_deduped: int) -> None:
+        """One admission's sharing outcome (no-op counters stay at zero when
+        sharing is off)."""
+        if aliased or copied or skipped_codes:
+            self.prefix_hits += 1
+        else:
+            self.prefix_misses += 1
+        self.pages_aliased += aliased
+        self.pages_copied += copied
+        self.prefill_tokens_skipped += skipped_codes
+        self.bytes_deduped += bytes_deduped
 
     def record_completion(self) -> None:
         self.requests_completed += 1
@@ -51,12 +94,15 @@ class EngineMetrics:
         return time.perf_counter() - self.started_at
 
     def to_dict(self) -> Dict:
+        """Summary dict: rates, means and peaks over the run so far."""
         el = max(self.elapsed_s, 1e-9)
         occ = self.occupancy_samples or [0]
         kvb = self.kv_bytes_samples or [0]
         res = self.kv_bytes_resident_samples or [0]
         pgs = self.pages_in_use_samples or [0]
+        shr = self.shared_pages_samples or [0]
         lat = self.queue_latency_s or [0.0]
+        lookups = self.prefix_hits + self.prefix_misses
         return {
             "elapsed_s": el,
             "steps": self.steps,
@@ -76,4 +122,15 @@ class EngineMetrics:
             "pages_in_use_peak": max(pgs),
             "queue_latency_s_mean": sum(lat) / len(lat),
             "queue_latency_s_max": max(lat),
+            # prefix sharing
+            "prefill_tokens_compressed": self.prefill_tokens_compressed,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "shared_page_hit_rate": (self.prefix_hits / lookups
+                                     if lookups else 0.0),
+            "pages_aliased": self.pages_aliased,
+            "pages_copied": self.pages_copied,
+            "bytes_deduped": self.bytes_deduped,
+            "shared_pages_peak": max(shr),
         }

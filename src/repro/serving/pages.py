@@ -12,9 +12,10 @@ Conventions:
     by idle rows are clamped onto it so they can never race with a live
     slot's data. It is never handed out, so usable capacity is
     ``n_pages - 1``.
-  * pages are refcounted. Plain admission takes one ref; ``incref`` exists so
-    future prefix-sharing can pin one page under several slots without the
-    allocator changing shape.
+  * pages are refcounted. Plain admission takes one ref; prefix sharing
+    (``repro.serving.prefix``) pins one physical page under several slots
+    via ``incref`` — the page returns to the free list only when the last
+    holder (slot or prefix-index cache entry) drops its reference.
 """
 from __future__ import annotations
 
@@ -27,6 +28,11 @@ class PagePoolExhausted(RuntimeError):
     """Raised when ``alloc`` is asked for more pages than are free."""
 
 
+class RefcountOverflow(RuntimeError):
+    """Raised when a page's refcount would exceed ``PageAllocator.MAX_REFS``
+    (a runaway incref loop — real sharing fan-out never gets close)."""
+
+
 def pages_needed(n_compressed_tokens: int, page_size: int) -> int:
     """Pages required to hold ``n_compressed_tokens`` sparse-coded vectors."""
     if n_compressed_tokens <= 0:
@@ -35,7 +41,15 @@ def pages_needed(n_compressed_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list + refcount allocator over page ids ``1..n_pages-1``."""
+    """Free-list + refcount allocator over page ids ``1..n_pages-1``.
+
+    Purely host-side: the device only ever sees page ids through table rows.
+    ``alloc`` hands out pages at refcount 1; ``incref``/``decref`` move the
+    count; a page is returned to the free list exactly when its count hits
+    zero. The null page 0 is never allocated, incref'd, or freed.
+    """
+
+    MAX_REFS = 1 << 16   # refcount ceiling (guards runaway incref loops)
 
     def __init__(self, n_pages: int, page_size: int):
         if n_pages < 2:
@@ -54,10 +68,12 @@ class PageAllocator:
 
     @property
     def n_free(self) -> int:
+        """Pages currently on the free list."""
         return len(self._free)
 
     @property
     def n_used(self) -> int:
+        """Pages currently allocated (refcount >= 1)."""
         return self.capacity - self.n_free
 
     def alloc(self, n: int = 1) -> List[int]:
@@ -74,12 +90,29 @@ class PageAllocator:
         return pages
 
     def incref(self, page: int) -> None:
+        """Pin ``page`` under one more holder (prefix sharing / cache entry).
+
+        Raises ``ValueError`` for the null page, ``KeyError`` for a page that
+        is not currently allocated (incref-after-free), and
+        ``RefcountOverflow`` past ``MAX_REFS``.
+        """
+        if page == NULL_PAGE:
+            raise ValueError("the null/trash page 0 cannot be shared")
         if page not in self._refs:
-            raise KeyError(f"page {page} is not allocated")
+            raise KeyError(f"page {page} is not allocated (incref after free?)")
+        if self._refs[page] >= self.MAX_REFS:
+            raise RefcountOverflow(
+                f"page {page} refcount would exceed {self.MAX_REFS}")
         self._refs[page] += 1
 
     def decref(self, page: int) -> None:
-        """Drop one reference; the page returns to the free list at zero."""
+        """Drop one reference; the page returns to the free list at zero.
+
+        Raises ``ValueError`` for the null page and ``KeyError`` when the
+        page holds no references (double free / refcount underflow).
+        """
+        if page == NULL_PAGE:
+            raise ValueError("the null/trash page 0 is never allocated")
         if page not in self._refs:
             raise KeyError(f"page {page} is not allocated (double free?)")
         self._refs[page] -= 1
@@ -88,10 +121,13 @@ class PageAllocator:
             self._free.append(page)
 
     def free(self, pages: List[int]) -> None:
+        """Decref every page in ``pages`` (shared pages survive under their
+        remaining holders; exclusively-held pages return to the free list)."""
         for p in pages:
             self.decref(p)
 
     def refcount(self, page: int) -> int:
+        """Current reference count (0 = free or never allocated)."""
         return self._refs.get(page, 0)
 
     def check_balanced(self) -> bool:

@@ -1,0 +1,322 @@
+"""Host-side prefix index: copy-on-write prefix sharing over the page pool.
+
+Lexico's universal dictionary makes compressed pages *input-agnostic*: the
+OMP code of cache position ``p`` is a deterministic function of the token
+prefix ``[0, p]`` (and the sparsity tier), independent of anything after it —
+causal masking zeroes suffix contributions exactly. Two requests that agree
+on a page-aligned token prefix therefore produce bitwise-identical sparse
+codes for those pages, so one physical page can serve both slots. This
+module is the host-side index that finds such prefixes at admission time.
+
+Structure: one radix trie per sparsity tier (codes depend on the tier's OMP
+atom cap, so tiers never share pages). Trie edges are keyed on **hashes of
+page-granularity token chunks** — the chunk of cache-space tokens a page's
+compressed positions cover — with the raw chunk stored on each node so a
+hash collision degrades to a miss, never to wrong sharing. A node at depth
+``j`` names the physical page holding compressed positions
+``[j*P, (j+1)*P)`` for every request whose tokens walk that path.
+
+Two kinds of reuse come out of a lookup (:class:`SharePlan`):
+
+  * **aliasing** — full pages of the shared prefix are mapped into the new
+    slot's page table as-is (``PageAllocator.incref``): zero bytes moved,
+    zero OMP re-run. Full pages are immutable once written (decode appends
+    only ever touch positions ``>= t_c``), so aliasing is race-free.
+  * **copy-on-write** — the *last, partially-filled* page of the shared
+    span cannot be aliased: the recipient's decode appends will land in it.
+    Instead the recipient gets a fresh page, the donor page is device-copied
+    into it (``repro.serving.slots.copy_page``) before any decode write
+    lands, and the copied codes are skipped from OMP like aliased ones.
+    The null/trash page 0 is never registered, aliased, or copied.
+
+The index *pins* every page it caches (one ``incref`` per registered node),
+so a donor's pages stay shareable after the donor retires — "recently
+retired" reuse. When the pool's free list runs dry the engine calls
+:meth:`PrefixIndex.evict`, which drops pins deepest-node-first in LRU order
+(a shallower pin is useless without its ancestors, never the reverse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.pages import NULL_PAGE, PageAllocator
+
+
+def _chunk_hash(tokens: Tuple[int, ...]) -> bytes:
+    """Stable digest of one page-granularity token chunk (trie edge key)."""
+    h = hashlib.blake2b(digest_size=16)
+    for t in tokens:
+        h.update(int(t).to_bytes(8, "little", signed=True))
+    return h.digest()
+
+
+@dataclasses.dataclass
+class _Node:
+    """One trie node = one cached physical page at one page position.
+
+    ``tokens`` is the raw chunk the edge hash was computed from (collision
+    guard); ``valid`` counts the page's positions holding prefill-produced
+    codes (``page_size`` for interior nodes, possibly less for a donor's
+    boundary page); ``last_used`` is a monotonic LRU stamp.
+    """
+    tokens: Tuple[int, ...]
+    page: int
+    valid: int
+    last_used: int = 0
+    children: Dict[bytes, "_Node"] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SharePlan:
+    """What a lookup found for one admission.
+
+    ``aliased`` — physical pages (in page-table order, from position 0) the
+    new slot maps as-is. ``copy_src``/``copy_valid`` — donor page to CoW
+    into the slot's boundary table entry ``len(aliased)``, holding
+    ``copy_valid >= shared_codes - len(aliased)*page_size`` valid codes.
+    ``shared_codes`` — compressed positions whose OMP the recipient skips;
+    the restartable prefill starts at ``len(aliased) * page_size`` (page
+    aligned) unless the copy covers the whole remainder, in which case it
+    starts at ``shared_codes`` (== the slot's entire compressed span).
+
+    ``lookup`` is side-effect free (admission peeks may run many times for
+    a budget-blocked queue head); pass the plan to
+    :meth:`PrefixIndex.commit` when the admission actually happens to
+    record the hit/miss and refresh the matched nodes' LRU stamps.
+    """
+    aliased: List[int] = dataclasses.field(default_factory=list)
+    copy_src: Optional[int] = None
+    copy_valid: int = 0
+    shared_codes: int = 0
+    # trie nodes the plan matched (LRU-stamped on commit, not on lookup)
+    nodes: List["_Node"] = dataclasses.field(default_factory=list, repr=False)
+
+    @property
+    def hit(self) -> bool:
+        return self.shared_codes > 0
+
+
+class PrefixIndex:
+    """Radix trie over page-granularity token-chunk hashes, one per tier."""
+
+    def __init__(self, page_size: int, *, max_cached_pages: Optional[int] = None):
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.page_size = page_size
+        self.max_cached_pages = max_cached_pages
+        self._roots: Dict[int, _Node] = {}   # tier -> structural root
+        self._registered: Dict[int, _Node] = {}  # page id -> owning node
+        self._clock = 0
+
+    # ------------------------------------------------------------- internals
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _root(self, tier: int) -> _Node:
+        if tier not in self._roots:
+            self._roots[tier] = _Node(tokens=(), page=NULL_PAGE, valid=0)
+        return self._roots[tier]
+
+    @staticmethod
+    def _chunks(tokens: Sequence[int], page_size: int):
+        toks = tuple(int(t) for t in tokens)
+        return [toks[i:i + page_size]
+                for i in range(0, len(toks), page_size)]
+
+    # ------------------------------------------------------------------- API
+
+    def n_cached_pages(self) -> int:
+        """Distinct physical pages currently pinned by the index."""
+        return len(self._registered)
+
+    def evictable_pages(self, allocator: PageAllocator) -> int:
+        """Pages whose *only* reference is the index's pin — evicting them
+        actually returns pages to the free list (pages also held by live
+        slots stay resident regardless)."""
+        return sum(1 for p in self._registered if allocator.refcount(p) == 1)
+
+    def lookup(self, tokens: Sequence[int], tier: int, n_codes: int) -> SharePlan:
+        """Find the longest page-aligned shared prefix for an admission.
+
+        Args:
+          tokens: cache-space token ids covering at least ``[0, n_codes)``
+            (meta-token sentinels + prompt tokens, NOT generated tokens).
+          tier: the request's sparsity tier (tiers never share pages).
+          n_codes: the slot's compressed span at prefill time
+            (``n_meta + bucket - n_b``) — sharing never extends past it.
+
+        Pure read: LRU stamps move only when the plan is
+        :meth:`commit`-ted, so repeated peeks for a budget-blocked queue
+        head don't pin its subtree as MRU. Hit/miss *statistics* are the
+        engine's business (``EngineMetrics.record_prefix_share``) — the
+        index keeps none, so there is exactly one source of truth.
+        """
+        plan = SharePlan()
+        node = self._roots.get(tier)
+        P = self.page_size
+        if node is None or n_codes <= 0:
+            return plan
+        chunks = self._chunks(tokens[:n_codes], P)
+        # walk full pages: page j is aliasable iff wholly inside n_codes
+        j = 0
+        while (j + 1) * P <= n_codes:
+            child = node.children.get(_chunk_hash(chunks[j]))
+            if child is None or child.tokens != chunks[j] or child.valid < P:
+                break
+            plan.aliased.append(child.page)
+            plan.nodes.append(child)
+            node = child
+            j += 1
+        rem = n_codes - j * P
+        if 0 < rem:
+            # boundary: a page whose first `rem` codes match can be CoW'd.
+            # Full children qualify (valid == P >= rem); a donor's partial
+            # boundary page qualifies when its valid span covers rem.
+            want = tuple(chunks[j][:rem]) if j < len(chunks) else ()
+            best = None
+            for child in node.children.values():
+                if child.valid >= rem and child.tokens[:rem] == want:
+                    if best is None or child.last_used > best.last_used:
+                        best = child
+            if best is not None:
+                plan.nodes.append(best)
+                plan.copy_src = best.page
+                plan.copy_valid = best.valid
+                plan.shared_codes = j * P + rem
+        if plan.shared_codes == 0:
+            plan.shared_codes = j * P
+        return plan
+
+    def commit(self, plan: SharePlan) -> None:
+        """Record an admission that used ``plan``: refresh the matched
+        nodes' LRU stamps (hit/miss counting lives in ``EngineMetrics``)."""
+        now = self._tick()
+        for node in plan.nodes:
+            node.last_used = now
+
+    def register(self, tokens: Sequence[int], tier: int, pages: Sequence[int],
+                 n_codes: int, allocator: PageAllocator) -> int:
+        """Publish a freshly-prefilled slot's pages for future sharing.
+
+        Args:
+          tokens: cache-space tokens covering ``[0, n_codes)``.
+          pages: the slot's page-table prefix — ``pages[j]`` holds compressed
+            positions ``[j*P, (j+1)*P)``; ``ceil(n_codes / P)`` entries used.
+          n_codes: prefill-produced compressed positions (``n_meta + bucket -
+            n_b``). Decode-produced codes are never registered: they are
+            computed through the compressed-attention path and would not be
+            bitwise-reproducible by another request's prefill.
+          allocator: pins each newly-registered page with one ``incref``.
+
+        Pages already cached at their position (a donor's) are left in place
+        — the recipient's aliased entries are the donor's pages anyway.
+        Returns the number of pages newly pinned.
+        """
+        P = self.page_size
+        chunks = self._chunks(tokens[:n_codes], P)
+        node = self._root(tier)
+        now = self._tick()
+        pinned = 0
+        n_pages = -(-n_codes // P) if n_codes > 0 else 0
+        for j in range(n_pages):
+            page = int(pages[j])
+            valid = min(n_codes - j * P, P)
+            if page == NULL_PAGE:
+                raise ValueError("cannot register the null/trash page 0")
+            key = _chunk_hash(chunks[j])
+            child = node.children.get(key)
+            if child is not None and child.tokens == chunks[j]:
+                # already cached at this position (equal tokens imply equal
+                # valid span — a longer-covered page hashes to a sibling
+                # key, it never replaces this node)
+                child.last_used = now
+                node = child
+                continue
+            if child is not None:      # hash collision with different tokens
+                break
+            if page in self._registered:   # one pin per physical page
+                break
+            child = _Node(tokens=chunks[j], page=page, valid=valid,
+                          last_used=now)
+            node.children[key] = child
+            self._registered[page] = child
+            allocator.incref(page)
+            pinned += 1
+            node = child
+        if self.max_cached_pages is not None:
+            over = len(self._registered) - self.max_cached_pages
+            if over > 0:
+                self.evict(allocator, max_pages=over, only_free=False)
+        return pinned
+
+    def _unpin(self, node: _Node, allocator: PageAllocator) -> bool:
+        """Drop the index's pin on ``node``'s page. True iff the page
+        actually returned to the free list (no slot was holding it)."""
+        page = node.page
+        del self._registered[page]
+        freed = allocator.refcount(page) == 1
+        allocator.decref(page)
+        node.page, node.valid = NULL_PAGE, 0
+        return freed
+
+    def evict(self, allocator: PageAllocator, *, max_pages: int,
+              only_free: bool = True) -> int:
+        """Drop cached-page pins in LRU order until ``max_pages`` pages have
+        returned to the free list (or nothing more can be evicted).
+
+        Eviction is *subtree*-granular: a cached page is only reachable
+        through its whole ancestor path, so the LRU victim (stamped by the
+        newest use anywhere below it) is removed together with everything
+        under it — pins are never stranded. ``only_free=True`` (the
+        free-list-ran-dry path) skips subtrees whose removal would free
+        nothing (every page in them still aliased by a live slot);
+        ``only_free=False`` (capacity trim) drops them regardless.
+        Returns the number of pages actually freed.
+        """
+        freed = unpinned = 0
+        while (freed if only_free else unpinned) < max_pages:
+            # candidate = one directly-under-root subtree per tier trie,
+            # stamped with the newest last_used anywhere inside it
+            candidates: List[Tuple[int, int, _Node, bytes]] = []
+            for root in self._roots.values():
+                for key, child in root.children.items():
+                    stamp = max(n.last_used for n in self._iter_subtree(child))
+                    candidates.append((stamp, id(child), root, key))
+            candidates.sort(key=lambda c: (c[0], c[1]))
+            progressed = False
+            for _, _, parent, key in candidates:
+                subtree = list(self._iter_subtree(parent.children[key]))
+                would_free = sum(1 for n in subtree if n.page != NULL_PAGE
+                                 and allocator.refcount(n.page) == 1)
+                if only_free and would_free == 0:
+                    continue
+                for n in subtree:
+                    if n.page != NULL_PAGE:
+                        unpinned += 1
+                        if self._unpin(n, allocator):
+                            freed += 1
+                del parent.children[key]
+                progressed = True
+                break
+            if not progressed:
+                break
+        return freed
+
+    @staticmethod
+    def _iter_subtree(node: _Node):
+        yield node
+        for child in node.children.values():
+            yield from PrefixIndex._iter_subtree(child)
+
+    def clear(self, allocator: PageAllocator) -> int:
+        """Drop every pin (leak checks / shutdown). Returns pages freed."""
+        freed = 0
+        for node in list(self._registered.values()):
+            if self._unpin(node, allocator):
+                freed += 1
+        self._roots.clear()
+        return freed

@@ -16,11 +16,11 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import sparse_cache
+from repro.core import quant, sparse_cache
 
 
 @dataclasses.dataclass
@@ -90,6 +90,20 @@ class FCFSScheduler:
     the *pages* admitted in flight, so lazy per-step page growth can never
     exhaust the device pool mid-decode. ``meta_tokens`` (model meta-token
     prefix) rides along in every projection.
+
+    Prefix sharing (``admit``'s ``shared_fn``): a request whose prompt
+    prefix is already resident as shared pages is charged only for its *new*
+    pages/bytes — the aliased pages are some earlier admission's (or the
+    prefix cache's) to account for. The per-request charge is remembered so
+    ``release`` returns exactly what was taken even though the index state
+    has moved on. Because aliased pages stay resident past their charger's
+    release, the plain ``pages_admitted <= page_budget`` check is no longer
+    a pool-occupancy proof; a sharing engine therefore supplies
+    ``pool_state_fn`` and admission switches to a reservation check against
+    the allocator's live state: a request fits iff its new pages plus every
+    live slot's still-unallocated reservation fit in the free list plus
+    what the prefix cache could evict (minus what this admission is about
+    to pin).
     """
 
     def __init__(self, *, kv_byte_budget: Optional[int], n_b: int, m: int,
@@ -104,10 +118,12 @@ class FCFSScheduler:
         self.page_budget = page_budget
         self.meta_tokens = meta_tokens
         self.queue: Deque[Request] = deque()
-        self.bytes_admitted = 0          # projected bytes of in-flight requests
-        self.pages_admitted = 0          # projected pages (paged mode only)
+        self.bytes_admitted = 0          # charged bytes of in-flight requests
+        self.pages_admitted = 0          # charged pages (paged mode only)
+        self._charged: Dict[int, Tuple[int, int]] = {}  # rid -> (bytes, pages)
 
     def submit(self, req: Request) -> None:
+        """Append ``req`` to the FCFS queue (no admission check here)."""
         self.queue.append(req)
 
     def __len__(self) -> int:
@@ -125,37 +141,93 @@ class FCFSScheduler:
             num_layers=self.num_layers, kv_heads=self.kv_heads, codec=self.codec)
 
     def projected_pages(self, req: Request) -> int:
+        """Completion-time page count of ``req`` (0 outside paged mode)."""
         if self.page_size is None:
             return 0
         return request_page_count(req.total_tokens + self.meta_tokens,
                                   n_b=self.n_b, page_size=self.page_size)
 
-    def _fits(self, req: Request) -> bool:
+    def shared_byte_discount(self, req: Request, aliased_pages: int) -> int:
+        """Paper-accounting bytes ``req`` does NOT newly occupy because
+        ``aliased_pages`` full pages of its compressed span are physical
+        pages it shares with earlier admissions (the copy-on-write boundary
+        page is a private copy and gets no discount)."""
+        if aliased_pages <= 0 or self.page_size is None:
+            return 0
+        codes = aliased_pages * self.page_size
+        return (self.num_layers * self.kv_heads
+                * 2 * codes * quant.payload_bytes(req.tier, self.codec))
+
+    def _fits(self, req: Request, charge_bytes: int, charge_pages: int,
+              pinned: int, pool_state_fn) -> bool:
         if (self.kv_byte_budget is not None and
-                self.bytes_admitted + self.projected_bytes(req)
-                > self.kv_byte_budget):
+                self.bytes_admitted + charge_bytes > self.kv_byte_budget):
             return False
-        if (self.page_budget is not None and
-                self.pages_admitted + self.projected_pages(req)
-                > self.page_budget):
-            return False
+        if self.page_budget is not None:
+            if pool_state_fn is not None:
+                # reservation check against live pool state (prefix sharing):
+                # outstanding = charged-but-not-yet-allocated pages of every
+                # in-flight request; evictable is reduced by every page this
+                # admission is about to pin — aliased pages AND the CoW
+                # source (conservative: they may not have been evictable,
+                # but once pinned the only_free eviction path cannot
+                # reclaim them to satisfy this admission's allocation)
+                st = pool_state_fn()
+                outstanding = self.pages_admitted - st["owned"]
+                available = st["free"] + max(st["evictable"] - pinned, 0)
+                if charge_pages + outstanding > available:
+                    return False
+            elif self.pages_admitted + charge_pages > self.page_budget:
+                return False
         return True
 
-    def admit(self, free_slots: int) -> List[Request]:
-        """Pop the FCFS prefix that fits (slots, bytes and pages). Head-of-
-        line blocking: stop at the first request that doesn't fit."""
+    def admit(self, free_slots: int,
+              shared_fn: Optional[
+                  Callable[[Request], Tuple[int, int, int]]] = None,
+              pool_state_fn: Optional[Callable[[], Dict[str, int]]] = None,
+              ) -> List[Request]:
+        """Pop the FCFS prefix that fits (slots, bytes and pages).
+
+        Args:
+          free_slots: slots the engine has open right now.
+          shared_fn: prefix-sharing peek — maps a request to
+            ``(aliased_pages, shared_codes, pinned_pages)`` it would reuse
+            if admitted now; ``pinned_pages`` additionally counts the
+            copy-on-write source page, which the admission pins but does
+            not alias. The charge recorded for the request covers only
+            what is new: ``projected_pages - aliased_pages`` pages and
+            ``projected_bytes - shared_byte_discount`` bytes.
+          pool_state_fn: live pool state for the reservation check (see
+            class docstring): ``{"free": .., "evictable": .., "owned": ..}``
+            where ``owned`` totals pages already allocated by live slots
+            against their charges.
+
+        Head-of-line blocking: stops at the first request that doesn't fit.
+        Returns the admitted requests in FCFS order.
+        """
         admitted: List[Request] = []
         while self.queue and len(admitted) < free_slots:
             head = self.queue[0]
-            if not self._fits(head):
+            aliased = shared = pinned = 0
+            if shared_fn is not None:
+                aliased, shared, pinned = shared_fn(head)
+            charge_bytes = (self.projected_bytes(head)
+                            - self.shared_byte_discount(head, aliased))
+            charge_pages = max(self.projected_pages(head) - aliased, 0)
+            if not self._fits(head, charge_bytes, charge_pages, pinned,
+                              pool_state_fn):
                 break
             self.queue.popleft()
-            self.bytes_admitted += self.projected_bytes(head)
-            self.pages_admitted += self.projected_pages(head)
+            self.bytes_admitted += charge_bytes
+            self.pages_admitted += charge_pages
+            self._charged[head.rid] = (charge_bytes, charge_pages)
             admitted.append(head)
         return admitted
 
     def release(self, req: Request) -> None:
-        """Return a finished (or failed) request's projected bytes/pages."""
-        self.bytes_admitted = max(0, self.bytes_admitted - self.projected_bytes(req))
-        self.pages_admitted = max(0, self.pages_admitted - self.projected_pages(req))
+        """Return a finished (or failed) request's charged bytes/pages —
+        exactly the amounts ``admit`` recorded for it."""
+        charge_bytes, charge_pages = self._charged.pop(
+            req.rid, (self.projected_bytes(req), self.projected_pages(req)))
+        self.bytes_admitted = max(0, self.bytes_admitted - charge_bytes)
+        self.pages_admitted = max(0, self.pages_admitted - charge_pages)

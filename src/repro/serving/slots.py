@@ -8,12 +8,16 @@ splices a freshly prefilled B=1 state into row ``slot`` of the pool with one
 jitted (traced-index) update — admitting a request is O(slot bytes), not
 O(pool bytes), and never triggers retracing.
 
-Paged storage adds four more traced-index device ops (each compiled once):
+Paged storage adds five more traced-index device ops (each compiled once):
 
   * ``write_slot_paged``  — splice a B=1 contiguous prefill result into the
-    shared page pool through a freshly allocated page-table row;
+    shared page pool through a freshly allocated page-table row; a traced
+    ``start`` masks the scatter below it so table entries aliasing another
+    slot's pages (prefix sharing) are never written;
   * ``assign_page``       — grow a live slot by one page (decode crossed a
     page boundary);
+  * ``copy_page``         — clone one pool page's sparse stores into another
+    (copy-on-write of the last partially-filled shared page);
   * ``clear_slot_paged``  — zero a retired slot's counters + table row so its
     now-freed pages can be rebound to another slot without the idle row's
     write-backs racing the new owner;
@@ -21,7 +25,8 @@ Paged storage adds four more traced-index device ops (each compiled once):
     state (debug / migration).
 
 Which page ids a slot holds is decided host-side (``SlotInfo.pages`` +
-``repro.serving.pages.PageAllocator``); the device only ever sees table rows.
+``repro.serving.pages.PageAllocator`` + ``repro.serving.prefix``); the
+device only ever sees table rows.
 """
 from __future__ import annotations
 
@@ -39,17 +44,31 @@ from repro.serving.scheduler import Request
 
 @dataclasses.dataclass
 class SlotInfo:
-    """Host-side progress of the request bound to one slot."""
+    """Host-side progress of the request bound to one slot.
+
+    Fields:
+      request: the :class:`~repro.serving.scheduler.Request` being served.
+      fed: prompt tokens consumed so far (prefill bucket + streamed).
+      generated: tokens sampled so far; ``generated_tokens`` collects them.
+      pending: sampled token not yet fed back through decode.
+      pages: pool pages bound in this slot's table row, in table order
+        (paged layout; a host mirror of the device row). The first
+        ``pages_shared`` of them are *aliased* — owned jointly with other
+        slots and/or the prefix index via refcounts, never written by this
+        slot, and not counted against its admission reservation.
+      pages_reserved: completion-time NEW-page reservation the scheduler
+        charged at admission (aliased pages excluded).
+      cache_len: host mirror of the device-side ``length`` row — drives
+        lazy page growth without a device sync.
+    """
     request: Request
     fed: int                      # prompt tokens consumed so far
     generated: int = 0
     generated_tokens: Optional[List[int]] = None
     admit_time: float = 0.0
     pending: Optional[int] = None  # sampled token not yet fed back
-    # paged layout: pool pages this slot holds (host mirror of its table row),
-    # how many the scheduler reserved for it, and a host mirror of the
-    # device-side length row (drives lazy page growth without a device sync)
     pages: Optional[List[int]] = None
+    pages_shared: int = 0
     pages_reserved: int = 0
     cache_len: int = 0
 
@@ -58,6 +77,12 @@ class SlotInfo:
             self.generated_tokens = []
         if self.pages is None:
             self.pages = []
+
+    @property
+    def pages_owned(self) -> int:
+        """Pages this slot allocated for itself (counted against its
+        admission reservation); aliased shared-prefix pages are excluded."""
+        return len(self.pages) - self.pages_shared
 
     @property
     def in_prompt_phase(self) -> bool:
@@ -76,15 +101,20 @@ class SlotPool:
         self.slots: List[Optional[SlotInfo]] = [None] * n_slots
 
     def free_slots(self) -> List[int]:
+        """Indices of unoccupied slots (ascending)."""
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def active_slots(self) -> List[int]:
+        """Indices of occupied slots (ascending)."""
         return [i for i, s in enumerate(self.slots) if s is not None]
 
     def occupancy(self) -> int:
+        """Number of occupied slots."""
         return self.n_slots - len(self.free_slots())
 
     def allocate(self, info: SlotInfo) -> int:
+        """Bind ``info`` to the lowest free slot; returns its index.
+        Raises ``RuntimeError`` when the pool is full."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slots")
@@ -93,6 +123,8 @@ class SlotPool:
         return slot
 
     def retire(self, slot: int) -> SlotInfo:
+        """Unbind and return slot ``slot``'s ``SlotInfo``. Raises
+        ``KeyError`` if the slot is already empty (double retire)."""
         info = self.slots[slot]
         if info is None:
             raise KeyError(f"slot {slot} is empty")
@@ -144,14 +176,25 @@ def read_slot(pool: ServeState, slot) -> ServeState:
 # ---------------------------------------------------------------------------
 
 def write_slot_paged(pool: ServeState, one: ServeState, slot,
-                     page_row) -> ServeState:
+                     page_row, start=0) -> ServeState:
     """Splice a B=1 *contiguous* prefill result into the paged pool.
 
-    ``pool.cache`` is a stacked ``PagedLexicoLayerCache``; ``one.cache`` is
-    the stacked contiguous B=1 state the (oracle) prefill path produced.
-    ``page_row`` (max_pages,) int32 names the pages the host allocated for
-    this slot, padded with the null page — stripe positions past the
-    allocated pages land on the trash page (they are beyond ``t_c``).
+    Args:
+      pool: pooled state whose ``cache`` is a stacked (L, ...)
+        ``PagedLexicoLayerCache``.
+      one: B=1 state the contiguous (oracle) prefill path produced — its
+        cache leaves are ``(L, 1, KV, T1, s)`` stores plus ``(L, 1, ...)``
+        buffers/counters.
+      slot: traced int32 — destination pool row.
+      page_row: ``(max_pages,)`` int32 — pages the host bound for this slot,
+        padded with the null page; stripe positions past the bound pages
+        land on the trash page (they are beyond ``t_c``).
+      start: traced int32 — first compressed position to scatter. Positions
+        below it are redirected to the trash page: under prefix sharing the
+        table entries below ``start // page_size`` alias pages owned by
+        other slots (or a CoW copy installed separately), and the splice
+        must never write them. One compile serves every ``start``.
+
     The splice is O(slot bytes): the prompt stripe scatters into the slot's
     own pages, every other leaf is a row update at a traced index.
     """
@@ -165,6 +208,7 @@ def write_slot_paged(pool: ServeState, one: ServeState, slot,
     t = jnp.arange(T1)
     pg = jnp.clip(page_row[jnp.clip(t // P, 0, page_row.shape[0] - 1)],
                   0, n_pages - 1)                        # (T1,)
+    pg = jnp.where(t >= jnp.asarray(start, jnp.int32), pg, 0)
     off = t % P
 
     def scatter(pool_l, dense_l):
@@ -208,6 +252,36 @@ def assign_page(pool: ServeState, slot, page_pos, page_id) -> ServeState:
          jnp.asarray(page_pos, jnp.int32)))
     return ServeState(cache=pc._replace(page_table=table),
                       length=pool.length, cross=pool.cross)
+
+
+def copy_page(pool: ServeState, src, dst) -> ServeState:
+    """Clone pool page ``src``'s sparse stores into page ``dst`` across all
+    layers (copy-on-write of a partially-filled shared page: the recipient
+    slot gets a private copy it may append into, the donor page stays
+    immutable under its other holders).
+
+    Both indices are traced int32 — one compile serves every (src, dst)
+    pair. Callers must never pass the null/trash page 0 for either side;
+    that is enforced host-side (``repro.serving.engine`` /
+    ``repro.serving.prefix``) since traced values cannot be validated here.
+    """
+    pc = pool.cache
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def clone(store):
+        # store: (L, n_pages, KV, P, s)
+        L, _, KV, P, s = store.shape
+        page = jax.lax.dynamic_slice(store, (jnp.int32(0), src, jnp.int32(0),
+                                             jnp.int32(0), jnp.int32(0)),
+                                     (L, 1, KV, P, s))
+        return jax.lax.dynamic_update_slice(
+            store, page, (jnp.int32(0), dst, jnp.int32(0), jnp.int32(0),
+                          jnp.int32(0)))
+
+    cache = pc._replace(k_vals=clone(pc.k_vals), k_idx=clone(pc.k_idx),
+                        v_vals=clone(pc.v_vals), v_idx=clone(pc.v_idx))
+    return ServeState(cache=cache, length=pool.length, cross=pool.cross)
 
 
 def clear_slot_paged(pool: ServeState, slot) -> ServeState:

@@ -1,0 +1,545 @@
+"""Copy-on-write prefix sharing: the differential + edge-case harness.
+
+Sharing rewires admission (restartable prefill, page-table aliasing, CoW of
+the boundary page, charge-only-new-pages budgets), so the proof obligations
+are:
+
+  * differential — an engine run with ``share_prefixes=True`` over requests
+    sharing a page-aligned prompt prefix emits tokens *bitwise identical* to
+    the unshared run, while strictly fewer prompt positions go through the
+    prefill OMP and >= 1 physical page is referenced by >= 2 slots;
+  * restartable prefill — ``prefill_compress(start=c)`` produces the same
+    tail codes as a full encode, bitwise, in both layouts;
+  * allocator hardening — refcount overflow/underflow, double free of a
+    shared page, incref-after-free, and null-page sharing all raise;
+    copy-on-write of the trash page 0 is impossible (it is never
+    registered, aliased, or handed out);
+  * retire-while-shared — a donor retiring keeps every shared page live for
+    the surviving slots and the prefix cache; the pool only balances after
+    the index drops its pins;
+  * eviction — when the free list runs dry, cached (index-pinned) pages are
+    evicted LRU-first and admissions still complete.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.conftest import make_unit_dict
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.core import sparse_cache as sc
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, NULL_PAGE, PageAllocator,
+    PrefixIndex, RefcountOverflow, Request, SharePlan,
+)
+from repro.serving import slots as slots_mod
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex (host-side radix trie)
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_register_lookup_full_and_partial():
+    a = PageAllocator(16, 4)
+    idx = PrefixIndex(4)
+    pages = a.alloc(3)                      # covers 10 codes: 2 full + 1 partial
+    toks = list(range(100, 110))
+    assert idx.register(toks, tier=8, pages=pages, n_codes=10, allocator=a) == 3
+    for p in pages:
+        assert a.refcount(p) == 2           # slot + index pin
+
+    # same tokens, same span: full pages aliased, boundary page CoW'd
+    plan = idx.lookup(toks, tier=8, n_codes=10)
+    assert plan.aliased == pages[:2]
+    assert plan.copy_src == pages[2] and plan.copy_valid == 2
+    assert plan.shared_codes == 10 and plan.hit
+
+    # shorter page-aligned prefix: aliasing only
+    plan = idx.lookup(toks[:8], tier=8, n_codes=8)
+    assert plan.aliased == pages[:2] and plan.copy_src is None
+    assert plan.shared_codes == 8
+
+    # diverging tokens inside the first page: no sharing
+    bad = [1] + toks[1:]
+    plan = idx.lookup(bad, tier=8, n_codes=10)
+    assert not plan.hit and plan.aliased == []
+
+    # diverging only in the partial region: full pages still alias
+    bad_tail = toks[:9] + [999]
+    plan = idx.lookup(bad_tail, tier=8, n_codes=10)
+    assert plan.aliased == pages[:2] and plan.copy_src is None
+
+    # a different tier never shares (codes depend on the OMP atom cap)
+    plan = idx.lookup(toks, tier=4, n_codes=10)
+    assert not plan.hit
+
+
+def test_prefix_index_boundary_cow_from_full_page():
+    """A recipient whose compressed span ends inside a page can CoW a
+    *full* cached page whose leading codes match."""
+    a = PageAllocator(16, 4)
+    idx = PrefixIndex(4)
+    pages = a.alloc(2)
+    toks = list(range(8))
+    idx.register(toks, tier=8, pages=pages, n_codes=8, allocator=a)
+    plan = idx.lookup(toks[:6], tier=8, n_codes=6)
+    assert plan.aliased == pages[:1]
+    assert plan.copy_src == pages[1] and plan.copy_valid == 4
+    assert plan.shared_codes == 6
+
+
+def test_prefix_index_lookup_is_pure_peek():
+    """Repeated lookups (a budget-blocked queue head re-peeking every step)
+    must not refresh LRU stamps — only commit does. Otherwise a forever-
+    blocked head would keep its subtree MRU and starve eviction of
+    genuinely reused prefixes."""
+    a = PageAllocator(32, 4)
+    idx = PrefixIndex(4)
+    blocked = a.alloc(1)
+    idx.register(list(range(4)), tier=8, pages=blocked, n_codes=4, allocator=a)
+    used = a.alloc(1)
+    idx.register(list(range(10, 14)), tier=8, pages=used, n_codes=4,
+                 allocator=a)
+    a.free(blocked)
+    a.free(used)
+    idx.commit(idx.lookup(list(range(10, 14)), tier=8, n_codes=4))
+    for _ in range(5):          # peeks for the blocked head: no commit
+        assert idx.lookup(list(range(4)), tier=8, n_codes=4).hit
+    assert idx.evict(a, max_pages=1) == 1
+    # the peeked-but-never-admitted prefix was evicted, the committed one
+    # survives
+    assert not idx.lookup(list(range(4)), tier=8, n_codes=4).hit
+    assert idx.lookup(list(range(10, 14)), tier=8, n_codes=4).hit
+    idx.clear(a)
+    assert a.check_balanced()
+
+
+def test_prefix_index_never_registers_null_page():
+    a = PageAllocator(8, 4)
+    idx = PrefixIndex(4)
+    with pytest.raises(ValueError, match="null/trash"):
+        idx.register([1, 2, 3, 4], tier=8, pages=[NULL_PAGE], n_codes=4,
+                     allocator=a)
+
+
+def test_prefix_index_eviction_frees_lru_first():
+    a = PageAllocator(16, 4)
+    idx = PrefixIndex(4)
+    old = a.alloc(2)
+    idx.register([0, 1, 2, 3, 4, 5, 6, 7], tier=8, pages=old, n_codes=8,
+                 allocator=a)
+    new = a.alloc(2)
+    idx.register([9, 1, 2, 3, 4, 5, 6, 7], tier=8, pages=new, n_codes=8,
+                 allocator=a)
+    a.free(old)      # donors retire: only the index pins their pages now
+    a.free(new)
+    # refresh `new`'s LRU stamp the way an admission would: lookup + commit
+    idx.commit(idx.lookup([9, 1, 2, 3, 4, 5, 6, 7], tier=8, n_codes=8))
+    assert idx.evictable_pages(a) == 4
+    freed = idx.evict(a, max_pages=2)
+    assert freed == 2
+    # LRU subtree (the `old` family) went first; `new` still cached
+    assert idx.lookup([9, 1, 2, 3, 4, 5, 6, 7], tier=8, n_codes=8).hit
+    assert not idx.lookup([0, 1, 2, 3, 4, 5, 6, 7], tier=8, n_codes=8).hit
+    assert idx.clear(a) == 2
+    assert a.check_balanced()
+
+
+def test_prefix_index_evict_skips_slot_held_pages():
+    """only_free eviction never drops pins whose removal frees nothing —
+    pages aliased by live slots stay cached."""
+    a = PageAllocator(16, 4)
+    idx = PrefixIndex(4)
+    pages = a.alloc(2)
+    idx.register(list(range(8)), tier=8, pages=pages, n_codes=8, allocator=a)
+    # pages still held by the (live) donor slot: refcount 2 each
+    assert idx.evictable_pages(a) == 0
+    assert idx.evict(a, max_pages=2) == 0
+    assert idx.lookup(list(range(8)), tier=8, n_codes=8).hit
+    a.free(pages)
+    assert idx.evict(a, max_pages=2) == 2
+    assert a.check_balanced()
+
+
+def test_prefix_index_max_cached_pages_trims():
+    a = PageAllocator(32, 4)
+    idx = PrefixIndex(4, max_cached_pages=2)
+    p1 = a.alloc(2)
+    idx.register(list(range(8)), tier=8, pages=p1, n_codes=8, allocator=a)
+    p2 = a.alloc(2)
+    idx.register(list(range(10, 18)), tier=8, pages=p2, n_codes=8, allocator=a)
+    assert idx.n_cached_pages() <= 2
+
+
+# ---------------------------------------------------------------------------
+# allocator hardening (refcount edges prefix sharing stresses)
+# ---------------------------------------------------------------------------
+
+def test_incref_null_page_impossible():
+    a = PageAllocator(8, 4)
+    with pytest.raises(ValueError, match="null/trash"):
+        a.incref(NULL_PAGE)
+    with pytest.raises(ValueError, match="null/trash"):
+        a.decref(NULL_PAGE)
+
+
+def test_incref_after_free_raises():
+    a = PageAllocator(8, 4)
+    (p,) = a.alloc(1)
+    a.decref(p)
+    with pytest.raises(KeyError, match="incref after free"):
+        a.incref(p)
+
+
+def test_refcount_overflow_guarded(monkeypatch):
+    a = PageAllocator(8, 4)
+    monkeypatch.setattr(PageAllocator, "MAX_REFS", 3)
+    (p,) = a.alloc(1)
+    a.incref(p)
+    a.incref(p)
+    with pytest.raises(RefcountOverflow):
+        a.incref(p)
+    assert a.refcount(p) == 3
+
+
+def test_refcount_underflow_on_double_free_of_shared_page():
+    """A page shared by two holders survives one free; the third decref (a
+    double free by one holder) raises instead of corrupting the free list."""
+    a = PageAllocator(8, 4)
+    (p,) = a.alloc(1)
+    a.incref(p)                    # second holder
+    a.decref(p)
+    a.decref(p)                    # page freed
+    with pytest.raises(KeyError, match="double free"):
+        a.decref(p)
+    assert a.check_balanced()
+
+
+# ---------------------------------------------------------------------------
+# device ops: copy_page + start-masked splice
+# ---------------------------------------------------------------------------
+
+B, KV, m, s, n_b = 2, 2, 16, 4, 3
+P, MP = 4, 6
+N_PAGES = 1 + B * MP
+N_DICT = 64
+
+
+def _stack(layer):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), layer, layer)
+
+
+def test_copy_page_clones_one_page(rng):
+    pool_layer = sc.init_paged_layer_cache(B, KV, m, n_pages=N_PAGES,
+                                           page_size=P, max_pages=MP,
+                                           n_b=n_b, s=s)
+    pool_layer = pool_layer._replace(
+        k_vals=jnp.asarray(rng.normal(size=pool_layer.k_vals.shape),
+                           pool_layer.k_vals.dtype))
+    pool = M.ServeState(cache=_stack(pool_layer),
+                        length=jnp.zeros((B,), jnp.int32))
+    out = slots_mod.copy_page(pool, 3, 5)
+    kv = np.asarray(out.cache.k_vals, np.float32)
+    src = np.asarray(pool.cache.k_vals, np.float32)
+    np.testing.assert_array_equal(kv[:, 5], src[:, 3])
+    np.testing.assert_array_equal(kv[:, 1], src[:, 1])     # others untouched
+
+
+def test_write_slot_paged_start_masks_aliased_entries(rng):
+    """Splicing with start=c must leave pages below the start page bitwise
+    untouched — they may be another slot's."""
+    D = jnp.asarray(make_unit_dict(rng, m, N_DICT), jnp.float32)
+    T = 11                                   # n_comp = 8 = 2 pages
+    K1 = jnp.asarray(rng.normal(size=(1, KV, T, m)), jnp.float32)
+    one_layer = sc.init_layer_cache(1, KV, m, t_max=MP * P, n_b=n_b, s=s)
+    one_layer = sc.prefill_compress(one_layer, K1, K1, D, D, s=s)
+    one = M.ServeState(cache=_stack(one_layer),
+                       length=jnp.full((1,), T, jnp.int32))
+
+    pool_layer = sc.init_paged_layer_cache(B, KV, m, n_pages=N_PAGES,
+                                           page_size=P, max_pages=MP,
+                                           n_b=n_b, s=s)
+    pool_layer = pool_layer._replace(
+        k_vals=jnp.asarray(rng.normal(size=pool_layer.k_vals.shape),
+                           pool_layer.k_vals.dtype))
+    pool = M.ServeState(cache=_stack(pool_layer),
+                        length=jnp.zeros((B,), jnp.int32))
+    row = np.zeros(MP, np.int32)
+    row[:2] = [3, 5]
+    out = slots_mod.write_slot_paged(pool, one, 0, jnp.asarray(row),
+                                     jnp.int32(P))      # skip page 0 of the row
+    kv_out = np.asarray(out.cache.k_vals, np.float32)
+    kv_in = np.asarray(pool.cache.k_vals, np.float32)
+    np.testing.assert_array_equal(kv_out[:, 3], kv_in[:, 3])   # aliased: kept
+    one_kv = np.asarray(one.cache.k_vals, np.float32)
+    np.testing.assert_array_equal(kv_out[:, 5, :, :, :],
+                                  one_kv[:, 0, :, P:2 * P, :])  # tail: written
+    # table + counters installed as usual
+    np.testing.assert_array_equal(np.asarray(out.cache.page_table)[:, 0],
+                                  np.tile(row, (2, 1)))
+    assert int(out.cache.t_c[0, 0]) == T - n_b
+
+
+# ---------------------------------------------------------------------------
+# restartable prefill (cache level, both layouts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("start", [P, 2 * P, 8])
+def test_prefill_compress_restart_bitwise(rng, start):
+    """A start=c prefill writes the same tail codes as a full encode —
+    bitwise — and identical bookkeeping (OMP is per-position)."""
+    D = jnp.asarray(make_unit_dict(rng, m, N_DICT), jnp.float32)
+    T = 14                                  # n_comp = 11
+    K = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    caps = jnp.asarray([2, 4], jnp.int32)
+    full = sc.prefill_compress(
+        sc.init_layer_cache(B, KV, m, t_max=MP * P, n_b=n_b, s=s),
+        K, V, D, D, s=s, s_cap=caps)
+    part = sc.prefill_compress(
+        sc.init_layer_cache(B, KV, m, t_max=MP * P, n_b=n_b, s=s),
+        K, V, D, D, s=s, s_cap=caps, start=start)
+    n_comp = T - n_b
+    for f in ("k_vals", "k_idx", "v_vals", "v_idx"):
+        a = np.asarray(getattr(full, f)).astype(np.float32)
+        b = np.asarray(getattr(part, f)).astype(np.float32)
+        np.testing.assert_array_equal(a[:, :, start:n_comp],
+                                      b[:, :, start:n_comp], err_msg=f)
+        # skipped prefix untouched (zeros from init)
+        assert not np.any(b[:, :, :min(start, n_comp)])
+    for f in ("k_buf", "v_buf", "t_c", "buf_len", "buf_start"):
+        np.testing.assert_array_equal(np.asarray(getattr(full, f)),
+                                      np.asarray(getattr(part, f)), err_msg=f)
+
+
+def test_paged_prefill_restart_skips_aliased_pages(rng):
+    """The paged twin with start=P must not write the first page — it may
+    alias another row's."""
+    D = jnp.asarray(make_unit_dict(rng, m, N_DICT), jnp.float32)
+    T = 14
+    K = jnp.asarray(rng.normal(size=(B, KV, T, m)), jnp.float32)
+    perm = rng.permutation(np.arange(1, N_PAGES))
+    table = jnp.asarray(perm[:B * MP].reshape(B, MP), jnp.int32)
+
+    def mk():
+        c = sc.init_paged_layer_cache(B, KV, m, n_pages=N_PAGES, page_size=P,
+                                      max_pages=MP, n_b=n_b, s=s)
+        return c._replace(page_table=table)
+
+    full = sc.paged_prefill_compress(mk(), K, K, D, D, s=s)
+    part = sc.paged_prefill_compress(mk(), K, K, D, D, s=s, start=P)
+    gf = sc.to_contiguous(full)
+    gp = sc.to_contiguous(part)
+    n_comp = T - n_b
+    for f in ("k_vals", "k_idx", "v_vals", "v_idx"):
+        a = np.asarray(getattr(gf, f)).astype(np.float32)
+        b = np.asarray(getattr(gp, f)).astype(np.float32)
+        np.testing.assert_array_equal(a[:, :, P:n_comp], b[:, :, P:n_comp],
+                                      err_msg=f)
+        assert not np.any(b[:, :, :P])       # first page never written
+
+
+def test_model_prefill_compress_start_logits_bitwise(rng):
+    """The restartable model prefill runs the identical forward — logits and
+    the encoded tail must match the full prefill bitwise."""
+    CFG = configs.get_smoke("llama3.2-1b")
+    LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    from repro.models.cache_policy import LexicoPolicy
+    policy = LexicoPolicy(LEX)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, 16)), jnp.int32)
+    lg0, st0 = M.prefill(params, CFG, policy, {"tokens": toks}, bank=bank,
+                         t_max=32)
+    lg1, st1 = M.prefill(params, CFG, policy, {"tokens": toks}, bank=bank,
+                         t_max=32, compress_start=8)
+    np.testing.assert_array_equal(np.asarray(lg0), np.asarray(lg1))
+    n_comp = 16 - LEX.n_b
+    for f in ("k_vals", "k_idx", "v_vals", "v_idx"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st0.cache, f)).astype(np.float32)[:, :, :, 8:n_comp],
+            np.asarray(getattr(st1.cache, f)).astype(np.float32)[:, :, :, 8:n_comp],
+            err_msg=f)
+    for f in ("k_buf", "v_buf", "t_c", "buf_len", "buf_start"):
+        np.testing.assert_array_equal(np.asarray(getattr(st0.cache, f)),
+                                      np.asarray(getattr(st1.cache, f)),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# engine differential (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _shared_prefix_requests(rng, n=4):
+    """>= 3 requests sharing a page-aligned 32-token prompt prefix (bucket
+    32, page_size 8 => 3 full shared pages + a shared boundary region),
+    plus one unrelated prompt as a control."""
+    prefix = rng.integers(0, CFG.vocab_size, 32).astype(np.int32)
+    tails = [rng.integers(0, CFG.vocab_size, k).astype(np.int32)
+             for k in (3, 8, 1)]
+    reqs = [Request(rid=i, prompt=np.concatenate([prefix, tails[i]]),
+                    max_new_tokens=mnt, tier=8)
+            for i, mnt in enumerate((3, 4, 3))]
+    reqs.append(Request(
+        rid=3, prompt=rng.integers(0, CFG.vocab_size, 20).astype(np.int32),
+        max_new_tokens=2, tier=4))
+    return reqs[:n]
+
+
+def _run_engine(params, bank, reqs, **cfg_kw):
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, **cfg_kw))
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    done = eng.run()
+    return {rid: done[rid].generated_tokens for rid in done}, eng
+
+
+def test_engine_shared_matches_unshared_bitwise(served):
+    """The acceptance gate: identical greedy tokens with sharing on/off,
+    strictly fewer prefill-OMP'd positions, >= 1 physical page referenced by
+    >= 2 slots, bounded compile counts, and zero leaks once the prefix cache
+    drops its pins."""
+    params, bank = served
+    reqs = _shared_prefix_requests(np.random.default_rng(11))
+    base, base_eng = _run_engine(params, bank, reqs, share_prefixes=False)
+    shared, eng = _run_engine(params, bank, reqs, share_prefixes=True)
+
+    assert sorted(shared) == sorted(base)
+    for rid in base:
+        assert shared[rid] == base[rid], rid
+
+    md = eng.metrics.to_dict()
+    md_base = base_eng.metrics.to_dict()
+    assert md["prefill_tokens_skipped"] > 0
+    # strictly fewer positions went through the prefill OMP, none were lost
+    assert (md["prefill_tokens_compressed"]
+            < md_base["prefill_tokens_compressed"])
+    assert (md["prefill_tokens_compressed"] + md["prefill_tokens_skipped"]
+            == md_base["prefill_tokens_compressed"])
+    assert md["pages_aliased"] >= 3             # the 3 full prefix pages
+    assert md["pages_copied"] >= 1              # boundary page CoW
+    assert md["shared_pages_peak"] >= 1         # >=1 page held by >=2 slots
+    assert md["shared_page_hit_rate"] > 0
+    assert md["bytes_deduped"] > 0
+
+    cc = eng.compile_counts
+    assert cc["decode"] == 1 and cc["write_slot"] == 1, cc
+    assert cc["copy_page"] == 1, cc
+    # prefill: one trace per (bucket, compress_start) pair — here (32, 0),
+    # (16, 0) for the control, and (32, full-skip)
+    assert cc["prefill"] <= 3, cc
+
+    # the index keeps retired donors' pages pinned ("recently retired"
+    # reuse); dropping the pins balances the pool exactly
+    assert eng.prefix_index.n_cached_pages() > 0
+    assert not eng.allocator.check_balanced()
+    eng.prefix_index.clear(eng.allocator)
+    assert eng.allocator.check_balanced()
+
+
+def test_engine_shared_page_refcounts_while_live(served):
+    """Mid-run: after all sharers are admitted, some physical page must be
+    bound into >= 2 slot tables with refcount >= 3 (2 slots + index pin)."""
+    params, bank = served
+    reqs = _shared_prefix_requests(np.random.default_rng(5), n=3)
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, share_prefixes=True))
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    eng.step()
+    from collections import Counter
+    held = Counter(p for i in eng.pool.active_slots()
+                   for p in eng.pool.slots[i].pages)
+    shared = [p for p, c in held.items() if c >= 2]
+    assert len(shared) >= 3
+    for p in shared:
+        assert eng.allocator.refcount(p) >= 3    # sharers + index pin
+        assert p != NULL_PAGE
+    eng.run()
+    eng.prefix_index.clear(eng.allocator)
+    assert eng.allocator.check_balanced()
+
+
+def test_engine_retire_while_shared_keeps_pages_live(served):
+    """The donor retires first; its shared pages must stay resident (and
+    bitwise intact) for the surviving recipient."""
+    params, bank = served
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, CFG.vocab_size, 32).astype(np.int32)
+    donor = Request(rid=0, prompt=prefix.copy(), max_new_tokens=4, tier=8)
+    recip = Request(rid=1, prompt=np.concatenate(
+        [prefix, rng.integers(0, CFG.vocab_size, 4).astype(np.int32)]),
+        max_new_tokens=12, tier=8)
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=2, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, share_prefixes=True))
+    eng.submit(donor)
+    eng.submit(recip)
+    eng.step()
+    shared_pages = [p for p in eng.pool.slots[0].pages
+                    if p in set(eng.pool.slots[1].pages)]
+    assert shared_pages
+    while 0 not in eng.completed:
+        eng.step()
+    # donor gone, recipient still running: shared pages alive under it
+    assert eng.pool.slots[1] is not None
+    for p in shared_pages:
+        assert eng.allocator.refcount(p) >= 2    # recipient + index pin
+    eng.run()
+    eng.prefix_index.clear(eng.allocator)
+    assert eng.allocator.check_balanced()
+
+
+def test_engine_eviction_when_free_list_runs_dry(served):
+    """An oversubscribed pool: cached prefix pages must be evicted to admit
+    prefix-missing requests, and every request still completes with the
+    right token streams."""
+    params, bank = served
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
+    reqs = [Request(rid=i, prompt=np.concatenate(
+                [prefix, rng.integers(0, CFG.vocab_size, i).astype(np.int32)])
+                if i else prefix.copy(),
+                max_new_tokens=3, tier=8)
+            for i in range(2)]
+    # unrelated prompts force misses -> fresh pages -> eviction pressure
+    reqs += [Request(rid=2 + i,
+                     prompt=rng.integers(0, CFG.vocab_size, 24).astype(np.int32),
+                     max_new_tokens=3, tier=8) for i in range(3)]
+    base, _ = _run_engine(params, bank, reqs, share_prefixes=False, n_pages=13)
+    shared, eng = _run_engine(params, bank, reqs, share_prefixes=True,
+                              n_pages=13)
+    assert shared == base
+    eng.prefix_index.clear(eng.allocator)
+    assert eng.allocator.check_balanced()
+
+
+def test_share_prefixes_requires_paged_layout(served):
+    params, bank = served
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(
+            params, CFG, LEX, bank,
+            EngineConfig(n_slots=2, t_max=64, min_bucket=8,
+                         layout="contiguous", share_prefixes=True))

@@ -12,14 +12,27 @@ contract. Invariants checked at every step:
   * no page is double-freed (the allocator raises), and every trace ends
     with the allocator exactly balanced — zero leaked pages.
 
+A second trace family (``_run_shared_trace``) layers prefix sharing on top:
+requests drawn from a few prompt families alias each other's pages through
+a ``PrefixIndex``, the boundary page is copied-on-write, admission charges
+only new pages, and the free list is topped up by LRU eviction of cached
+pages. Extra invariants: every page's refcount equals the number of slots
+binding it plus its index pin, pool occupancy equals the union of
+slot-bound and index-pinned pages, and after the index drops its pins the
+allocator balances exactly.
+
 The engine-integrated version of the same contract (real device pool) is
-``tests/test_paged_cache.py::test_engine_paged_matches_contiguous_oracle``.
+``tests/test_paged_cache.py::test_engine_paged_matches_contiguous_oracle``
+plus ``tests/test_prefix_sharing.py``.
 """
+from collections import Counter
+
 import numpy as np
 import pytest
 
 from repro.serving import (
-    FCFSScheduler, PageAllocator, Request, SlotInfo, SlotPool, pages_needed,
+    FCFSScheduler, PageAllocator, PrefixIndex, Request, SlotInfo, SlotPool,
+    pages_needed,
 )
 from repro.serving.engine import _bucket   # the engine's own bucketing
 
@@ -110,6 +123,159 @@ def test_lifecycle_fuzz_many_traces():
     # the fuzz actually exercised contention: some trace had to queue on
     # pages/bytes while others sailed through
     assert max(x["peak_pages"] for x in stats) > 4
+    assert sum(x["completed"] for x in stats) > 300
+
+
+# ---------------------------------------------------------------------------
+# shared admissions: the prefix-sharing variant of the same loop
+# ---------------------------------------------------------------------------
+
+def _run_shared_trace(seed: int) -> dict:
+    """Mirror of ``ContinuousBatchingEngine._admit_one``/``_grow_pages``/
+    retire under ``share_prefixes=True``, host bookkeeping only."""
+    rng = np.random.default_rng(seed)
+    n_b = int(rng.integers(2, 6))
+    min_bucket = n_b + int(rng.integers(1, 5))
+    page_size = int(rng.choice([2, 4, 8]))
+    n_slots = int(rng.integers(1, 5))
+    n_pages = int(rng.integers(8, 40))
+    allocator = PageAllocator(n_pages, page_size)
+    index = PrefixIndex(page_size)
+    sched = FCFSScheduler(
+        kv_byte_budget=None, n_b=n_b, m=M_DIM, num_layers=N_LAYERS,
+        kv_heads=KV_HEADS, page_size=page_size,
+        page_budget=allocator.capacity)
+    pool = SlotPool(n_slots)
+
+    # prompt families: shared prefixes happen by construction
+    families = [rng.integers(0, 1000, 64).astype(np.int64) for _ in range(3)]
+
+    n_requests = int(rng.integers(4, 16))
+    submitted = 0
+    for rid in range(n_requests):
+        prompt_len = int(rng.integers(min_bucket, 6 * page_size + min_bucket))
+        fam = families[int(rng.integers(0, len(families)))]
+        prompt = fam[:prompt_len].copy()
+        if rng.random() < 0.3:      # diverge somewhere inside the prompt
+            cut = int(rng.integers(0, prompt_len))
+            prompt[cut:] = rng.integers(0, 1000, prompt_len - cut)
+        req = Request(rid=rid, prompt=prompt.astype(np.int32),
+                      max_new_tokens=int(rng.integers(1, 12)),
+                      tier=int(rng.choice([4, 8])))
+        if sched.projected_pages(req) > allocator.capacity:
+            continue
+        sched.submit(req)
+        submitted += 1
+
+    plans = {}
+
+    def shared_fn(req):
+        bucket = _bucket(req.prompt_len, min_bucket)
+        plan = index.lookup(req.prompt[:bucket], req.tier, bucket - n_b)
+        plans[req.rid] = plan
+        pinned = len(plan.aliased) + (1 if plan.copy_src is not None else 0)
+        return len(plan.aliased), plan.shared_codes, pinned
+
+    def pool_state_fn():
+        owned = sum(pool.slots[i].pages_owned for i in pool.active_slots())
+        return {"free": allocator.n_free,
+                "evictable": index.evictable_pages(allocator),
+                "owned": owned}
+
+    def alloc(n):
+        if n > allocator.n_free:
+            index.evict(allocator, max_pages=n - allocator.n_free)
+        return allocator.alloc(n)      # must never exhaust
+
+    def check_invariants():
+        held = Counter(p for i in pool.active_slots()
+                       for p in pool.slots[i].pages)
+        resident = set(held) | set(index._registered)
+        assert allocator.n_used == len(resident), "stray allocated pages"
+        for p in resident:
+            expect = held.get(p, 0) + (1 if p in index._registered else 0)
+            assert allocator.refcount(p) == expect, (p, seed)
+        owned = sum(pool.slots[i].pages_owned for i in pool.active_slots())
+        # reservation invariant: outstanding future growth always fits in
+        # free + evictable (this is what admission checked)
+        assert (sched.pages_admitted - owned
+                <= allocator.n_free + index.evictable_pages(allocator)), seed
+        assert sched.pages_admitted <= allocator.capacity
+
+    completed, steps, peak_shared, hits = 0, 0, 0, 0
+    while (len(sched) or pool.active_slots()) and steps < 10_000:
+        steps += 1
+        while pool.free_slots():
+            admitted = sched.admit(1, shared_fn=shared_fn,
+                                   pool_state_fn=pool_state_fn)
+            if not admitted:
+                break
+            req = admitted[0]
+            bucket = _bucket(req.prompt_len, min_bucket)
+            plan = plans.pop(req.rid)
+            n_comp = bucket - n_b
+            n_prompt = pages_needed(n_comp, page_size)
+            info = SlotInfo(request=req, fed=bucket, cache_len=bucket,
+                            pages_reserved=max(
+                                sched.projected_pages(req) - len(plan.aliased),
+                                0))
+            for p in plan.aliased:
+                allocator.incref(p)
+            if plan.copy_src is not None:
+                # mirror the engine: pin the CoW source across the alloc so
+                # only_free eviction can't free-and-recycle it
+                allocator.incref(plan.copy_src)
+            new_pages = alloc(n_prompt - len(plan.aliased))
+            info.pages = list(plan.aliased) + new_pages
+            info.pages_shared = len(plan.aliased)
+            if plan.copy_src is not None:
+                assert new_pages, "CoW needs a destination page"
+                allocator.decref(plan.copy_src)
+            pool.allocate(info)
+            index.commit(plan)
+            hits += 1 if plan.hit else 0
+            index.register(req.prompt[:bucket], req.tier, info.pages,
+                           n_comp, allocator)
+
+        for slot in pool.active_slots():
+            info = pool.slots[slot]
+            need = pages_needed(info.cache_len - n_b + 1, page_size)
+            while len(info.pages) < need:
+                info.pages += alloc(1)
+            assert info.pages_owned <= info.pages_reserved, \
+                "slot outgrew its admission reservation"
+            info.cache_len += 1
+            if info.in_prompt_phase:
+                info.fed += 1
+            else:
+                info.generated += 1
+            if info.done:
+                pool.retire(slot)
+                allocator.free(info.pages)
+                info.pages, info.pages_shared = [], 0
+                sched.release(info.request)
+                completed += 1
+
+        held = Counter(p for i in pool.active_slots()
+                       for p in pool.slots[i].pages)
+        peak_shared = max(peak_shared,
+                          sum(1 for c in held.values() if c >= 2))
+        check_invariants()
+
+    assert completed == submitted, (completed, submitted, seed)
+    index.clear(allocator)
+    assert allocator.check_balanced(), f"page leak (seed {seed})"
+    assert sched.bytes_admitted == 0 and sched.pages_admitted == 0
+    return {"steps": steps, "completed": completed,
+            "peak_shared": peak_shared, "hits": hits}
+
+
+def test_shared_lifecycle_fuzz_many_traces():
+    stats = [_run_shared_trace(seed) for seed in range(120)]
+    # sharing genuinely happened: pages held by >= 2 slots at once, and the
+    # trie served real hits
+    assert max(x["peak_shared"] for x in stats) >= 1
+    assert sum(x["hits"] for x in stats) > 40
     assert sum(x["completed"] for x in stats) > 300
 
 
