@@ -18,7 +18,15 @@ system prompt — the workload copy-on-write prefix sharing exists for — and
 reports shared vs unshared resident KV bytes, dedup'd bytes, hit rate, and
 the prefill OMP positions skipped.
 
-    PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario both]
+A third scenario (``--scenario swap``) oversubscribes the device page pool:
+the same workload runs with and without the host-memory swap tier
+(``EngineConfig(swap=SwapConfig())``). The no-swap scheduler *rejects* the
+concurrency (head-of-line blocking, occupancy pinned low); the tiered run
+fills every slot by demoting cold pages to host memory and promoting them
+back on access — same tokens, and the JSON reports device-peak pages,
+host-peak bytes, promote stalls and tier traffic.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario all]
 """
 from __future__ import annotations
 
@@ -34,7 +42,9 @@ import numpy as np
 from benchmarks.common import BENCH_CFG, trained_params
 from benchmarks.memory_fidelity import trained_bank
 from repro.configs.base import LexicoConfig
-from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, Request, SwapConfig,
+)
 
 
 def _submit_workload(eng, cfg, *, n_requests: int, seed: int) -> None:
@@ -146,6 +156,60 @@ def run_prefix_sharing_bench(*, n_requests: int = 12, n_slots: int = 4,
     }
 
 
+def run_swap_bench(*, n_requests: int = 10, n_slots: int = 4,
+                   t_max: int = 96, seed: int = 0,
+                   page_size: int = 8) -> dict:
+    """Oversubscribed-pool scenario: the pool holds one long request's
+    working set plus change, the workload wants several at once. Runs the
+    identical workload three ways — unconstrained oracle, constrained
+    no-swap, constrained + host tier — and reports what the tier buys."""
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+    # tight pool: the longest request (~80 tokens -> 10 pages) fits alone,
+    # the concurrent mix does not
+    n_pages = 15
+    sides, tokens = {}, {}
+    for name, kw in (("oracle", {}),
+                     ("no_swap", {"n_pages": n_pages}),
+                     ("swap", {"n_pages": n_pages, "swap": SwapConfig()})):
+        eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                         layout="paged", page_size=page_size, **kw))
+        _submit_workload(eng, cfg, n_requests=n_requests, seed=seed)
+        done = eng.run()
+        stats = eng.metrics.to_dict()
+        stats.update(n_requests=n_requests, completed=len(done),
+                     rejections=eng.scheduler.rejections,
+                     pages_balanced=eng.allocator.check_balanced())
+        if eng.swap is not None:
+            stats["host_balanced"] = eng.swap.host.check_balanced()
+        sides[name] = stats
+        tokens[name] = {rid: done[rid].generated_tokens for rid in done}
+    sw, ns = sides["swap"], sides["no_swap"]
+    return {
+        "oracle": sides["oracle"],
+        "no_swap": ns,
+        "swap": sw,
+        "tiering": {
+            # the headline: concurrency the no-swap scheduler rejected is
+            # served by the tier, for the same (bitwise) tokens
+            "no_swap_rejections": ns["rejections"],
+            "occupancy_peak_no_swap": ns["slot_occupancy_peak"],
+            "occupancy_peak_swap": sw["slot_occupancy_peak"],
+            "device_pages_peak": sw["pages_in_use_peak"],
+            "host_bytes_resident_peak": sw["host_bytes_resident_peak"],
+            "pages_demoted": sw["pages_demoted"],
+            "pages_promoted": sw["pages_promoted"],
+            "promote_stall_steps": sw["promote_stall_steps"],
+            "same_tokens_vs_oracle": tokens["swap"] == tokens["oracle"],
+        },
+    }
+
+
 def run_layout_comparison(**kw) -> dict:
     """Same workload through both layouts + the memory/throughput deltas."""
     cont = run_serving_bench(layout="contiguous", **kw)
@@ -186,6 +250,9 @@ def run(emit):
     prefix = run_prefix_sharing_bench()
     for key, val in prefix["sharing"].items():
         emit(f"serving/prefix/{key}", float(val))
+    tiering = run_swap_bench()["tiering"]
+    for key, val in tiering.items():
+        emit(f"serving/swap/{key}", float(val))
 
 
 def main():
@@ -197,23 +264,30 @@ def main():
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--layout", choices=["contiguous", "paged", "both"],
                     default="both")
-    ap.add_argument("--scenario", choices=["mix", "prefix", "both"],
+    ap.add_argument("--scenario",
+                    choices=["mix", "prefix", "swap", "both", "all"],
                     default="mix",
                     help="mix: short/long layout comparison; prefix: many "
                          "clients sharing one system prompt (shared vs "
-                         "unshared resident KV bytes)")
+                         "unshared resident KV bytes); swap: oversubscribed "
+                         "pool with the host-memory tier (device/host peaks, "
+                         "promote stalls); both: mix+prefix; all: everything")
     ap.add_argument("--json-only", action="store_true")
     args = ap.parse_args()
     kw = dict(n_requests=args.n_requests, n_slots=args.n_slots,
               t_max=args.t_max, seed=args.seed, page_size=args.page_size)
     stats = {}
-    if args.scenario in ("mix", "both"):
+    if args.scenario in ("mix", "both", "all"):
         if args.layout == "both":
             stats["mix"] = run_layout_comparison(**kw)
         else:
             stats["mix"] = run_serving_bench(layout=args.layout, **kw)
-    if args.scenario in ("prefix", "both"):
+    if args.scenario in ("prefix", "both", "all"):
         stats["prefix"] = run_prefix_sharing_bench(**kw)
+    if args.scenario in ("swap", "all"):
+        stats["swap"] = run_swap_bench(
+            n_slots=args.n_slots, t_max=args.t_max, seed=args.seed,
+            page_size=args.page_size)
     if len(stats) == 1:
         stats = next(iter(stats.values()))
     print(json.dumps(stats, indent=2, default=float))

@@ -17,6 +17,13 @@ With ``--share-prefixes`` (paged layout) half the requests start from one
 shared system prompt: their page-aligned prefix pages are deduplicated in
 the pool via copy-on-write prefix sharing, and the dedup metrics (hit rate,
 pages aliased, prefill OMP skipped, bytes saved) are printed at the end.
+
+With ``--swap`` (implies paged) the device page pool is deliberately sized
+below the workload's concurrent working set and a host-memory tier absorbs
+the overflow: cold pages demote to a pinned numpy mirror, promote back
+(bitwise) on access, slots briefly stall instead of being refused, and the
+tier metrics (pages demoted/promoted, host bytes peak, promote stalls) are
+printed at the end.
 """
 import argparse
 import os
@@ -30,7 +37,9 @@ import numpy as np
 from benchmarks.common import BENCH_CFG, trained_params
 from benchmarks.memory_fidelity import trained_bank
 from repro.configs.base import LexicoConfig
-from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, Request, SwapConfig,
+)
 
 
 def main():
@@ -50,9 +59,14 @@ def main():
                     help="copy-on-write prefix sharing over the page pool "
                          "(implies --layout paged); half the demo requests "
                          "share a system-prompt prefix so pages dedup")
+    ap.add_argument("--swap", action="store_true",
+                    help="tiered storage (implies --layout paged): size the "
+                         "device pool below the concurrent working set and "
+                         "spill cold pages to a host-memory tier, promoting "
+                         "them back on access — same tokens, smaller pool")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.share_prefixes:
+    if args.share_prefixes or args.swap:
         args.layout = "paged"
 
     cfg = BENCH_CFG
@@ -61,13 +75,25 @@ def main():
     bank = trained_bank(params, cfg, N, s_max)
     lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
 
+    # --swap: an oversubscribed pool — one long request's working set plus
+    # one page per slot; the host tier absorbs the rest of the concurrency
+    n_pages = None
+    max_pages = -(-max(args.t_max - lex.n_b, 1) // args.page_size)
+    if args.swap:
+        n_pages = max_pages + args.n_slots + 1
     eng = ContinuousBatchingEngine(
         params, cfg, lex, bank,
         EngineConfig(n_slots=args.n_slots, t_max=args.t_max, min_bucket=8,
                      layout=args.layout, page_size=args.page_size,
                      share_prefixes=args.share_prefixes,
+                     n_pages=n_pages,
+                     swap=SwapConfig() if args.swap else None,
                      kv_byte_budget=(args.budget_kb * 1024
                                      if args.budget_kb else None)))
+    if args.swap:
+        print(f"swap tier on: device pool {eng.allocator.capacity} usable "
+              f"pages vs {args.n_slots * max_pages} fully provisioned — "
+              "oversubscribed on purpose")
 
     rng = np.random.default_rng(args.seed)
     tiers = [2, 4, 8, 16]
@@ -126,9 +152,18 @@ def main():
               f"of "
               f"{stats['prefill_tokens_skipped'] + stats['prefill_tokens_compressed']} "
               f"compressed positions, {stats['bytes_deduped']} B deduplicated")
-        eng.prefix_index.clear(eng.allocator)
+        eng.prefix_index.clear(eng.allocator,
+                               host=eng.swap.host if eng.swap else None)
         print(f"  after dropping prefix-cache pins: "
               f"balanced={eng.allocator.check_balanced()}")
+    if args.swap:
+        print(f"tiered storage: {stats['pages_demoted']} pages demoted, "
+              f"{stats['pages_promoted']} promoted "
+              f"(host bytes peak {stats['host_bytes_resident_peak']})")
+        print(f"  promote stalls: {stats['promote_stall_steps']} slot-steps; "
+              f"admission rejections: {eng.scheduler.rejections}")
+        print(f"  host tier balanced at drain: "
+              f"{eng.swap.host.check_balanced()}")
     print(f"queue latency: mean {stats['queue_latency_s_mean'] * 1e3:.0f} ms")
 
 

@@ -514,6 +514,54 @@ def paged_attend(
 
 
 # ---------------------------------------------------------------------------
+# page-level tier transfer (host-memory swap: repro.serving.swap)
+# ---------------------------------------------------------------------------
+
+def extract_page(cache: PagedLexicoLayerCache, page) -> Tuple[Array, Array,
+                                                              Array, Array]:
+    """Slice one pool page's four sparse stores out of the shared pool — the
+    device half of a page *demotion* to the host tier.
+
+    Works on a single layer ``(n_pages, KV, page_size, s)`` pool or an
+    (L,)-stacked one ``(L, n_pages, KV, page_size, s)``; ``page`` is a
+    traced int32, so one jitted trace serves every page id (same pattern as
+    the slot splices in ``repro.serving.slots``). The returned arrays keep
+    the singleton page axis so :func:`inject_page` can splice them back.
+    """
+    page = jnp.asarray(page, jnp.int32)
+    axis = cache.k_vals.ndim - 4
+
+    def take(store):
+        return jax.lax.dynamic_slice_in_dim(store, page, 1, axis=axis)
+
+    return (take(cache.k_vals), take(cache.k_idx),
+            take(cache.v_vals), take(cache.v_idx))
+
+
+def inject_page(cache: PagedLexicoLayerCache, page, k_vals: Array,
+                k_idx: Array, v_vals: Array,
+                v_idx: Array) -> PagedLexicoLayerCache:
+    """Write one page's four sparse stores into the pool at ``page`` — the
+    device half of a page *promotion* from the host tier.
+
+    Exact inverse of :func:`extract_page`: the arrays are stored verbatim in
+    the pool dtypes, so a demote→promote round trip is bitwise. Callers must
+    never target the null/trash page 0 with live data — ``page`` is traced,
+    so that is enforced host-side (``repro.serving.swap``).
+    """
+    page = jnp.asarray(page, jnp.int32)
+    axis = cache.k_vals.ndim - 4
+
+    def put(store, new):
+        return jax.lax.dynamic_update_slice_in_dim(
+            store, new.astype(store.dtype), page, axis=axis)
+
+    return cache._replace(
+        k_vals=put(cache.k_vals, k_vals), k_idx=put(cache.k_idx, k_idx),
+        v_vals=put(cache.v_vals, v_vals), v_idx=put(cache.v_idx, v_idx))
+
+
+# ---------------------------------------------------------------------------
 # layout conversion (differential-test harness + slot migration)
 # ---------------------------------------------------------------------------
 

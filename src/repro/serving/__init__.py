@@ -14,8 +14,12 @@ and footprint are page-granular instead of ``t_max``-padded. On top of the
 paged layout, ``EngineConfig(share_prefixes=True)`` turns on copy-on-write
 prefix sharing (``prefix.py``): requests with a common page-aligned prompt
 prefix alias one set of physical pages and skip the prefix's prefill OMP.
+``EngineConfig(swap=SwapConfig(...))`` adds tiered storage (``swap.py``): a
+host-memory mirror cold pages demote into (and promote back from, bitwise)
+under policy control, so the device pool's capacity becomes a latency
+tradeoff instead of a hard admission ceiling.
 
-See docs/serving.md for the full subsystem design.
+See docs/serving.md and docs/tiered_memory.md for the full subsystem design.
 """
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
 from repro.serving.metrics import EngineMetrics
@@ -29,11 +33,16 @@ from repro.serving.scheduler import (
     request_page_count,
 )
 from repro.serving.slots import SlotInfo, SlotPool
+from repro.serving.swap import (
+    HostPageStore, HostTierFull, PageHandle, SwapConfig, SwapManager,
+    SwapPolicy,
+)
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
-    "FCFSScheduler", "NULL_PAGE", "PageAllocator", "PagePoolExhausted",
-    "PrefixIndex", "RefcountOverflow", "Request", "SharePlan", "SlotInfo",
-    "SlotPool", "pages_needed", "request_kv_bytes",
-    "request_kv_bytes_paged", "request_page_count",
+    "FCFSScheduler", "HostPageStore", "HostTierFull", "NULL_PAGE",
+    "PageAllocator", "PageHandle", "PagePoolExhausted", "PrefixIndex",
+    "RefcountOverflow", "Request", "SharePlan", "SlotInfo", "SlotPool",
+    "SwapConfig", "SwapManager", "SwapPolicy", "pages_needed",
+    "request_kv_bytes", "request_kv_bytes_paged", "request_page_count",
 ]

@@ -49,9 +49,29 @@ the engine evicts cached (index-pinned) pages LRU-first. Sharing is exact:
 codes are deterministic in the token prefix, so a shared run must emit
 tokens bitwise-identical to an unshared run (tests/test_prefix_sharing.py).
 
+Tiered storage (``EngineConfig(swap=SwapConfig(...))``, paged layout only):
+a host-memory tier under the page pool (``repro.serving.swap``). When
+free-list pressure crosses the watermark — or an allocation cannot be
+served — the engine *demotes* cold pages (scored by ``SwapPolicy`` over
+last-touch recency, refcount fan-out and prefix-hit frequency) into a
+pinned numpy mirror, freeing their device ids for rebinding; any access to
+a swapped page *promotes* it back with a blocking fetch-and-rebind before
+the step. A slot whose pages cannot all be made device-resident for a step
+**stalls** — it is masked out of that decode step (bit-identical idle row)
+and retried next step — so concurrent admissions may oversubscribe the
+device pool: the scheduler counts the host tier's remaining room as
+reclaimable capacity, turning "pool full" from a hard admission ceiling
+into a latency tradeoff (``promote_stall_steps``). Demote→promote round
+trips move the encoded arrays device→host→device verbatim, so tokens are
+bitwise identical to a never-swapped run (tests/test_swap.py). Cached
+prefix pages are demoted in preference to being dropped, and an
+admission-time prefix hit on a swapped page promotes it instead of
+recompressing the prefix.
+
 The contiguous layout is the differential-test oracle for the paged one:
 same requests through both layouts must produce identical tokens
-(tests/test_paged_cache.py). See docs/serving.md for the full design.
+(tests/test_paged_cache.py). See docs/serving.md and docs/tiered_memory.md
+for the full design.
 """
 from __future__ import annotations
 
@@ -70,11 +90,15 @@ from repro.core.dictionary import DictionaryBank
 from repro.models import model as M
 from repro.models.cache_policy import LexicoPolicy, PagedLexicoPolicy
 from repro.serving import slots as slots_mod
+from repro.serving import swap as swap_mod
 from repro.serving.metrics import EngineMetrics
-from repro.serving.pages import NULL_PAGE, PageAllocator, pages_needed
+from repro.serving.pages import (
+    NULL_PAGE, PageAllocator, PagePoolExhausted, pages_needed,
+)
 from repro.serving.prefix import PrefixIndex, SharePlan
 from repro.serving.scheduler import FCFSScheduler, Request, request_kv_bytes
 from repro.serving.slots import SlotInfo, SlotPool
+from repro.serving.swap import PageHandle, SwapConfig, SwapManager
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,8 +119,12 @@ class EngineConfig:
     # re-compressing them
     share_prefixes: bool = False
     # cap on pages the prefix index may keep pinned (None = bounded only by
-    # the pool itself + LRU eviction when the free list runs dry)
+    # the pool itself + eviction when the free list runs dry)
     prefix_cache_pages: Optional[int] = None
+    # host-memory swap tier over the page pool (paged layout only): cold
+    # pages demote to a pinned numpy mirror under free-list pressure and
+    # promote back — bitwise — on access; None disables tiering
+    swap: Optional[SwapConfig] = None
 
 
 def _bucket(prompt_len: int, min_bucket: int) -> int:
@@ -132,6 +160,10 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 "share_prefixes requires layout='paged' (sharing aliases "
                 "physical pool pages)")
+        if engine_cfg.swap is not None and not self.paged:
+            raise ValueError(
+                "swap requires layout='paged' (the host tier mirrors pool "
+                "pages)")
         if self.paged and cfg.mla is not None:
             raise NotImplementedError(
                 "paged slot storage covers the attention-stack Lexico cache; "
@@ -149,6 +181,7 @@ class ContinuousBatchingEngine:
         B, t_max = engine_cfg.n_slots, engine_cfg.t_max
         self.allocator: Optional[PageAllocator] = None
         self.prefix_index: Optional[PrefixIndex] = None
+        self.swap: Optional[SwapManager] = None
         self._pending_plans: Dict[int, SharePlan] = {}
         decode_policy = self.policy
         if self.paged:
@@ -163,6 +196,8 @@ class ContinuousBatchingEngine:
             if engine_cfg.share_prefixes:
                 self.prefix_index = PrefixIndex(
                     P, max_cached_pages=engine_cfg.prefix_cache_pages)
+            if engine_cfg.swap is not None:
+                self.swap = SwapManager(engine_cfg.swap)
         self.decode_policy = decode_policy
         self.scheduler = FCFSScheduler(
             kv_byte_budget=engine_cfg.kv_byte_budget, n_b=lex_cfg.n_b,
@@ -211,6 +246,13 @@ class ContinuousBatchingEngine:
         else:
             self._write_fn = _own(slots_mod.write_slot)
             self._assign_fn = self._clear_fn = self._copy_fn = None
+        self._extract_fn = self._inject_fn = None
+        if self.swap is not None:
+            # extract reads the pool (jit WITHOUT donation — the state stays
+            # live); inject replaces it (donate, like the other splices)
+            self._extract_fn = jax.jit(
+                lambda *a: swap_mod.extract_page_state(*a))
+            self._inject_fn = _own(swap_mod.inject_page_state)
 
     # ------------------------------------------------------------------ API
 
@@ -266,6 +308,9 @@ class ContinuousBatchingEngine:
             counts["assign_page"] = n(self._assign_fn)
             counts["clear_slot"] = n(self._clear_fn)
             counts["copy_page"] = n(self._copy_fn)
+        if self.swap is not None:
+            counts["extract_page"] = n(self._extract_fn)
+            counts["inject_page"] = n(self._inject_fn)
         return counts
 
     def kv_bytes_in_flight(self) -> int:
@@ -297,8 +342,11 @@ class ContinuousBatchingEngine:
         val_bytes = jnp.dtype(lex.val_dtype).itemsize
         total = 0
         if self.paged:
+            # device-resident pages only: a swapped page's bytes live in the
+            # host tier and are reported by host_bytes_resident — the two
+            # views never double-count a page
             unique_pages = {p for i in self.pool.active_slots()
-                            for p in self.pool.slots[i].pages}
+                            for p in self.pool.slots[i].device_pages}
             total += cfg.num_layers * len(unique_pages) * \
                 sparse_cache.page_store_bytes(
                     cfg.cache_kv_heads, self.engine_cfg.page_size, lex.s,
@@ -315,6 +363,13 @@ class ContinuousBatchingEngine:
                 1, kv_heads=cfg.cache_kv_heads, page_size=span, s=lex.s,
                 n_b=lex.n_b, m=cfg.cached_vector_dim, val_bytes=val_bytes)
         return total
+
+    def host_bytes_resident(self) -> int:
+        """Bytes the host swap tier holds right now (0 without swap) — the
+        two-tier complement of :meth:`kv_bytes_resident`: a demoted page's
+        bytes move here, a promoted page's bytes move back, and no page is
+        ever counted in both (tests/test_memory_accounting.py)."""
+        return self.swap.host.bytes_resident if self.swap is not None else 0
 
     # ----------------------------------------------------------- internals
 
@@ -336,39 +391,215 @@ class ContinuousBatchingEngine:
                 # the free list — a re-bound page must never receive the idle
                 # row's write-backs
                 self.state = self._clear_fn(self.state, jnp.int32(slot))
-                # decref everything the slot held: exclusively-owned pages
-                # return to the free list, shared/aliased ones stay live
-                # under their other holders (surviving slots / prefix cache)
-                self.allocator.free(info.pages)
+                # decref everything the slot held, in BOTH tiers:
+                # exclusively-owned device pages return to the free list,
+                # swapped entries drop their host-tier reference; shared/
+                # aliased pages stay live under their other holders
+                # (surviving slots / prefix cache)
+                device_pages = info.device_pages
+                if self.swap is not None:
+                    for p in device_pages:
+                        if self.allocator.refcount(p) == 1:
+                            self.swap.stats_drop(p)
+                    for h in info.swapped_pages:
+                        if self.swap.host.decref(h):
+                            self.swap.stats_drop(h)
+                self.allocator.free(device_pages)
                 info.pages = []
                 info.pages_shared = 0
             self.scheduler.release(info.request)
             self.metrics.record_completion()
             self.completed[info.request.rid] = info
 
-    def _alloc(self, n: int) -> List[int]:
-        """Allocate ``n`` pool pages, evicting cached (prefix-index-pinned)
-        pages LRU-first when the free list runs dry. Admission reserved
-        completion-time *new*-page counts against free + evictable, so the
-        eviction always recovers enough."""
-        if (n > self.allocator.n_free and self.prefix_index is not None):
-            self.prefix_index.evict(self.allocator,
-                                    max_pages=n - self.allocator.n_free)
-        return self.allocator.alloc(n)
+    def _alloc(self, n: int, hot=frozenset()) -> List[int]:
+        """Allocate ``n`` pool pages. When the free list runs dry: a
+        swap-enabled engine first *demotes* cold pages (outside the ``hot``
+        set — pages this very operation must keep device-resident) into the
+        host tier, falling back to destructive prefix eviction only when the
+        host tier is full; without swap, cached (prefix-index-pinned) pages
+        are evicted directly. Admission reserved completion-time *new*-page
+        counts against free + evictable + reclaimable, so this normally
+        recovers enough (`PagePoolExhausted` otherwise — swap-mode callers
+        on the growth path catch it and stall the slot)."""
+        if n > self.allocator.n_free:
+            if self.swap is not None:
+                self._make_free(n, hot)     # best effort; alloc raises below
+            elif self.prefix_index is not None:
+                self.prefix_index.evict(self.allocator,
+                                        max_pages=n - self.allocator.n_free)
+        pages = self.allocator.alloc(n)
+        if self.swap is not None:
+            for p in pages:                 # a rebound id starts warm, hitless
+                self.swap.stats_reset(p, self.metrics.steps)
+        return pages
 
-    def _grow_pages(self, slot: int) -> None:
+    def _grow_pages(self, slot: int, hot=frozenset()) -> bool:
         """Lazy page growth: make sure ``slot``'s next compressed-token write
         position is covered by an allocated page (at most one new page per
-        step — decode appends only ever touch the tail page)."""
+        step — decode appends only ever touch the tail page). Returns False
+        when (swap mode only) the pool cannot supply the page even after
+        demotions — the slot stalls this step and retries."""
         info = self.pool.slots[slot]
         write_pos = info.cache_len - self.lex_cfg.n_b
         need = pages_needed(write_pos + 1, self.engine_cfg.page_size)
         while len(info.pages) < need:
-            (page,) = self._alloc(1)
+            try:
+                (page,) = self._alloc(1, hot)
+            except PagePoolExhausted:
+                if self.swap is None:
+                    raise
+                return False
             self.state = self._assign_fn(self.state, jnp.int32(slot),
                                          jnp.int32(len(info.pages)),
                                          jnp.int32(page))
             info.pages.append(page)
+        return True
+
+    # --------------------------------------------------- tiered storage bits
+
+    def _demote_page(self, page: int) -> PageHandle:
+        """Move one device page's codes into the host tier and free its
+        device id for rebinding: extract the arrays (blocking device→host
+        copy), null every holding slot's table entry (the holders keep a
+        :class:`PageHandle` marker), re-key the prefix-index pin if any, and
+        transfer the whole refcount via ``PageAllocator.demote``."""
+        stores = self._extract_fn(self.state, jnp.int32(page))
+        stores_np = tuple(np.asarray(x) for x in stores)
+        refs = self.allocator.refcount(page)
+        handle = self.swap.host.put(stores_np, refs=refs)
+        holders = 0
+        for i in self.pool.active_slots():
+            info = self.pool.slots[i]
+            for j, entry in enumerate(info.pages):
+                if entry == page:
+                    self.state = self._assign_fn(
+                        self.state, jnp.int32(i), jnp.int32(j),
+                        jnp.int32(NULL_PAGE))
+                    info.pages[j] = handle
+                    holders += 1
+        if (self.prefix_index is not None
+                and self.prefix_index.swap_out(page, handle)):
+            holders += 1
+        if holders != refs:
+            raise RuntimeError(
+                f"refcount mismatch demoting page {page}: allocator holds "
+                f"{refs} refs but {holders} holders were rebound")
+        self.allocator.demote(page)
+        self.swap.stats_move(page, handle)
+        self.metrics.record_swap(demoted=1)
+        return handle
+
+    def _promote_handle(self, handle: PageHandle,
+                        hot=frozenset()) -> Optional[int]:
+        """Fetch one host-tier page back into the device pool (blocking
+        host→device copy) and rebind every holder — slot table entries and
+        the prefix-index pin — onto the freshly allocated device id. The
+        refcount transfers back verbatim. Returns the device page id, or
+        None when no device page can be freed (the caller stalls)."""
+        if self.allocator.n_free == 0 and not self._make_free(1, hot):
+            return None
+        stores, refs = self.swap.host.pop(handle)
+        page = self.allocator.promote(refs)
+        self.state = self._inject_fn(self.state, jnp.int32(page),
+                                     *(jnp.asarray(x) for x in stores))
+        holders = 0
+        for i in self.pool.active_slots():
+            info = self.pool.slots[i]
+            for j, entry in enumerate(info.pages):
+                if entry == handle:
+                    self.state = self._assign_fn(
+                        self.state, jnp.int32(i), jnp.int32(j),
+                        jnp.int32(page))
+                    info.pages[j] = page
+                    holders += 1
+        if (self.prefix_index is not None
+                and self.prefix_index.swap_in(handle, page)):
+            holders += 1
+        if holders != refs:
+            raise RuntimeError(
+                f"refcount mismatch promoting {handle}: host held {refs} "
+                f"refs but {holders} holders were rebound")
+        self.swap.stats_move(handle, page)
+        self.metrics.record_swap(promoted=1)
+        return page
+
+    def _make_free(self, n: int, hot=frozenset(), *,
+                   evict_fallback: bool = True) -> bool:
+        """Free device pages until at least ``n`` are free: demote the
+        coldest non-``hot`` resident pages (policy-scored; the cache/slot
+        bindings survive the move), then — unless ``evict_fallback`` is
+        off — fall back to destructive prefix eviction when the host tier
+        is full. True iff ``n`` are now free."""
+        while self.allocator.n_free < n:
+            victim = None
+            if self.swap.host.room() > 0:
+                cands = [p for p in self.allocator.allocated_pages()
+                         if p not in hot]
+                if cands:
+                    victim = self.swap.coldest(
+                        cands, refcount_fn=self.allocator.refcount,
+                        now=self.metrics.steps)
+            if victim is not None:
+                self._demote_page(victim)
+                continue
+            if evict_fallback and self.prefix_index is not None:
+                freed = self.prefix_index.evict(
+                    self.allocator, max_pages=n - self.allocator.n_free,
+                    scorer=self.swap.policy.subtree_evict_key,
+                    host=self.swap.host)
+                if freed:
+                    continue
+            return False
+        return True
+
+    def _prepare_slots(self, active_ids: List[int]) -> set:
+        """Swap-aware pre-step pass: make every active slot's pages device-
+        resident — promote its swapped pages, then grow its tail page — slot
+        by slot in ascending order. A slot whose residency cannot be
+        satisfied *stalls*: it is masked out of this decode step (an idle
+        row is bit-identical, so its output stream is only delayed, never
+        changed) and retried next step, while its resident pages become
+        demotion candidates for the slots that do run. The first slot
+        processed can always be satisfied (one request's pages never exceed
+        the pool — enforced at submit), so every step makes progress."""
+        stalled = set()
+        hot: set = set()
+        for i in active_ids:
+            info = self.pool.slots[i]
+            own = set(info.device_pages)
+            ok = True
+            for j in range(len(info.pages)):
+                entry = info.pages[j]
+                if not isinstance(entry, PageHandle):
+                    # already resident (possibly promoted moments ago
+                    # through a co-holding slot's rebind)
+                    continue
+                page = self._promote_handle(entry, hot | own)
+                if page is None:
+                    ok = False
+                    break
+                own.add(page)
+            if ok:
+                ok = self._grow_pages(i, hot | own)
+            if ok:
+                hot |= set(info.device_pages)
+            else:
+                stalled.add(i)
+                self.metrics.record_swap(stalls=1)
+        return stalled
+
+    def _proactive_trim(self) -> None:
+        """Watermark demotion (the proactive half of the tiering policy):
+        keep at least ``SwapConfig.watermark_pages`` device pages free by
+        demoting cold pages no live slot binds — in practice the prefix
+        cache's index-only pages, which keep their trie entries and stay
+        promotable. Never destructive (proactivity is not pressure), and
+        demoting a slot-bound page here would only force a promote next
+        step; on-demand demotion inside ``_alloc`` handles real pressure."""
+        slot_pages = {p for i in self.pool.active_slots()
+                      for p in self.pool.slots[i].device_pages}
+        self._make_free(self.swap.cfg.watermark_pages, slot_pages,
+                        evict_fallback=False)
 
     # -------------------------------------------------- prefix sharing bits
 
@@ -392,41 +623,58 @@ class ContinuousBatchingEngine:
         return self.prefix_index.lookup(self._key_tokens(req, bucket),
                                         req.tier, n_comp)
 
-    def _shared_peek(self, req: Request) -> Tuple[int, int, int]:
+    def _shared_peek(self, req: Request) -> Tuple[int, int, int, int]:
         """Scheduler peek: (aliased pages, shared codes, pages the
-        admission will pin) for the head request. The pin count includes
-        the CoW source page — pinned pages can't be evicted to satisfy
-        this same admission's allocation, so the reservation check must
-        not count them as evictable. The plan is cached and consumed by
-        the subsequent ``_admit_one`` so lookup and commit can't
-        disagree."""
+        admission will pin, swapped pages it must promote) for the head
+        request. The pin count includes the CoW source page — pinned pages
+        can't be evicted to satisfy this same admission's allocation, so
+        the reservation check must not count them as evictable; the promote
+        count prices fetching host-tier entries back into device pages. The
+        plan is cached and consumed by the subsequent ``_admit_one`` so
+        lookup and commit can't disagree."""
         plan = self._share_plan(req)
         self._pending_plans[req.rid] = plan
         pinned = len(plan.aliased) + (1 if plan.copy_src is not None else 0)
-        return len(plan.aliased), plan.shared_codes, pinned
+        promote = sum(1 for p in plan.aliased if isinstance(p, PageHandle))
+        if isinstance(plan.copy_src, PageHandle):
+            promote += 1
+        return len(plan.aliased), plan.shared_codes, pinned, promote
 
     def _pool_state(self) -> Dict[str, int]:
         """Live pool state for the scheduler's reservation check."""
         owned = sum(self.pool.slots[i].pages_owned
                     for i in self.pool.active_slots())
-        return {"free": self.allocator.n_free,
-                "evictable": self.prefix_index.evictable_pages(self.allocator),
-                "owned": owned}
+        st = {"free": self.allocator.n_free,
+              "evictable": (self.prefix_index.evictable_pages(self.allocator)
+                            if self.prefix_index is not None else 0),
+              "owned": owned}
+        if self.swap is not None:
+            # device pages the engine can free by demoting cold residents
+            # into the host tier's remaining room; evictable pages are
+            # already counted once, so they are excluded here
+            st["reclaimable"] = min(
+                self.swap.host.room(),
+                max(self.allocator.n_used - st["evictable"], 0))
+        return st
 
     # ------------------------------------------------------------ admission
 
     def _admit(self) -> None:
-        if self.prefix_index is None:
+        if self.prefix_index is None and self.swap is None:
             now = time.perf_counter()
             for req in self.scheduler.admit(len(self.pool.free_slots())):
                 self._admit_one(req, now)
             return
-        # sharing: admit one at a time so each reservation check and prefix
-        # lookup sees the pool state left by the previous splice
+        # sharing and/or tiering: admit one at a time so each reservation
+        # check and prefix lookup sees the pool state left by the previous
+        # splice (including pages it demoted or promoted)
         while self.pool.free_slots():
             self._pending_plans.clear()
-            admitted = self.scheduler.admit(1, shared_fn=self._shared_peek,
-                                            pool_state_fn=self._pool_state)
+            admitted = self.scheduler.admit(
+                1,
+                shared_fn=(self._shared_peek if self.prefix_index is not None
+                           else None),
+                pool_state_fn=self._pool_state)
             if not admitted:
                 break
             self._admit_one(admitted[0], time.perf_counter())
@@ -457,14 +705,48 @@ class ContinuousBatchingEngine:
             n_prompt = pages_needed(n_comp, self.engine_cfg.page_size)
             aliased = list(plan.aliased) if plan is not None else []
             copy_src = plan.copy_src if plan is not None else None
+            if self.swap is not None and plan is not None:
+                # materialize host-tier plan entries: a prefix hit on a
+                # swapped page PROMOTES it back (bitwise) instead of
+                # recompressing the prefix — the reservation check counted
+                # these promote pages, so residency cannot fail here. Every
+                # device-resident plan page (the CoW source included) is
+                # hot: the promotions' demotions must not recycle a page
+                # this admission is about to pin
+                hot = {p for p in aliased if not isinstance(p, PageHandle)}
+                if (copy_src is not None
+                        and not isinstance(copy_src, PageHandle)):
+                    hot.add(copy_src)
+                for j, entry in enumerate(aliased):
+                    if isinstance(entry, PageHandle):
+                        page = self._promote_handle(entry, hot)
+                        if page is None:
+                            raise PagePoolExhausted(
+                                "admission could not promote a shared page "
+                                "the reservation check accounted for")
+                        aliased[j] = page
+                        hot.add(page)
+                if isinstance(copy_src, PageHandle):
+                    page = self._promote_handle(copy_src, hot)
+                    if page is None:
+                        raise PagePoolExhausted(
+                            "admission could not promote the CoW source "
+                            "page the reservation check accounted for")
+                    copy_src = page
             for p in aliased:
                 self.allocator.incref(p)
+                if self.swap is not None:
+                    self.swap.note_hit(p)
             if copy_src is not None:
                 # pin the CoW source across the allocation: _alloc may evict
                 # index-only pages, and the source must not be freed and
                 # recycled as the very page we are about to copy into
                 self.allocator.incref(copy_src)
-            new_pages = self._alloc(n_prompt - len(aliased))
+                if self.swap is not None:
+                    self.swap.note_hit(copy_src)
+            keep = set(aliased) | ({copy_src} if copy_src is not None
+                                   else set())
+            new_pages = self._alloc(n_prompt - len(aliased), hot=keep)
             info.pages = aliased + new_pages
             info.pages_shared = len(aliased)
             if copy_src is not None:
@@ -486,7 +768,8 @@ class ContinuousBatchingEngine:
                                          else SharePlan())
                 self.prefix_index.register(
                     self._key_tokens(req, bucket), req.tier, info.pages,
-                    n_comp, self.allocator)
+                    n_comp, self.allocator,
+                    host=self.swap.host if self.swap is not None else None)
                 self.metrics.record_prefix_share(
                     aliased=len(aliased),
                     copied=1 if (plan and plan.copy_src is not None) else 0,
@@ -501,18 +784,29 @@ class ContinuousBatchingEngine:
         self._consume_logits(slot, np.asarray(logits[0]))
 
     def step(self) -> bool:
-        """Admit + advance every active slot one token. Returns True if any
+        """Admit + advance every active slot one token (swap mode: every
+        active slot whose pages could be made device-resident — the rest
+        stall, bit-identical, until promotion succeeds). Returns True if any
         work remains (queued or in flight)."""
         self._admit()
         active_ids = self.pool.active_slots()
         if not active_ids:
             return len(self.scheduler) > 0
 
+        stalled: set = set()
+        if self.swap is not None:
+            stalled = self._prepare_slots(active_ids)
+            if len(stalled) == len(active_ids):
+                raise RuntimeError(
+                    "tiered pool livelock: every active slot is stalled on "
+                    "promotion — raise n_pages or SwapConfig.max_host_pages")
+        step_ids = [i for i in active_ids if i not in stalled]
+
         B = self.engine_cfg.n_slots
         token = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
         s_cap = np.full((B,), self.lex_cfg.s, np.int32)
-        for i in active_ids:
+        for i in step_ids:
             info = self.pool.slots[i]
             if info.in_prompt_phase:
                 token[i] = int(info.request.prompt[info.fed])
@@ -520,15 +814,18 @@ class ContinuousBatchingEngine:
                 token[i] = info.pending
             active[i] = True
             s_cap[i] = info.request.tier
-            if self.paged:
-                self._grow_pages(i)
+            if self.paged and self.swap is None:
+                self._grow_pages(i)    # swap mode grew in _prepare_slots
+
+        touched = [p for i in step_ids
+                   for p in self.pool.slots[i].device_pages]
 
         logits, self.state = self._decode_fn(
             self.params, self.bank, self.state,
             jnp.asarray(token), jnp.asarray(active), jnp.asarray(s_cap))
         logits_np = np.asarray(logits)
 
-        for i in active_ids:
+        for i in step_ids:
             info = self.pool.slots[i]
             info.cache_len += 1          # host mirror of the device length row
             if info.in_prompt_phase:
@@ -541,12 +838,20 @@ class ContinuousBatchingEngine:
             held = Counter(p for i in self.pool.active_slots()
                            for p in self.pool.slots[i].pages)
             shared_now = sum(1 for c in held.values() if c >= 2)
+        if self.swap is not None:
+            self.swap.note_touch(touched, self.metrics.steps)
+            self._proactive_trim()
+            # handles dropped without a promote (destructive eviction of a
+            # swapped prefix entry, retire of a last reference) would leak
+            # their stats forever — handles are never reused
+            self.swap.prune_stats()
         self.metrics.sample_step(
             occupancy=self.pool.occupancy(),
             kv_bytes_in_flight=self.kv_bytes_in_flight(),
             kv_bytes_resident=self.kv_bytes_resident(),
             pages_in_use=self.allocator.n_used if self.paged else 0,
-            shared_pages=shared_now)
+            shared_pages=shared_now,
+            host_bytes_resident=self.host_bytes_resident())
         return bool(self.pool.active_slots()) or len(self.scheduler) > 0
 
     def run(self, max_steps: int = 100_000) -> Dict[int, SlotInfo]:

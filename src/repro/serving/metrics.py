@@ -14,6 +14,13 @@ of the storage layout.
 Prefix sharing adds admission-time counters: trie hits/misses, pages
 aliased / copied-on-write, compressed positions whose prefill OMP was
 skipped, and the paper-accounting bytes deduplicated by aliasing.
+
+Tiered storage (``repro.serving.swap``) adds the two-tier counters: pages
+demoted to / promoted from the host tier, ``host_bytes_resident`` sampled
+per step (the host tier's real footprint — ``kv_bytes_resident`` stays
+device-only, so the two never double-count a page), and
+``promote_stall_steps`` — slot-steps lost waiting for a swapped page's
+device residency (the latency cost oversubscription pays).
 """
 from __future__ import annotations
 
@@ -44,21 +51,27 @@ class EngineMetrics:
     pages_aliased: int = 0
     pages_copied: int = 0
     bytes_deduped: int = 0
+    # tiered storage (host-memory swap)
+    pages_demoted: int = 0
+    pages_promoted: int = 0
+    promote_stall_steps: int = 0
     occupancy_samples: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_samples: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_resident_samples: List[int] = dataclasses.field(default_factory=list)
     pages_in_use_samples: List[int] = dataclasses.field(default_factory=list)
     shared_pages_samples: List[int] = dataclasses.field(default_factory=list)
+    host_bytes_samples: List[int] = dataclasses.field(default_factory=list)
     queue_latency_s: List[float] = dataclasses.field(default_factory=list)
 
     def sample_step(self, *, occupancy: int, kv_bytes_in_flight: int,
                     kv_bytes_resident: int = 0, pages_in_use: int = 0,
-                    shared_pages: int = 0) -> None:
+                    shared_pages: int = 0, host_bytes_resident: int = 0) -> None:
         """Record one pooled decode step.
 
         ``shared_pages``: physical pages currently referenced by >= 2
         holders among live slots (the dedup the prefix cache is buying
-        right now).
+        right now). ``host_bytes_resident``: bytes the host swap tier holds
+        right now (device-resident bytes live in ``kv_bytes_resident``).
         """
         self.steps += 1
         self.occupancy_samples.append(occupancy)
@@ -66,6 +79,15 @@ class EngineMetrics:
         self.kv_bytes_resident_samples.append(kv_bytes_resident)
         self.pages_in_use_samples.append(pages_in_use)
         self.shared_pages_samples.append(shared_pages)
+        self.host_bytes_samples.append(host_bytes_resident)
+
+    def record_swap(self, *, demoted: int = 0, promoted: int = 0,
+                    stalls: int = 0) -> None:
+        """Tier traffic of one engine step: pages moved device->host /
+        host->device, plus slots that stalled waiting for residency."""
+        self.pages_demoted += demoted
+        self.pages_promoted += promoted
+        self.promote_stall_steps += stalls
 
     def record_admission(self, queue_latency_s: float) -> None:
         """One request spliced into a slot (``queue_latency_s`` = time from
@@ -101,6 +123,7 @@ class EngineMetrics:
         res = self.kv_bytes_resident_samples or [0]
         pgs = self.pages_in_use_samples or [0]
         shr = self.shared_pages_samples or [0]
+        hst = self.host_bytes_samples or [0]
         lat = self.queue_latency_s or [0.0]
         lookups = self.prefix_hits + self.prefix_misses
         return {
@@ -133,4 +156,10 @@ class EngineMetrics:
             "pages_copied": self.pages_copied,
             "bytes_deduped": self.bytes_deduped,
             "shared_pages_peak": max(shr),
+            # tiered storage (host-memory swap)
+            "pages_demoted": self.pages_demoted,
+            "pages_promoted": self.pages_promoted,
+            "promote_stall_steps": self.promote_stall_steps,
+            "host_bytes_resident_mean": sum(hst) / len(hst),
+            "host_bytes_resident_peak": max(hst),
         }

@@ -60,6 +60,9 @@ class PageAllocator:
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
         self._refs: Dict[int, int] = {}
+        # tier-transfer counters (lifetime totals; see demote/promote)
+        self.pages_demoted = 0
+        self.pages_promoted = 0
 
     @property
     def capacity(self) -> int:
@@ -129,6 +132,52 @@ class PageAllocator:
     def refcount(self, page: int) -> int:
         """Current reference count (0 = free or never allocated)."""
         return self._refs.get(page, 0)
+
+    def allocated_pages(self) -> List[int]:
+        """Page ids currently allocated (the demotion candidate set)."""
+        return list(self._refs)
+
+    # ------------------------------------------------- tiered-storage moves
+
+    def demote(self, page: int) -> int:
+        """Release ``page``'s *device slot* because its contents moved to the
+        host tier (``repro.serving.swap.HostPageStore``).
+
+        Distinct from :meth:`free`: no holder dropped a reference — the whole
+        refcount transfers to the host tier at once (the caller must mirror
+        the returned count there exactly), and the device id goes back on the
+        free list so it can be rebound to a different logical page. Raises
+        ``ValueError`` for the null page and ``KeyError`` for a page that is
+        not allocated (demote after free).
+        """
+        if page == NULL_PAGE:
+            raise ValueError("the null/trash page 0 is never demoted")
+        if page not in self._refs:
+            raise KeyError(f"page {page} is not allocated (demote after free?)")
+        refs = self._refs.pop(page)
+        self._free.append(page)
+        self.pages_demoted += 1
+        return refs
+
+    def promote(self, refs: int) -> int:
+        """Take one free device page for a host-tier page rebinding into the
+        pool, pre-set to ``refs`` holders — the count :meth:`demote`
+        transferred out (possibly grown by sharing while swapped). Inverse of
+        ``demote``; raises ``PagePoolExhausted`` when nothing is free and
+        ``RefcountOverflow``/``ValueError`` on an out-of-range count.
+        """
+        if refs < 1:
+            raise ValueError(f"promote needs >= 1 holder, got {refs}")
+        if refs > self.MAX_REFS:
+            raise RefcountOverflow(
+                f"promoted refcount {refs} would exceed {self.MAX_REFS}")
+        if not self._free:
+            raise PagePoolExhausted(
+                f"promote requested a page, none of {self.capacity} free")
+        page = self._free.pop()
+        self._refs[page] = refs
+        self.pages_promoted += 1
+        return page
 
     def check_balanced(self) -> bool:
         """True iff every allocated page has been returned (leak check)."""

@@ -32,8 +32,20 @@ Two kinds of reuse come out of a lookup (:class:`SharePlan`):
 The index *pins* every page it caches (one ``incref`` per registered node),
 so a donor's pages stay shareable after the donor retires — "recently
 retired" reuse. When the pool's free list runs dry the engine calls
-:meth:`PrefixIndex.evict`, which drops pins deepest-node-first in LRU order
-(a shallower pin is useless without its ancestors, never the reverse).
+:meth:`PrefixIndex.evict`, which drops pins subtree-first ranked by a
+frequency/size score (``SwapPolicy.subtree_evict_key``: hit-count per
+cached page, LRU tie-break) — a rarely-hit subtree spread over many pages
+goes first, a hit-rich one survives (a shallower pin is useless without its
+ancestors, never the reverse).
+
+Tiered storage (``repro.serving.swap``): a cached page can be *demoted* to
+the host tier instead of dropped — the engine extracts its codes, the node
+is re-keyed from its device page id to a stable :class:`~repro.serving.swap
+.PageHandle` (:meth:`PrefixIndex.swap_out`), and a later admission that
+hits the node *promotes* the page back instead of recompressing the prefix
+(:meth:`PrefixIndex.swap_in`). Demotion preserves the cache entry; dropping
+destroys it — the engine prefers the former whenever the host tier has
+room.
 """
 from __future__ import annotations
 
@@ -42,6 +54,11 @@ import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.pages import NULL_PAGE, PageAllocator
+from repro.serving.swap import HostPageStore, PageHandle, PageRef, SwapPolicy
+
+
+# default eviction scorer (frequency/size-aware; see SwapPolicy)
+_DEFAULT_POLICY = SwapPolicy()
 
 
 def _chunk_hash(tokens: Tuple[int, ...]) -> bytes:
@@ -57,14 +74,19 @@ class _Node:
     """One trie node = one cached physical page at one page position.
 
     ``tokens`` is the raw chunk the edge hash was computed from (collision
-    guard); ``valid`` counts the page's positions holding prefill-produced
-    codes (``page_size`` for interior nodes, possibly less for a donor's
-    boundary page); ``last_used`` is a monotonic LRU stamp.
+    guard); ``page`` is a device page id while resident or a
+    :class:`~repro.serving.swap.PageHandle` while demoted to the host tier;
+    ``valid`` counts the page's positions holding prefill-produced codes
+    (``page_size`` for interior nodes, possibly less for a donor's boundary
+    page); ``last_used`` is a monotonic LRU stamp and ``hits`` counts
+    committed admissions that reused this node (the eviction scorer's
+    frequency signal).
     """
     tokens: Tuple[int, ...]
-    page: int
+    page: PageRef
     valid: int
     last_used: int = 0
+    hits: int = 0
     children: Dict[bytes, "_Node"] = dataclasses.field(default_factory=dict)
 
 
@@ -73,8 +95,12 @@ class SharePlan:
     """What a lookup found for one admission.
 
     ``aliased`` — physical pages (in page-table order, from position 0) the
-    new slot maps as-is. ``copy_src``/``copy_valid`` — donor page to CoW
-    into the slot's boundary table entry ``len(aliased)``, holding
+    new slot maps as-is; entries may be host-tier
+    :class:`~repro.serving.swap.PageHandle`\\ s when the cached page is
+    currently demoted — a swap-enabled engine promotes them before aliasing
+    (recompression is never needed). ``copy_src``/``copy_valid`` — donor
+    page to CoW into the slot's boundary table entry ``len(aliased)``,
+    holding
     ``copy_valid >= shared_codes - len(aliased)*page_size`` valid codes.
     ``shared_codes`` — compressed positions whose OMP the recipient skips;
     the restartable prefill starts at ``len(aliased) * page_size`` (page
@@ -86,8 +112,8 @@ class SharePlan:
     :meth:`PrefixIndex.commit` when the admission actually happens to
     record the hit/miss and refresh the matched nodes' LRU stamps.
     """
-    aliased: List[int] = dataclasses.field(default_factory=list)
-    copy_src: Optional[int] = None
+    aliased: List[PageRef] = dataclasses.field(default_factory=list)
+    copy_src: Optional[PageRef] = None
     copy_valid: int = 0
     shared_codes: int = 0
     # trie nodes the plan matched (LRU-stamped on commit, not on lookup)
@@ -130,14 +156,44 @@ class PrefixIndex:
     # ------------------------------------------------------------------- API
 
     def n_cached_pages(self) -> int:
-        """Distinct physical pages currently pinned by the index."""
+        """Distinct pages currently pinned by the index (both tiers)."""
         return len(self._registered)
 
     def evictable_pages(self, allocator: PageAllocator) -> int:
-        """Pages whose *only* reference is the index's pin — evicting them
-        actually returns pages to the free list (pages also held by live
-        slots stay resident regardless)."""
-        return sum(1 for p in self._registered if allocator.refcount(p) == 1)
+        """DEVICE pages whose *only* reference is the index's pin — evicting
+        them actually returns pages to the free list (pages also held by
+        live slots stay resident regardless; host-tier entries free no
+        device pages and are excluded)."""
+        return sum(1 for p in self._registered
+                   if not isinstance(p, PageHandle)
+                   and allocator.refcount(p) == 1)
+
+    # ------------------------------------------------- tiered-storage moves
+
+    def swap_out(self, page: int, handle: PageHandle) -> bool:
+        """Re-key the node caching device page ``page`` to the host-tier
+        ``handle`` (the page's codes were demoted; the cache entry — and its
+        shareability — survives). Returns False when ``page`` is not pinned
+        here. The index's pin moves tiers with the page: the engine
+        transfers the whole refcount via ``PageAllocator.demote`` /
+        ``HostPageStore.put``, so no incref/decref happens."""
+        node = self._registered.pop(page, None)
+        if node is None:
+            return False
+        node.page = handle
+        self._registered[handle] = node
+        return True
+
+    def swap_in(self, handle: PageHandle, page: int) -> bool:
+        """Inverse of :meth:`swap_out`: the host-tier page was promoted back
+        into device page ``page``; re-key the node. Returns False when
+        ``handle`` is not pinned here."""
+        node = self._registered.pop(handle, None)
+        if node is None:
+            return False
+        node.page = page
+        self._registered[page] = node
+        return True
 
     def lookup(self, tokens: Sequence[int], tier: int, n_codes: int) -> SharePlan:
         """Find the longest page-aligned shared prefix for an admission.
@@ -193,13 +249,17 @@ class PrefixIndex:
 
     def commit(self, plan: SharePlan) -> None:
         """Record an admission that used ``plan``: refresh the matched
-        nodes' LRU stamps (hit/miss counting lives in ``EngineMetrics``)."""
+        nodes' LRU stamps and bump their hit counts — the recency and
+        frequency the eviction scorer ranks on (aggregate hit/miss
+        *metrics* live in ``EngineMetrics``)."""
         now = self._tick()
         for node in plan.nodes:
             node.last_used = now
+            node.hits += 1
 
     def register(self, tokens: Sequence[int], tier: int, pages: Sequence[int],
-                 n_codes: int, allocator: PageAllocator) -> int:
+                 n_codes: int, allocator: PageAllocator,
+                 host: Optional[HostPageStore] = None) -> int:
         """Publish a freshly-prefilled slot's pages for future sharing.
 
         Args:
@@ -211,6 +271,8 @@ class PrefixIndex:
             computed through the compressed-attention path and would not be
             bitwise-reproducible by another request's prefill.
           allocator: pins each newly-registered page with one ``incref``.
+          host: host tier store (swap-enabled engines) — threaded into the
+            ``max_cached_pages`` trim so it can drop swapped entries too.
 
         Pages already cached at their position (a donor's) are left in place
         — the recipient's aliased entries are the donor's pages anyway.
@@ -250,54 +312,86 @@ class PrefixIndex:
         if self.max_cached_pages is not None:
             over = len(self._registered) - self.max_cached_pages
             if over > 0:
-                self.evict(allocator, max_pages=over, only_free=False)
+                self.evict(allocator, max_pages=over, only_free=False,
+                           host=host)
         return pinned
 
-    def _unpin(self, node: _Node, allocator: PageAllocator) -> bool:
-        """Drop the index's pin on ``node``'s page. True iff the page
-        actually returned to the free list (no slot was holding it)."""
+    def _unpin(self, node: _Node, allocator: PageAllocator,
+               host: Optional[HostPageStore]) -> bool:
+        """Drop the index's pin on ``node``'s page. True iff a DEVICE page
+        actually returned to the free list (no slot was holding it; dropping
+        a host-tier entry frees host bytes, never device pages)."""
         page = node.page
-        del self._registered[page]
-        freed = allocator.refcount(page) == 1
-        allocator.decref(page)
+        if isinstance(page, PageHandle):
+            if host is None:
+                raise ValueError(
+                    f"cannot drop the pin on swapped {page} without the host "
+                    "store (pass host=)")
+            del self._registered[page]
+            host.decref(page)
+            freed = False
+        else:
+            del self._registered[page]
+            freed = allocator.refcount(page) == 1
+            allocator.decref(page)
         node.page, node.valid = NULL_PAGE, 0
         return freed
 
     def evict(self, allocator: PageAllocator, *, max_pages: int,
-              only_free: bool = True) -> int:
-        """Drop cached-page pins in LRU order until ``max_pages`` pages have
-        returned to the free list (or nothing more can be evicted).
+              only_free: bool = True, scorer=None,
+              host: Optional[HostPageStore] = None) -> int:
+        """Drop cached-page pins, coldest subtree first, until ``max_pages``
+        device pages have returned to the free list (or nothing more can be
+        evicted).
 
-        Eviction is *subtree*-granular: a cached page is only reachable
-        through its whole ancestor path, so the LRU victim (stamped by the
-        newest use anywhere below it) is removed together with everything
+        Victims are ranked by ``scorer`` — default
+        ``SwapPolicy.subtree_evict_key``, a frequency/size score: committed
+        hit-count per cached page with a least-recently-used tie-break, so a
+        rarely-reused subtree spread over many pages goes before a hit-rich
+        compact one (pure LRU was the pre-tiering behaviour). Eviction is
+        *subtree*-granular: a cached page is only reachable through its
+        whole ancestor path, so a victim is removed together with everything
         under it — pins are never stranded. ``only_free=True`` (the
-        free-list-ran-dry path) skips subtrees whose removal would free
-        nothing (every page in them still aliased by a live slot);
-        ``only_free=False`` (capacity trim) drops them regardless.
-        Returns the number of pages actually freed.
+        free-list-ran-dry path) skips subtrees whose removal would free no
+        device pages (every page in them still aliased by a live slot, or
+        already demoted to the host tier); ``only_free=False`` (capacity
+        trim) drops them regardless. ``host`` is required to drop swapped
+        entries. Returns the number of device pages actually freed.
+
+        Destructive by design — a swap-enabled engine prefers *demoting*
+        cached pages (which preserves the entry) and only lands here when
+        the host tier is full or swap is off.
         """
+        if scorer is None:
+            scorer = _DEFAULT_POLICY.subtree_evict_key
         freed = unpinned = 0
         while (freed if only_free else unpinned) < max_pages:
             # candidate = one directly-under-root subtree per tier trie,
-            # stamped with the newest last_used anywhere inside it
-            candidates: List[Tuple[int, int, _Node, bytes]] = []
+            # scored over the whole subtree (newest stamp, summed hits,
+            # cached-page count)
+            candidates: List[Tuple[Tuple, int, _Node, bytes]] = []
             for root in self._roots.values():
                 for key, child in root.children.items():
-                    stamp = max(n.last_used for n in self._iter_subtree(child))
-                    candidates.append((stamp, id(child), root, key))
+                    subtree = list(self._iter_subtree(child))
+                    stats = scorer(
+                        hits=sum(n.hits for n in subtree),
+                        pages=len(subtree),
+                        last_used=max(n.last_used for n in subtree))
+                    candidates.append((stats, id(child), root, key))
             candidates.sort(key=lambda c: (c[0], c[1]))
             progressed = False
             for _, _, parent, key in candidates:
                 subtree = list(self._iter_subtree(parent.children[key]))
-                would_free = sum(1 for n in subtree if n.page != NULL_PAGE
-                                 and allocator.refcount(n.page) == 1)
+                would_free = sum(
+                    1 for n in subtree if not isinstance(n.page, PageHandle)
+                    and n.page != NULL_PAGE
+                    and allocator.refcount(n.page) == 1)
                 if only_free and would_free == 0:
                     continue
                 for n in subtree:
                     if n.page != NULL_PAGE:
                         unpinned += 1
-                        if self._unpin(n, allocator):
+                        if self._unpin(n, allocator, host):
                             freed += 1
                 del parent.children[key]
                 progressed = True
@@ -312,11 +406,13 @@ class PrefixIndex:
         for child in node.children.values():
             yield from PrefixIndex._iter_subtree(child)
 
-    def clear(self, allocator: PageAllocator) -> int:
-        """Drop every pin (leak checks / shutdown). Returns pages freed."""
+    def clear(self, allocator: PageAllocator,
+              host: Optional[HostPageStore] = None) -> int:
+        """Drop every pin, both tiers (leak checks / shutdown). Returns
+        device pages freed."""
         freed = 0
         for node in list(self._registered.values()):
-            if self._unpin(node, allocator):
+            if self._unpin(node, allocator, host):
                 freed += 1
         self._roots.clear()
         return freed

@@ -120,6 +120,7 @@ class FCFSScheduler:
         self.queue: Deque[Request] = deque()
         self.bytes_admitted = 0          # charged bytes of in-flight requests
         self.pages_admitted = 0          # charged pages (paged mode only)
+        self.rejections = 0              # head-of-line _fits failures
         self._charged: Dict[int, Tuple[int, int]] = {}  # rid -> (bytes, pages)
 
     def submit(self, req: Request) -> None:
@@ -159,23 +160,29 @@ class FCFSScheduler:
                 * 2 * codes * quant.payload_bytes(req.tier, self.codec))
 
     def _fits(self, req: Request, charge_bytes: int, charge_pages: int,
-              pinned: int, pool_state_fn) -> bool:
+              pinned: int, promote: int, pool_state_fn) -> bool:
         if (self.kv_byte_budget is not None and
                 self.bytes_admitted + charge_bytes > self.kv_byte_budget):
             return False
         if self.page_budget is not None:
             if pool_state_fn is not None:
-                # reservation check against live pool state (prefix sharing):
-                # outstanding = charged-but-not-yet-allocated pages of every
-                # in-flight request; evictable is reduced by every page this
-                # admission is about to pin — aliased pages AND the CoW
-                # source (conservative: they may not have been evictable,
-                # but once pinned the only_free eviction path cannot
-                # reclaim them to satisfy this admission's allocation)
+                # reservation check against live pool state (prefix sharing
+                # and/or a host swap tier): outstanding = charged-but-not-
+                # yet-allocated pages of every in-flight request; evictable
+                # is reduced by every page this admission is about to pin —
+                # aliased pages AND the CoW source (conservative: they may
+                # not have been evictable, but once pinned the only_free
+                # eviction path cannot reclaim them to satisfy this
+                # admission's allocation); `promote` device pages are needed
+                # on top of the charge to fetch swapped aliased pages back;
+                # `reclaimable` is the host tier's remaining room — device
+                # pages the engine can free by demoting cold residents, so
+                # the pool ceiling becomes a latency tradeoff, not a wall
                 st = pool_state_fn()
                 outstanding = self.pages_admitted - st["owned"]
-                available = st["free"] + max(st["evictable"] - pinned, 0)
-                if charge_pages + outstanding > available:
+                available = (st["free"] + max(st["evictable"] - pinned, 0)
+                             + st.get("reclaimable", 0))
+                if charge_pages + promote + outstanding > available:
                     return False
             elif self.pages_admitted + charge_pages > self.page_budget:
                 return False
@@ -183,7 +190,7 @@ class FCFSScheduler:
 
     def admit(self, free_slots: int,
               shared_fn: Optional[
-                  Callable[[Request], Tuple[int, int, int]]] = None,
+                  Callable[[Request], Tuple[int, int, int, int]]] = None,
               pool_state_fn: Optional[Callable[[], Dict[str, int]]] = None,
               ) -> List[Request]:
         """Pop the FCFS prefix that fits (slots, bytes and pages).
@@ -191,31 +198,38 @@ class FCFSScheduler:
         Args:
           free_slots: slots the engine has open right now.
           shared_fn: prefix-sharing peek — maps a request to
-            ``(aliased_pages, shared_codes, pinned_pages)`` it would reuse
-            if admitted now; ``pinned_pages`` additionally counts the
-            copy-on-write source page, which the admission pins but does
-            not alias. The charge recorded for the request covers only
-            what is new: ``projected_pages - aliased_pages`` pages and
-            ``projected_bytes - shared_byte_discount`` bytes.
+            ``(aliased_pages, shared_codes, pinned_pages, promote_pages)``
+            it would reuse if admitted now; ``pinned_pages`` additionally
+            counts the copy-on-write source page, which the admission pins
+            but does not alias, and ``promote_pages`` counts aliased/CoW
+            pages currently demoted to the host tier — promoting them costs
+            device pages on top of the charge. The charge recorded for the
+            request covers only what is new: ``projected_pages -
+            aliased_pages`` pages and ``projected_bytes -
+            shared_byte_discount`` bytes.
           pool_state_fn: live pool state for the reservation check (see
             class docstring): ``{"free": .., "evictable": .., "owned": ..}``
             where ``owned`` totals pages already allocated by live slots
-            against their charges.
+            against their charges, plus optional ``"reclaimable"`` — device
+            pages the engine can free by demoting cold residents into the
+            host tier's remaining room (swap-enabled engines).
 
-        Head-of-line blocking: stops at the first request that doesn't fit.
-        Returns the admitted requests in FCFS order.
+        Head-of-line blocking: stops at the first request that doesn't fit
+        (each such stop is counted in ``rejections``). Returns the admitted
+        requests in FCFS order.
         """
         admitted: List[Request] = []
         while self.queue and len(admitted) < free_slots:
             head = self.queue[0]
-            aliased = shared = pinned = 0
+            aliased = shared = pinned = promote = 0
             if shared_fn is not None:
-                aliased, shared, pinned = shared_fn(head)
+                aliased, shared, pinned, promote = shared_fn(head)
             charge_bytes = (self.projected_bytes(head)
                             - self.shared_byte_discount(head, aliased))
             charge_pages = max(self.projected_pages(head) - aliased, 0)
             if not self._fits(head, charge_bytes, charge_pages, pinned,
-                              pool_state_fn):
+                              promote, pool_state_fn):
+                self.rejections += 1
                 break
             self.queue.popleft()
             self.bytes_admitted += charge_bytes

@@ -40,6 +40,7 @@ from repro.core.attention import gather_pages
 from repro.core.sparse_cache import LexicoLayerCache
 from repro.models.model import ServeState
 from repro.serving.scheduler import Request
+from repro.serving.swap import PageHandle
 
 
 @dataclasses.dataclass
@@ -52,10 +53,14 @@ class SlotInfo:
       generated: tokens sampled so far; ``generated_tokens`` collects them.
       pending: sampled token not yet fed back through decode.
       pages: pool pages bound in this slot's table row, in table order
-        (paged layout; a host mirror of the device row). The first
-        ``pages_shared`` of them are *aliased* — owned jointly with other
-        slots and/or the prefix index via refcounts, never written by this
-        slot, and not counted against its admission reservation.
+        (paged layout; a host mirror of the device row). Entries are device
+        page ids, or :class:`~repro.serving.swap.PageHandle` markers for
+        positions whose page is currently demoted to the host tier (the
+        device row holds the null page there; the engine promotes them back
+        before the slot steps). The first ``pages_shared`` of them are
+        *aliased* — owned jointly with other slots and/or the prefix index
+        via refcounts, never written by this slot, and not counted against
+        its admission reservation.
       pages_reserved: completion-time NEW-page reservation the scheduler
         charged at admission (aliased pages excluded).
       cache_len: host mirror of the device-side ``length`` row — drives
@@ -81,8 +86,21 @@ class SlotInfo:
     @property
     def pages_owned(self) -> int:
         """Pages this slot allocated for itself (counted against its
-        admission reservation); aliased shared-prefix pages are excluded."""
+        admission reservation); aliased shared-prefix pages are excluded.
+        Swapped entries still count — the codes exist, just host-side."""
         return len(self.pages) - self.pages_shared
+
+    @property
+    def device_pages(self) -> List[int]:
+        """Device-resident page ids bound in this slot's table right now
+        (swapped :class:`~repro.serving.swap.PageHandle` entries excluded)."""
+        return [p for p in self.pages if not isinstance(p, PageHandle)]
+
+    @property
+    def swapped_pages(self) -> List["PageHandle"]:
+        """Host-tier handles of this slot's demoted pages (the slot cannot
+        step until the engine promotes them back)."""
+        return [p for p in self.pages if isinstance(p, PageHandle)]
 
     @property
     def in_prompt_phase(self) -> bool:

@@ -1,0 +1,309 @@
+"""Tiered KV storage: page-level swap-out to a host-memory tier.
+
+Lexico's compressed pages are tiny — ``page_size`` vectors at ``3s + 2``
+bytes each instead of ``2m`` full-precision bytes — so moving a page across
+the host↔device boundary costs a fraction of what raw-KV paging would. This
+module turns that into capacity: when the device page pool runs hot, cold
+pages are *demoted* into a host-memory mirror instead of being lost, and
+*promoted* back (bitwise, the same arrays device→host→device) the moment a
+slot or a prefix-cache hit needs them. "Pool full" becomes a latency
+tradeoff instead of a hard admission ceiling.
+
+The pieces:
+
+  * :class:`PageHandle` — a stable identity for a logical page. Device page
+    ids are *positional* (an index into the pool) and are recycled the
+    moment a page is demoted; the handle is what slot page-table mirrors and
+    prefix-index nodes hold while the codes live host-side, so the page can
+    be rebound to ANY free device slot on promotion.
+  * :class:`HostPageStore` — the host tier: a pinned numpy mirror of
+    demoted pages, refcounted with exactly the holder semantics of the
+    device :class:`~repro.serving.pages.PageAllocator` (one ref per slot
+    table entry, one per prefix-index pin). ``PageAllocator.demote``
+    transfers a page's whole refcount here; ``promote`` transfers it back.
+  * :class:`SwapPolicy` — cold-page scoring over last-touch recency,
+    refcount fan-out and prefix-cache hit frequency. The same policy object
+    scores prefix-cache eviction subtrees
+    (:meth:`SwapPolicy.subtree_evict_key`), so "what do we demote" and
+    "what do we drop" agree on what cold means.
+  * :class:`SwapManager` — per-engine glue: the host store plus the
+    per-page stats the policy scores (stats follow a page across tiers,
+    keyed by device id while resident and by handle while swapped).
+  * :func:`extract_page_state` / :func:`inject_page_state` — the
+    ``ServeState``-level device splices (jitted once per engine, traced page
+    index) wrapping ``sparse_cache.extract_page`` / ``inject_page``.
+
+Exactness: demotion copies the page's encoded arrays off-device verbatim
+and promotion writes the identical bytes back, so a demoted-then-promoted
+page is indistinguishable from one that never moved — the engine
+differential in ``tests/test_swap.py`` pins tokens bitwise against a
+never-swapped run. See ``docs/tiered_memory.md`` for the full design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.models.model import ServeState
+from repro.core import sparse_cache
+
+
+class HostTierFull(RuntimeError):
+    """Raised when ``HostPageStore.put`` would exceed ``max_pages``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PageHandle:
+    """Stable identity of a demoted page (host-tier key).
+
+    Deliberately NOT an int: device page ids and handles live in disjoint
+    namespaces, so a swapped page can never be mistaken for an allocatable
+    device page (``PageAllocator.alloc`` hands out ints only — asserted in
+    ``tests/test_slot_lifecycle_fuzz.py``).
+    """
+    hid: int
+
+
+PageRef = Union[int, PageHandle]     # device page id | host-tier handle
+HostStores = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+def is_device_page(ref: PageRef) -> bool:
+    """True for a device page id, False for a host-tier :class:`PageHandle`."""
+    return not isinstance(ref, PageHandle)
+
+
+@dataclasses.dataclass
+class _HostPage:
+    stores: HostStores            # (k_vals, k_idx, v_vals, v_idx) numpy
+    refs: int                     # holders (slot table entries + index pins)
+    nbytes: int
+
+
+class HostPageStore:
+    """Host-memory tier: refcounted numpy mirror of demoted pool pages.
+
+    Mirrors the device allocator's holder semantics exactly — a demotion
+    transfers a page's whole refcount here (``put``), a promotion transfers
+    it back out (``pop``), and holders that appear/disappear *while the page
+    is swapped* (prefix sharing, slot retirement) move the count with
+    ``incref``/``decref``. ``bytes_resident`` is the tier's real footprint
+    (the arrays' nbytes across all layers), reported by the engine as
+    ``host_bytes_resident``.
+    """
+
+    def __init__(self, max_pages: Optional[int] = None):
+        if max_pages is not None and max_pages < 0:
+            raise ValueError("max_pages must be >= 0 (or None = unbounded)")
+        self.max_pages = max_pages
+        self._pages: Dict[PageHandle, _HostPage] = {}
+        self._next_hid = 1
+        self.bytes_resident = 0
+
+    @property
+    def n_pages(self) -> int:
+        """Pages currently resident in the host tier."""
+        return len(self._pages)
+
+    def room(self) -> int:
+        """Pages the tier can still absorb (a large sentinel if unbounded)."""
+        if self.max_pages is None:
+            return 1 << 30
+        return max(self.max_pages - len(self._pages), 0)
+
+    def handles(self) -> List[PageHandle]:
+        """Live handles (promotion-candidate enumeration)."""
+        return list(self._pages)
+
+    def put(self, stores: HostStores, refs: int) -> PageHandle:
+        """Admit one demoted page holding ``refs`` transferred references.
+        Raises :class:`HostTierFull` at ``max_pages`` — the caller falls
+        back to destructive eviction."""
+        if refs < 1:
+            raise ValueError(f"a demoted page needs >= 1 holder, got {refs}")
+        if self.room() <= 0:
+            raise HostTierFull(
+                f"host tier at capacity ({self.max_pages} pages)")
+        handle = PageHandle(self._next_hid)
+        self._next_hid += 1
+        nbytes = int(sum(np.asarray(a).nbytes for a in stores))
+        self._pages[handle] = _HostPage(stores=stores, refs=refs,
+                                        nbytes=nbytes)
+        self.bytes_resident += nbytes
+        return handle
+
+    def get(self, handle: PageHandle) -> HostStores:
+        """The page's stores (read-only peek; the page stays resident)."""
+        return self._pages[handle].stores
+
+    def refcount(self, handle: PageHandle) -> int:
+        """Holders of ``handle`` (0 = not resident)."""
+        page = self._pages.get(handle)
+        return page.refs if page is not None else 0
+
+    def incref(self, handle: PageHandle) -> None:
+        """One more holder of a swapped page (sharing while swapped)."""
+        self._pages[handle].refs += 1
+
+    def decref(self, handle: PageHandle) -> bool:
+        """Drop one holder; the page leaves the tier at zero. Returns True
+        iff it was dropped. Raises ``KeyError`` on an unknown handle (double
+        free across tiers)."""
+        page = self._pages.get(handle)
+        if page is None:
+            raise KeyError(f"{handle} is not host-resident (double free?)")
+        page.refs -= 1
+        if page.refs == 0:
+            del self._pages[handle]
+            self.bytes_resident -= page.nbytes
+            return True
+        return False
+
+    def pop(self, handle: PageHandle) -> Tuple[HostStores, int]:
+        """Remove ``handle`` for promotion: returns ``(stores, refs)`` — the
+        refcount transfers back to the device allocator verbatim."""
+        page = self._pages.pop(handle)
+        self.bytes_resident -= page.nbytes
+        return page.stores, page.refs
+
+    def check_balanced(self) -> bool:
+        """True iff the tier is empty with zeroed accounting (leak check —
+        the two-tier twin of ``PageAllocator.check_balanced``)."""
+        return not self._pages and self.bytes_resident == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapPolicy:
+    """Cold-page scoring: who gets demoted, and what the prefix cache drops.
+
+    ``cold_score`` ranks demotion victims: age since last touch, damped by
+    refcount fan-out (a page many slots alias is expensive to stall on) and
+    prefix-cache hit frequency (a page admissions keep re-using will be
+    promoted right back). ``subtree_evict_key`` is the prefix-eviction
+    scorer built from the same signals — hit-count per page with an LRU
+    tie-break — so eviction and demotion agree on coldness.
+    """
+    ref_weight: float = 2.0       # damping per extra holder beyond the first
+    hit_weight: float = 4.0       # damping per prefix-cache hit
+
+    def cold_score(self, *, age: float, refs: int, hits: int) -> float:
+        """Higher = colder = demoted earlier."""
+        return age / (1.0 + self.ref_weight * max(refs - 1, 0)
+                      + self.hit_weight * hits)
+
+    def subtree_evict_key(self, *, hits: int, pages: int,
+                          last_used: int) -> Tuple[float, int]:
+        """Sort key for prefix-cache eviction victims (lowest first):
+        hit-count per cached page — a rarely-hit subtree spread over many
+        pages is the cheapest to lose — with least-recently-used breaking
+        ties among equally (un)popular subtrees."""
+        return ((1.0 + hits) / max(pages, 1), last_used)
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapConfig:
+    """Knobs of the host-memory tier (static over an engine's lifetime).
+
+    ``watermark_pages``: proactive demotion target — after each step the
+    engine demotes cold pages not bound in any live slot until at least this
+    many device pages are free (0 disables proactivity; on-demand demotion
+    inside allocation still runs). ``max_host_pages`` caps the host tier
+    (None = unbounded); when the tier is full the engine falls back to
+    destructive prefix eviction.
+    """
+    watermark_pages: int = 1
+    max_host_pages: Optional[int] = None
+    policy: SwapPolicy = dataclasses.field(default_factory=SwapPolicy)
+
+
+class SwapManager:
+    """Per-engine host tier + the per-page stats its policy scores.
+
+    Stats are keyed by the page's *current* ref — device id while resident,
+    :class:`PageHandle` while swapped — and follow the page across tier
+    moves (:meth:`stats_move`), so a page's coldness history survives a
+    round trip. The engine owns the device arrays and the holder rebinding;
+    this object owns everything host-side.
+    """
+
+    def __init__(self, cfg: SwapConfig):
+        self.cfg = cfg
+        self.policy = cfg.policy
+        self.host = HostPageStore(max_pages=cfg.max_host_pages)
+        self._last_touch: Dict[PageRef, int] = {}
+        self._hits: Dict[PageRef, int] = {}
+
+    # ------------------------------------------------------------- stats
+
+    def stats_reset(self, ref: PageRef, now: int) -> None:
+        """A freshly allocated (or re-purposed) page starts warm, hitless."""
+        self._last_touch[ref] = now
+        self._hits[ref] = 0
+
+    def note_touch(self, refs: Iterable[PageRef], now: int) -> None:
+        """Pages read by this step's attention (they are hot *now*)."""
+        for r in refs:
+            self._last_touch[r] = now
+
+    def note_hit(self, ref: PageRef) -> None:
+        """One admission aliased this page (prefix-cache frequency)."""
+        self._hits[ref] = self._hits.get(ref, 0) + 1
+
+    def stats_move(self, old: PageRef, new: PageRef) -> None:
+        """Re-key a page's stats across a tier move (demote or promote)."""
+        self._last_touch[new] = self._last_touch.pop(old, 0)
+        self._hits[new] = self._hits.pop(old, 0)
+
+    def stats_drop(self, ref: PageRef) -> None:
+        """Forget a page that left both tiers."""
+        self._last_touch.pop(ref, None)
+        self._hits.pop(ref, None)
+
+    def cold_score(self, ref: PageRef, *, refs: int, now: int) -> float:
+        return self.policy.cold_score(
+            age=float(now - self._last_touch.get(ref, 0)), refs=refs,
+            hits=self._hits.get(ref, 0))
+
+    def coldest(self, candidates: Sequence[int], *, refcount_fn,
+                now: int) -> int:
+        """The single coldest demotion victim (ties broken by page id so
+        the choice is deterministic for the differential tests); callers
+        demote one page at a time, so no full sort is needed."""
+        return min(
+            candidates,
+            key=lambda p: (-self.cold_score(p, refs=refcount_fn(p), now=now),
+                           p))
+
+    def prune_stats(self) -> None:
+        """Drop stats for handles that left the host tier without a promote
+        (destructive eviction of a swapped prefix entry, retire of a slot's
+        last reference) — handles are never reused, so stale keys would
+        otherwise accumulate for a server's lifetime. Device-id keys are
+        bounded by the pool and reset on reallocation, so they stay."""
+        live = set(self.host.handles())
+        for d in (self._last_touch, self._hits):
+            for k in [k for k in d
+                      if isinstance(k, PageHandle) and k not in live]:
+                del d[k]
+
+
+# ---------------------------------------------------------------------------
+# ServeState-level device splices (jitted per-engine, traced page index)
+# ---------------------------------------------------------------------------
+
+def extract_page_state(pool: ServeState, page):
+    """Slice one pool page's sparse stores out of a pooled ``ServeState``
+    (the device→host copy of a demotion). Pure function of the state — jit
+    WITHOUT donation, the pool stays live."""
+    return sparse_cache.extract_page(pool.cache, page)
+
+
+def inject_page_state(pool: ServeState, page, k_vals, k_idx, v_vals,
+                      v_idx) -> ServeState:
+    """Write one page's sparse stores back into a pooled ``ServeState`` at
+    device page ``page`` (the host→device copy of a promotion)."""
+    cache = sparse_cache.inject_page(pool.cache, page, k_vals, k_idx,
+                                     v_vals, v_idx)
+    return ServeState(cache=cache, length=pool.length, cross=pool.cross)

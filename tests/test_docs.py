@@ -17,7 +17,8 @@ import pytest
 REPO = Path(__file__).resolve().parent.parent
 DOCS = REPO / "docs"
 
-REQUIRED_PAGES = ["architecture.md", "serving.md", "memory_accounting.md"]
+REQUIRED_PAGES = ["architecture.md", "serving.md", "memory_accounting.md",
+                  "tiered_memory.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 

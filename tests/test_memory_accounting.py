@@ -166,3 +166,82 @@ def test_int8_cache_end_to_end(rng):
     cache = sparse_cache.prefill_compress(cache, K, K, D, D, s=4)
     assert cache.k_vals.dtype == jnp.int8
     assert int(cache.t_c[0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# tiered storage: two-tier byte accounting
+# ---------------------------------------------------------------------------
+
+def _page_arrays(num_layers, kv_heads, page_size, s):
+    """Numpy arrays shaped/typed like one extracted pool page (fp8 values
+    stand in as int8 here — same 1-byte width the accounting assumes)."""
+    shape = (num_layers, 1, kv_heads, page_size, s)
+    return (np.zeros(shape, np.int8), np.zeros(shape, np.int16),
+            np.zeros(shape, np.int8), np.zeros(shape, np.int16))
+
+
+def test_host_store_bytes_match_page_store_bytes():
+    """One demoted page's host bytes == num_layers * page_store_bytes: the
+    exact amount kv_bytes_resident stops counting device-side, so a
+    demotion moves bytes between the tiers without creating or losing
+    any."""
+    from repro.serving import HostPageStore
+    L, KV, P, S = 3, 2, 4, 8
+    h = HostPageStore()
+    handle = h.put(_page_arrays(L, KV, P, S), refs=1)
+    assert h.bytes_resident == L * page_store_bytes(KV, P, S)
+    # a second page doubles it; dropping each returns exactly its share
+    other = h.put(_page_arrays(L, KV, P, S), refs=2)
+    assert h.bytes_resident == 2 * L * page_store_bytes(KV, P, S)
+    h.pop(handle)
+    assert h.bytes_resident == L * page_store_bytes(KV, P, S)
+    assert not h.decref(other) and h.bytes_resident > 0   # still one holder
+    assert h.decref(other)
+    assert h.bytes_resident == 0 and h.check_balanced()
+
+
+def test_two_tier_accounting_conserves_bytes():
+    """A demote→promote round trip through the allocator + host store moves
+    one page's bytes host-ward and back; the two-tier total is constant and
+    nothing is double-counted at any point."""
+    from repro.serving import HostPageStore, PageAllocator
+    L, KV, P, S = 2, 2, 4, 8
+    page_b = L * page_store_bytes(KV, P, S)
+    alloc = PageAllocator(6, P)
+    host = HostPageStore()
+    pages = alloc.alloc(3)
+
+    def device_bytes():
+        return alloc.n_used * page_b
+
+    total = device_bytes() + host.bytes_resident
+    assert total == 3 * page_b
+
+    refs = alloc.demote(pages[0])
+    handle = host.put(_page_arrays(L, KV, P, S), refs=refs)
+    assert device_bytes() == 2 * page_b           # device view dropped one
+    assert host.bytes_resident == page_b          # host view gained the same
+    assert device_bytes() + host.bytes_resident == total
+
+    _, refs = host.pop(handle)
+    alloc.promote(refs)
+    assert host.bytes_resident == 0
+    assert device_bytes() + host.bytes_resident == total
+
+
+def test_engine_kv_bytes_resident_is_device_only():
+    """The engine-facing contract (pinned here at the formula level; the
+    live-engine version is tests/test_swap.py): a slot holding one device
+    page and one swapped page contributes one page to kv_bytes_resident and
+    one page to host_bytes_resident."""
+    from repro.serving import HostPageStore, SlotInfo
+    from repro.serving.scheduler import Request as Req
+    h = HostPageStore()
+    handle = h.put(_page_arrays(2, 2, 4, 8), refs=1)
+    info = SlotInfo(request=Req(rid=0, prompt=np.zeros(4, np.int32),
+                                max_new_tokens=1, tier=4),
+                    fed=4, pages=[3, handle])
+    assert info.device_pages == [3]
+    assert info.swapped_pages == [handle]
+    assert info.pages_owned == 2        # both tiers count against the charge
+    h.pop(handle)

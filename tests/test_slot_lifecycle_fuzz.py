@@ -21,9 +21,18 @@ binding it plus its index pin, pool occupancy equals the union of
 slot-bound and index-pinned pages, and after the index drops its pins the
 allocator balances exactly.
 
+A third trace family (``_run_swap_trace``) adds the tiered-storage moves:
+random pages demote to a ``HostPageStore`` (their device ids immediately
+reusable by ``alloc``) and promote back before their slot steps. Extra
+invariants: refcounts — including extra pins — survive a demote→promote
+round trip exactly, a page's payload is bitwise intact after its old device
+id was re-handed out, a swapped page (a ``PageHandle``) is never what
+``alloc`` returns, and at drain BOTH tiers balance (``check_balanced`` on
+the allocator and the host store).
+
 The engine-integrated version of the same contract (real device pool) is
 ``tests/test_paged_cache.py::test_engine_paged_matches_contiguous_oracle``
-plus ``tests/test_prefix_sharing.py``.
+plus ``tests/test_prefix_sharing.py`` and ``tests/test_swap.py``.
 """
 from collections import Counter
 
@@ -31,8 +40,8 @@ import numpy as np
 import pytest
 
 from repro.serving import (
-    FCFSScheduler, PageAllocator, PrefixIndex, Request, SlotInfo, SlotPool,
-    pages_needed,
+    FCFSScheduler, HostPageStore, PageAllocator, PageHandle, PrefixIndex,
+    Request, SlotInfo, SlotPool, pages_needed,
 )
 from repro.serving.engine import _bucket   # the engine's own bucketing
 
@@ -174,7 +183,7 @@ def _run_shared_trace(seed: int) -> dict:
         plan = index.lookup(req.prompt[:bucket], req.tier, bucket - n_b)
         plans[req.rid] = plan
         pinned = len(plan.aliased) + (1 if plan.copy_src is not None else 0)
-        return len(plan.aliased), plan.shared_codes, pinned
+        return len(plan.aliased), plan.shared_codes, pinned, 0
 
     def pool_state_fn():
         owned = sum(pool.slots[i].pages_owned for i in pool.active_slots())
@@ -277,6 +286,195 @@ def test_shared_lifecycle_fuzz_many_traces():
     assert max(x["peak_shared"] for x in stats) >= 1
     assert sum(x["hits"] for x in stats) > 40
     assert sum(x["completed"] for x in stats) > 300
+
+
+# ---------------------------------------------------------------------------
+# tiered storage: demote/promote actions in the randomized traces
+# ---------------------------------------------------------------------------
+
+def _run_swap_trace(seed: int) -> dict:
+    """``_run_trace`` plus host-tier moves: random demotions of live slots'
+    pages into a ``HostPageStore`` (sometimes carrying an extra pin, the way
+    a prefix-index entry would), mandatory promotion before the owning slot
+    steps, payload-integrity and refcount-conservation checks on every round
+    trip, and two-tier balance at drain."""
+    rng = np.random.default_rng(seed)
+    n_b = int(rng.integers(2, 6))
+    min_bucket = n_b + int(rng.integers(1, 5))
+    page_size = int(rng.choice([2, 4, 8]))
+    n_slots = int(rng.integers(1, 5))
+    n_pages = int(rng.integers(6, 40))
+    allocator = PageAllocator(n_pages, page_size)
+    host = HostPageStore()
+    sched = FCFSScheduler(
+        kv_byte_budget=None, n_b=n_b, m=M_DIM, num_layers=N_LAYERS,
+        kv_heads=KV_HEADS, page_size=page_size,
+        page_budget=allocator.capacity)
+    pool = SlotPool(n_slots)
+
+    n_requests = int(rng.integers(3, 14))
+    submitted = 0
+    for rid in range(n_requests):
+        prompt_len = int(rng.integers(min_bucket, 6 * page_size + min_bucket))
+        req = Request(rid=rid, prompt=np.zeros(prompt_len, np.int32),
+                      max_new_tokens=int(rng.integers(1, 12)),
+                      tier=int(rng.choice([2, 4, 8])))
+        if sched.projected_pages(req) > allocator.capacity:
+            continue
+        sched.submit(req)
+        submitted += 1
+
+    # handle -> (payload marker, transferred refs, carries an extra pin)
+    expected = {}
+    marker_clock = [0]
+
+    def demote(info, j):
+        page = info.pages[j]
+        pinned = bool(rng.random() < 0.5)
+        if pinned:                       # an index-pin-style second holder
+            allocator.incref(page)
+        refs = allocator.refcount(page)
+        marker_clock[0] += 1
+        marker = np.float32(seed * 10_000 + marker_clock[0])
+        stores = tuple(np.full((3,), marker) for _ in range(4))
+        handle = host.put(stores, refs=refs)
+        moved = allocator.demote(page)
+        assert moved == refs
+        info.pages[j] = handle
+
+        expected[handle] = (marker, refs, pinned)
+
+    def promote(info, j):
+        handle = info.pages[j]
+        marker, want_refs, pinned = expected.pop(handle)
+        assert host.refcount(handle) == want_refs
+        stores, refs = host.pop(handle)
+        # refcounts survive the round trip; payload survived its old device
+        # id being re-handed out by alloc in the meantime
+        assert refs == want_refs
+        assert all(np.all(s == marker) for s in stores)
+        page = allocator.promote(refs)
+        assert not isinstance(page, PageHandle)   # device ids only
+        assert allocator.refcount(page) == refs
+        info.pages[j] = page
+        if pinned:                        # the extra holder lets go
+            allocator.decref(page)
+            assert allocator.refcount(page) == 1
+
+    def alloc(n):
+        pages = allocator.alloc(n)
+        for p in pages:
+            # a swapped page is never handed out: alloc returns device ids,
+            # handles live in a disjoint namespace
+            assert not isinstance(p, PageHandle)
+        return pages
+
+    completed, steps, demotions, promotions = 0, 0, 0, 0
+    while (len(sched) or pool.active_slots()) and steps < 10_000:
+        steps += 1
+        for req in sched.admit(len(pool.free_slots())):
+            bucket = _bucket(req.prompt_len, min_bucket)
+            info = SlotInfo(request=req, fed=bucket, cache_len=bucket,
+                            pages_reserved=sched.projected_pages(req))
+            pool.allocate(info)
+            info.pages = alloc(pages_needed(info.cache_len - n_b, page_size))
+
+        # random demotions of resident pages (their slots are idle "now")
+        for slot in pool.active_slots():
+            info = pool.slots[slot]
+            for j, entry in enumerate(info.pages):
+                if not isinstance(entry, PageHandle) and rng.random() < 0.15:
+                    demote(info, j)
+                    demotions += 1
+
+        for slot in pool.active_slots():
+            info = pool.slots[slot]
+            # a slot steps only fully device-resident: promote its handles
+            # (admission reserved every in-flight page, so the device pool
+            # can always take a promoted page back)
+            for j, entry in enumerate(info.pages):
+                if isinstance(entry, PageHandle):
+                    promote(info, j)
+                    promotions += 1
+            need = pages_needed(info.cache_len - n_b + 1, page_size)
+            while len(info.pages) < need:
+                info.pages += alloc(1)
+            assert len(info.pages) <= info.pages_reserved
+            info.cache_len += 1
+            if info.in_prompt_phase:
+                info.fed += 1
+            else:
+                info.generated += 1
+            if info.done:
+                pool.retire(slot)
+                # two-tier release: device pages decref, swapped drop host
+                for entry in info.pages:
+                    if isinstance(entry, PageHandle):
+                        if host.decref(entry):
+                            expected.pop(entry)
+                    else:
+                        allocator.decref(entry)
+                info.pages = []
+                sched.release(info.request)
+                completed += 1
+
+        # per-step two-tier invariants: no page counted (or lost) anywhere
+        device_held = [p for i in pool.active_slots()
+                       for p in pool.slots[i].pages
+                       if not isinstance(p, PageHandle)]
+        swapped_held = [p for i in pool.active_slots()
+                        for p in pool.slots[i].pages
+                        if isinstance(p, PageHandle)]
+        assert allocator.n_used == len(device_held), "device-tier leak"
+        assert host.n_pages == len(swapped_held) == len(expected), \
+            "host-tier leak"
+        assert sched.pages_admitted <= allocator.capacity
+
+    assert completed == submitted, (completed, submitted, seed)
+    # both tiers balance at drain (the satellite contract)
+    assert allocator.check_balanced(), f"device page leak (seed {seed})"
+    assert host.check_balanced(), f"host page leak (seed {seed})"
+    assert sched.bytes_admitted == 0 and sched.pages_admitted == 0
+    return {"steps": steps, "completed": completed,
+            "demotions": demotions, "promotions": promotions}
+
+
+def test_swap_lifecycle_fuzz_many_traces():
+    stats = [_run_swap_trace(seed) for seed in range(120)]
+    # the traces genuinely moved pages across tiers, both directions
+    assert sum(x["demotions"] for x in stats) > 200
+    assert sum(x["promotions"] for x in stats) > 100
+    assert sum(x["completed"] for x in stats) > 250
+
+
+def test_allocator_demote_promote_state_machine():
+    """demote is not free: the refcount transfers out whole and comes back
+    whole; the vacated device id is immediately reusable; misuse raises."""
+    from repro.serving import NULL_PAGE, PagePoolExhausted
+
+    a = PageAllocator(3, 4)               # 2 usable pages
+    (p,) = a.alloc(1)
+    a.incref(p)
+    assert a.demote(p) == 2               # whole count transferred
+    assert a.n_free == 2 and a.refcount(p) == 0
+    with pytest.raises(KeyError, match="demote after free"):
+        a.demote(p)
+    with pytest.raises(ValueError, match="never demoted"):
+        a.demote(NULL_PAGE)
+    # the vacated id can be re-handed out while the logical page is swapped
+    both = a.alloc(2)
+    assert p in both
+    with pytest.raises(PagePoolExhausted):
+        a.promote(2)                      # nothing free to promote into
+    a.free(both)
+    back = a.promote(2)
+    assert a.refcount(back) == 2
+    with pytest.raises(ValueError, match=">= 1 holder"):
+        a.promote(0)
+    a.decref(back)
+    a.decref(back)
+    assert a.check_balanced()
+    assert a.pages_demoted == 1 and a.pages_promoted == 1
 
 
 def test_double_free_is_detected():

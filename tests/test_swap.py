@@ -1,0 +1,413 @@
+"""Tiered KV storage (host-memory swap): the differential + contract harness.
+
+The swap tier rewires page residency under the decode loop (demote =
+extract codes + null the holders' table entries + free the device id;
+promote = re-allocate + inject + rebind), so the proof obligations are:
+
+  * device round trip — ``extract_page``/``inject_page`` move a page's four
+    sparse stores device→host→device bitwise;
+  * engine differential — with a pool sized to force demotions, the
+    swap-enabled engine emits tokens *identical* to an unconstrained
+    no-swap run, with >= 1 page actually round-tripped device→host→device
+    and both tiers balanced at drain;
+  * oversubscription — concurrency the no-swap scheduler rejects
+    (``FCFSScheduler.rejections``) is served by the tiered engine: all
+    slots fill, stalled slots wait bit-identically, everything completes;
+  * prefix-cache tiering — cached prefix pages are demoted in preference
+    to being dropped, the trie entry survives pointing at a
+    ``PageHandle``, and an admission-time hit *promotes* the page instead
+    of recompressing the prefix;
+  * two-tier accounting — ``kv_bytes_resident`` counts device pages only,
+    ``host_bytes_resident`` counts the host tier, a demotion moves exactly
+    one page's bytes between them (see also tests/test_memory_accounting).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.core import sparse_cache as sc
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, HostPageStore, HostTierFull,
+    PageAllocator, PageHandle, PrefixIndex, Request, SwapConfig, SwapPolicy,
+)
+
+# ---------------------------------------------------------------------------
+# device ops: extract_page / inject_page
+# ---------------------------------------------------------------------------
+
+L, KV, P, s = 2, 2, 4, 8
+
+
+def _random_pool(rng, n_pages=5):
+    shape = (L, n_pages, KV, P, s)
+    return sc.PagedLexicoLayerCache(
+        k_vals=jnp.asarray(rng.normal(size=shape), jnp.float8_e4m3fn),
+        k_idx=jnp.asarray(rng.integers(0, 64, shape), jnp.int16),
+        v_vals=jnp.asarray(rng.normal(size=shape), jnp.float8_e4m3fn),
+        v_idx=jnp.asarray(rng.integers(0, 64, shape), jnp.int16),
+        page_table=jnp.zeros((L, 1, 3), jnp.int32),
+        k_buf=jnp.zeros((L, 1, KV, 2, 4), jnp.bfloat16),
+        v_buf=jnp.zeros((L, 1, KV, 2, 4), jnp.bfloat16),
+        t_c=jnp.zeros((L, 1), jnp.int32),
+        buf_len=jnp.zeros((L, 1), jnp.int32),
+        buf_start=jnp.zeros((L, 1), jnp.int32))
+
+
+def test_extract_inject_round_trip_bitwise(rng):
+    """A demote→promote round trip through numpy lands the identical bytes
+    in a different pool page."""
+    pool = _random_pool(rng)
+    stores = sc.extract_page(pool, 3)
+    host = tuple(np.asarray(x) for x in stores)      # the host-tier copy
+    back = sc.inject_page(pool, 1, *(jnp.asarray(x) for x in host))
+    for f, got in zip(("k_vals", "k_idx", "v_vals", "v_idx"),
+                      (back.k_vals, back.k_idx, back.v_vals, back.v_idx)):
+        src = np.asarray(getattr(pool, f)).astype(np.float32)
+        dst = np.asarray(got).astype(np.float32)
+        np.testing.assert_array_equal(dst[:, 1], src[:, 3], err_msg=f)
+        # every other page untouched
+        np.testing.assert_array_equal(dst[:, 0], src[:, 0], err_msg=f)
+        np.testing.assert_array_equal(dst[:, 2:], src[:, 2:], err_msg=f)
+
+
+def test_extract_page_single_layer_layout(rng):
+    """The splices accept the unstacked (n_pages, KV, P, s) layout too."""
+    stacked = _random_pool(rng)
+    layer = jax.tree.map(lambda x: x[0], stacked,
+                         is_leaf=lambda x: isinstance(x, jax.Array))
+    got = sc.extract_page(layer, 2)[0]
+    np.testing.assert_array_equal(
+        np.asarray(got).astype(np.float32),
+        np.asarray(stacked.k_vals).astype(np.float32)[0, 2:3])
+
+
+# ---------------------------------------------------------------------------
+# HostPageStore
+# ---------------------------------------------------------------------------
+
+def _stores(marker: float):
+    return tuple(np.full((2, 3), np.float32(marker)) for _ in range(4))
+
+
+def test_host_store_refcounts_and_bytes():
+    h = HostPageStore(max_pages=2)
+    a = h.put(_stores(1.0), refs=2)
+    b = h.put(_stores(2.0), refs=1)
+    assert h.n_pages == 2 and h.room() == 0
+    assert h.handles() == [a, b]
+    assert np.all(h.get(a)[0] == 1.0)                 # read-only peek
+    assert h.bytes_resident == 8 * 2 * 3 * 4          # 8 arrays of 6 fp32
+    with pytest.raises(HostTierFull):
+        h.put(_stores(3.0), refs=1)
+    h.incref(a)                         # a holder arriving while swapped
+    assert not h.decref(a) and not h.decref(a)         # one holder left
+    assert h.refcount(a) == 1
+    stores, refs = h.pop(a)
+    assert refs == 1 and np.all(stores[0] == 1.0)
+    assert h.decref(b)
+    with pytest.raises(KeyError, match="double free"):
+        h.decref(b)
+    assert h.check_balanced()
+    with pytest.raises(ValueError, match=">= 1 holder"):
+        h.put(_stores(4.0), refs=0)
+
+
+def test_page_handles_are_not_device_pages():
+    """Handles and device ids live in disjoint namespaces: a handle can
+    never collide with (or be handed out as) an allocatable page id."""
+    h = HostPageStore()
+    handle = h.put(_stores(0.0), refs=1)
+    assert isinstance(handle, PageHandle)
+    a = PageAllocator(4, 2)
+    assert all(isinstance(p, int) for p in a.alloc(3))
+    assert handle not in a.allocated_pages()
+    h.pop(handle)
+
+
+# ---------------------------------------------------------------------------
+# SwapPolicy
+# ---------------------------------------------------------------------------
+
+def test_cold_score_orders_by_recency_refs_and_hits():
+    pol = SwapPolicy()
+    # older = colder
+    assert pol.cold_score(age=10, refs=1, hits=0) > \
+        pol.cold_score(age=2, refs=1, hits=0)
+    # fan-out and prefix hits keep a page warm at equal age
+    base = pol.cold_score(age=10, refs=1, hits=0)
+    assert pol.cold_score(age=10, refs=3, hits=0) < base
+    assert pol.cold_score(age=10, refs=1, hits=2) < base
+
+
+def test_subtree_evict_key_prefers_unpopular_large_subtrees():
+    pol = SwapPolicy()
+    cold_big = pol.subtree_evict_key(hits=0, pages=4, last_used=5)
+    cold_small = pol.subtree_evict_key(hits=0, pages=1, last_used=5)
+    hot = pol.subtree_evict_key(hits=6, pages=2, last_used=5)
+    assert cold_big < cold_small < hot
+    # equal hit density: LRU breaks the tie
+    older = pol.subtree_evict_key(hits=0, pages=2, last_used=1)
+    newer = pol.subtree_evict_key(hits=0, pages=2, last_used=9)
+    assert older < newer
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex across tiers
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_swap_out_keeps_entry_shareable():
+    a = PageAllocator(16, 4)
+    h = HostPageStore()
+    idx = PrefixIndex(4)
+    pages = a.alloc(2)
+    toks = list(range(8))
+    idx.register(toks, tier=8, pages=pages, n_codes=8, allocator=a)
+    a.free(pages)                       # donor retired: index-only pins
+    assert idx.evictable_pages(a) == 2
+
+    # demote page 0 of the cached prefix: entry survives, re-keyed
+    handle = h.put(_stores(0.0), refs=a.demote(pages[0]))
+    assert idx.swap_out(pages[0], handle)
+    assert idx.evictable_pages(a) == 1          # device pages only
+    assert idx.n_cached_pages() == 2            # the entry survived the move
+    assert not idx.swap_out(pages[0], handle)   # already re-keyed
+    plan = idx.lookup(toks, tier=8, n_codes=8)
+    assert plan.hit and plan.aliased == [handle, pages[1]]
+
+    # promote back (possibly into a different device id) and hit again
+    stores, refs = h.pop(handle)
+    back = a.promote(refs)
+    assert idx.swap_in(handle, back)
+    plan = idx.lookup(toks, tier=8, n_codes=8)
+    assert plan.aliased == [back, pages[1]]
+    idx.clear(a, host=h)
+    assert a.check_balanced() and h.check_balanced()
+
+
+def test_prefix_index_clear_drops_swapped_pins():
+    a = PageAllocator(8, 4)
+    h = HostPageStore()
+    idx = PrefixIndex(4)
+    (page,) = a.alloc(1)
+    idx.register([1, 2, 3, 4], tier=8, pages=[page], n_codes=4, allocator=a)
+    a.free([page])
+    handle = h.put(_stores(0.0), refs=a.demote(page))
+    idx.swap_out(page, handle)
+    with pytest.raises(ValueError, match="host store"):
+        idx.clear(a)                    # swapped pin needs the host store
+    # the failed clear already unpinned nothing host-side; retry with it
+    idx.register([9, 9, 9, 9], tier=8, pages=a.alloc(1), n_codes=4,
+                 allocator=a)
+    idx.clear(a, host=h)
+    assert h.check_balanced()
+
+
+# ---------------------------------------------------------------------------
+# engine differential (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _requests(rng):
+    # short/long mix whose concurrent working set (~7 pages) oversubscribes
+    # the 5-usable-page pool below, while each request alone fits (<= 4)
+    spec = [(9, 3, 2), (30, 4, 8), (12, 2, 4), (26, 3, 6), (8, 2, 2)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, tier=tier)
+            for i, (pl, mn, tier) in enumerate(spec)]
+
+
+def _run(params, bank, reqs, **cfg_kw):
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, **cfg_kw))
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    done = eng.run()
+    return {rid: done[rid].generated_tokens for rid in done}, eng
+
+
+def test_engine_swap_matches_unconstrained_bitwise(served):
+    """The acceptance gate: a pool sized to force demotions + swap emits
+    tokens identical to an unconstrained no-swap run; >= 1 page actually
+    round-tripped device→host→device; concurrency the no-swap scheduler
+    rejected is served (slots fill, stalls absorb the pressure); both tiers
+    balance at drain."""
+    params, bank = served
+    reqs = _requests(np.random.default_rng(7))
+
+    oracle, _ = _run(params, bank, reqs)                     # full pool
+    noswap, noswap_eng = _run(params, bank, reqs, n_pages=6)
+    swapped, eng = _run(params, bank, reqs, n_pages=6, swap=SwapConfig())
+
+    assert sorted(swapped) == sorted(oracle)
+    for rid in oracle:
+        assert swapped[rid] == oracle[rid], rid
+    assert noswap == oracle                                  # sanity
+
+    md = eng.metrics.to_dict()
+    # >= 1 page genuinely went device→host→device
+    assert md["pages_demoted"] > 0
+    assert md["pages_promoted"] > 0
+    assert eng.allocator.pages_demoted == md["pages_demoted"]
+    assert md["host_bytes_resident_peak"] > 0
+    # the device pool never overflowed, and residency waits were taken as
+    # stalls rather than wrong reads
+    assert md["pages_in_use_peak"] <= 5
+    assert md["promote_stall_steps"] > 0
+
+    # oversubscription the no-swap run rejected is served concurrently:
+    # the plain page budget head-of-line blocked (rejections), the tiered
+    # engine filled every slot
+    assert noswap_eng.scheduler.rejections > 0
+    assert (md["slot_occupancy_peak"]
+            > noswap_eng.metrics.to_dict()["slot_occupancy_peak"])
+
+    # one compiled trace per tier-transfer op, like every other splice
+    cc = eng.compile_counts
+    assert cc["extract_page"] == 1 and cc["inject_page"] == 1, cc
+    assert cc["decode"] == 1, cc
+
+    # two-tier balance at drain
+    assert eng.allocator.check_balanced()
+    assert eng.swap.host.check_balanced()
+    assert eng.host_bytes_resident() == 0
+
+
+def test_engine_swap_accounting_never_double_counts(served):
+    """Mid-run: device-resident bytes + host-resident bytes account every
+    held page exactly once, and demotions move a page's bytes wholesale."""
+    params, bank = served
+    reqs = _requests(np.random.default_rng(7))
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, n_pages=6, swap=SwapConfig()))
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    page_bytes = CFG.num_layers * sc.page_store_bytes(
+        CFG.cache_kv_heads, 8, LEX.s)
+    saw_swapped = False
+    while eng.step():
+        device_pages = {p for i in eng.pool.active_slots()
+                        for p in eng.pool.slots[i].device_pages}
+        swapped = [p for i in eng.pool.active_slots()
+                   for p in eng.pool.slots[i].swapped_pages]
+        # host tier bytes == swapped page count * per-page bytes, and the
+        # device view counts exactly the device-resident pages
+        assert eng.host_bytes_resident() == eng.swap.host.n_pages * page_bytes
+        assert len(set(swapped)) == eng.swap.host.n_pages
+        ring = CFG.num_layers * sc.slot_resident_bytes(
+            0, kv_heads=CFG.cache_kv_heads, page_size=8, s=LEX.s,
+            n_b=LEX.n_b, m=CFG.cached_vector_dim)
+        assert eng.kv_bytes_resident() == (
+            len(device_pages) * page_bytes
+            + len(eng.pool.active_slots()) * ring)
+        saw_swapped = saw_swapped or bool(swapped)
+    assert saw_swapped, "the trace never actually swapped"
+    assert eng.allocator.check_balanced() and eng.swap.host.check_balanced()
+
+
+def test_engine_swap_requires_paged_layout(served):
+    params, bank = served
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(
+            params, CFG, LEX, bank,
+            EngineConfig(n_slots=2, t_max=64, min_bucket=8,
+                         layout="contiguous", swap=SwapConfig()))
+
+
+# ---------------------------------------------------------------------------
+# prefix cache across tiers: demote instead of drop, promote instead of
+# recompress
+# ---------------------------------------------------------------------------
+
+def _family_requests(rng, n_tail=3):
+    prefix = rng.integers(0, CFG.vocab_size, 32).astype(np.int32)
+    sharers = [Request(rid=i, prompt=np.concatenate(
+                   [prefix, rng.integers(0, CFG.vocab_size, k).astype(np.int32)]),
+                   max_new_tokens=3, tier=8)
+               for i, k in enumerate((2, 6))]
+    fillers = [Request(rid=2 + i,
+                       prompt=rng.integers(0, CFG.vocab_size, 24).astype(np.int32),
+                       max_new_tokens=3, tier=8) for i in range(2)]
+    late = Request(rid=4, prompt=np.concatenate(
+        [prefix, rng.integers(0, CFG.vocab_size, n_tail).astype(np.int32)]),
+        max_new_tokens=3, tier=8)
+    return sharers + fillers + [late]
+
+
+def test_prefix_hits_on_swapped_pages_promote_not_recompress(served):
+    """Filler pressure demotes the retired sharers' cached prefix pages
+    (instead of dropping them); the late sharer's admission hits the
+    swapped entries and PROMOTES them — prefill OMP is still skipped and
+    tokens still match the unshared oracle bitwise."""
+    params, bank = served
+    reqs = _family_requests(np.random.default_rng(21))
+    oracle, _ = _run(params, bank, reqs, share_prefixes=False)
+    shared, eng = _run(params, bank, reqs, share_prefixes=True, n_pages=9,
+                       swap=SwapConfig())
+    assert shared == oracle
+
+    md = eng.metrics.to_dict()
+    assert md["pages_demoted"] > 0, "no pressure reached the prefix cache"
+    assert md["pages_promoted"] > 0, "no swapped page was ever re-used"
+    assert md["prefix_hits"] >= 2            # the second sharer + the late one
+    assert md["prefill_tokens_skipped"] > 0
+    # demote-not-drop: cache entries survived the pressure (possibly as
+    # handles) rather than being destroyed
+    assert eng.prefix_index.n_cached_pages() > 0
+
+    eng.prefix_index.clear(eng.allocator, host=eng.swap.host)
+    assert eng.allocator.check_balanced()
+    assert eng.swap.host.check_balanced()
+
+
+def test_watermark_demotes_index_only_pages_proactively(served):
+    """The proactive trim: with a high watermark, retired sharers' cached
+    pages are demoted to the host tier without any allocation failing —
+    free-list headroom is restored while the trie entries survive."""
+    params, bank = served
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, CFG.vocab_size, 32).astype(np.int32)
+    req = Request(rid=0, prompt=prefix.copy(), max_new_tokens=3, tier=8)
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=1, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, n_pages=8, share_prefixes=True,
+                     swap=SwapConfig(watermark_pages=6)))
+    eng.submit(req)
+    eng.run()
+    # prefill pinned 4 pages (28 codes); the watermark demoted enough of
+    # them to restore >= 6 free device pages, keeping the entries cached
+    assert eng.allocator.n_free >= 6
+    assert eng.swap.host.n_pages >= 3
+    assert eng.metrics.pages_demoted >= 3
+    assert eng.prefix_index.n_cached_pages() >= 3
+    # ...and a rerun of the same prefix still HITS (promoting, not
+    # recompressing): strictly fewer fresh OMP positions
+    before = eng.metrics.prefill_tokens_skipped
+    eng.submit(Request(rid=1, prompt=prefix.copy(), max_new_tokens=3, tier=8))
+    eng.run()
+    assert eng.metrics.prefill_tokens_skipped > before
+    assert eng.metrics.pages_promoted > 0
+    eng.prefix_index.clear(eng.allocator, host=eng.swap.host)
+    assert eng.allocator.check_balanced()
+    assert eng.swap.host.check_balanced()
