@@ -26,6 +26,13 @@ fills every slot by demoting cold pages to host memory and promoting them
 back on access — same tokens, and the JSON reports device-peak pages,
 host-peak bytes, promote stalls and tier traffic.
 
+A fourth scenario (``--scenario obs``) runs the swap workload with the
+observability layer on vs off: measured tracing overhead on steady-state
+tokens/s (``--overhead-budget 0.02`` turns it into a CI gate), per-phase
+p50/p99, the AOT roofline of the compiled decode step (achieved vs
+predicted bytes/FLOPs), journal replay, and ``--trace``/``--journal``/
+``--metrics-snapshot`` artifact outputs.
+
     PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario all]
 """
 from __future__ import annotations
@@ -42,9 +49,11 @@ import numpy as np
 from benchmarks.common import BENCH_CFG, trained_params
 from benchmarks.memory_fidelity import trained_bank
 from repro.configs.base import LexicoConfig
+from repro.roofline.analysis import achieved_vs_predicted
 from repro.serving import (
-    ContinuousBatchingEngine, EngineConfig, Request, SwapConfig,
+    ContinuousBatchingEngine, EngineConfig, ObsConfig, Request, SwapConfig,
 )
+from repro.serving.obs import engine_decode_roofline, replay_check
 
 
 def _submit_workload(eng, cfg, *, n_requests: int, seed: int) -> None:
@@ -210,6 +219,88 @@ def run_swap_bench(*, n_requests: int = 10, n_slots: int = 4,
     }
 
 
+def run_obs_bench(*, n_requests: int = 10, n_slots: int = 4,
+                  t_max: int = 96, seed: int = 0, page_size: int = 8,
+                  repeats: int = 2, trace_path: str = None,
+                  journal_path: str = None, metrics_path: str = None) -> dict:
+    """Observability scenario: the oversubscribed swap workload with
+    tracing + journaling ON vs OFF.
+
+    Reports (a) measured tracing overhead on steady-state tokens/s
+    (best-of-``repeats`` per mode, compile time excluded — the 2%% budget
+    the CI job gates on), (b) per-phase p50/p99 of the instrumented run,
+    (c) the AOT roofline of the compiled decode step with achieved (phase
+    p50) vs predicted (HLO cost model) bytes/FLOPs, and (d) the journal
+    replay verdict. Optionally writes the Perfetto trace, the JSONL
+    journal, and a Prometheus metrics snapshot as artifacts."""
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+    n_pages = 15    # tight pool, same as run_swap_bench: forces tier traffic
+
+    def one_run(obs):
+        eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                         layout="paged", page_size=page_size,
+                         n_pages=n_pages, swap=SwapConfig(), obs=obs))
+        _submit_workload(eng, cfg, n_requests=n_requests, seed=seed)
+        done = eng.run()
+        return eng, done
+
+    best, tokens, last_eng = {}, {}, {}
+    for mode, obs in (("off", None),
+                      ("on", ObsConfig(trace=True, journal=True))):
+        rates = []
+        for _ in range(repeats):
+            eng, done = one_run(obs)
+            rates.append(eng.metrics.to_dict()["tokens_per_s_ex_compile"])
+            last_eng[mode] = eng
+            tokens[mode] = {rid: done[rid].generated_tokens for rid in done}
+        best[mode] = max(rates)
+    eng_on = last_eng["on"]
+    md_on = eng_on.metrics.to_dict()
+    overhead = 1.0 - best["on"] / max(best["off"], 1e-9)
+
+    # roofline: AOT-predicted bytes/FLOPs of the decode module the hot loop
+    # dispatches, vs the achieved per-step decode time (dispatch + sync p50)
+    report = engine_decode_roofline(eng_on)
+    achieved_s = (md_on["phase_times"]["decode_dispatch"]["p50"]
+                  + md_on["phase_times"]["host_sync"]["p50"])
+    roofline = {
+        "decode": report.to_json(),
+        "decode_achieved_vs_predicted": achieved_vs_predicted(report,
+                                                              achieved_s),
+    }
+
+    if trace_path:
+        eng_on.save_trace(trace_path)
+    if journal_path:
+        eng_on.save_journal(journal_path)
+    if metrics_path:
+        with open(metrics_path, "w") as f:
+            f.write(eng_on.metrics.to_prometheus())
+    violations = replay_check(eng_on.journal.events)
+    return {
+        "tokens_per_s_ex_compile_off": best["off"],
+        "tokens_per_s_ex_compile_on": best["on"],
+        "tracing_overhead": overhead,
+        "same_tokens": tokens["off"] == tokens["on"],
+        "trace_events": len(eng_on.tracer),
+        "journal_events": len(eng_on.journal),
+        "journal_violations": [str(v) for v in violations],
+        "phase_times": md_on["phase_times"],
+        "queue_latency_s_p50": md_on["queue_latency_s_p50"],
+        "queue_latency_s_p99": md_on["queue_latency_s_p99"],
+        "compile_s": md_on["compile_s"],
+        "setup_s": md_on["setup_s"],
+        "roofline": roofline,
+        "on": md_on,
+    }
+
+
 def run_layout_comparison(**kw) -> dict:
     """Same workload through both layouts + the memory/throughput deltas."""
     cont = run_serving_bench(layout="contiguous", **kw)
@@ -236,11 +327,18 @@ def run(emit):
     stats = run_layout_comparison()
     for layout in ("contiguous", "paged"):
         side = stats[layout]
-        for key in ("tokens_per_s", "decode_tokens_per_step",
+        for key in ("tokens_per_s", "tokens_per_s_ex_compile",
+                    "decode_tokens_per_step",
                     "slot_occupancy_mean", "kv_bytes_in_flight_peak",
                     "kv_bytes_resident_peak", "queue_latency_s_mean",
+                    "queue_latency_s_p50", "queue_latency_s_p99",
                     "requests_completed"):
             emit(f"serving/{layout}/{key}", side[key])
+        for phase in ("decode_dispatch", "host_sync"):
+            summary = side["phase_times"].get(phase)
+            if summary:
+                emit(f"serving/{layout}/{phase}_p50", summary["p50"])
+                emit(f"serving/{layout}/{phase}_p99", summary["p99"])
         emit(f"serving/{layout}/compiles_decode",
              side["compile_counts"]["decode"])
         emit(f"serving/{layout}/compiles_prefill",
@@ -265,13 +363,26 @@ def main():
     ap.add_argument("--layout", choices=["contiguous", "paged", "both"],
                     default="both")
     ap.add_argument("--scenario",
-                    choices=["mix", "prefix", "swap", "both", "all"],
+                    choices=["mix", "prefix", "swap", "obs", "both", "all"],
                     default="mix",
                     help="mix: short/long layout comparison; prefix: many "
                          "clients sharing one system prompt (shared vs "
                          "unshared resident KV bytes); swap: oversubscribed "
                          "pool with the host-memory tier (device/host peaks, "
-                         "promote stalls); both: mix+prefix; all: everything")
+                         "promote stalls); obs: tracing on-vs-off overhead, "
+                         "phase p50/p99, decode roofline, journal replay; "
+                         "both: mix+prefix; all: everything")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="obs scenario: runs per mode (overhead = best-of)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="obs scenario: write the Perfetto trace JSON here")
+    ap.add_argument("--journal", metavar="PATH", default=None,
+                    help="obs scenario: write the lifecycle journal (JSONL)")
+    ap.add_argument("--metrics-snapshot", metavar="PATH", default=None,
+                    help="obs scenario: write a Prometheus text snapshot")
+    ap.add_argument("--overhead-budget", type=float, default=None,
+                    help="obs scenario: exit non-zero if measured tracing "
+                         "overhead exceeds this fraction (CI gate: 0.02)")
     ap.add_argument("--json-only", action="store_true")
     args = ap.parse_args()
     kw = dict(n_requests=args.n_requests, n_slots=args.n_slots,
@@ -288,9 +399,27 @@ def main():
         stats["swap"] = run_swap_bench(
             n_slots=args.n_slots, t_max=args.t_max, seed=args.seed,
             page_size=args.page_size)
+    if args.scenario in ("obs", "all"):
+        stats["obs"] = run_obs_bench(
+            n_requests=args.n_requests, n_slots=args.n_slots,
+            t_max=args.t_max, seed=args.seed, page_size=args.page_size,
+            repeats=args.repeats, trace_path=args.trace,
+            journal_path=args.journal, metrics_path=args.metrics_snapshot)
     if len(stats) == 1:
         stats = next(iter(stats.values()))
     print(json.dumps(stats, indent=2, default=float))
+    obs_stats = stats.get("obs", stats)
+    if (args.overhead_budget is not None
+            and "tracing_overhead" in obs_stats):
+        if obs_stats["journal_violations"]:
+            print(f"journal replay FAILED: {obs_stats['journal_violations']}",
+                  file=sys.stderr)
+            sys.exit(1)
+        if obs_stats["tracing_overhead"] > args.overhead_budget:
+            print(f"tracing overhead {obs_stats['tracing_overhead']:.4f} "
+                  f"exceeds budget {args.overhead_budget:.4f}",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

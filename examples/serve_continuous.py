@@ -24,6 +24,13 @@ the overflow: cold pages demote to a pinned numpy mirror, promote back
 (bitwise) on access, slots briefly stall instead of being refused, and the
 tier metrics (pages demoted/promoted, host bytes peak, promote stalls) are
 printed at the end.
+
+With ``--trace out.json`` the run records a request-lifecycle span tree
+(queued/prefill/per-step decode per request, demote/promote/stall instants)
+and writes Chrome/Perfetto trace JSON — open it at https://ui.perfetto.dev.
+``--metrics-snapshot out.prom`` writes the labeled metrics registry as
+Prometheus text, and ``--journal out.jsonl`` the page-lifecycle event
+journal (replayable with ``repro.serving.obs.replay_check``).
 """
 import argparse
 import os
@@ -38,8 +45,9 @@ from benchmarks.common import BENCH_CFG, trained_params
 from benchmarks.memory_fidelity import trained_bank
 from repro.configs.base import LexicoConfig
 from repro.serving import (
-    ContinuousBatchingEngine, EngineConfig, Request, SwapConfig,
+    ContinuousBatchingEngine, EngineConfig, ObsConfig, Request, SwapConfig,
 )
+from repro.serving.obs import replay_check
 
 
 def main():
@@ -64,6 +72,16 @@ def main():
                          "device pool below the concurrent working set and "
                          "spill cold pages to a host-memory tier, promoting "
                          "them back on access — same tokens, smaller pool")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record a request-lifecycle trace and write it as "
+                         "Chrome/Perfetto trace-event JSON (load at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics-snapshot", metavar="PATH", default=None,
+                    help="write the metrics registry as Prometheus text at "
+                         "the end of the run")
+    ap.add_argument("--journal", metavar="PATH", default=None,
+                    help="record the page-lifecycle event journal and write "
+                         "it as JSONL (post-hoc invariant replay)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.share_prefixes or args.swap:
@@ -88,6 +106,9 @@ def main():
                      share_prefixes=args.share_prefixes,
                      n_pages=n_pages,
                      swap=SwapConfig() if args.swap else None,
+                     obs=(ObsConfig(trace=args.trace is not None,
+                                    journal=args.journal is not None)
+                          if (args.trace or args.journal) else None),
                      kv_byte_budget=(args.budget_kb * 1024
                                      if args.budget_kb else None)))
     if args.swap:
@@ -164,7 +185,32 @@ def main():
               f"admission rejections: {eng.scheduler.rejections}")
         print(f"  host tier balanced at drain: "
               f"{eng.swap.host.check_balanced()}")
-    print(f"queue latency: mean {stats['queue_latency_s_mean'] * 1e3:.0f} ms")
+    print(f"queue latency: mean {stats['queue_latency_s_mean'] * 1e3:.0f} ms, "
+          f"p50 {stats['queue_latency_s_p50'] * 1e3:.0f} ms, "
+          f"p99 {stats['queue_latency_s_p99'] * 1e3:.0f} ms")
+    phases = stats["phase_times"]
+    if phases:
+        print("step phases (p50 / p99 ms):")
+        for name, summary in phases.items():
+            print(f"  {name:16s} {summary['p50'] * 1e3:7.2f} / "
+                  f"{summary['p99'] * 1e3:7.2f}  (n={summary['count']})")
+    print(f"setup {stats['setup_s']:.2f}s, compile {stats['compile_s']:.2f}s "
+          f"-> {stats['tokens_per_s_ex_compile']:.1f} tok/s ex-compile")
+
+    if args.trace:
+        eng.save_trace(args.trace)
+        print(f"\ntrace: {len(eng.tracer)} events -> {args.trace} "
+              "(open at https://ui.perfetto.dev)")
+    if args.metrics_snapshot:
+        with open(args.metrics_snapshot, "w") as f:
+            f.write(eng.metrics.to_prometheus())
+        print(f"metrics snapshot -> {args.metrics_snapshot}")
+    if args.journal:
+        eng.save_journal(args.journal)
+        violations = replay_check(eng.journal.events)
+        print(f"journal: {len(eng.journal)} events -> {args.journal}; "
+              f"replay check: "
+              f"{'CLEAN' if not violations else [str(v) for v in violations]}")
 
 
 if __name__ == "__main__":

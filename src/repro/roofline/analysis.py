@@ -141,6 +141,35 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
         model_flops=model_flops, useful_ratio=useful, bottleneck=bottleneck)
 
 
+def achieved_vs_predicted(report: RooflineReport,
+                          achieved_s: float) -> Dict[str, float]:
+    """Compare a *measured* wall time for one invocation of the analyzed
+    module against its roofline prediction.
+
+    ``achieved_s`` is the observed seconds per call (e.g. the serving
+    engine's ``decode_dispatch`` + ``host_sync`` phase p50);
+    ``predicted_s`` is the roofline bound — the max of the compute, memory
+    and collective terms, i.e. the fastest the module could run on the
+    report's hardware model. ``roofline_fraction`` = predicted/achieved is
+    the fraction of the roofline actually reached (1.0 = at the roof; tiny
+    on hardware slower than the model, e.g. CPU CI runs scored against the
+    TPU model).
+    """
+    achieved_s = max(achieved_s, 1e-12)
+    predicted_s = max(report.compute_s, report.memory_s,
+                      report.collective_s, 1e-12)
+    return {
+        "achieved_s": achieved_s,
+        "predicted_s": predicted_s,
+        "roofline_fraction": predicted_s / achieved_s,
+        "predicted_flops": report.flops_per_device,
+        "predicted_bytes": report.bytes_per_device,
+        "achieved_flops_per_s": report.flops_per_device / achieved_s,
+        "achieved_bytes_per_s": report.bytes_per_device / achieved_s,
+        "bottleneck": report.bottleneck,
+    }
+
+
 def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
                     steps: int = 1) -> float:
     """MODEL_FLOPS: 6·N·D training, 2·N_active·D inference (per step)."""

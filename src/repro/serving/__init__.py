@@ -19,10 +19,18 @@ host-memory mirror cold pages demote into (and promote back from, bitwise)
 under policy control, so the device pool's capacity becomes a latency
 tradeoff instead of a hard admission ceiling.
 
+Observability (``obs/``, docs/observability.md): request-lifecycle tracing
+(Chrome/Perfetto JSON), always-on step-phase timers, a labeled
+Prometheus-exportable metrics registry behind ``EngineMetrics``, a
+page-lifecycle event journal with a post-hoc replay invariant checker, and
+roofline analysis of the compiled decode/prefill hot loop — all opt-in per
+engine via ``EngineConfig(obs=ObsConfig(...))``.
+
 See docs/serving.md and docs/tiered_memory.md for the full subsystem design.
 """
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
 from repro.serving.metrics import EngineMetrics
+from repro.serving.obs import ObsConfig
 from repro.serving.pages import (
     NULL_PAGE, PageAllocator, PagePoolExhausted, RefcountOverflow,
     pages_needed,
@@ -41,7 +49,8 @@ from repro.serving.swap import (
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
     "FCFSScheduler", "HostPageStore", "HostTierFull", "NULL_PAGE",
-    "PageAllocator", "PageHandle", "PagePoolExhausted", "PrefixIndex",
+    "ObsConfig", "PageAllocator", "PageHandle", "PagePoolExhausted",
+    "PrefixIndex",
     "RefcountOverflow", "Request", "SharePlan", "SlotInfo", "SlotPool",
     "SwapConfig", "SwapManager", "SwapPolicy", "pages_needed",
     "request_kv_bytes", "request_kv_bytes_paged", "request_page_count",

@@ -92,6 +92,9 @@ from repro.models.cache_policy import LexicoPolicy, PagedLexicoPolicy
 from repro.serving import slots as slots_mod
 from repro.serving import swap as swap_mod
 from repro.serving.metrics import EngineMetrics
+from repro.serving.obs import (
+    ENGINE_TID, EventJournal, ObsConfig, TraceRecorder,
+)
 from repro.serving.pages import (
     NULL_PAGE, PageAllocator, PagePoolExhausted, pages_needed,
 )
@@ -125,6 +128,10 @@ class EngineConfig:
     # pages demote to a pinned numpy mirror under free-list pressure and
     # promote back — bitwise — on access; None disables tiering
     swap: Optional[SwapConfig] = None
+    # observability switches (repro.serving.obs): request-lifecycle tracing
+    # and/or page-lifecycle journaling; None records nothing and pays
+    # nothing (phase timers and the metrics registry are always on)
+    obs: Optional[ObsConfig] = None
 
 
 def _bucket(prompt_len: int, min_bucket: int) -> int:
@@ -206,6 +213,26 @@ class ContinuousBatchingEngine:
             page_size=engine_cfg.page_size if self.paged else None,
             page_budget=self.allocator.capacity if self.paged else None,
             meta_tokens=cfg.num_meta_tokens)
+
+        # --- observability (repro.serving.obs) ----------------------------
+        obs = engine_cfg.obs
+        self.tracer: Optional[TraceRecorder] = (
+            TraceRecorder() if obs is not None and obs.trace else None)
+        self.journal: Optional[EventJournal] = (
+            EventJournal() if obs is not None and obs.journal else None)
+        if self.journal is not None:
+            if self.allocator is not None:
+                self.allocator.journal = self.journal
+            if self.swap is not None:
+                self.swap.host.journal = self.journal
+        self.scheduler.on_reject = self._on_reject
+        if self.prefix_index is not None:
+            self.prefix_index.on_evict = self._on_prefix_evict
+        # first-trace compile detection: the decode step compiles exactly
+        # once, prefill once per (bucket, compress_start) pair — when a
+        # timed call grew the jit cache, the elapsed time is compile time,
+        # not steady-state work, and lands in metrics.compile_s
+        self._decode_compiled = False
 
         cache = M.init_serve_cache(cfg, decode_policy, B, t_max)
         self.state = M.ServeState(cache=cache,
@@ -291,6 +318,15 @@ class ContinuousBatchingEngine:
                     f"{self.allocator.capacity} — it could never be admitted")
         if not req.arrival_time:
             req.arrival_time = time.perf_counter()
+        if self.tracer is not None:
+            tid = self._tid(req.rid)
+            self.tracer.declare_thread(tid, f"req {req.rid}")
+            self.tracer.begin("request", tid, rid=req.rid, tier=req.tier,
+                              prompt_len=req.prompt_len,
+                              max_new_tokens=req.max_new_tokens)
+            self.tracer.begin("queued", tid)
+        if self.journal is not None:
+            self.journal.emit("submit", rid=req.rid)
         self.scheduler.submit(req)
 
     @property
@@ -371,6 +407,55 @@ class ContinuousBatchingEngine:
         ever counted in both (tests/test_memory_accounting.py)."""
         return self.swap.host.bytes_resident if self.swap is not None else 0
 
+    # -------------------------------------------------- observability bits
+
+    @staticmethod
+    def _tid(rid: int) -> int:
+        """Trace track of request ``rid`` (track 0 is the engine's)."""
+        return rid + 1
+
+    def _on_reject(self, req: Request) -> None:
+        """Head-of-line admission failure: the request stays queued."""
+        self.metrics.record_rejection()
+        if self.tracer is not None:
+            self.tracer.instant("reject", ENGINE_TID, rid=req.rid)
+        if self.journal is not None:
+            self.journal.emit("reject", rid=req.rid)
+
+    def _on_prefix_evict(self, freed: int, unpinned: int) -> None:
+        """Destructive prefix-cache eviction pass dropped ``unpinned`` pins
+        (``freed`` device pages actually returned to the free list)."""
+        self.metrics.record_prefix_evict(freed, unpinned)
+        if self.tracer is not None:
+            self.tracer.instant("prefix_evict", ENGINE_TID, freed=freed,
+                                unpinned=unpinned)
+
+    def _phase(self, name: str, t0: float, t1: float) -> None:
+        """One engine.step() phase's wall time -> metrics (+ engine track)."""
+        self.metrics.record_phase(name, t1 - t0)
+        if self.tracer is not None:
+            self.tracer.complete(name, ENGINE_TID, t0, t1)
+
+    def _jit_traces(self, fn) -> int:
+        get = getattr(fn, "_cache_size", None)
+        return int(get()) if callable(get) else -1
+
+    def save_trace(self, path: str) -> None:
+        """Write the Chrome/Perfetto trace JSON (tracing must be enabled)."""
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is off — construct with "
+                "EngineConfig(obs=ObsConfig(trace=True))")
+        self.tracer.save(path)
+
+    def save_journal(self, path: str) -> None:
+        """Write the lifecycle event journal as JSONL (must be enabled)."""
+        if self.journal is None:
+            raise RuntimeError(
+                "journaling is off — construct with "
+                "EngineConfig(obs=ObsConfig(journal=True))")
+        self.journal.save(path)
+
     # ----------------------------------------------------------- internals
 
     def _consume_logits(self, slot: int, logits_row: np.ndarray) -> None:
@@ -383,7 +468,7 @@ class ContinuousBatchingEngine:
         info.pending = tok
         info.generated += 1
         info.generated_tokens.append(tok)
-        self.metrics.tokens_generated += 1
+        self.metrics.record_token(info.request.tier)
         if info.done:
             self.pool.retire(slot)
             if self.paged:
@@ -408,8 +493,15 @@ class ContinuousBatchingEngine:
                 info.pages = []
                 info.pages_shared = 0
             self.scheduler.release(info.request)
-            self.metrics.record_completion()
-            self.completed[info.request.rid] = info
+            self.metrics.record_completion(info.request.tier)
+            rid = info.request.rid
+            if self.tracer is not None:
+                tid = self._tid(rid)
+                self.tracer.instant("retire", tid, generated=info.generated)
+                self.tracer.end("request", tid)
+            if self.journal is not None:
+                self.journal.emit("retire", rid=rid, slot=slot)
+            self.completed[rid] = info
 
     def _alloc(self, n: int, hot=frozenset()) -> List[int]:
         """Allocate ``n`` pool pages. When the free list runs dry: a
@@ -487,6 +579,9 @@ class ContinuousBatchingEngine:
         self.allocator.demote(page)
         self.swap.stats_move(page, handle)
         self.metrics.record_swap(demoted=1)
+        if self.tracer is not None:
+            self.tracer.instant("demote", ENGINE_TID, page=page,
+                                hid=handle.hid, refs=refs)
         return handle
 
     def _promote_handle(self, handle: PageHandle,
@@ -521,6 +616,9 @@ class ContinuousBatchingEngine:
                 f"refs but {holders} holders were rebound")
         self.swap.stats_move(handle, page)
         self.metrics.record_swap(promoted=1)
+        if self.tracer is not None:
+            self.tracer.instant("promote", ENGINE_TID, hid=handle.hid,
+                                page=page, refs=refs)
         return page
 
     def _make_free(self, n: int, hot=frozenset(), *,
@@ -586,6 +684,12 @@ class ContinuousBatchingEngine:
             else:
                 stalled.add(i)
                 self.metrics.record_swap(stalls=1)
+                rid = info.request.rid
+                if self.tracer is not None:
+                    self.tracer.instant("promote_stall", self._tid(rid),
+                                        slot=i)
+                if self.journal is not None:
+                    self.journal.emit("stall", rid=rid, slot=i)
         return stalled
 
     def _proactive_trim(self) -> None:
@@ -688,10 +792,22 @@ class ContinuousBatchingEngine:
         plan = self._pending_plans.pop(req.rid, None)
         start = plan.shared_codes if plan is not None else 0
 
+        if self.tracer is not None:
+            self.tracer.end("queued", self._tid(req.rid))
         tokens = jnp.asarray(req.prompt[:bucket][None], jnp.int32)
         cap = jnp.full((1,), req.tier, jnp.int32)
+        n_traces = self._jit_traces(self._prefill_fn)
+        t0 = time.perf_counter()
         logits, one = self._prefill_fn(self.params, self.bank, tokens, cap,
                                        int(start))
+        t1 = time.perf_counter()
+        if self._jit_traces(self._prefill_fn) > n_traces:
+            # a new (bucket, compress_start) trace: the elapsed time is
+            # dominated by compilation, not prefill work
+            self.metrics.record_compile(t1 - t0)
+        if self.tracer is not None:
+            self.tracer.complete("prefill", self._tid(req.rid), t0, t1,
+                                 bucket=bucket, compress_start=int(start))
         info = SlotInfo(request=req, fed=bucket, admit_time=now,
                         cache_len=cache_len,
                         pages_reserved=max(
@@ -749,6 +865,9 @@ class ContinuousBatchingEngine:
             new_pages = self._alloc(n_prompt - len(aliased), hot=keep)
             info.pages = aliased + new_pages
             info.pages_shared = len(aliased)
+            if self.tracer is not None and aliased:
+                self.tracer.instant("page_alias", self._tid(req.rid),
+                                    pages=len(aliased))
             if copy_src is not None:
                 # copy-on-write of the boundary page: the recipient appends
                 # into a private copy; the donor page stays immutable. The
@@ -757,6 +876,9 @@ class ContinuousBatchingEngine:
                     "CoW of the null/trash page is impossible"
                 self.state = self._copy_fn(self.state, jnp.int32(copy_src),
                                            jnp.int32(new_pages[0]))
+                if self.tracer is not None:
+                    self.tracer.instant("cow_copy", self._tid(req.rid),
+                                        src=copy_src, dst=new_pages[0])
                 self.allocator.decref(copy_src)
             row = np.zeros((self._max_pages,), np.int32)
             row[:n_prompt] = info.pages
@@ -779,8 +901,13 @@ class ContinuousBatchingEngine:
         else:
             self.state = self._write_fn(self.state, one, jnp.int32(slot))
         self.metrics.record_admission(now - req.arrival_time)
-        self.metrics.prompt_tokens_processed += bucket
-        self.metrics.prefill_tokens_compressed += n_comp - start
+        self.metrics.record_prompt_tokens(bucket)
+        self.metrics.record_prefill_compressed(n_comp - start)
+        if self.journal is not None:
+            self.journal.emit("admit", rid=req.rid, slot=slot,
+                              pages=[p for p in info.pages
+                                     if not isinstance(p, PageHandle)],
+                              aliased=info.pages_shared)
         self._consume_logits(slot, np.asarray(logits[0]))
 
     def step(self) -> bool:
@@ -788,7 +915,11 @@ class ContinuousBatchingEngine:
         active slot whose pages could be made device-resident — the rest
         stall, bit-identical, until promotion succeeds). Returns True if any
         work remains (queued or in flight)."""
+        self.metrics.start_clock()
+        t0 = time.perf_counter()
         self._admit()
+        t1 = time.perf_counter()
+        self._phase("admit", t0, t1)
         active_ids = self.pool.active_slots()
         if not active_ids:
             return len(self.scheduler) > 0
@@ -796,6 +927,8 @@ class ContinuousBatchingEngine:
         stalled: set = set()
         if self.swap is not None:
             stalled = self._prepare_slots(active_ids)
+            t2 = time.perf_counter()
+            self._phase("prepare_slots", t1, t2)
             if len(stalled) == len(active_ids):
                 raise RuntimeError(
                     "tiered pool livelock: every active slot is stalled on "
@@ -820,18 +953,32 @@ class ContinuousBatchingEngine:
         touched = [p for i in step_ids
                    for p in self.pool.slots[i].device_pages]
 
+        t_disp0 = time.perf_counter()
         logits, self.state = self._decode_fn(
             self.params, self.bank, self.state,
             jnp.asarray(token), jnp.asarray(active), jnp.asarray(s_cap))
+        t_disp1 = time.perf_counter()
+        self._phase("decode_dispatch", t_disp0, t_disp1)
+        if not self._decode_compiled:
+            self._decode_compiled = True
+            if self._jit_traces(self._decode_fn) >= 1:
+                self.metrics.record_compile(t_disp1 - t_disp0)
         logits_np = np.asarray(logits)
+        t_sync = time.perf_counter()
+        self._phase("host_sync", t_disp1, t_sync)
 
         for i in step_ids:
             info = self.pool.slots[i]
             info.cache_len += 1          # host mirror of the device length row
+            if self.tracer is not None:
+                self.tracer.complete("decode", self._tid(info.request.rid),
+                                     t_disp0, t_sync, slot=i)
             if info.in_prompt_phase:
                 info.fed += 1
-                self.metrics.prompt_tokens_processed += 1
+                self.metrics.record_prompt_tokens(1)
             self._consume_logits(i, logits_np[i])
+        t_consume = time.perf_counter()
+        self._phase("consume_logits", t_sync, t_consume)
 
         shared_now = 0
         if self.paged:
@@ -845,6 +992,7 @@ class ContinuousBatchingEngine:
             # swapped prefix entry, retire of a last reference) would leak
             # their stats forever — handles are never reused
             self.swap.prune_stats()
+            self._phase("trim", t_consume, time.perf_counter())
         self.metrics.sample_step(
             occupancy=self.pool.occupancy(),
             kv_bytes_in_flight=self.kv_bytes_in_flight(),

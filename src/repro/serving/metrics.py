@@ -21,48 +21,229 @@ per step (the host tier's real footprint — ``kv_bytes_resident`` stays
 device-only, so the two never double-count a page), and
 ``promote_stall_steps`` — slot-steps lost waiting for a swapped page's
 device residency (the latency cost oversubscription pays).
+
+Since the observability layer (``repro.serving.obs``), ``EngineMetrics`` is
+a façade over a labeled :class:`~repro.serving.obs.registry.MetricsRegistry`
+— every counter is a registry family (so it exports as Prometheus text and
+carries per-tier label breakdowns), while the legacy attribute surface
+(``metrics.pages_demoted`` etc.) is preserved as read-only properties and
+``to_dict()`` keeps every pre-existing key byte-compatible. Two timing
+fixes ride along: the throughput clock starts lazily on the first step or
+admission (``setup_s`` — engine construction and jit setup — is reported
+separately), and the first-trace compile time of the prefill/decode entry
+points accumulates in ``compile_s`` so ``tokens_per_s_ex_compile`` measures
+steady-state throughput.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.serving.obs.registry import MetricsRegistry, percentile
+
+# step() phases instrumented by the engine, in execution order
+PHASES = ("admit", "prepare_slots", "decode_dispatch", "host_sync",
+          "consume_logits", "trim")
 
 
-@dataclasses.dataclass
+def _summary(samples: List[float]) -> Dict[str, float]:
+    """count/mean/p50/p99/max summary of one phase's timings (p999 once
+    enough samples exist for the tail to be distinguishable from max)."""
+    if not samples:
+        return {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
+    out = {"count": len(samples),
+           "mean": sum(samples) / len(samples),
+           "p50": percentile(samples, 0.50),
+           "p99": percentile(samples, 0.99),
+           "max": max(samples)}
+    if len(samples) >= 1000:
+        out["p999"] = percentile(samples, 0.999)
+    return out
+
+
 class EngineMetrics:
     """Aggregates one engine's serving counters; ``to_dict`` summarizes.
 
-    Counter fields are plain ints bumped by the engine; ``*_samples`` lists
-    hold one entry per pooled decode step.
+    Counters live in ``self.registry`` (Prometheus-exportable, labeled);
+    the legacy int-attribute surface is read-only properties over it.
+    ``*_samples`` lists hold one entry per pooled decode step.
     """
-    started_at: float = dataclasses.field(default_factory=time.perf_counter)
-    steps: int = 0
-    prefills: int = 0
-    tokens_generated: int = 0
-    prompt_tokens_processed: int = 0
-    # compressed positions OMP-encoded at prefill vs skipped via sharing
-    prefill_tokens_compressed: int = 0
-    prefill_tokens_skipped: int = 0
-    requests_completed: int = 0
-    # prefix sharing (admission-time)
-    prefix_hits: int = 0
-    prefix_misses: int = 0
-    pages_aliased: int = 0
-    pages_copied: int = 0
-    bytes_deduped: int = 0
-    # tiered storage (host-memory swap)
-    pages_demoted: int = 0
-    pages_promoted: int = 0
-    promote_stall_steps: int = 0
-    occupancy_samples: List[int] = dataclasses.field(default_factory=list)
-    kv_bytes_samples: List[int] = dataclasses.field(default_factory=list)
-    kv_bytes_resident_samples: List[int] = dataclasses.field(default_factory=list)
-    pages_in_use_samples: List[int] = dataclasses.field(default_factory=list)
-    shared_pages_samples: List[int] = dataclasses.field(default_factory=list)
-    host_bytes_samples: List[int] = dataclasses.field(default_factory=list)
-    queue_latency_s: List[float] = dataclasses.field(default_factory=list)
 
+    def __init__(self) -> None:
+        self.registry = MetricsRegistry()
+        r = self.registry
+        self._steps = r.counter("lexico_steps_total",
+                                "pooled decode steps executed")
+        self._prefills = r.counter("lexico_prefills_total",
+                                   "requests admitted (prefill splices)")
+        self._tokens = r.counter("lexico_tokens_generated_total",
+                                 "tokens sampled across all requests")
+        self._prompt_tokens = r.counter(
+            "lexico_prompt_tokens_total", "prompt tokens consumed")
+        self._prefill_compressed = r.counter(
+            "lexico_prefill_tokens_compressed_total",
+            "compressed positions OMP-encoded at prefill")
+        self._prefill_skipped = r.counter(
+            "lexico_prefill_tokens_skipped_total",
+            "compressed positions skipped via prefix sharing")
+        self._completed = r.counter("lexico_requests_completed_total",
+                                    "requests retired")
+        self._rejections = r.counter(
+            "lexico_admission_rejections_total",
+            "head-of-line admission reservation failures")
+        # prefix sharing (admission-time)
+        self._prefix_hits = r.counter("lexico_prefix_hits_total",
+                                      "admissions that shared a prefix")
+        self._prefix_misses = r.counter("lexico_prefix_misses_total",
+                                        "admissions with no shared prefix")
+        self._pages_aliased = r.counter("lexico_pages_aliased_total",
+                                        "pool pages aliased into new slots")
+        self._pages_copied = r.counter("lexico_pages_copied_total",
+                                       "copy-on-write boundary-page copies")
+        self._bytes_deduped = r.counter("lexico_bytes_deduped_total",
+                                        "paper-accounting bytes deduplicated")
+        self._prefix_evicted = r.counter(
+            "lexico_prefix_pages_evicted_total",
+            "prefix-cache pages destructively evicted")
+        # tiered storage (host-memory swap)
+        self._demoted = r.counter("lexico_pages_demoted_total",
+                                  "pages moved device -> host tier")
+        self._promoted = r.counter("lexico_pages_promoted_total",
+                                   "pages moved host -> device tier")
+        self._stalls = r.counter("lexico_promote_stall_steps_total",
+                                 "slot-steps stalled on promotion")
+        # timing
+        self._compile_s = r.counter(
+            "lexico_compile_seconds_total",
+            "time spent inside first-trace compilation of jitted entry points")
+        self._queue_latency = r.histogram(
+            "lexico_queue_latency_seconds",
+            "submit -> admission latency per request")
+        # the throughput clock: construction time is remembered, but
+        # elapsed_s runs from the FIRST step/admission so engine setup and
+        # jit tracing never pollute tokens_per_s
+        self.created_at: float = time.perf_counter()
+        self.started_at: Optional[float] = None
+
+        self.occupancy_samples: List[int] = []
+        self.kv_bytes_samples: List[int] = []
+        self.kv_bytes_resident_samples: List[int] = []
+        self.pages_in_use_samples: List[int] = []
+        self.shared_pages_samples: List[int] = []
+        self.host_bytes_samples: List[int] = []
+        self.queue_latency_s: List[float] = []
+        self.phase_times: Dict[str, List[float]] = {}
+
+    # ------------------------------------------------- legacy read surface
+    @property
+    def steps(self) -> int:
+        return int(self._steps.value)
+
+    @property
+    def prefills(self) -> int:
+        return int(self._prefills.value)
+
+    @property
+    def tokens_generated(self) -> int:
+        return int(self._tokens.value)
+
+    @property
+    def prompt_tokens_processed(self) -> int:
+        return int(self._prompt_tokens.value)
+
+    @property
+    def prefill_tokens_compressed(self) -> int:
+        return int(self._prefill_compressed.value)
+
+    @property
+    def prefill_tokens_skipped(self) -> int:
+        return int(self._prefill_skipped.value)
+
+    @property
+    def requests_completed(self) -> int:
+        return int(self._completed.value)
+
+    @property
+    def admission_rejections(self) -> int:
+        return int(self._rejections.value)
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self._prefix_hits.value)
+
+    @property
+    def prefix_misses(self) -> int:
+        return int(self._prefix_misses.value)
+
+    @property
+    def pages_aliased(self) -> int:
+        return int(self._pages_aliased.value)
+
+    @property
+    def pages_copied(self) -> int:
+        return int(self._pages_copied.value)
+
+    @property
+    def bytes_deduped(self) -> int:
+        return int(self._bytes_deduped.value)
+
+    @property
+    def prefix_pages_evicted(self) -> int:
+        return int(self._prefix_evicted.value)
+
+    @property
+    def pages_demoted(self) -> int:
+        return int(self._demoted.value)
+
+    @property
+    def pages_promoted(self) -> int:
+        return int(self._promoted.value)
+
+    @property
+    def promote_stall_steps(self) -> int:
+        return int(self._stalls.value)
+
+    @property
+    def compile_s(self) -> float:
+        return self._compile_s.value
+
+    # ------------------------------------------------------------- clocks
+    def start_clock(self) -> None:
+        """Start the throughput clock (idempotent) — called on the first
+        engine step / admission, NOT at construction, so ``elapsed_s`` and
+        ``tokens_per_s`` exclude setup; ``setup_s`` reports that gap."""
+        if self.started_at is None:
+            self.started_at = time.perf_counter()
+
+    @property
+    def elapsed_s(self) -> float:
+        if self.started_at is None:
+            return 0.0
+        return time.perf_counter() - self.started_at
+
+    @property
+    def setup_s(self) -> float:
+        """Construction -> first step/admission gap (0 until the clock
+        starts): engine setup the old always-on clock silently charged to
+        throughput."""
+        if self.started_at is None:
+            return 0.0
+        return self.started_at - self.created_at
+
+    def record_compile(self, seconds: float) -> None:
+        """One jitted entry point's first-trace compilation finished inside
+        a timed region — accounted separately so steady-state throughput
+        (``tokens_per_s_ex_compile``) is measurable on short runs."""
+        self._compile_s.inc(seconds)
+
+    def record_phase(self, name: str, seconds: float) -> None:
+        """One engine-step phase's wall time (see :data:`PHASES`)."""
+        self.phase_times.setdefault(name, []).append(seconds)
+        self.registry.histogram("lexico_step_phase_seconds",
+                                "engine.step() phase wall time",
+                                phase=name).observe(seconds)
+
+    # ----------------------------------------------------------- recording
     def sample_step(self, *, occupancy: int, kv_bytes_in_flight: int,
                     kv_bytes_resident: int = 0, pages_in_use: int = 0,
                     shared_pages: int = 0, host_bytes_resident: int = 0) -> None:
@@ -73,50 +254,100 @@ class EngineMetrics:
         right now). ``host_bytes_resident``: bytes the host swap tier holds
         right now (device-resident bytes live in ``kv_bytes_resident``).
         """
-        self.steps += 1
+        self.start_clock()
+        self._steps.inc()
         self.occupancy_samples.append(occupancy)
         self.kv_bytes_samples.append(kv_bytes_in_flight)
         self.kv_bytes_resident_samples.append(kv_bytes_resident)
         self.pages_in_use_samples.append(pages_in_use)
         self.shared_pages_samples.append(shared_pages)
         self.host_bytes_samples.append(host_bytes_resident)
+        r = self.registry
+        r.gauge("lexico_slot_occupancy", "active slots").set(occupancy)
+        r.gauge("lexico_kv_bytes_in_flight",
+                "paper-accounting bytes held by active slots"
+                ).set(kv_bytes_in_flight)
+        r.gauge("lexico_kv_bytes_resident",
+                "layout bytes resident, by tier",
+                tier="device").set(kv_bytes_resident)
+        r.gauge("lexico_kv_bytes_resident",
+                "layout bytes resident, by tier",
+                tier="host").set(host_bytes_resident)
+        r.gauge("lexico_pages_in_use", "pool pages allocated").set(pages_in_use)
+        r.gauge("lexico_shared_pages",
+                "physical pages with >= 2 holders").set(shared_pages)
+
+    def record_token(self, tier: int) -> None:
+        """One token sampled by a slot whose request runs sparsity ``tier``
+        (the per-tier breakdown is the registry's labeled family)."""
+        self._tokens.inc()
+        self.registry.counter("lexico_tier_tokens_generated_total",
+                              "tokens sampled, by sparsity tier",
+                              tier=tier).inc()
+
+    def record_prompt_tokens(self, n: int) -> None:
+        self._prompt_tokens.inc(n)
+
+    def record_prefill_compressed(self, n: int) -> None:
+        self._prefill_compressed.inc(n)
 
     def record_swap(self, *, demoted: int = 0, promoted: int = 0,
                     stalls: int = 0) -> None:
         """Tier traffic of one engine step: pages moved device->host /
         host->device, plus slots that stalled waiting for residency."""
-        self.pages_demoted += demoted
-        self.pages_promoted += promoted
-        self.promote_stall_steps += stalls
+        self._demoted.inc(demoted)
+        self._promoted.inc(promoted)
+        self._stalls.inc(stalls)
 
     def record_admission(self, queue_latency_s: float) -> None:
         """One request spliced into a slot (``queue_latency_s`` = time from
         submission to admission)."""
-        self.prefills += 1
+        self.start_clock()
+        self._prefills.inc()
         self.queue_latency_s.append(queue_latency_s)
+        self._queue_latency.observe(queue_latency_s)
+
+    def record_rejection(self) -> None:
+        """One head-of-line admission failure (request stays queued)."""
+        self._rejections.inc()
 
     def record_prefix_share(self, *, aliased: int, copied: int,
                             skipped_codes: int, bytes_deduped: int) -> None:
         """One admission's sharing outcome (no-op counters stay at zero when
         sharing is off)."""
         if aliased or copied or skipped_codes:
-            self.prefix_hits += 1
+            self._prefix_hits.inc()
         else:
-            self.prefix_misses += 1
-        self.pages_aliased += aliased
-        self.pages_copied += copied
-        self.prefill_tokens_skipped += skipped_codes
-        self.bytes_deduped += bytes_deduped
+            self._prefix_misses.inc()
+        self._pages_aliased.inc(aliased)
+        self._pages_copied.inc(copied)
+        self._prefill_skipped.inc(skipped_codes)
+        self._bytes_deduped.inc(bytes_deduped)
 
-    def record_completion(self) -> None:
-        self.requests_completed += 1
+    def record_prefix_evict(self, freed: int, unpinned: int) -> None:
+        """One destructive prefix-cache eviction pass (``freed`` pages back
+        on the free list, ``unpinned`` index pins dropped)."""
+        self._prefix_evicted.inc(unpinned)
 
-    @property
-    def elapsed_s(self) -> float:
-        return time.perf_counter() - self.started_at
+    def record_completion(self, tier: Optional[int] = None) -> None:
+        self._completed.inc()
+        if tier is not None:
+            self.registry.counter("lexico_tier_requests_completed_total",
+                                  "requests retired, by sparsity tier",
+                                  tier=tier).inc()
+
+    # -------------------------------------------------------------- export
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition of the whole registry."""
+        return self.registry.to_prometheus()
 
     def to_dict(self) -> Dict:
-        """Summary dict: rates, means and peaks over the run so far."""
+        """Summary dict: rates, means and peaks over the run so far.
+
+        Every key that predates the observability layer is preserved with
+        identical semantics; the new keys (percentiles, phase timers,
+        setup/compile split) are appended after them.
+        """
         el = max(self.elapsed_s, 1e-9)
         occ = self.occupancy_samples or [0]
         kvb = self.kv_bytes_samples or [0]
@@ -126,7 +357,8 @@ class EngineMetrics:
         hst = self.host_bytes_samples or [0]
         lat = self.queue_latency_s or [0.0]
         lookups = self.prefix_hits + self.prefix_misses
-        return {
+        el_ex_compile = max(el - self.compile_s, 1e-9)
+        out = {
             "elapsed_s": el,
             "steps": self.steps,
             "prefills": self.prefills,
@@ -163,3 +395,17 @@ class EngineMetrics:
             "host_bytes_resident_mean": sum(hst) / len(hst),
             "host_bytes_resident_peak": max(hst),
         }
+        # observability additions (appended — pre-existing keys above are
+        # byte-compatible with the pre-obs engine)
+        out["queue_latency_s_p50"] = percentile(self.queue_latency_s, 0.50)
+        out["queue_latency_s_p99"] = percentile(self.queue_latency_s, 0.99)
+        if len(self.queue_latency_s) >= 1000:
+            out["queue_latency_s_p999"] = percentile(self.queue_latency_s,
+                                                     0.999)
+        out["phase_times"] = {name: _summary(samples)
+                              for name, samples in self.phase_times.items()}
+        out["admission_rejections"] = self.admission_rejections
+        out["setup_s"] = self.setup_s
+        out["compile_s"] = self.compile_s
+        out["tokens_per_s_ex_compile"] = self.tokens_generated / el_ex_compile
+        return out

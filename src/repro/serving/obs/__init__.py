@@ -1,0 +1,79 @@
+"""Serving observability: tracing, metrics registry, event journal, roofline.
+
+Four orthogonal instruments over the continuous-batching engine, each
+documented in ``docs/observability.md``:
+
+  * :mod:`~repro.serving.obs.registry` — labeled Counter/Gauge/Histogram
+    families with Prometheus text exposition; ``EngineMetrics`` is a façade
+    over one registry.
+  * :mod:`~repro.serving.obs.trace` — request-lifecycle span trees in
+    Chrome/Perfetto trace-event JSON (``--trace out.json`` anywhere the
+    engine runs).
+  * :mod:`~repro.serving.obs.journal` — append-only JSONL journal of
+    slot/page lifecycle transitions plus a post-hoc replay invariant
+    checker (refcount conservation, leaks, two-tier balance).
+  * :mod:`~repro.serving.obs.roofline` — AOT roofline of the engine's
+    compiled decode/prefill hot loop via ``repro.roofline``.
+
+Tracing and journaling are opt-in per engine via :class:`ObsConfig`
+(``EngineConfig(obs=ObsConfig(trace=True))``); when disabled the engine
+carries no recording state at all — every emission site is behind an
+``is not None`` check. Phase timers and the metrics registry are always on
+(a handful of ``perf_counter`` calls per step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.obs.journal import (
+    EventJournal, JournalViolation, replay_check,
+)
+from repro.serving.obs.registry import (
+    Counter, Gauge, Histogram, MetricsRegistry, percentile,
+)
+from repro.serving.obs.trace import ENGINE_TID, TraceRecorder
+
+__all__ = [
+    "ObsConfig",
+    "TraceRecorder",
+    "ENGINE_TID",
+    "EventJournal",
+    "JournalViolation",
+    "replay_check",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "percentile",
+    "engine_decode_roofline",
+    "engine_prefill_roofline",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Per-engine observability switches (static over an engine's lifetime).
+
+    ``trace``: record a request-lifecycle span tree + engine phase spans
+    into a :class:`TraceRecorder` (``engine.tracer``), exportable as
+    Chrome/Perfetto JSON. ``journal``: record every slot/page lifecycle
+    transition into an :class:`EventJournal` (``engine.journal``) for
+    post-hoc invariant replay. Both default off; a default-constructed
+    engine records nothing and pays nothing.
+    """
+    trace: bool = False
+    journal: bool = False
+
+
+def engine_decode_roofline(*args, **kwargs):
+    """Lazy re-export of :func:`repro.serving.obs.roofline.engine_decode_roofline`
+    (the roofline bridge imports jax at module load; keep it off the cheap
+    registry/journal import path)."""
+    from repro.serving.obs.roofline import engine_decode_roofline as fn
+    return fn(*args, **kwargs)
+
+
+def engine_prefill_roofline(*args, **kwargs):
+    """Lazy re-export of :func:`repro.serving.obs.roofline.engine_prefill_roofline`."""
+    from repro.serving.obs.roofline import engine_prefill_roofline as fn
+    return fn(*args, **kwargs)

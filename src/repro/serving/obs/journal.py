@@ -1,0 +1,219 @@
+"""Append-only structured event journal of slot/page lifecycle transitions.
+
+The fuzz harness (``tests/test_slot_lifecycle_fuzz.py``) proves the pool's
+refcount invariants *in-process*; the journal turns those invariants into an
+artifact any run can produce and any later process can re-check.  The
+allocator and the host tier each carry an optional ``journal`` attribute
+(``None`` by default — a single ``is not None`` branch per operation, zero
+cost when disabled); when set, every tier transition appends one dict.
+
+Event schema (one JSON object per line in the saved JSONL):
+
+==================  =====================================================
+``ev``              fields
+==================  =====================================================
+``page_alloc``      ``page`` (device id, refcount enters at 1)
+``page_incref``     ``page``, ``refs`` (count *after*)
+``page_decref``     ``page``, ``refs`` (count *after*; 0 = freed)
+``page_demote``     ``page``, ``refs`` (whole count transferred host-side)
+``page_promote``    ``page``, ``refs`` (count transferred back)
+``host_put``        ``hid``, ``refs`` (host tier admits a demoted page)
+``host_incref``     ``hid``, ``refs`` (count after)
+``host_decref``     ``hid``, ``refs`` (count after; 0 = dropped)
+``host_pop``        ``hid``, ``refs`` (host tier releases for promotion)
+``submit``          ``rid``
+``admit``           ``rid``, ``slot``, ``pages``, ``aliased``
+``stall``           ``rid``, ``slot`` (promote-stall: pool too full)
+``retire``          ``rid``, ``slot``
+``reject``          ``rid`` (admission reservation check failed)
+==================  =====================================================
+
+Every event also carries a monotonically increasing ``seq``.
+:func:`replay_check` replays a journal and reports every invariant
+violation it finds — refcount conservation, double alloc/free, use after
+free, tier-transfer mismatches, and end-of-trace leaks on either tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter as _Multiset
+from typing import Dict, Iterable, List, Sequence
+
+__all__ = ["EventJournal", "JournalViolation", "replay_check"]
+
+
+class EventJournal:
+    """In-memory append-only journal; one dict per lifecycle event."""
+
+    def __init__(self) -> None:
+        self.events: List[Dict] = []
+        self._seq = 0
+
+    def emit(self, ev: str, **fields: object) -> None:
+        rec: Dict = {"seq": self._seq, "ev": ev}
+        rec.update(fields)
+        self._seq += 1
+        self.events.append(rec)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+
+    @staticmethod
+    def load(path: str) -> List[Dict]:
+        with open(path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalViolation:
+    """One invariant breach found by :func:`replay_check`."""
+    seq: int          # offending event's seq (-1 = end-of-trace check)
+    kind: str         # e.g. "double-free", "device-leak"
+    detail: str
+
+    def __str__(self) -> str:  # pragma: no cover - repr convenience
+        return f"[seq {self.seq}] {self.kind}: {self.detail}"
+
+
+def replay_check(events: Iterable[Dict]) -> List[JournalViolation]:
+    """Replay a journal and return every invariant violation (empty = clean).
+
+    Checks, in replay order:
+
+      * device-tier refcount conservation: ``page_incref``/``page_decref``
+        on live pages only, with the recorded post-count matching the
+        replayed count (a divergence means events were lost or tampered);
+      * no double alloc, no double free, no demote/incref after free;
+      * host-tier twin of the above over handles;
+      * tier-transfer balance: every ``page_demote`` pairs with a
+        ``host_put`` carrying the identical transferred refcount, every
+        ``page_promote`` with a ``host_pop`` (multiset match — ordering
+        within a transfer is not constrained);
+      * end-of-trace leaks: any page or handle still live when the journal
+        ends.
+    """
+    device: Dict[int, int] = {}
+    host: Dict[int, int] = {}
+    demote_refs: _Multiset = _Multiset()
+    put_refs: _Multiset = _Multiset()
+    promote_refs: _Multiset = _Multiset()
+    pop_refs: _Multiset = _Multiset()
+    out: List[JournalViolation] = []
+
+    def bad(seq: int, kind: str, detail: str) -> None:
+        out.append(JournalViolation(seq=seq, kind=kind, detail=detail))
+
+    for e in events:
+        seq = int(e.get("seq", -1))
+        ev = e["ev"]
+        if ev == "page_alloc":
+            page = e["page"]
+            if page == 0:
+                bad(seq, "null-page-alloc", "page 0 is the trash page")
+            elif page in device:
+                bad(seq, "double-alloc", f"page {page} already live")
+            else:
+                device[page] = 1
+        elif ev == "page_incref":
+            page = e["page"]
+            if page not in device:
+                bad(seq, "incref-after-free", f"page {page} not live")
+            else:
+                device[page] += 1
+                if "refs" in e and e["refs"] != device[page]:
+                    bad(seq, "refcount-divergence",
+                        f"page {page}: journal says {e['refs']}, "
+                        f"replay says {device[page]}")
+        elif ev == "page_decref":
+            page = e["page"]
+            if page not in device:
+                bad(seq, "double-free", f"page {page} not live")
+            else:
+                device[page] -= 1
+                if "refs" in e and e["refs"] != device[page]:
+                    bad(seq, "refcount-divergence",
+                        f"page {page}: journal says {e['refs']}, "
+                        f"replay says {device[page]}")
+                if device[page] == 0:
+                    del device[page]
+        elif ev == "page_demote":
+            page, refs = e["page"], e["refs"]
+            if page not in device:
+                bad(seq, "demote-after-free", f"page {page} not live")
+            else:
+                if device[page] != refs:
+                    bad(seq, "refcount-divergence",
+                        f"page {page}: demote transferred {refs}, "
+                        f"replay holds {device[page]}")
+                del device[page]
+            demote_refs[refs] += 1
+        elif ev == "page_promote":
+            page, refs = e["page"], e["refs"]
+            if page in device:
+                bad(seq, "promote-onto-live-page", f"page {page} already live")
+            if refs < 1:
+                bad(seq, "bad-refcount", f"promote with refs={refs}")
+            device[page] = refs
+            promote_refs[refs] += 1
+        elif ev == "host_put":
+            hid, refs = e["hid"], e["refs"]
+            if hid in host:
+                bad(seq, "host-double-put", f"handle {hid} already resident")
+            if refs < 1:
+                bad(seq, "bad-refcount", f"host_put with refs={refs}")
+            host[hid] = refs
+            put_refs[refs] += 1
+        elif ev == "host_incref":
+            hid = e["hid"]
+            if hid not in host:
+                bad(seq, "host-incref-after-free", f"handle {hid} not resident")
+            else:
+                host[hid] += 1
+                if "refs" in e and e["refs"] != host[hid]:
+                    bad(seq, "refcount-divergence",
+                        f"handle {hid}: journal says {e['refs']}, "
+                        f"replay says {host[hid]}")
+        elif ev == "host_decref":
+            hid = e["hid"]
+            if hid not in host:
+                bad(seq, "host-double-free", f"handle {hid} not resident")
+            else:
+                host[hid] -= 1
+                if "refs" in e and e["refs"] != host[hid]:
+                    bad(seq, "refcount-divergence",
+                        f"handle {hid}: journal says {e['refs']}, "
+                        f"replay says {host[hid]}")
+                if host[hid] == 0:
+                    del host[hid]
+        elif ev == "host_pop":
+            hid, refs = e["hid"], e["refs"]
+            if hid not in host:
+                bad(seq, "host-pop-missing", f"handle {hid} not resident")
+            else:
+                if host[hid] != refs:
+                    bad(seq, "refcount-divergence",
+                        f"handle {hid}: pop transferred {refs}, "
+                        f"replay holds {host[hid]}")
+                del host[hid]
+            pop_refs[refs] += 1
+        # submit/admit/stall/retire/reject are context, not invariants
+
+    if demote_refs != put_refs:
+        bad(-1, "tier-transfer-mismatch",
+            f"demote refcounts {dict(demote_refs)} != "
+            f"host_put refcounts {dict(put_refs)}")
+    if promote_refs != pop_refs:
+        bad(-1, "tier-transfer-mismatch",
+            f"promote refcounts {dict(promote_refs)} != "
+            f"host_pop refcounts {dict(pop_refs)}")
+    for page, refs in sorted(device.items()):
+        bad(-1, "device-leak", f"page {page} still holds {refs} ref(s)")
+    for hid, refs in sorted(host.items()):
+        bad(-1, "host-leak", f"handle {hid} still holds {refs} ref(s)")
+    return out

@@ -1,0 +1,209 @@
+"""Labeled metrics registry: Counter / Gauge / Histogram families.
+
+The serving engine's ``EngineMetrics`` is a façade over one of these
+registries.  A *family* is a named metric with a fixed set of label keys;
+each distinct label-value combination materialises one instrument.  The
+design goals, in order:
+
+  1. **Cheap on the hot path.**  ``Counter.inc`` is one float add;
+     ``Histogram.observe`` is one list append.  No locks (the engine is
+     single-threaded), no string formatting until export time.
+  2. **Prometheus-compatible export.**  ``to_prometheus()`` emits the text
+     exposition format; histograms are exported as summaries (quantiles
+     computed at scrape time from the raw samples — sample counts here are
+     small enough that we keep them all rather than pre-bucketing).
+  3. **Stable snapshots.**  ``snapshot()`` returns a flat dict for JSON
+     emission from benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "percentile",
+]
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of ``samples`` (q in [0, 1]); 0.0 if empty."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    k = max(int(math.ceil(q * len(xs))) - 1, 0)
+    return float(xs[min(k, len(xs) - 1)])
+
+
+class Counter:
+    """Monotonically non-decreasing value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter increment must be >= 0, got {n}")
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (set, not accumulated)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Raw-sample histogram; quantiles are computed at export time."""
+
+    __slots__ = ("samples",)
+
+    def __init__(self) -> None:
+        self.samples: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.samples.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.samples))
+
+    def percentile(self, q: float) -> float:
+        return percentile(self.samples, q)
+
+
+_KINDS = {Counter: "counter", Gauge: "gauge", Histogram: "summary"}
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+class _Family:
+    __slots__ = ("name", "kind", "help", "label_keys", "instruments")
+
+    def __init__(self, name: str, kind: str, help_: str,
+                 label_keys: Tuple[str, ...]) -> None:
+        self.name = name
+        self.kind = kind
+        self.help = help_
+        self.label_keys = label_keys
+        self.instruments: Dict[LabelKey, object] = {}
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n")
+
+
+def _fmt_labels(labels: LabelKey, extra: Optional[Tuple[str, str]] = None) -> str:
+    parts = [f'{k}="{_escape(str(v))}"' for k, v in labels]
+    if extra is not None:
+        parts.append(f'{extra[0]}="{extra[1]}"')
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def _fmt_value(v: float) -> str:
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+class MetricsRegistry:
+    """Ordered collection of metric families keyed by name."""
+
+    QUANTILES = (0.5, 0.9, 0.99)
+
+    def __init__(self) -> None:
+        self._families: Dict[str, _Family] = {}
+
+    # -- instrument constructors ------------------------------------------
+    def counter(self, name: str, help_: str = "", **labels: object) -> Counter:
+        return self._instrument(Counter, name, help_, labels)
+
+    def gauge(self, name: str, help_: str = "", **labels: object) -> Gauge:
+        return self._instrument(Gauge, name, help_, labels)
+
+    def histogram(self, name: str, help_: str = "", **labels: object) -> Histogram:
+        return self._instrument(Histogram, name, help_, labels)
+
+    def _instrument(self, cls, name: str, help_: str, labels: Dict[str, object]):
+        fam = self._families.get(name)
+        keys = tuple(sorted(labels))
+        if fam is None:
+            fam = _Family(name, _KINDS[cls], help_, keys)
+            self._families[name] = fam
+        else:
+            if fam.kind != _KINDS[cls]:
+                raise TypeError(
+                    f"metric {name!r} already registered as {fam.kind}")
+            if fam.label_keys != keys:
+                raise ValueError(
+                    f"metric {name!r} label keys {fam.label_keys} != {keys}")
+        key: LabelKey = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        inst = fam.instruments.get(key)
+        if inst is None:
+            inst = cls()
+            fam.instruments[key] = inst
+        return inst
+
+    # -- introspection ----------------------------------------------------
+    def families(self) -> List[str]:
+        return list(self._families)
+
+    def get(self, name: str, **labels: object):
+        """Return an existing instrument or None (never creates)."""
+        fam = self._families.get(name)
+        if fam is None:
+            return None
+        key: LabelKey = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        return fam.instruments.get(key)
+
+    # -- export -----------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        """Flat ``{name{label="v"}: value}`` dict for JSON emission."""
+        out: Dict[str, float] = {}
+        for fam in self._families.values():
+            for key, inst in fam.instruments.items():
+                base = fam.name + _fmt_labels(key)
+                if isinstance(inst, Histogram):
+                    out[base + "_count"] = float(inst.count)
+                    out[base + "_sum"] = inst.total
+                    for q in self.QUANTILES:
+                        out[f"{base}_p{int(q * 100)}"] = inst.percentile(q)
+                else:
+                    out[base] = inst.value
+        return out
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (histograms exported as summaries)."""
+        lines: List[str] = []
+        for fam in self._families.values():
+            if fam.help:
+                lines.append(f"# HELP {fam.name} {fam.help}")
+            lines.append(f"# TYPE {fam.name} {fam.kind}")
+            for key, inst in fam.instruments.items():
+                if isinstance(inst, Histogram):
+                    for q in self.QUANTILES:
+                        labels = _fmt_labels(key, ("quantile", str(q)))
+                        lines.append(
+                            f"{fam.name}{labels} {_fmt_value(inst.percentile(q))}")
+                    base = _fmt_labels(key)
+                    lines.append(f"{fam.name}_sum{base} {_fmt_value(inst.total)}")
+                    lines.append(f"{fam.name}_count{base} {inst.count}")
+                else:
+                    lines.append(
+                        f"{fam.name}{_fmt_labels(key)} {_fmt_value(inst.value)}")
+        return "\n".join(lines) + "\n"

@@ -1,0 +1,72 @@
+"""Roofline analysis of the engine's compiled decode/prefill hot loop.
+
+``repro.roofline.analysis`` already turns a compiled (AOT) module into
+roofline terms; this bridge points it at a *live engine's* jitted entry
+points.  The engine's decode step is one compiled trace for the whole pool,
+so lowering it once with abstract (shape/dtype-only) stand-ins for the live
+arrays yields exactly the module every ``engine.step()`` dispatches — the
+predicted bytes/FLOPs side of the achieved-vs-predicted comparison the
+serving benchmark emits (the achieved side is the measured
+``decode_dispatch`` + ``host_sync`` phase time).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.analysis import (
+    HW, V5E, RooflineReport, analyze_compiled, model_flops_for,
+)
+
+__all__ = ["engine_decode_roofline", "engine_prefill_roofline"]
+
+
+def _abstract(tree):
+    """Shape/dtype skeleton of a pytree of arrays (lowering needs no data)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        tree)
+
+
+def engine_decode_roofline(eng, *, hw: HW = V5E) -> RooflineReport:
+    """AOT-compile the engine's pooled decode step and report its roofline.
+
+    Lowering uses the engine's real params/state shapes, so the analyzed
+    module is byte-identical to the one the hot loop dispatches (jit caches
+    by abstract signature).  ``model_flops`` counts one useful token per
+    slot — the full-pool upper bound; partial occupancy lowers the useful
+    ratio, never the module cost.
+    """
+    B = eng.engine_cfg.n_slots
+    lowered = eng._decode_fn.lower(
+        _abstract(eng.params), _abstract(eng.bank), _abstract(eng.state),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.bool_),
+        jax.ShapeDtypeStruct((B,), jnp.int32))
+    compiled = lowered.compile()
+    return analyze_compiled(
+        compiled, arch=getattr(eng.cfg, "arch", "decoder"),
+        shape=f"decode[B={B},t_max={eng.engine_cfg.t_max},"
+              f"layout={eng.engine_cfg.layout}]",
+        mesh_desc="1x1", chips=1,
+        model_flops=model_flops_for(eng.cfg, "decode", 1, B, steps=1),
+        hw=hw)
+
+
+def engine_prefill_roofline(eng, bucket: int, *, tier: Optional[int] = None,
+                            hw: HW = V5E) -> RooflineReport:
+    """AOT-compile one prefill bucket (``compress_start=0``) and report its
+    roofline — the admission-path complement of the decode report."""
+    lowered = eng._prefill_fn.lower(
+        _abstract(eng.params), _abstract(eng.bank),
+        jax.ShapeDtypeStruct((1, bucket), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        0)
+    compiled = lowered.compile()
+    return analyze_compiled(
+        compiled, arch=getattr(eng.cfg, "arch", "decoder"),
+        shape=f"prefill[bucket={bucket}]", mesh_desc="1x1", chips=1,
+        model_flops=model_flops_for(eng.cfg, "prefill", bucket, 1),
+        hw=hw)

@@ -1,0 +1,100 @@
+"""Request-lifecycle tracing in Chrome/Perfetto trace-event format.
+
+One ``TraceRecorder`` per engine accumulates trace events in memory and
+serialises them as the Chrome ``traceEvents`` JSON that both
+``chrome://tracing`` and https://ui.perfetto.dev load directly.
+
+Track layout
+------------
+* ``tid 0`` — the engine track.  Every ``engine.step()`` phase (admit,
+  prepare_slots, decode_dispatch, host_sync, consume_logits, trim) is a
+  complete ("X") event; pool-level instants (demote, promote,
+  prefix_evict, reject) land here too.
+* ``tid rid+1`` — one track per request.  The outer ``request`` span
+  covers submit→retire, with a ``queued`` child span (submit→admission),
+  a ``prefill`` complete event, one ``decode`` complete event per engine
+  step the request participated in, and instants for page aliasing, CoW
+  copies, and promote stalls.
+
+Timestamps are ``time.perf_counter`` deltas from recorder construction,
+scaled to microseconds as the format requires.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["TraceRecorder", "ENGINE_TID"]
+
+ENGINE_TID = 0
+_PID = 1
+
+
+class TraceRecorder:
+    """Accumulates Chrome trace events; all emit methods are O(1) appends."""
+
+    def __init__(self, process_name: str = "lexico-serving") -> None:
+        self._t0 = time.perf_counter()
+        self._named: set = set()
+        self.events: List[Dict] = [
+            {"name": "process_name", "ph": "M", "pid": _PID, "tid": ENGINE_TID,
+             "args": {"name": process_name}},
+        ]
+        self.declare_thread(ENGINE_TID, "engine")
+
+    # -- helpers ----------------------------------------------------------
+    def _ts(self, t: Optional[float] = None) -> float:
+        if t is None:
+            t = time.perf_counter()
+        return (t - self._t0) * 1e6
+
+    def declare_thread(self, tid: int, name: str) -> None:
+        if tid in self._named:
+            return
+        self._named.add(tid)
+        self.events.append({"name": "thread_name", "ph": "M", "pid": _PID,
+                            "tid": tid, "args": {"name": name}})
+
+    # -- span emission ----------------------------------------------------
+    def begin(self, name: str, tid: int, **args: object) -> None:
+        ev: Dict = {"name": name, "ph": "B", "pid": _PID, "tid": tid,
+                    "ts": self._ts()}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def end(self, name: str, tid: int, **args: object) -> None:
+        ev: Dict = {"name": name, "ph": "E", "pid": _PID, "tid": tid,
+                    "ts": self._ts()}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def complete(self, name: str, tid: int, t_start: float, t_end: float,
+                 **args: object) -> None:
+        """Complete ("X") event from absolute perf_counter endpoints."""
+        ev: Dict = {"name": name, "ph": "X", "pid": _PID, "tid": tid,
+                    "ts": self._ts(t_start),
+                    "dur": max(t_end - t_start, 0.0) * 1e6}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def instant(self, name: str, tid: int, **args: object) -> None:
+        ev: Dict = {"name": name, "ph": "i", "pid": _PID, "tid": tid,
+                    "ts": self._ts(), "s": "t"}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    # -- export -----------------------------------------------------------
+    def to_chrome_trace(self) -> Dict:
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+
+    def __len__(self) -> int:
+        return len(self.events)

@@ -63,6 +63,9 @@ class PageAllocator:
         # tier-transfer counters (lifetime totals; see demote/promote)
         self.pages_demoted = 0
         self.pages_promoted = 0
+        # optional lifecycle journal (repro.serving.obs.EventJournal); None
+        # keeps every operation hook-free
+        self.journal = None
 
     @property
     def capacity(self) -> int:
@@ -90,6 +93,9 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        if self.journal is not None:
+            for p in pages:
+                self.journal.emit("page_alloc", page=p)
         return pages
 
     def incref(self, page: int) -> None:
@@ -107,6 +113,8 @@ class PageAllocator:
             raise RefcountOverflow(
                 f"page {page} refcount would exceed {self.MAX_REFS}")
         self._refs[page] += 1
+        if self.journal is not None:
+            self.journal.emit("page_incref", page=page, refs=self._refs[page])
 
     def decref(self, page: int) -> None:
         """Drop one reference; the page returns to the free list at zero.
@@ -119,9 +127,12 @@ class PageAllocator:
         if page not in self._refs:
             raise KeyError(f"page {page} is not allocated (double free?)")
         self._refs[page] -= 1
-        if self._refs[page] == 0:
+        refs = self._refs[page]
+        if refs == 0:
             del self._refs[page]
             self._free.append(page)
+        if self.journal is not None:
+            self.journal.emit("page_decref", page=page, refs=refs)
 
     def free(self, pages: List[int]) -> None:
         """Decref every page in ``pages`` (shared pages survive under their
@@ -157,6 +168,8 @@ class PageAllocator:
         refs = self._refs.pop(page)
         self._free.append(page)
         self.pages_demoted += 1
+        if self.journal is not None:
+            self.journal.emit("page_demote", page=page, refs=refs)
         return refs
 
     def promote(self, refs: int) -> int:
@@ -177,6 +190,8 @@ class PageAllocator:
         page = self._free.pop()
         self._refs[page] = refs
         self.pages_promoted += 1
+        if self.journal is not None:
+            self.journal.emit("page_promote", page=page, refs=refs)
         return page
 
     def check_balanced(self) -> bool:

@@ -134,6 +134,10 @@ class PrefixIndex:
         self.max_cached_pages = max_cached_pages
         self._roots: Dict[int, _Node] = {}   # tier -> structural root
         self._registered: Dict[int, _Node] = {}  # page id -> owning node
+        # optional eviction callback, invoked as on_evict(freed, unpinned)
+        # after every destructive evict() pass that dropped a pin (the
+        # engine routes it into metrics + the request trace)
+        self.on_evict = None
         self._clock = 0
 
     # ------------------------------------------------------------- internals
@@ -398,6 +402,8 @@ class PrefixIndex:
                 break
             if not progressed:
                 break
+        if unpinned and self.on_evict is not None:
+            self.on_evict(freed, unpinned)
         return freed
 
     @staticmethod

@@ -122,6 +122,10 @@ class FCFSScheduler:
         self.pages_admitted = 0          # charged pages (paged mode only)
         self.rejections = 0              # head-of-line _fits failures
         self._charged: Dict[int, Tuple[int, int]] = {}  # rid -> (bytes, pages)
+        # optional rejection callback, invoked as on_reject(request) on each
+        # head-of-line _fits failure (the engine routes it into metrics and
+        # the request trace)
+        self.on_reject: Optional[Callable[[Request], None]] = None
 
     def submit(self, req: Request) -> None:
         """Append ``req`` to the FCFS queue (no admission check here)."""
@@ -230,6 +234,8 @@ class FCFSScheduler:
             if not self._fits(head, charge_bytes, charge_pages, pinned,
                               promote, pool_state_fn):
                 self.rejections += 1
+                if self.on_reject is not None:
+                    self.on_reject(head)
                 break
             self.queue.popleft()
             self.bytes_admitted += charge_bytes

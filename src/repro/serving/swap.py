@@ -101,6 +101,10 @@ class HostPageStore:
         self._pages: Dict[PageHandle, _HostPage] = {}
         self._next_hid = 1
         self.bytes_resident = 0
+        # optional lifecycle journal (repro.serving.obs.EventJournal); None
+        # keeps every operation hook-free — the host-tier twin of
+        # PageAllocator.journal
+        self.journal = None
 
     @property
     def n_pages(self) -> int:
@@ -132,6 +136,8 @@ class HostPageStore:
         self._pages[handle] = _HostPage(stores=stores, refs=refs,
                                         nbytes=nbytes)
         self.bytes_resident += nbytes
+        if self.journal is not None:
+            self.journal.emit("host_put", hid=handle.hid, refs=refs)
         return handle
 
     def get(self, handle: PageHandle) -> HostStores:
@@ -146,6 +152,9 @@ class HostPageStore:
     def incref(self, handle: PageHandle) -> None:
         """One more holder of a swapped page (sharing while swapped)."""
         self._pages[handle].refs += 1
+        if self.journal is not None:
+            self.journal.emit("host_incref", hid=handle.hid,
+                              refs=self._pages[handle].refs)
 
     def decref(self, handle: PageHandle) -> bool:
         """Drop one holder; the page leaves the tier at zero. Returns True
@@ -155,6 +164,8 @@ class HostPageStore:
         if page is None:
             raise KeyError(f"{handle} is not host-resident (double free?)")
         page.refs -= 1
+        if self.journal is not None:
+            self.journal.emit("host_decref", hid=handle.hid, refs=page.refs)
         if page.refs == 0:
             del self._pages[handle]
             self.bytes_resident -= page.nbytes
@@ -166,6 +177,8 @@ class HostPageStore:
         refcount transfers back to the device allocator verbatim."""
         page = self._pages.pop(handle)
         self.bytes_resident -= page.nbytes
+        if self.journal is not None:
+            self.journal.emit("host_pop", hid=handle.hid, refs=page.refs)
         return page.stores, page.refs
 
     def check_balanced(self) -> bool:

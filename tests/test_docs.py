@@ -18,7 +18,7 @@ REPO = Path(__file__).resolve().parent.parent
 DOCS = REPO / "docs"
 
 REQUIRED_PAGES = ["architecture.md", "serving.md", "memory_accounting.md",
-                  "tiered_memory.md"]
+                  "tiered_memory.md", "observability.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 
@@ -62,3 +62,13 @@ def test_every_serving_export_documented():
     missing = [sym for sym in serving.__all__ if sym not in text]
     assert not missing, (
         f"docs/serving.md does not mention public serving symbols: {missing}")
+
+
+def test_every_obs_export_documented():
+    import repro.serving.obs as obs
+
+    text = (DOCS / "observability.md").read_text()
+    missing = [sym for sym in obs.__all__ if sym not in text]
+    assert not missing, (
+        f"docs/observability.md does not mention public obs symbols: "
+        f"{missing}")

@@ -1,0 +1,439 @@
+"""Observability layer: registry/trace units + the engine acceptance run.
+
+Unit layer (no engine): nearest-rank ``percentile``, the labeled
+Counter/Gauge/Histogram registry with its Prometheus text exposition and
+its consistency guards, the Chrome-trace recorder's event grammar, and the
+``EngineMetrics`` façade — lazy throughput clock (``setup_s`` /
+``compile_s`` split), phase timers, and the byte-compatibility golden list
+of every pre-observability ``to_dict()`` key.
+
+Engine layer (one module-scoped swap run, the exact workload
+``tests/test_swap.py`` proves forces demote→promote round trips AND
+promote stalls): with ``ObsConfig(trace=True, journal=True)``,
+
+  * tokens are identical to the obs-off run — recording never perturbs
+    the model path;
+  * the trace is Perfetto-loadable JSON containing one COMPLETE request
+    span (B/E ``request`` around ``queued`` B/E, a ``prefill`` X and >= 1
+    ``decode`` X on the request's track) plus ``demote``/``promote``
+    engine instants and a ``promote_stall`` request instant;
+  * the journal replays CLEAN through ``replay_check``;
+  * ``compile_s`` captured the first-trace compilation, phase timers
+    populated, and the Prometheus snapshot exposes the families;
+  * a default-constructed engine holds NO recording state at all;
+  * the AOT roofline of the live decode fn reports nonzero FLOPs/bytes
+    and ``achieved_vs_predicted`` scores a measured phase time against it.
+"""
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, ObsConfig, Request, SwapConfig,
+)
+from repro.serving.metrics import PHASES, EngineMetrics
+from repro.serving.obs import (
+    ENGINE_TID, EventJournal, MetricsRegistry, TraceRecorder, percentile,
+    replay_check,
+)
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    xs = list(range(1, 101))          # 1..100
+    assert percentile(xs, 0.50) == 50.0
+    assert percentile(xs, 0.99) == 99.0
+    assert percentile(xs, 1.0) == 100.0
+    assert percentile(xs, 0.0) == 1.0
+    assert percentile([], 0.5) == 0.0
+    assert percentile([7.0], 0.99) == 7.0
+
+
+def test_registry_counter_gauge_histogram():
+    r = MetricsRegistry()
+    c = r.counter("c_total", "a counter")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = r.gauge("g", "a gauge")
+    g.set(4)
+    g.set(2)
+    assert g.value == 2.0
+    h = r.histogram("h_seconds", "a histogram")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.count == 4 and h.total == 10.0
+    assert h.percentile(0.5) == 2.0
+
+
+def test_registry_labels_memoized_and_guarded():
+    r = MetricsRegistry()
+    a = r.counter("tok_total", "by tier", tier=4)
+    b = r.counter("tok_total", "by tier", tier=4)
+    assert a is b                        # same label values -> same instrument
+    c = r.counter("tok_total", "by tier", tier=8)
+    assert c is not a
+    # registering the same family name as a different kind is an error
+    with pytest.raises(TypeError):
+        r.gauge("tok_total")
+    # ...as is changing the label keys
+    with pytest.raises(ValueError):
+        r.counter("tok_total", "by tier", shard=0)
+    # get() never creates
+    assert r.get("tok_total", tier=8) is c
+    assert r.get("tok_total", tier=16) is None
+    assert r.get("nope") is None
+
+
+def test_registry_prometheus_exposition():
+    r = MetricsRegistry()
+    r.counter("lex_tokens_total", "tokens", tier=4).inc(7)
+    r.gauge("lex_occupancy", "slots").set(3)
+    h = r.histogram("lex_latency_seconds", "latency")
+    for v in (0.25, 0.5, 0.75, 1.0):
+        h.observe(v)
+    text = r.to_prometheus()
+    assert "# HELP lex_tokens_total tokens" in text
+    assert "# TYPE lex_tokens_total counter" in text
+    assert 'lex_tokens_total{tier="4"} 7' in text
+    assert "# TYPE lex_occupancy gauge" in text
+    assert "lex_occupancy 3" in text
+    # histograms export as summaries: quantile rows + _sum/_count
+    assert "# TYPE lex_latency_seconds summary" in text
+    assert 'lex_latency_seconds{quantile="0.5"} 0.5' in text
+    assert "lex_latency_seconds_sum 2.5" in text
+    assert "lex_latency_seconds_count 4" in text
+    # a flat snapshot carries the same values
+    snap = r.snapshot()
+    assert snap['lex_tokens_total{tier="4"}'] == 7.0
+    assert snap["lex_latency_seconds_count"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+
+
+def test_trace_recorder_event_grammar():
+    tr = TraceRecorder()
+    tr.declare_thread(1, "req 0")
+    tr.declare_thread(1, "req 0 again")       # once-only: ignored
+    tr.begin("request", 1, rid=0)
+    t0 = time.perf_counter()
+    t1 = t0 + 0.001
+    tr.complete("prefill", 1, t0, t1, bucket=16)
+    tr.instant("demote", ENGINE_TID, page=3)
+    tr.end("request", 1)
+
+    doc = tr.to_chrome_trace()
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    # metadata: process name + engine thread + ONE req-0 thread row
+    names = [e["args"]["name"] for e in evs if e["ph"] == "M"]
+    assert "lexico-serving" in names and "engine" in names
+    assert names.count("req 0") == 1 and "req 0 again" not in names
+    by_ph = {ph: [e for e in evs if e["ph"] == ph]
+             for ph in ("B", "E", "X", "i")}
+    assert [e["name"] for e in by_ph["B"]] == ["request"]
+    assert [e["name"] for e in by_ph["E"]] == ["request"]
+    (x,) = by_ph["X"]
+    assert x["name"] == "prefill" and x["args"]["bucket"] == 16
+    assert x["dur"] == pytest.approx(1000.0, rel=0.01)   # 1ms in us
+    (i,) = by_ph["i"]
+    assert i["name"] == "demote" and i["tid"] == ENGINE_TID and i["s"] == "t"
+    # every timestamped event is non-negative us from recorder birth
+    assert all(e["ts"] >= 0 for e in evs if "ts" in e)
+    assert json.loads(json.dumps(doc)) == doc            # JSON-serialisable
+    assert len(tr) == len(evs)
+
+
+# ---------------------------------------------------------------------------
+# EngineMetrics: lazy clock, phases, byte-compatible to_dict
+# ---------------------------------------------------------------------------
+
+# every key the pre-observability EngineMetrics.to_dict() emitted, in
+# order; regenerating this list from the new code would defeat the point
+LEGACY_TO_DICT_KEYS = [
+    "elapsed_s", "steps", "prefills", "requests_completed",
+    "tokens_generated", "prompt_tokens_processed", "tokens_per_s",
+    "decode_tokens_per_step", "slot_occupancy_mean", "slot_occupancy_peak",
+    "kv_bytes_in_flight_mean", "kv_bytes_in_flight_peak",
+    "kv_bytes_resident_mean", "kv_bytes_resident_peak", "pages_in_use_peak",
+    "queue_latency_s_mean", "queue_latency_s_max",
+    "prefill_tokens_compressed", "prefill_tokens_skipped", "prefix_hits",
+    "prefix_misses", "shared_page_hit_rate", "pages_aliased", "pages_copied",
+    "bytes_deduped", "shared_pages_peak", "pages_demoted", "pages_promoted",
+    "promote_stall_steps", "host_bytes_resident_mean",
+    "host_bytes_resident_peak",
+]
+
+
+def test_to_dict_preserves_every_legacy_key_in_order():
+    md = EngineMetrics().to_dict()
+    assert list(md)[:len(LEGACY_TO_DICT_KEYS)] == LEGACY_TO_DICT_KEYS
+    # and the observability additions ride behind them
+    for k in ("queue_latency_s_p50", "queue_latency_s_p99", "phase_times",
+              "admission_rejections", "setup_s", "compile_s",
+              "tokens_per_s_ex_compile"):
+        assert k in md, k
+
+
+def test_throughput_clock_starts_lazily():
+    m = EngineMetrics()
+    assert m.started_at is None
+    assert m.elapsed_s == 0.0 and m.setup_s == 0.0
+    time.sleep(0.05)                       # "engine construction / tracing"
+    m.sample_step(occupancy=1, kv_bytes_in_flight=10)
+    assert m.started_at is not None
+    assert m.setup_s >= 0.05               # the gap landed in setup_s...
+    assert m.elapsed_s < 0.05              # ...not in the throughput clock
+    started = m.started_at
+    m.record_admission(0.001)              # idempotent across both starters
+    assert m.started_at == started
+
+
+def test_compile_time_is_its_own_metric():
+    m = EngineMetrics()
+    m.start_clock()
+    m.record_compile(1.5)
+    m.record_compile(0.5)
+    m.record_token(tier=8)
+    md = m.to_dict()
+    assert md["compile_s"] == 2.0
+    # ex-compile throughput deducts it from the denominator
+    assert md["tokens_per_s_ex_compile"] >= md["tokens_per_s"]
+
+
+def test_phase_timers_summarize_with_percentiles():
+    m = EngineMetrics()
+    for i in range(100):
+        m.record_phase("decode_dispatch", (i + 1) / 1000.0)
+    m.record_phase("admit", 0.002)
+    pt = m.to_dict()["phase_times"]
+    dd = pt["decode_dispatch"]
+    assert dd["count"] == 100
+    assert dd["p50"] == pytest.approx(0.050)
+    assert dd["p99"] == pytest.approx(0.099)
+    assert dd["max"] == pytest.approx(0.100)
+    assert "p999" not in dd                # needs >= 1000 samples
+    for _ in range(1000):
+        m.record_phase("host_sync", 0.001)
+    assert "p999" in m.to_dict()["phase_times"]["host_sync"]
+    assert set(pt) <= set(PHASES) | {"admit", "decode_dispatch"}
+    # the same samples are visible through the registry family
+    h = m.registry.get("lexico_step_phase_seconds", phase="admit")
+    assert h is not None and h.count == 1
+
+
+def test_queue_latency_percentiles_in_to_dict():
+    m = EngineMetrics()
+    for i in range(200):
+        m.record_admission((i + 1) / 1000.0)
+    md = m.to_dict()
+    assert md["queue_latency_s_p50"] == pytest.approx(0.100)
+    assert md["queue_latency_s_p99"] == pytest.approx(0.198)
+    assert "queue_latency_s_p999" not in md
+    for _ in range(800):
+        m.record_admission(0.001)
+    assert "queue_latency_s_p999" in m.to_dict()
+
+
+def test_tier_labeled_families():
+    m = EngineMetrics()
+    m.start_clock()
+    for tier in (2, 8, 8):
+        m.record_token(tier)
+    m.record_completion(tier=8)
+    assert m.tokens_generated == 3
+    assert m.registry.get("lexico_tier_tokens_generated_total",
+                          tier=8).value == 2
+    assert m.registry.get("lexico_tier_tokens_generated_total",
+                          tier=2).value == 1
+    text = m.to_prometheus()
+    assert 'lexico_tier_tokens_generated_total{tier="8"} 2' in text
+    assert 'lexico_tier_requests_completed_total{tier="8"} 1' in text
+
+
+# ---------------------------------------------------------------------------
+# engine acceptance: the swap workload, traced + journaled
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _requests(rng):
+    # the tests/test_swap.py workload: oversubscribes the 5-usable-page
+    # pool, proven there to force demotions, promotions AND promote stalls
+    spec = [(9, 3, 2), (30, 4, 8), (12, 2, 4), (26, 3, 6), (8, 2, 2)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, tier=tier)
+            for i, (pl, mn, tier) in enumerate(spec)]
+
+
+def _run(params, bank, reqs, obs):
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, n_pages=6, swap=SwapConfig(), obs=obs))
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    done = eng.run()
+    return {rid: done[rid].generated_tokens for rid in done}, eng
+
+
+@pytest.fixture(scope="module")
+def traced_run(served):
+    params, bank = served
+    reqs = _requests(np.random.default_rng(7))
+    toks_off, eng_off = _run(params, bank, reqs, obs=None)
+    toks_on, eng_on = _run(params, bank, reqs,
+                           obs=ObsConfig(trace=True, journal=True))
+    return toks_off, eng_off, toks_on, eng_on
+
+
+def test_observed_run_emits_identical_tokens(traced_run):
+    toks_off, _, toks_on, eng_on = traced_run
+    assert toks_on == toks_off
+    assert eng_on.metrics.pages_demoted > 0
+    assert eng_on.metrics.pages_promoted > 0
+    assert eng_on.metrics.promote_stall_steps > 0
+
+
+def test_disabled_obs_holds_no_recording_state(traced_run):
+    _, eng_off, _, _ = traced_run
+    assert eng_off.tracer is None
+    assert eng_off.journal is None
+    assert eng_off.allocator.journal is None
+    assert eng_off.swap.host.journal is None
+    with pytest.raises(RuntimeError):
+        eng_off.save_trace("/tmp/never.json")
+    with pytest.raises(RuntimeError):
+        eng_off.save_journal("/tmp/never.jsonl")
+
+
+def test_trace_has_complete_request_spans(traced_run, tmp_path):
+    """The acceptance artifact: a Perfetto-loadable trace whose request
+    track carries the full lifecycle, with the swap instants present."""
+    _, _, _, eng = traced_run
+    path = tmp_path / "trace.json"
+    eng.save_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    assert all(isinstance(e.get("pid"), int) for e in evs)
+
+    # rid 1 (prompt 30, the long request) rode through the swap pressure
+    tid = 1 + 1
+    on_track = [e for e in evs if e["tid"] == tid]
+    names = [(e["name"], e["ph"]) for e in on_track]
+    assert ("request", "B") in names and ("request", "E") in names
+    assert ("queued", "B") in names and ("queued", "E") in names
+    prefills = [e for e in on_track
+                if e["name"] == "prefill" and e["ph"] == "X"]
+    assert len(prefills) == 1 and prefills[0]["dur"] > 0
+    assert prefills[0]["args"]["bucket"] == 16       # 30-token prompt,
+    # largest power-of-two bucket <= prompt (the rest streams via decode)
+    decodes = [e for e in on_track
+               if e["name"] == "decode" and e["ph"] == "X"]
+    assert len(decodes) >= 1
+    # the request span opens before queued ends and closes after the last
+    # decode — a well-nested lifecycle
+    t_open = next(e["ts"] for e in on_track
+                  if e["name"] == "request" and e["ph"] == "B")
+    t_close = next(e["ts"] for e in on_track
+                   if e["name"] == "request" and e["ph"] == "E")
+    assert t_open <= min(e["ts"] for e in on_track if "ts" in e)
+    assert t_close >= max(e["ts"] + e.get("dur", 0) for e in decodes)
+
+    # swap lifecycle instants: demote/promote on the engine track, the
+    # stall on the stalled request's own track
+    engine_instants = {e["name"] for e in evs
+                       if e["ph"] == "i" and e["tid"] == ENGINE_TID}
+    assert "demote" in engine_instants and "promote" in engine_instants
+    stalls = [e for e in evs if e["name"] == "promote_stall"]
+    assert stalls and all(e["tid"] > ENGINE_TID for e in stalls)
+
+    # every engine phase landed as a complete event on the engine track
+    phase_names = {e["name"] for e in evs
+                   if e["ph"] == "X" and e["tid"] == ENGINE_TID}
+    assert phase_names >= set(PHASES)
+
+    # and every request got a named track
+    thread_rows = {e["args"]["name"] for e in evs
+                   if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"engine", "req 0", "req 1", "req 2", "req 3", "req 4"} <= thread_rows
+
+
+def test_journal_replays_clean_and_round_trips(traced_run, tmp_path):
+    _, _, _, eng = traced_run
+    violations = replay_check(eng.journal.events)
+    assert violations == [], [str(v) for v in violations]
+    evs = {e["ev"] for e in eng.journal.events}
+    assert {"submit", "admit", "retire", "stall", "page_alloc",
+            "page_decref", "page_demote", "page_promote", "host_put",
+            "host_pop"} <= evs
+    # save/load round trip preserves the events bit-for-bit
+    path = tmp_path / "journal.jsonl"
+    eng.save_journal(str(path))
+    loaded = EventJournal.load(str(path))
+    assert loaded == eng.journal.events
+    assert replay_check(loaded) == []
+
+
+def test_observed_metrics_capture_compile_and_phases(traced_run):
+    _, _, _, eng = traced_run
+    md = eng.metrics.to_dict()
+    assert md["compile_s"] > 0.0           # first-trace compilation captured
+    assert md["setup_s"] > 0.0
+    assert md["tokens_per_s_ex_compile"] > md["tokens_per_s"]
+    pt = md["phase_times"]
+    assert set(pt) == set(PHASES)          # swap engine runs all six phases
+    for name in PHASES:
+        assert pt[name]["count"] > 0 and pt[name]["p99"] >= pt[name]["p50"]
+    assert md["queue_latency_s_p99"] >= md["queue_latency_s_p50"] >= 0.0
+    text = eng.metrics.to_prometheus()
+    for family in ("lexico_steps_total", "lexico_tokens_generated_total",
+                   "lexico_pages_demoted_total",
+                   'lexico_kv_bytes_resident{tier="host"}',
+                   "lexico_step_phase_seconds"):
+        assert family in text, family
+
+
+def test_decode_roofline_from_live_engine(traced_run):
+    from repro.roofline.analysis import achieved_vs_predicted
+    from repro.serving.obs import engine_decode_roofline
+
+    _, _, _, eng = traced_run
+    report = engine_decode_roofline(eng)
+    assert report.flops_per_device > 0
+    assert report.bytes_per_device > 0
+    assert report.bottleneck in ("compute", "memory", "collective")
+
+    p50 = percentile(eng.metrics.phase_times["decode_dispatch"], 0.5)
+    ap = achieved_vs_predicted(report, p50)
+    assert ap["achieved_s"] == pytest.approx(p50)
+    assert ap["predicted_s"] > 0
+    assert ap["roofline_fraction"] == pytest.approx(
+        ap["predicted_s"] / ap["achieved_s"])
+    assert ap["achieved_flops_per_s"] > 0

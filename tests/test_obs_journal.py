@@ -1,0 +1,194 @@
+"""Journal replay checker vs the real allocator: clean traces stay clean,
+injected corruption is caught.
+
+The emitting side is the production one — a ``PageAllocator`` and a
+``HostPageStore`` with an ``EventJournal`` attached journal every alloc /
+incref / decref / demote→put / pop→promote they actually perform.  A
+randomized driver (the same op mix as ``tests/test_slot_lifecycle_fuzz``,
+shrunk) produces journals that MUST replay clean; the negative tests then
+tamper with those real journals — deleting, duplicating or rewriting
+single events — and assert :func:`replay_check` pins each corruption:
+
+  * duplicated ``page_decref``  -> ``double-free``
+  * deleted   ``page_decref``  -> ``device-leak`` at end of trace
+  * deleted   ``host_pop``     -> ``host-leak`` + ``tier-transfer-mismatch``
+                                  + ``promote-onto-live-page``-free replay
+  * rewritten transfer refcount -> ``refcount-divergence`` +
+                                  ``tier-transfer-mismatch``
+  * ``page_alloc`` of page 0    -> ``null-page-alloc``
+  * use-after-free incref       -> ``incref-after-free``
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.serving import HostPageStore, PageAllocator
+from repro.serving.obs import EventJournal, replay_check
+
+
+def _journaled_pair(n_pages=8):
+    alloc = PageAllocator(n_pages, page_size=4)
+    host = HostPageStore()
+    journal = EventJournal()
+    alloc.journal = journal
+    host.journal = journal
+    return alloc, host, journal
+
+
+def _stores(rng):
+    return tuple(rng.normal(size=(2, 2, 4, 4)).astype(np.float32)
+                 for _ in range(4))
+
+
+def _run_journaled_trace(seed: int):
+    """Random alloc/incref/decref/demote/promote churn against the real
+    allocator + host store, fully journaled and fully drained."""
+    rng = np.random.default_rng(seed)
+    alloc, host, journal = _journaled_pair(n_pages=int(rng.integers(4, 10)))
+    live = {}                                 # device page -> refcount
+    swapped = {}                              # handle -> refcount
+    for _ in range(int(rng.integers(40, 120))):
+        op = rng.random()
+        if op < 0.35 and alloc.n_free > 0:
+            (p,) = alloc.alloc(1)
+            live[p] = 1
+        elif op < 0.50 and live:
+            p = int(rng.choice(list(live)))
+            alloc.incref(p)
+            live[p] += 1
+        elif op < 0.75 and live:
+            p = int(rng.choice(list(live)))
+            alloc.decref(p)
+            live[p] -= 1
+            if live[p] == 0:
+                del live[p]
+        elif op < 0.88 and live:
+            p = int(rng.choice(list(live)))
+            refs = alloc.demote(p)
+            assert refs == live.pop(p)
+            h = host.put(_stores(rng), refs)
+            swapped[h] = refs
+        elif swapped and alloc.n_free > 0:
+            h = rng.permutation(len(swapped))[0]
+            h = list(swapped)[int(h)]
+            _, refs = host.pop(h)
+            assert refs == swapped.pop(h)
+            live[alloc.promote(refs)] = refs
+    # drain: release the device tier first (guaranteeing free pages), then
+    # promote every swapped page home and release it too
+    for p, refs in list(live.items()):
+        for _ in range(refs):
+            alloc.decref(p)
+    for h in list(swapped):
+        _, refs = host.pop(h)
+        page = alloc.promote(refs)
+        for _ in range(refs):
+            alloc.decref(page)
+        del swapped[h]
+    assert alloc.check_balanced() and host.check_balanced()
+    return journal
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_real_traces_replay_clean(seed):
+    journal = _run_journaled_trace(seed)
+    assert len(journal) > 0
+    assert replay_check(journal.events) == []
+
+
+def _clean_events(seed=3):
+    """A clean journal guaranteed to contain a demote→promote round trip."""
+    for s in range(seed, seed + 50):
+        evs = _run_journaled_trace(s).events
+        if any(e["ev"] == "host_pop" for e in evs):
+            return copy.deepcopy(evs)
+    raise AssertionError("no trace with a promote in 50 seeds")
+
+
+def _kinds(violations):
+    return {v.kind for v in violations}
+
+
+def test_duplicated_decref_is_double_free():
+    evs = _clean_events()
+    # re-append the decref that freed a page (refs hit 0)
+    freeing = next(e for e in evs
+                   if e["ev"] == "page_decref" and e["refs"] == 0)
+    evs.insert(evs.index(freeing) + 1, dict(freeing))
+    v = replay_check(evs)
+    assert "double-free" in _kinds(v)
+    offender = next(x for x in v if x.kind == "double-free")
+    assert f"page {freeing['page']}" in offender.detail
+
+
+def test_dropped_decref_is_a_leak():
+    evs = _clean_events()
+    # drop the LAST freeing decref: its page is never re-allocated after,
+    # so the only detectable symptom is the end-of-trace leak (dropping an
+    # earlier one shows up as double-alloc when the id is recycled)
+    freeing = [e for e in evs
+               if e["ev"] == "page_decref" and e["refs"] == 0][-1]
+    evs.remove(freeing)
+    v = replay_check(evs)
+    assert "device-leak" in _kinds(v)
+    leak = next(x for x in v if x.kind == "device-leak")
+    assert leak.seq == -1                     # end-of-trace check
+    assert f"page {freeing['page']}" in leak.detail
+
+
+def test_dropped_host_pop_breaks_tier_transfer_balance():
+    evs = _clean_events()
+    pop = next(e for e in evs if e["ev"] == "host_pop")
+    evs.remove(pop)
+    kinds = _kinds(replay_check(evs))
+    # the pop's handle now leaks on the host tier AND the promote multiset
+    # no longer matches the pops
+    assert "host-leak" in kinds
+    assert "tier-transfer-mismatch" in kinds
+
+
+def test_tampered_transfer_refcount_diverges():
+    evs = _clean_events()
+    demote = next(e for e in evs if e["ev"] == "page_demote")
+    demote["refs"] += 1                       # journal lies about the count
+    kinds = _kinds(replay_check(evs))
+    assert "refcount-divergence" in kinds
+    assert "tier-transfer-mismatch" in kinds  # demote vs host_put refs
+
+
+def test_null_page_alloc_flagged():
+    v = replay_check([{"seq": 0, "ev": "page_alloc", "page": 0}])
+    assert _kinds(v) == {"null-page-alloc"}
+
+
+def test_use_after_free_incref_flagged():
+    evs = [
+        {"seq": 0, "ev": "page_alloc", "page": 3},
+        {"seq": 1, "ev": "page_decref", "page": 3, "refs": 0},
+        {"seq": 2, "ev": "page_incref", "page": 3, "refs": 1},
+    ]
+    v = replay_check(evs)
+    assert _kinds(v) == {"incref-after-free"}
+    assert v[0].seq == 2
+
+
+def test_promote_onto_live_page_flagged():
+    evs = [
+        {"seq": 0, "ev": "page_alloc", "page": 2},
+        {"seq": 1, "ev": "page_promote", "page": 2, "refs": 1},
+    ]
+    kinds = _kinds(replay_check(evs))
+    assert "promote-onto-live-page" in kinds
+
+
+def test_allocator_emits_nothing_when_journal_absent():
+    alloc = PageAllocator(4, page_size=4)
+    host = HostPageStore()
+    assert alloc.journal is None and host.journal is None
+    (p,) = alloc.alloc(1)
+    refs = alloc.demote(p)
+    h = host.put(tuple(np.zeros((1,)) for _ in range(4)), refs)
+    _, back = host.pop(h)
+    alloc.decref(alloc.promote(back))
+    assert alloc.check_balanced() and host.check_balanced()
