@@ -33,6 +33,12 @@ p50/p99, the AOT roofline of the compiled decode step (achieved vs
 predicted bytes/FLOPs), journal replay, and ``--trace``/``--journal``/
 ``--metrics-snapshot`` artifact outputs.
 
+A fifth scenario (``--scenario fused-kernel``) runs the paged engine with
+the fused sparse-attention kernel path off vs on: token identity, per-mode
+throughput/compile counts/decode rooflines, and the analytic kernel-model
+comparison (gather vs fused HBM bytes per decode step — fused must predict
+strictly fewer).
+
     PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario all]
 """
 from __future__ import annotations
@@ -301,6 +307,74 @@ def run_obs_bench(*, n_requests: int = 10, n_slots: int = 4,
     }
 
 
+def run_fused_kernel_bench(*, n_requests: int = 12, n_slots: int = 4,
+                           t_max: int = 96, seed: int = 0,
+                           page_size: int = 8) -> dict:
+    """Fused paged sparse-attention scenario: the mixed workload through the
+    paged engine with ``fused_attention`` off vs on.
+
+    Reports (a) token identity between the two engines (the fused path is a
+    reread of the same cache, not an approximation), (b) throughput and
+    compile counts per mode (decode must stay one compile either way),
+    (c) each mode's AOT decode roofline with achieved (phase p50) vs
+    predicted bytes/FLOPs, and (d) the *analytic* kernel-model comparison
+    (``repro.roofline.kernel_model``) — the HLO cost model prices whatever
+    the backend lowered (interpret-mode Pallas on CPU), so the first-
+    principles model is the number that transfers to TPU: the fused path
+    must predict strictly fewer HBM bytes per decode step."""
+    from repro.roofline.kernel_model import (
+        PagedAttnShape, compare_paged_attention,
+    )
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+
+    def one_run(fused):
+        eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                         layout="paged", page_size=page_size,
+                         fused_attention=fused))
+        _submit_workload(eng, cfg, n_requests=n_requests, seed=seed)
+        done = eng.run()
+        return eng, {rid: done[rid].generated_tokens for rid in done}
+
+    out = {}
+    tokens = {}
+    for mode, fused in (("gather", False), ("fused", True)):
+        eng, tokens[mode] = one_run(fused)
+        md = eng.metrics.to_dict()
+        report = engine_decode_roofline(eng)
+        achieved_s = (md["phase_times"]["decode_dispatch"]["p50"]
+                      + md["phase_times"]["host_sync"]["p50"])
+        out[mode] = {
+            "tokens_per_s": md["tokens_per_s"],
+            "tokens_per_s_ex_compile": md["tokens_per_s_ex_compile"],
+            "compile_counts": eng.compile_counts,
+            "roofline": report.to_json(),
+            "achieved_vs_predicted": achieved_vs_predicted(report,
+                                                           achieved_s),
+        }
+
+    # analytic per-decode-step model at the live engine shapes (per layer)
+    shape = PagedAttnShape(
+        batch=n_slots, kv_heads=cfg.cache_kv_heads,
+        q_per_kv=cfg.num_heads // cfg.cache_kv_heads,
+        head_dim=cfg.cached_vector_dim, n_dict=N, s=s_max,
+        pages_per_row=eng._max_pages, page_size=page_size)
+    model = compare_paged_attention(shape)
+    return {
+        "same_tokens": tokens["gather"] == tokens["fused"],
+        "gather": out["gather"],
+        "fused": out["fused"],
+        "kernel_model": model,
+        "fused_predicts_fewer_bytes": (
+            model["fused"]["total_bytes"] < model["gather"]["total_bytes"]),
+    }
+
+
 def run_layout_comparison(**kw) -> dict:
     """Same workload through both layouts + the memory/throughput deltas."""
     cont = run_serving_bench(layout="contiguous", **kw)
@@ -363,7 +437,8 @@ def main():
     ap.add_argument("--layout", choices=["contiguous", "paged", "both"],
                     default="both")
     ap.add_argument("--scenario",
-                    choices=["mix", "prefix", "swap", "obs", "both", "all"],
+                    choices=["mix", "prefix", "swap", "obs", "fused-kernel",
+                             "both", "all"],
                     default="mix",
                     help="mix: short/long layout comparison; prefix: many "
                          "clients sharing one system prompt (shared vs "
@@ -371,7 +446,10 @@ def main():
                          "pool with the host-memory tier (device/host peaks, "
                          "promote stalls); obs: tracing on-vs-off overhead, "
                          "phase p50/p99, decode roofline, journal replay; "
-                         "both: mix+prefix; all: everything")
+                         "fused-kernel: paged engine with fused sparse-"
+                         "attention off vs on (token identity, rooflines, "
+                         "analytic bytes model); both: mix+prefix; "
+                         "all: everything")
     ap.add_argument("--repeats", type=int, default=2,
                     help="obs scenario: runs per mode (overhead = best-of)")
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -399,6 +477,8 @@ def main():
         stats["swap"] = run_swap_bench(
             n_slots=args.n_slots, t_max=args.t_max, seed=args.seed,
             page_size=args.page_size)
+    if args.scenario in ("fused-kernel", "all"):
+        stats["fused_kernel"] = run_fused_kernel_bench(**kw)
     if args.scenario in ("obs", "all"):
         stats["obs"] = run_obs_bench(
             n_requests=args.n_requests, n_slots=args.n_slots,

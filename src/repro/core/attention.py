@@ -29,6 +29,7 @@ share one KV head.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -92,6 +93,70 @@ def compressed_values(probs: Array, vals: Array, idx: Array, D_v: Array, N: int)
     """Attention output contribution (B,KV,G,m) of the compressed tokens."""
     c = scatter_coeffs(probs, vals, idx, N)
     return jnp.einsum("bkgn,mn->bkgm", c, D_v.astype(jnp.float32))
+
+
+def fused_paged_decode_attention(
+    q: Array,                         # (B, KV, G, m) new-token queries
+    k_vals: Array, k_idx: Array,      # page pool (n_pages, KV, P, s)
+    v_vals: Array, v_idx: Array,
+    page_table: Array,                # (B, max_pages) int32
+    k_buf: Array, v_buf: Array,       # (B, KV, n_b, m) full-precision buffer
+    D_k: Array, D_v: Array,           # (m, N)
+    *,
+    t_c: Array,                       # int32 valid compressed tokens: scalar or (B,)
+    buf_len: Array,                   # int32 valid buffer entries: scalar or (B,)
+    N: int,
+    window: Optional[Array] = None,
+    block_t: Optional[int] = None,
+    force_kernel: bool = False,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Eq. 7 attention computed *directly* from the paged sparse codes.
+
+    The fused twin of ``paged_attend``'s gather-then-mask read: the
+    compressed half runs through ``repro.kernels.ops.paged_attention_op``
+    (Pallas kernel on TPU / forced interpret; gather-free-semantics jnp
+    oracle elsewhere), which walks the page tables and returns the online-
+    softmax carry ``(m, l, c)`` — dense K/V and the per-row gathered page
+    copy never materialise. This epilogue then folds the full-precision
+    recency buffer in as the final online-softmax block and decodes the
+    coefficient accumulator through ``D_v``, exactly the flash-decode
+    epilogue of :func:`decode_attention`. Returns (B, KV, G, m) float32.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    m = q.shape[-1]
+    scale = 1.0 / math.sqrt(m)
+    qf = q.astype(jnp.float32)
+    qd = jnp.einsum("bkgm,mn->bkgn", qf, D_k.astype(jnp.float32))
+    B = q.shape[0]
+    buf_lenb = per_batch(buf_len)
+    t_c_row = jnp.broadcast_to(jnp.asarray(t_c, jnp.int32).reshape(-1), (B,))
+    if window is not None:
+        length = t_c_row + jnp.broadcast_to(
+            jnp.asarray(buf_len, jnp.int32).reshape(-1), (B,))
+        min_pos = length - jnp.asarray(window, jnp.int32)
+    else:
+        min_pos = jnp.full((B,), -1, jnp.int32)
+
+    m_run, l_run, c_acc = kernel_ops.paged_attention_op(
+        qd, k_vals, k_idx, v_vals, v_idx, page_table, t_c_row, min_pos,
+        N=N, scale=scale, block_t=block_t, force_kernel=force_kernel,
+        interpret=interpret)
+
+    # --- recency buffer as the final online-softmax block ---
+    s_b = jnp.einsum("bkgm,bkrm->bkgr", qf, k_buf.astype(jnp.float32)) * scale
+    n_b = s_b.shape[-1]
+    s_b = jnp.where(jnp.arange(n_b)[None, None, None, :] < buf_lenb, s_b, NEG_INF)
+    m_new = jnp.maximum(m_run, jnp.max(s_b, axis=-1))
+    alpha = jnp.exp(m_run - m_new)
+    p_b = jnp.exp(s_b - m_new[..., None])
+    l_fin = l_run * alpha + jnp.sum(p_b, axis=-1)
+    out_b = jnp.einsum("bkgr,bkrm->bkgm", p_b, v_buf.astype(jnp.float32))
+    out_c = jnp.einsum("bkgn,mn->bkgm", c_acc * alpha[..., None],
+                       D_v.astype(jnp.float32))
+    # empty slots (t_c == buf_len == 0) have zero mass; keep them finite
+    return (out_c + out_b) / jnp.maximum(l_fin, 1e-30)[..., None]
 
 
 def decode_attention(

@@ -497,12 +497,31 @@ def paged_attend(
     N: int,
     chunk: Optional[int] = None,
     window=None,
+    fused: bool = False,
+    fused_force_kernel: bool = False,
+    fused_block_t: Optional[int] = None,
 ) -> Array:
     """Eq. 7 attention over the paged cache: gather each row's pages into a
     per-row contiguous view, then run the same masked softmax — positions
     beyond ``t_c`` (including anything a null table entry resolved to) carry
-    NEG_INF logits, so garbage in gathered padding can't contribute."""
-    from repro.core.attention import gather_pages
+    NEG_INF logits, so garbage in gathered padding can't contribute.
+
+    ``fused=True`` skips the gather entirely: the compressed half runs
+    through :func:`repro.core.attention.fused_paged_decode_attention`, whose
+    Pallas kernel walks the page tables in-place (dense K/V and the gathered
+    page copy never hit HBM). Same math, online-softmax accumulation order —
+    tokens identical in practice, logits equal to fp32 tolerance.
+    ``fused_force_kernel=True`` additionally forces the Pallas kernel (in
+    interpret mode off-TPU) instead of the jnp oracle — parity tests and
+    TPU-shaped benchmarking."""
+    from repro.core.attention import fused_paged_decode_attention, gather_pages
+    if fused:
+        return fused_paged_decode_attention(
+            q,
+            cache.k_vals, cache.k_idx, cache.v_vals, cache.v_idx,
+            cache.page_table, cache.k_buf, cache.v_buf, D_k, D_v,
+            t_c=cache.t_c, buf_len=cache.buf_len, N=N, window=window,
+            block_t=fused_block_t, force_kernel=fused_force_kernel)
     return decode_attention(
         q,
         gather_pages(cache.k_vals, cache.page_table),

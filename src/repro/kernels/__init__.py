@@ -4,4 +4,7 @@
 tiling; ops.py the backend-dispatching jit wrappers; ref.py the pure-jnp
 oracles every kernel is tested against (shape/dtype sweeps + hypothesis).
 """
-from repro.kernels.ops import batched_scores, batched_values, omp_select_op, scores_op, values_op
+from repro.kernels.ops import (
+    batched_scores, batched_values, omp_select_op, paged_attention_op,
+    resolve_dispatch, scores_op, values_op,
+)

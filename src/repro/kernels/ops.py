@@ -5,16 +5,29 @@ they execute in interpret mode or fall back to the pure-jnp oracle — the
 wrappers pick per-backend so the serving stack can call one function
 everywhere. Batched variants vmap the single-instance kernels over
 (B, KV, G) the same way core.attention composes the jnp forms.
+
+Dispatch contract (shared by every op, pinned in
+``tests/test_paged_sparse_attn.py::test_dispatch_table``):
+
+    use_kernel = on_tpu OR force_kernel OR interpret is True
+    interpret  = (not on_tpu) if interpret is None else interpret
+
+i.e. ``force_kernel=True`` with ``interpret=None`` off-TPU runs the kernel
+in interpret mode (it must never silently fall back to the oracle), and an
+explicit ``interpret=True`` is itself a request for the kernel. The oracle
+path is taken only when nothing asked for the kernel and no TPU is present.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.omp_corr import omp_corr_argmax
+from repro.kernels.paged_sparse_attn import paged_sparse_attention
 from repro.kernels.sparse_scores import sparse_scores
 from repro.kernels.sparse_values import sparse_values
 
@@ -25,29 +38,72 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_dispatch(force_kernel: bool,
+                     interpret: Optional[bool]) -> Tuple[bool, bool]:
+    """The one dispatch decision every op shares.
+
+    Returns ``(use_kernel, interpret_mode)``: whether to run the Pallas
+    kernel at all, and — when running it — whether in interpret mode.
+    ``interpret=None`` means "pick per backend" (native on TPU, interpret
+    elsewhere); an explicit ``interpret=True`` opts into the kernel even
+    without ``force_kernel``.
+    """
+    on_tpu = _on_tpu()
+    use_kernel = on_tpu or force_kernel or interpret is True
+    interp = (not on_tpu) if interpret is None else bool(interpret)
+    return use_kernel, interp
+
+
 def scores_op(qd: Array, vals: Array, idx: Array, *, force_kernel: bool = False,
               interpret: bool | None = None) -> Array:
     """(N,), (T,s), (T,s) -> (T,) — kernel on TPU, oracle elsewhere."""
-    if _on_tpu() or force_kernel:
-        return sparse_scores(qd, vals, idx,
-                             interpret=(not _on_tpu()) if interpret is None else interpret)
+    use_kernel, interp = resolve_dispatch(force_kernel, interpret)
+    if use_kernel:
+        return sparse_scores(qd, vals, idx, interpret=interp)
     return ref.sparse_scores_ref(qd, vals, idx)
 
 
 def values_op(probs: Array, vals: Array, idx: Array, *, N: int,
               force_kernel: bool = False, interpret: bool | None = None) -> Array:
-    if _on_tpu() or force_kernel:
-        return sparse_values(probs, vals, idx, N=N,
-                             interpret=(not _on_tpu()) if interpret is None else interpret)
+    use_kernel, interp = resolve_dispatch(force_kernel, interpret)
+    if use_kernel:
+        return sparse_values(probs, vals, idx, N=N, interpret=interp)
     return ref.sparse_values_ref(probs, vals, idx, N)
 
 
 def omp_select_op(residual: Array, D: Array, selected: Array, *,
                   force_kernel: bool = False, interpret: bool | None = None):
-    if _on_tpu() or force_kernel:
-        return omp_corr_argmax(residual, D, selected,
-                               interpret=(not _on_tpu()) if interpret is None else interpret)
+    use_kernel, interp = resolve_dispatch(force_kernel, interpret)
+    if use_kernel:
+        return omp_corr_argmax(residual, D, selected, interpret=interp)
     return ref.omp_corr_ref(D, residual, selected)
+
+
+def paged_attention_op(
+    qd: Array,                                  # (B, KV, G, N)
+    k_vals: Array, k_idx: Array,                # (n_pages, KV, P, s)
+    v_vals: Array, v_idx: Array,
+    page_table: Array,                          # (B, max_pages) int32
+    t_c: Array, min_pos: Array,                 # (B,) int32
+    *,
+    N: int,
+    scale: float,
+    block_t: Optional[int] = None,
+    force_kernel: bool = False,
+    interpret: bool | None = None,
+) -> Tuple[Array, Array, Array]:
+    """Fused paged sparse-attention carry ``(m, l, c)`` — the kernel walks
+    the page tables directly; the oracle gathers-then-masks. Both return
+    identical carries (to fp32 accumulation-order tolerance), so callers
+    merge the recency buffer the same way on every backend."""
+    use_kernel, interp = resolve_dispatch(force_kernel, interpret)
+    if use_kernel:
+        return paged_sparse_attention(
+            qd, k_vals, k_idx, v_vals, v_idx, page_table, t_c, min_pos,
+            N=N, scale=scale, block_t=block_t, interpret=interp)
+    return ref.paged_attention_ref(
+        qd, k_vals, k_idx, v_vals, v_idx, page_table, t_c, min_pos,
+        N=N, scale=scale)
 
 
 def batched_scores(qd: Array, vals: Array, idx: Array, **kw) -> Array:

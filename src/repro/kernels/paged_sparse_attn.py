@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: fused paged sparse-attention over the compressed pool.
+
+The decode hot loop computed end to end from packed ``(idx, val)`` codes: the
+kernel walks each slot's page table, streams page-sized tiles of the four
+sparse stores HBM→VMEM, expands attention scores against the dictionary
+projection ``qd = q @ D_k`` (the gather-dot of ``sparse_scores``), folds them
+through an online softmax, and scatter-accumulates the probabilities into
+dictionary-coefficient space (the segment-adds of ``sparse_values``) — all
+inside one ``pallas_call``. Dense K/V and the gathered per-row page copy of
+``gather_pages`` never exist: the only HBM traffic is the resident codes
+(3s+2 bytes/token), read once.
+
+Layout and grid:
+
+  * grid = ``(B, KV, max_pages * blocks_per_page)`` — the last dimension
+    walks one slot's page table in token tiles; TPU grid order is sequential
+    with the last dimension fastest, so for each (row, head) the tiles
+    arrive in position order and the online-softmax carry is race-free.
+  * the page table, ``t_c`` and ``min_pos`` ride in scalar-prefetch SMEM
+    (``PrefetchScalarGridSpec``): the pool BlockSpecs index
+    ``table[b, i // blocks_per_page]`` directly, so each grid step DMAs
+    exactly one page tile of each store — *physical* page placement is
+    invisible to the kernel body, which only sees logical positions.
+  * null/out-of-range table entries are pre-clamped onto the trash page 0;
+    its tiles stream through like any other and are masked by ``pos < t_c``
+    (the same contract ``gather_pages`` + ``decode_attention`` rely on).
+  * the online-softmax carry — running max ``m`` (G,), mass ``l`` (G,) and
+    the coefficient accumulator ``c`` (G, N) — lives in the revisited output
+    blocks in VMEM (the ``sparse_values`` accumulation pattern). At the
+    paper shape N=4096, G=8 that is 128 KB for ``c`` plus 128 KB for ``qd``
+    — comfortably inside VMEM next to four (block_t, s) code tiles.
+  * ``block_t`` (tokens per tile, default one full page) may be any value
+    ``<= page_size``, divisor or not: a partial tail tile reads pad garbage
+    (NaN in interpret mode), so masked lanes are forced to zero values and
+    in-range indices before use.
+
+The kernel returns the carry ``(m, l, c)`` rather than finished attention:
+the caller merges the full-precision recency buffer as the final online-
+softmax block and decodes ``c`` through ``D_v`` on the MXU (see
+``repro.core.attention.fused_paged_decode_attention``), exactly mirroring
+the flash-decode epilogue of ``decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _fused_kernel(tbl_ref, t_c_ref, min_pos_ref,
+                  qd_ref, kv_ref, ki_ref, vv_ref, vi_ref,
+                  m_ref, l_ref, c_ref, *,
+                  page_size: int, block_t: int, blocks_per_page: int,
+                  scale: float, G: int, s: int, N: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        # fresh (row, head): reset the online-softmax carry
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    page_i = i // blocks_per_page          # logical page index in the row
+    sub = i % blocks_per_page              # tile index inside the page
+    pos_in_page = sub * block_t + jnp.arange(block_t)
+    pos = page_i * page_size + pos_in_page
+    valid = ((pos < t_c_ref[b]) & (pos >= min_pos_ref[b])
+             & (pos_in_page < page_size))
+
+    # Sanitize before use: a partial tail tile (block_t not dividing
+    # page_size) reads pad garbage, and trash-page codes are arbitrary —
+    # masked lanes must carry finite zero values and in-range indices.
+    vmask = valid[:, None]
+    kvals = jnp.where(vmask, kv_ref[0, 0].astype(jnp.float32), 0.0)
+    kidx = jnp.clip(ki_ref[0, 0].astype(jnp.int32), 0, N - 1)
+    vvals = jnp.where(vmask, vv_ref[0, 0].astype(jnp.float32), 0.0)
+    vidx = jnp.clip(vi_ref[0, 0].astype(jnp.int32), 0, N - 1)
+
+    # G is small and static: unroll query heads, each head re-running the
+    # proven single-vector gather-dot / segment-add bodies of
+    # sparse_scores / sparse_values.
+    for g in range(G):
+        qd_g = qd_ref[0, 0, g]                               # (N,) VMEM
+        sc = jnp.sum(qd_g[kidx] * kvals, axis=-1) * scale    # (block_t,)
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_run = m_ref[0, 0, g]
+        m_new = jnp.maximum(m_run, jnp.max(sc))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.where(valid, jnp.exp(sc - m_new), 0.0)
+        l_ref[0, 0, g] = l_ref[0, 0, g] * alpha + jnp.sum(p)
+        c_g = c_ref[0, 0, g] * alpha                         # (N,)
+        contrib = p[:, None] * vvals                         # (block_t, s)
+        for j in range(s):
+            c_g = c_g.at[vidx[:, j]].add(contrib[:, j])
+        c_ref[0, 0, g] = c_g
+        m_ref[0, 0, g] = m_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("N", "scale", "block_t", "interpret"))
+def paged_sparse_attention(
+    qd: Array,                                  # (B, KV, G, N) f32
+    k_vals: Array, k_idx: Array,                # (n_pages, KV, P, s)
+    v_vals: Array, v_idx: Array,
+    page_table: Array,                          # (B, max_pages) int32
+    t_c: Array,                                 # (B,) int32 valid tokens
+    min_pos: Array,                             # (B,) int32 window floor; -1 = global
+    *,
+    N: int,
+    scale: float,
+    block_t: int | None = None,
+    interpret: bool = False,
+) -> tuple[Array, Array, Array]:
+    """Fused paged attention carry over the compressed pool.
+
+    Returns ``(m, l, c)`` — running max (B, KV, G), softmax mass (B, KV, G)
+    and the coefficient accumulator (B, KV, G, N) of every *valid* cache
+    position (``min_pos <= pos < t_c`` per row). Rows with no valid
+    positions return ``m = NEG_INF, l = 0, c = 0`` — the same carry the
+    flash-decode path of ``decode_attention`` starts from, so the caller's
+    buffer merge handles them unchanged.
+
+    ``block_t``: tokens per VMEM tile, ``<= page_size``; need not divide it
+    (the tail tile is pad-masked). Default: one full page per tile.
+    """
+    B, KV, G, _ = qd.shape
+    n_pages, _, P, s = k_vals.shape
+    MP = page_table.shape[1]
+    bt = P if block_t is None else min(block_t, P)
+    bpp = -(-P // bt)
+    grid = (B, KV, MP * bpp)
+
+    def pool_spec():
+        # one page tile per grid step, addressed THROUGH the page table
+        return pl.BlockSpec(
+            (1, 1, bt, s),
+            lambda b, k, i, tbl, tc, mp: (tbl[b, i // bpp], k, i % bpp, 0))
+
+    def bcast_spec(shape):
+        return pl.BlockSpec(shape, lambda b, k, i, *_: (b, k, 0, 0)[:len(shape)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,     # page_table, t_c, min_pos
+        grid=grid,
+        in_specs=[
+            bcast_spec((1, 1, G, N)),                        # qd
+            pool_spec(), pool_spec(), pool_spec(), pool_spec(),
+        ],
+        out_specs=[
+            bcast_spec((1, 1, G)),                           # m
+            bcast_spec((1, 1, G)),                           # l
+            bcast_spec((1, 1, G, N)),                        # c
+        ],
+    )
+    kern = functools.partial(
+        _fused_kernel, page_size=P, block_t=bt, blocks_per_page=bpp,
+        scale=float(scale), G=G, s=s, N=N)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, G, N), jnp.float32)],
+        interpret=interpret,
+    )(jnp.clip(jnp.asarray(page_table, jnp.int32), 0, n_pages - 1),
+      jnp.asarray(t_c, jnp.int32), jnp.asarray(min_pos, jnp.int32),
+      qd.astype(jnp.float32), k_vals, k_idx, v_vals, v_idx)

@@ -27,6 +27,41 @@ def sparse_values_ref(probs: Array, vals: Array, idx: Array, N: int) -> Array:
         idx.astype(jnp.int32).reshape(-1)].add(contrib.reshape(-1))
 
 
+def paged_attention_ref(qd: Array, k_vals: Array, k_idx: Array,
+                        v_vals: Array, v_idx: Array, page_table: Array,
+                        t_c: Array, min_pos: Array, *, N: int,
+                        scale: float) -> tuple:
+    """Gather-then-mask oracle of the fused paged attention kernel.
+
+    Materialises per-row contiguous views of the pool (exactly what the
+    pre-fusion ``paged_attend`` did via ``gather_pages``), computes all
+    compressed logits, and reduces them to the same ``(m, l, c)`` carry the
+    kernel emits: running max (B,KV,G), softmax mass (B,KV,G), and the
+    coefficient accumulator (B,KV,G,N) over positions
+    ``min_pos <= pos < t_c``. Rows with no valid positions yield
+    ``(NEG_INF, 0, 0)``.
+    """
+    from repro.core.attention import (
+        NEG_INF, compressed_scores, gather_pages, scatter_coeffs,
+    )
+    g_kv = gather_pages(k_vals, page_table)
+    g_ki = gather_pages(k_idx, page_table)
+    g_vv = gather_pages(v_vals, page_table)
+    g_vi = gather_pages(v_idx, page_table)
+    s_c = compressed_scores(qd, g_kv, g_ki, scale=scale)
+    T = g_kv.shape[2]
+    pos = jnp.arange(T)[None, None, None, :]
+    t_cb = jnp.asarray(t_c, jnp.int32)[:, None, None, None]
+    mpb = jnp.asarray(min_pos, jnp.int32)[:, None, None, None]
+    valid = (pos < t_cb) & (pos >= mpb)
+    s_c = jnp.where(valid, s_c, NEG_INF)
+    m = jnp.max(s_c, axis=-1)
+    p = jnp.where(valid, jnp.exp(s_c - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    c = scatter_coeffs(p, g_vv, g_vi, N)
+    return m, l, c
+
+
 def omp_corr_ref(D: Array, residual: Array, selected_mask: Array) -> tuple:
     """Fused OMP selection step: c = |D^T r| masked; returns (argmax, max).
 

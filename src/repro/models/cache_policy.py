@@ -103,10 +103,17 @@ class PagedLexicoPolicy:
     ``slots.write_slot_paged``.
     """
 
-    def __init__(self, cfg: LexicoConfig, *, n_pages: int, page_size: int):
+    def __init__(self, cfg: LexicoConfig, *, n_pages: int, page_size: int,
+                 fused: bool = False, fused_force_kernel: bool = False):
         self.cfg = cfg
         self.n_pages = n_pages
         self.page_size = page_size
+        # fused=True: attend computes directly from the packed pool codes via
+        # the paged sparse-attention kernel path (no gather_pages copy);
+        # fused_force_kernel additionally pins the Pallas kernel (interpret
+        # mode off-TPU) instead of the jnp oracle.
+        self.fused = fused
+        self.fused_force_kernel = fused_force_kernel
 
     def max_pages_for(self, t_max: int) -> int:
         """Page-table width covering a slot of ``t_max`` tokens (t_max - n_b
@@ -141,7 +148,9 @@ class PagedLexicoPolicy:
     def attend(self, cache, q, ctx, *, window=None):
         D_k, D_v = ctx[0], ctx[1]
         return sc.paged_attend(cache, q, D_k, D_v, N=self.cfg.N,
-                               chunk=self.cfg.chunk, window=window)
+                               chunk=self.cfg.chunk, window=window,
+                               fused=self.fused,
+                               fused_force_kernel=self.fused_force_kernel)
 
     def length(self, cache):
         return cache.t_c + cache.buf_len

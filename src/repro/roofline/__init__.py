@@ -1,3 +1,7 @@
 from repro.roofline.analysis import (
     V5E, RooflineReport, analyze_compiled, collective_bytes_from_hlo,
 )
+from repro.roofline.kernel_model import (
+    PagedAttnShape, compare_paged_attention, fused_path_bytes,
+    gather_path_bytes,
+)

@@ -1,0 +1,144 @@
+"""Analytic HBM-byte / FLOP model of the paged compressed-attention read.
+
+``analyze_compiled`` prices whatever XLA compiled — but off-TPU the fused
+kernel lowers through Pallas interpret mode, whose HLO is a simulation
+artifact, not the TPU memory traffic. This module prices the *algorithm*
+instead, from first principles, for the two ways the engine can read the
+compressed half of the cache each decode step:
+
+  gather path (``paged_attend`` default)
+      ``gather_pages`` streams the four sparse stores out of the pool,
+      writes a per-row contiguous copy, and attention re-reads that copy —
+      the resident codes cross HBM three times — then materialises the
+      (B, KV, G, T) logits and probabilities in f32 (written + re-read by
+      the softmax/value stages).
+
+  fused path (``kernels/paged_sparse_attn.py``)
+      the kernel walks the page tables in-place: the codes cross HBM once,
+      and the only other traffic is the broadcast ``qd`` read plus the
+      (m, l, c) carry written once per (row, head). No gathered copy, no
+      logits array.
+
+Both paths do the same arithmetic (scores + scatter + the two N·m
+dictionary matmuls), so FLOPs are shared and the fused win is purely a
+bytes win — ``compare_paged_attention`` reports it per decode step along
+with V5E roofline times. The strict inequality ``fused.total_bytes <
+gather.total_bytes`` for any non-empty cache is pinned by
+``tests/test_paged_sparse_attn.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.roofline.analysis import HW, V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedAttnShape:
+    """Static shape of one layer's paged compressed-attention read."""
+    batch: int              # B decode rows (slots)
+    kv_heads: int           # KV
+    q_per_kv: int           # G (GQA group size)
+    head_dim: int           # m
+    n_dict: int             # N dictionary atoms
+    s: int                  # sparsity (nonzeros per cached vector)
+    pages_per_row: int      # page-table width (max_pages)
+    page_size: int          # tokens per page
+    val_bytes: int = 1      # coefficient storage (fp8 codec)
+    idx_bytes: int = 2      # index storage (int16)
+    acc_bytes: int = 4      # f32 accumulation / activations
+
+    @property
+    def tokens(self) -> int:
+        """Compressed positions swept per row (table width x page size)."""
+        return self.pages_per_row * self.page_size
+
+    @property
+    def code_bytes(self) -> int:
+        """Resident sparse-code bytes swept per decode step: four stores
+        (k/v values + indices), s entries per token per KV head."""
+        per_tok = 2 * self.s * (self.val_bytes + self.idx_bytes)
+        return self.batch * self.kv_heads * self.tokens * per_tok
+
+    @property
+    def qd_bytes(self) -> int:
+        """Dictionary-projected queries (B, KV, G, N) f32, read once."""
+        return (self.batch * self.kv_heads * self.q_per_kv
+                * self.n_dict * self.acc_bytes)
+
+    @property
+    def coeff_bytes(self) -> int:
+        """The f32 coefficient accumulator (B, KV, G, N) — BOTH paths
+        materialise it (``compressed_values``'s scatter output / the
+        kernel's ``c`` carry) and the D_v decode re-reads it."""
+        return (self.batch * self.kv_heads * self.q_per_kv
+                * self.n_dict * self.acc_bytes)
+
+    @property
+    def flops(self) -> int:
+        """Shared arithmetic of both paths: s-sparse score dots + the
+        probability scatter (2·s MAC each per token per query head) plus
+        the q·D_k projection and c·D_vᵀ decode (N·m matmuls per query)."""
+        bq = self.batch * self.kv_heads * self.q_per_kv
+        sparse = 2 * bq * self.tokens * (2 * self.s)
+        dense = 2 * bq * self.n_dict * self.head_dim * 2
+        return sparse + dense
+
+
+def gather_path_bytes(shape: PagedAttnShape) -> Dict[str, int]:
+    """Per-decode-step HBM bytes of gather-then-mask (one layer)."""
+    codes = shape.code_bytes
+    bqt = (shape.batch * shape.kv_heads * shape.q_per_kv
+           * shape.tokens * shape.acc_bytes)
+    out = {
+        "pool_read": codes,          # gather_pages streams the pool
+        "gather_write": codes,       # ...into the per-row contiguous copy
+        "gather_reread": codes,      # ...which attention then reads
+        "qd_read": shape.qd_bytes,
+        "logits": 2 * 2 * bqt,       # s_c and p, each written + re-read f32
+        "coeff": 2 * shape.coeff_bytes,   # scatter write + D_v decode read
+    }
+    out["total_bytes"] = sum(out.values())
+    return out
+
+
+def fused_path_bytes(shape: PagedAttnShape) -> Dict[str, int]:
+    """Per-decode-step HBM bytes of the fused page-table-walking kernel."""
+    ml = (shape.batch * shape.kv_heads * shape.q_per_kv
+          * 2 * shape.acc_bytes)
+    out = {
+        "pool_read": shape.code_bytes,       # codes cross HBM exactly once
+        "qd_read": shape.qd_bytes,
+        # (m, l, c) written once per row/head; c re-read by the D_v decode
+        "carry": 2 * shape.coeff_bytes + ml,
+    }
+    out["total_bytes"] = sum(out.values())
+    return out
+
+
+def compare_paged_attention(shape: PagedAttnShape,
+                            hw: HW = V5E) -> Dict[str, object]:
+    """Gather vs fused decode-step cost, with roofline times on ``hw``.
+
+    ``bytes_ratio`` < 1 is the fused win; FLOPs are identical by
+    construction so the time ratio is bounded by the bytes ratio.
+    """
+    g, f = gather_path_bytes(shape), fused_path_bytes(shape)
+    flops = shape.flops
+
+    def terms(b):
+        return {"t_mem_s": b["total_bytes"] / hw.hbm_bw,
+                "t_compute_s": flops / hw.peak_flops,
+                "t_roofline_s": max(b["total_bytes"] / hw.hbm_bw,
+                                    flops / hw.peak_flops)}
+
+    return {
+        "shape": dataclasses.asdict(shape),
+        "flops": flops,
+        "hw": hw.name,
+        "gather": {**g, **terms(g)},
+        "fused": {**f, **terms(f)},
+        "bytes_ratio": f["total_bytes"] / g["total_bytes"],
+        "bytes_saved": g["total_bytes"] - f["total_bytes"],
+    }

@@ -132,6 +132,15 @@ class EngineConfig:
     # and/or page-lifecycle journaling; None records nothing and pays
     # nothing (phase timers and the metrics registry are always on)
     obs: Optional[ObsConfig] = None
+    # fused paged sparse-attention (paged layout only): decode attention
+    # computes directly from the packed pool codes through the page tables
+    # (kernels/paged_sparse_attn.py) instead of gather-then-mask; same
+    # tokens, one compiled decode step either way
+    fused_attention: bool = False
+    # force the Pallas kernel itself (interpret mode off-TPU) rather than
+    # its jnp oracle — parity testing / TPU-shaped runs; implies nothing
+    # unless fused_attention is set
+    fused_force_kernel: bool = False
 
 
 def _bucket(prompt_len: int, min_bucket: int) -> int:
@@ -171,6 +180,10 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 "swap requires layout='paged' (the host tier mirrors pool "
                 "pages)")
+        if engine_cfg.fused_attention and not self.paged:
+            raise ValueError(
+                "fused_attention requires layout='paged' (the kernel walks "
+                "pool page tables)")
         if self.paged and cfg.mla is not None:
             raise NotImplementedError(
                 "paged slot storage covers the attention-stack Lexico cache; "
@@ -197,8 +210,10 @@ class ContinuousBatchingEngine:
             n_pages = (engine_cfg.n_pages if engine_cfg.n_pages is not None
                        else engine_cfg.n_slots * max_pages + 1)
             self.allocator = PageAllocator(n_pages, P)
-            decode_policy = PagedLexicoPolicy(lex_cfg, n_pages=n_pages,
-                                              page_size=P)
+            decode_policy = PagedLexicoPolicy(
+                lex_cfg, n_pages=n_pages, page_size=P,
+                fused=engine_cfg.fused_attention,
+                fused_force_kernel=engine_cfg.fused_force_kernel)
             self._max_pages = max_pages
             if engine_cfg.share_prefixes:
                 self.prefix_index = PrefixIndex(

@@ -7,6 +7,12 @@ import pytest
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
+
+    # CI runs `--hypothesis-profile ci`: fewer, deadline-free examples —
+    # interpret-mode Pallas calls are seconds each, so the default 100
+    # examples x default deadline would flake, not verify.
+    settings.register_profile(
+        "ci", max_examples=10, deadline=None, derandomize=True)
 except ImportError:  # pragma: no cover - exercised when hypothesis is absent
     HAVE_HYPOTHESIS = False
 

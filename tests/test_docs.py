@@ -18,7 +18,7 @@ REPO = Path(__file__).resolve().parent.parent
 DOCS = REPO / "docs"
 
 REQUIRED_PAGES = ["architecture.md", "serving.md", "memory_accounting.md",
-                  "tiered_memory.md", "observability.md"]
+                  "tiered_memory.md", "observability.md", "kernels.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 

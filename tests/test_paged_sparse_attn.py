@@ -1,0 +1,419 @@
+"""Fused paged sparse-attention: the kernel-parity contract.
+
+Four layers of pinning, per docs/kernels.md:
+
+  * differential sweep — the Pallas kernel (interpret mode) vs the
+    gather-then-mask oracle ``ref.paged_attention_ref`` across ragged rows,
+    trash-page slots, single-page and pool-spanning tables, mixed sparsity
+    tiers, and tile sizes that do / don't divide ``page_size``;
+  * property harness (hypothesis, optional) — idle rows return the init
+    carry bitwise, rows are independent, and physically relocating pool
+    pages (table remap) changes nothing;
+  * dispatch table — ``resolve_dispatch`` pinned for every
+    (backend, force_kernel, interpret) cell, and all four ops proven to
+    route through it (``force_kernel=True`` off-TPU must run the kernel in
+    interpret mode, never silently fall back to the oracle);
+  * engine acceptance — ``fused_attention`` on vs off produces identical
+    greedy tokens on a prefix-shared + swap-tiered workload with the decode
+    compile count still exactly 1.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.core import sparse_cache as SC
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.paged_sparse_attn import NEG_INF, paged_sparse_attention
+from repro.models import model as M
+from repro.roofline.kernel_model import (
+    PagedAttnShape, compare_paged_attention, fused_path_bytes,
+    gather_path_bytes,
+)
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, Request, SwapConfig,
+)
+from tests.conftest import given, settings, st
+
+# Online softmax (kernel) vs single-pass softmax (oracle) reorder fp32
+# accumulation; both read identical storage, so the gap is rounding only.
+TOL = dict(atol=2e-5, rtol=1e-5)
+
+
+def make_pool(rng, *, n_pages, KV, P, s, N, vdtype=jnp.float32,
+              idtype=jnp.int32):
+    """Random pool; the trash page 0 carries large finite garbage so any
+    unmasked read blows past TOL instead of hiding in the noise."""
+    def vals():
+        v = rng.normal(size=(n_pages, KV, P, s))
+        v[0] = 100.0
+        return jnp.asarray(v, jnp.float32).astype(vdtype)
+
+    def idxs():
+        return jnp.asarray(rng.integers(0, N, (n_pages, KV, P, s)), idtype)
+
+    return vals(), idxs(), vals(), idxs()
+
+
+def run_both(rng, *, table, t_c, min_pos=None, n_pages=7, KV=2, G=2, P=8,
+             s=4, N=64, block_t=None, vdtype=jnp.float32, idtype=jnp.int32,
+             scale=0.25):
+    table = jnp.asarray(table, jnp.int32)
+    B = table.shape[0]
+    t_c = jnp.asarray(t_c, jnp.int32)
+    mp = (jnp.full((B,), -1, jnp.int32) if min_pos is None
+          else jnp.asarray(min_pos, jnp.int32))
+    kv, ki, vv, vi = make_pool(rng, n_pages=n_pages, KV=KV, P=P, s=s, N=N,
+                               vdtype=vdtype, idtype=idtype)
+    qd = jnp.asarray(rng.normal(size=(B, KV, G, N)), jnp.float32)
+    got = paged_sparse_attention(qd, kv, ki, vv, vi, table, t_c, mp,
+                                 N=N, scale=scale, block_t=block_t,
+                                 interpret=True)
+    want = ref.paged_attention_ref(qd, kv, ki, vv, vi, table, t_c, mp,
+                                   N=N, scale=scale)
+    return got, want
+
+
+def assert_carry_close(got, want, **tol):
+    for g, w, name in zip(got, want, ("m", "l", "c")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   err_msg=name, **(tol or TOL))
+
+
+# ---------------------------------------------------------------------------
+# differential sweep vs the gather-then-mask oracle
+# ---------------------------------------------------------------------------
+
+RAGGED = dict(
+    table=[[1, 2, 3], [4, 0, 0], [0, 0, 0], [6, 5, 1]],
+    # full row / partial page / idle / pool-spanning non-monotone pages
+    t_c=[24, 5, 0, 17])
+
+
+@pytest.mark.parametrize("block_t", [None, 8, 5, 3, 1])
+def test_parity_ragged_rows(rng, block_t):
+    """Ragged t_c (full, partial-page, idle, spanning) at every tile size —
+    including block_t 5 and 3, which do NOT divide page_size=8 (pad-masked
+    tail tiles)."""
+    got, want = run_both(rng, **RAGGED, block_t=block_t)
+    assert_carry_close(got, want)
+
+
+def test_parity_single_page_tables(rng):
+    """max_pages == 1: the degenerate table the grid must still walk."""
+    got, want = run_both(rng, table=[[2], [0]], t_c=[6, 0])
+    assert_carry_close(got, want)
+
+
+def test_parity_trash_page_rows(rng):
+    """Null tables clamp onto the trash page; its garbage must be masked
+    out entirely (t_c = 0) or beyond t_c (short row on real page 1)."""
+    got, want = run_both(rng, table=[[0, 0], [1, 0]], t_c=[0, 9])
+    assert_carry_close(got, want)
+    # the idle row's carry is the exact init, not merely close
+    m, l, c = got
+    np.testing.assert_array_equal(np.asarray(m)[0], np.float32(NEG_INF))
+    np.testing.assert_array_equal(np.asarray(l)[0], 0.0)
+    np.testing.assert_array_equal(np.asarray(c)[0], 0.0)
+
+
+def test_parity_window_min_pos(rng):
+    """Sliding-window floors: per-row min_pos masks old positions."""
+    got, want = run_both(rng, **RAGGED, min_pos=[10, 2, -1, 17])
+    assert_carry_close(got, want)
+
+
+@pytest.mark.parametrize("vdtype,idtype", [
+    (jnp.float32, jnp.int32),
+    (jnp.float8_e4m3fn, jnp.int16),   # the serving fp8 codec layout
+    (jnp.bfloat16, jnp.int16),
+])
+def test_parity_storage_dtypes(rng, vdtype, idtype):
+    got, want = run_both(rng, **RAGGED, vdtype=vdtype, idtype=idtype)
+    assert_carry_close(got, want)
+
+
+@pytest.mark.parametrize("s,N,G", [(2, 32, 1), (8, 128, 4)])
+def test_parity_shape_corners(rng, s, N, G):
+    """Sparsity tiers and GQA widths around the defaults."""
+    got, want = run_both(rng, table=[[1, 2], [3, 0]], t_c=[13, 4],
+                         s=s, N=N, G=G, block_t=3)
+    assert_carry_close(got, want)
+
+
+def test_fused_attend_matches_gather_attend(rng):
+    """End-to-end paged_attend: fused (oracle and forced kernel) equals the
+    gather path on every live row, and equals the flash-chunked convention
+    bitwise on idle rows (chunk=None gives idle rows a different — equally
+    unconsumed — garbage, so they are excluded from the gather comparison)."""
+    B, KV, G, m, N, s, P, n_pages = 3, 2, 2, 16, 64, 4, 8, 7
+    kv, ki, vv, vi = make_pool(rng, n_pages=n_pages, KV=KV, P=P, s=s, N=N)
+    cache = SC.PagedLexicoLayerCache(
+        k_vals=kv, k_idx=ki, v_vals=vv, v_idx=vi,
+        page_table=jnp.asarray([[1, 2, 3], [4, 0, 0], [0, 0, 0]], jnp.int32),
+        k_buf=jnp.asarray(rng.normal(size=(B, KV, 4, m)), jnp.float32),
+        v_buf=jnp.asarray(rng.normal(size=(B, KV, 4, m)), jnp.float32),
+        t_c=jnp.asarray([20, 5, 0], jnp.int32),
+        buf_len=jnp.asarray([4, 2, 0], jnp.int32),
+        buf_start=jnp.zeros((B,), jnp.int32))
+    q = jnp.asarray(rng.normal(size=(B, KV, G, m)), jnp.float32)
+    D_k = jnp.asarray(rng.normal(size=(m, N)), jnp.float32)
+    D_v = jnp.asarray(rng.normal(size=(m, N)), jnp.float32)
+    for window in (None, jnp.int32(10)):
+        o_ref = np.asarray(SC.paged_attend(cache, q, D_k, D_v, N=N,
+                                           window=window))
+        o_chunk = np.asarray(SC.paged_attend(cache, q, D_k, D_v, N=N,
+                                             chunk=P, window=window))
+        for fk in (False, True):
+            o_f = np.asarray(SC.paged_attend(cache, q, D_k, D_v, N=N,
+                                             window=window, fused=True,
+                                             fused_force_kernel=fk))
+            np.testing.assert_allclose(o_f[:2], o_ref[:2], atol=1e-5,
+                                       rtol=1e-5)
+            np.testing.assert_allclose(o_f, o_chunk, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# property harness (hypothesis; skips cleanly when not installed)
+# ---------------------------------------------------------------------------
+
+def _tiny_case(seed, B, MP):
+    """Small random pool + tables, sized so interpret-mode runs stay fast."""
+    rng = np.random.default_rng(seed)
+    n_pages, KV, G, P, s, N = 5, 1, 1, 4, 2, 32
+    kv, ki, vv, vi = make_pool(rng, n_pages=n_pages, KV=KV, P=P, s=s, N=N)
+    table = jnp.asarray(rng.integers(0, n_pages, (B, MP)), jnp.int32)
+    t_c = jnp.asarray(rng.integers(0, MP * P + 1, (B,)), jnp.int32)
+    qd = jnp.asarray(rng.normal(size=(B, KV, G, N)), jnp.float32)
+    mp = jnp.full((B,), -1, jnp.int32)
+    return rng, (qd, kv, ki, vv, vi, table, t_c, mp), dict(N=N, scale=0.5)
+
+
+def _run(arrs, kw, **over):
+    return paged_sparse_attention(*arrs, **kw, interpret=True, **over)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), B=st.sampled_from([1, 3]),
+       MP=st.sampled_from([1, 3]))
+def test_property_idle_rows_bit_identical(seed, B, MP):
+    """Any row with t_c == 0 returns exactly the init carry, bitwise,
+    whatever the rest of the batch holds."""
+    rng, arrs, kw = _tiny_case(seed, B, MP)
+    qd, kv, ki, vv, vi, table, t_c, mp = arrs
+    t_c = t_c.at[0].set(0)
+    m, l, c = _run((qd, kv, ki, vv, vi, table, t_c, mp), kw)
+    np.testing.assert_array_equal(np.asarray(m)[0], np.float32(NEG_INF))
+    np.testing.assert_array_equal(np.asarray(l)[0], 0.0)
+    np.testing.assert_array_equal(np.asarray(c)[0], 0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), MP=st.sampled_from([1, 3]))
+def test_property_rows_independent(seed, MP):
+    """Rewriting one row's table/t_c leaves every other row's carry
+    bit-identical (the grid never mixes rows)."""
+    rng, arrs, kw = _tiny_case(seed, 3, MP)
+    qd, kv, ki, vv, vi, table, t_c, mp = arrs
+    base = _run(arrs, kw)
+    table2 = table.at[1].set(jnp.asarray(rng.integers(0, 5, MP), jnp.int32))
+    t_c2 = t_c.at[1].set(int(rng.integers(0, MP * 4 + 1)))
+    pert = _run((qd, kv, ki, vv, vi, table2, t_c2, mp), kw)
+    for a, b in zip(base, pert):
+        np.testing.assert_array_equal(np.asarray(a)[[0, 2]],
+                                      np.asarray(b)[[0, 2]])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), B=st.sampled_from([1, 3]),
+       MP=st.sampled_from([1, 3]))
+def test_property_page_permutation_invariant(seed, B, MP):
+    """Physically relocating pool pages (and remapping every table entry)
+    is invisible: logical position order fixes the accumulation order, so
+    the carry is bit-identical. Page 0 stays the null page."""
+    rng, arrs, kw = _tiny_case(seed, B, MP)
+    qd, kv, ki, vv, vi, table, t_c, mp = arrs
+    base = _run(arrs, kw)
+    perm = np.concatenate([[0], 1 + rng.permutation(4)])   # fix trash page
+    inv = np.argsort(perm)
+
+    def relocate(pool):
+        return jnp.asarray(np.asarray(pool)[inv])
+
+    table2 = jnp.asarray(perm[np.asarray(table)], jnp.int32)
+    moved = _run((qd, relocate(kv), relocate(ki), relocate(vv),
+                  relocate(vi), table2, t_c, mp), kw)
+    for a, b in zip(base, moved):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# dispatch contract: resolve_dispatch + all four ops route through it
+# ---------------------------------------------------------------------------
+
+def test_dispatch_table(monkeypatch):
+    """The (backend, force_kernel, interpret) -> (use_kernel, interpret)
+    table, pinned cell by cell. The load-bearing row: force_kernel=True
+    with interpret=None off-TPU runs the kernel in interpret mode."""
+    cases = {
+        # on_tpu: {(force_kernel, interpret): (use_kernel, interpret_mode)}
+        False: {
+            (False, None): (False, True),
+            (True, None): (True, True),      # never the silent oracle
+            (False, True): (True, True),     # interpret=True is an opt-in
+            (True, True): (True, True),
+            (False, False): (False, False),
+            (True, False): (True, False),
+        },
+        True: {
+            (False, None): (True, False),    # native kernel by default
+            (True, None): (True, False),
+            (False, True): (True, True),
+            (True, True): (True, True),
+            (False, False): (True, False),
+            (True, False): (True, False),
+        },
+    }
+    for on_tpu, table in cases.items():
+        monkeypatch.setattr(ops, "_on_tpu", lambda v=on_tpu: v)
+        for (fk, interp), want in table.items():
+            assert ops.resolve_dispatch(fk, interp) == want, (
+                on_tpu, fk, interp)
+
+
+def test_all_ops_share_dispatch(rng, monkeypatch):
+    """Each of the four ops calls its kernel exactly when resolve_dispatch
+    says so — sentinel-stubbed kernels and oracles, off-TPU."""
+    monkeypatch.setattr(ops, "_on_tpu", lambda: False)
+    calls = []
+
+    def stub(name):
+        def f(*a, **k):
+            calls.append(name)
+            return "out"
+        return f
+
+    monkeypatch.setattr(ops, "sparse_scores", stub("kernel"))
+    monkeypatch.setattr(ops, "sparse_values", stub("kernel"))
+    monkeypatch.setattr(ops, "omp_corr_argmax", stub("kernel"))
+    monkeypatch.setattr(ops, "paged_sparse_attention", stub("kernel"))
+    monkeypatch.setattr(ops.ref, "sparse_scores_ref", stub("oracle"))
+    monkeypatch.setattr(ops.ref, "sparse_values_ref", stub("oracle"))
+    monkeypatch.setattr(ops.ref, "omp_corr_ref", stub("oracle"))
+    monkeypatch.setattr(ops.ref, "paged_attention_ref", stub("oracle"))
+
+    every_op = [
+        lambda **kw: ops.scores_op(None, None, None, **kw),
+        lambda **kw: ops.values_op(None, None, None, N=8, **kw),
+        lambda **kw: ops.omp_select_op(None, None, None, **kw),
+        lambda **kw: ops.paged_attention_op(
+            None, None, None, None, None, None, None, None,
+            N=8, scale=1.0, **kw),
+    ]
+    for op in every_op:
+        for kw, want in [
+            (dict(), "oracle"),
+            (dict(force_kernel=True), "kernel"),
+            (dict(interpret=True), "kernel"),
+        ]:
+            calls.clear()
+            op(**kw)
+            assert calls == [want], (op, kw, calls)
+
+
+# ---------------------------------------------------------------------------
+# analytic kernel model: fused must predict strictly fewer HBM bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    PagedAttnShape(batch=1, kv_heads=1, q_per_kv=1, head_dim=16,
+                   n_dict=64, s=2, pages_per_row=1, page_size=4),
+    PagedAttnShape(batch=4, kv_heads=4, q_per_kv=2, head_dim=16,
+                   n_dict=192, s=16, pages_per_row=12, page_size=8),
+    PagedAttnShape(batch=8, kv_heads=8, q_per_kv=4, head_dim=64,
+                   n_dict=4096, s=16, pages_per_row=256, page_size=16),
+])
+def test_kernel_model_fused_strictly_fewer_bytes(shape):
+    g, f = gather_path_bytes(shape), fused_path_bytes(shape)
+    assert f["total_bytes"] < g["total_bytes"], shape
+    # the fused win is the dropped copy/reread + logits traffic
+    assert g["total_bytes"] - f["total_bytes"] >= (
+        g["gather_write"] + g["gather_reread"])
+    cmp = compare_paged_attention(shape)
+    assert cmp["bytes_ratio"] < 1.0
+    assert cmp["fused"]["t_roofline_s"] <= cmp["gather"]["t_roofline_s"]
+    # FLOPs are shared by construction: same math, different traffic
+    assert cmp["flops"] == shape.flops
+
+
+# ---------------------------------------------------------------------------
+# engine acceptance: fused on/off token identity, compile counts unchanged
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _shared_prefix_requests(rng, n=5):
+    """Prefix-shareable + long enough to spill pages into the swap tier:
+    one 16-token system prompt (page-aligned at page_size 8), per-request
+    tails, one tier (sharing requires equal OMP caps)."""
+    system = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
+    reqs = []
+    for rid in range(n):
+        tail = rng.integers(0, CFG.vocab_size,
+                            int(rng.integers(2, 14))).astype(np.int32)
+        reqs.append(Request(rid=rid, prompt=np.concatenate([system, tail]),
+                            max_new_tokens=int(rng.integers(3, 6)), tier=8))
+    return reqs
+
+
+def test_engine_fused_token_identity(served):
+    """The acceptance gate: fused_attention on (oracle AND forced kernel)
+    reproduces the gather engine's greedy tokens exactly on a workload that
+    exercises prefix sharing and the host swap tier, and the decode step
+    still compiles exactly once."""
+    params, bank = served
+    base = EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                        page_size=8, n_pages=18, share_prefixes=True,
+                        swap=SwapConfig())
+    tokens, engines = {}, {}
+    for mode, over in (("off", {}),
+                       ("fused", dict(fused_attention=True)),
+                       ("fused_kernel", dict(fused_attention=True,
+                                             fused_force_kernel=True))):
+        eng = ContinuousBatchingEngine(params, CFG, LEX, bank,
+                                       dataclasses.replace(base, **over))
+        for r in _shared_prefix_requests(np.random.default_rng(11)):
+            eng.submit(r)
+        done = eng.run()
+        tokens[mode] = {rid: done[rid].generated_tokens for rid in done}
+        engines[mode] = eng
+    assert tokens["fused"] == tokens["off"]
+    assert tokens["fused_kernel"] == tokens["off"]
+    for mode, eng in engines.items():
+        cc = eng.compile_counts
+        assert cc["decode"] == 1, (mode, cc)
+        # the workload actually exercised what it claims to
+        assert eng.metrics.to_dict()["requests_completed"] == 5, mode
+
+
+def test_engine_fused_requires_paged_layout(served):
+    params, bank = served
+    with pytest.raises(ValueError, match="fused_attention requires"):
+        ContinuousBatchingEngine(
+            params, CFG, LEX, bank,
+            EngineConfig(n_slots=2, t_max=64, min_bucket=8,
+                         layout="contiguous", fused_attention=True))
