@@ -39,6 +39,12 @@ throughput/compile counts/decode rooflines, and the analytic kernel-model
 comparison (gather vs fused HBM bytes per decode step — fused must predict
 strictly fewer).
 
+A sixth scenario (``--scenario omp-kernel``) runs the paged engine with the
+fused batched-OMP prefill encoder off vs on vs forced-kernel: token
+identity, prefill tokens/s per mode from the steady-state phase timer, the
+streamed-vs-gathered selection bytes model, and the early-exit vs
+always-``s_max`` CPU wall clock with the ``nnz`` histogram.
+
     PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario all]
 """
 from __future__ import annotations
@@ -375,6 +381,131 @@ def run_fused_kernel_bench(*, n_requests: int = 12, n_slots: int = 4,
     }
 
 
+def run_omp_kernel_bench(*, n_requests: int = 12, n_slots: int = 4,
+                         t_max: int = 96, seed: int = 0,
+                         page_size: int = 8) -> dict:
+    """Fused batched-OMP prefill-encoder scenario: the mixed workload through
+    the paged engine with ``fused_omp`` off vs on vs forced-kernel.
+
+    Reports (a) token identity across the three engines (the fused encoder
+    selects the same atoms, not an approximation), (b) prefill tokens/s per
+    mode from the steady-state prefill phase timer + the compressed-token
+    counter (compile-dominated first-trace calls are excluded by the timer
+    itself), (c) the analytic kernel-model comparison at the live encode
+    shape (streamed selection must predict strictly fewer HBM bytes per OMP
+    iteration than the gathered-Gram oracle), and (d) a direct CPU
+    wall-clock measurement of the early-exit ``while_loop`` vs the
+    always-``s_max`` ``fori_loop`` on the same tile body at ``delta > 0``,
+    with the iteration-count (``nnz``) histogram that explains the win."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.omp import clear_gram_cache
+    from repro.kernels.omp_encode import omp_encode_batch
+    from repro.roofline.kernel_model import OMPEncodeShape, compare_omp_encode
+
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+
+    out, tokens = {}, {}
+    for mode, over in (("off", {}),
+                       ("fused", dict(fused_omp=True)),
+                       ("fused_kernel", dict(fused_omp=True,
+                                             fused_omp_force_kernel=True))):
+        eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                         layout="paged", page_size=page_size, **over))
+        _submit_workload(eng, cfg, n_requests=n_requests, seed=seed)
+        done = eng.run()
+        md = eng.metrics.to_dict()
+        tokens[mode] = {rid: done[rid].generated_tokens for rid in done}
+        prefill = md["phase_times"].get("prefill",
+                                        {"count": 0, "mean": 0.0,
+                                         "p50": 0.0, "p99": 0.0})
+        steady_s = prefill["count"] * prefill["mean"]
+        out[mode] = {
+            "prefill_tokens_compressed": md["prefill_tokens_compressed"],
+            "prefill_steady_calls": prefill["count"],
+            "prefill_s_p50": prefill["p50"],
+            "prefill_s_p99": prefill["p99"],
+            # compressed positions per steady-state prefill second; the
+            # first trace per bucket lands in compile_s, not here
+            "prefill_tokens_per_s": (md["prefill_tokens_compressed"]
+                                     / steady_s if steady_s > 0 else 0.0),
+            "tokens_per_s_ex_compile": md["tokens_per_s_ex_compile"],
+            "compile_counts": eng.compile_counts,
+        }
+
+    # analytic per-iteration model at the live encode shape: one layer's
+    # prefill flattens (B=1, KV, T_comp) vectors per K/V dictionary
+    shape = OMPEncodeShape(
+        batch=cfg.cache_kv_heads * (t_max - lex.n_b),
+        head_dim=cfg.cached_vector_dim, n_dict=N, s=s_max)
+    model = compare_omp_encode(shape)
+
+    # early exit vs always-s_max: same compiled body, identical outputs
+    # (pinned bitwise in tests) — the win is pure wall clock, scaling with
+    # how far below s_max the delta stop lands (the nnz histogram)
+    rng = np.random.default_rng(seed)
+    m, B, delta = cfg.cached_vector_dim, 4096, 0.55
+    D = rng.normal(size=(m, N)).astype(np.float32)
+    D /= np.linalg.norm(D, axis=0, keepdims=True)
+    D = jnp.asarray(D)
+    G = D.T @ D
+    K = jnp.asarray(rng.normal(size=(B, m)), jnp.float32)
+    clear_gram_cache()
+
+    def timed(early_exit):
+        run = lambda: jax.block_until_ready(omp_encode_batch(
+            K, D, s_max, G=G, delta=delta, early_exit=early_exit))
+        res = run()                       # compile + warm caches
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        return min(ts), res
+
+    t_early, res = timed(True)
+    t_full, res_full = timed(False)
+    nnz = np.asarray(res.nnz)
+    same = (np.array_equal(nnz, np.asarray(res_full.nnz))
+            and np.array_equal(np.asarray(res.idx), np.asarray(res_full.idx)))
+    early = {
+        "delta": delta,
+        "batch": B,
+        "s_max": s_max,
+        "t_early_exit_s": t_early,
+        "t_always_smax_s": t_full,
+        "speedup": t_full / max(t_early, 1e-9),
+        "mean_nnz": float(nnz.mean()),
+        "nnz_hist": np.bincount(nnz, minlength=s_max + 1).tolist(),
+        "same_result": bool(same),
+    }
+    return {
+        "same_tokens": (tokens["fused"] == tokens["off"]
+                        and tokens["fused_kernel"] == tokens["off"]),
+        "same_prefill_compiles": (
+            out["fused"]["compile_counts"]["prefill"]
+            == out["off"]["compile_counts"]["prefill"]
+            == out["fused_kernel"]["compile_counts"]["prefill"]),
+        "off": out["off"],
+        "fused": out["fused"],
+        "fused_kernel": out["fused_kernel"],
+        "kernel_model": model,
+        "streamed_predicts_fewer_bytes": (
+            model["streamed"]["total_bytes"]
+            < model["gathered"]["total_bytes"]),
+        "early_exit": early,
+    }
+
+
 def run_layout_comparison(**kw) -> dict:
     """Same workload through both layouts + the memory/throughput deltas."""
     cont = run_serving_bench(layout="contiguous", **kw)
@@ -438,7 +569,7 @@ def main():
                     default="both")
     ap.add_argument("--scenario",
                     choices=["mix", "prefix", "swap", "obs", "fused-kernel",
-                             "both", "all"],
+                             "omp-kernel", "both", "all"],
                     default="mix",
                     help="mix: short/long layout comparison; prefix: many "
                          "clients sharing one system prompt (shared vs "
@@ -448,8 +579,11 @@ def main():
                          "phase p50/p99, decode roofline, journal replay; "
                          "fused-kernel: paged engine with fused sparse-"
                          "attention off vs on (token identity, rooflines, "
-                         "analytic bytes model); both: mix+prefix; "
-                         "all: everything")
+                         "analytic bytes model); omp-kernel: fused OMP "
+                         "prefill encoder off vs on vs forced-kernel "
+                         "(token identity, prefill tokens/s, streamed-vs-"
+                         "gathered bytes model, early-exit wall clock); "
+                         "both: mix+prefix; all: everything")
     ap.add_argument("--repeats", type=int, default=2,
                     help="obs scenario: runs per mode (overhead = best-of)")
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -479,6 +613,8 @@ def main():
             page_size=args.page_size)
     if args.scenario in ("fused-kernel", "all"):
         stats["fused_kernel"] = run_fused_kernel_bench(**kw)
+    if args.scenario in ("omp-kernel", "all"):
+        stats["omp_kernel"] = run_omp_kernel_bench(**kw)
     if args.scenario in ("obs", "all"):
         stats["obs"] = run_obs_bench(
             n_requests=args.n_requests, n_slots=args.n_slots,

@@ -33,6 +33,7 @@ Prometheus text, and ``--journal out.jsonl`` the page-lifecycle event
 journal (replayable with ``repro.serving.obs.replay_check``).
 """
 import argparse
+import dataclasses
 import os
 import sys
 
@@ -72,6 +73,12 @@ def main():
                          "device pool below the concurrent working set and "
                          "spill cold pages to a host-memory tier, promoting "
                          "them back on access — same tokens, smaller pool")
+    ap.add_argument("--fused-omp", action="store_true",
+                    help="prefill through the fused batched-OMP encoder "
+                         "(tile-batched early-exit iteration, Pallas "
+                         "selection on TPU); a baseline engine runs the "
+                         "identical requests first and the prefill-phase "
+                         "p50/p99 is printed before/after — same tokens")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record a request-lifecycle trace and write it as "
                          "Chrome/Perfetto trace-event JSON (load at "
@@ -99,18 +106,19 @@ def main():
     max_pages = -(-max(args.t_max - lex.n_b, 1) // args.page_size)
     if args.swap:
         n_pages = max_pages + args.n_slots + 1
-    eng = ContinuousBatchingEngine(
-        params, cfg, lex, bank,
-        EngineConfig(n_slots=args.n_slots, t_max=args.t_max, min_bucket=8,
-                     layout=args.layout, page_size=args.page_size,
-                     share_prefixes=args.share_prefixes,
-                     n_pages=n_pages,
-                     swap=SwapConfig() if args.swap else None,
-                     obs=(ObsConfig(trace=args.trace is not None,
-                                    journal=args.journal is not None)
-                          if (args.trace or args.journal) else None),
-                     kv_byte_budget=(args.budget_kb * 1024
-                                     if args.budget_kb else None)))
+    engine_cfg = EngineConfig(
+        n_slots=args.n_slots, t_max=args.t_max, min_bucket=8,
+        layout=args.layout, page_size=args.page_size,
+        share_prefixes=args.share_prefixes,
+        n_pages=n_pages,
+        swap=SwapConfig() if args.swap else None,
+        fused_omp=args.fused_omp,
+        obs=(ObsConfig(trace=args.trace is not None,
+                       journal=args.journal is not None)
+             if (args.trace or args.journal) else None),
+        kv_byte_budget=(args.budget_kb * 1024
+                        if args.budget_kb else None))
+    eng = ContinuousBatchingEngine(params, cfg, lex, bank, engine_cfg)
     if args.swap:
         print(f"swap tier on: device pool {eng.allocator.capacity} usable "
               f"pages vs {args.n_slots * max_pages} fully provisioned — "
@@ -123,6 +131,7 @@ def main():
     system_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
     print(f"{args.n_requests} requests -> {args.n_slots} slots "
           f"(s_max={s_max}, tiers {tiers})")
+    workload = []
     for rid in range(args.n_requests):
         if args.share_prefixes and rid % 2 == 0:
             tail = rng.integers(0, cfg.vocab_size,
@@ -133,14 +142,33 @@ def main():
             prompt = rng.integers(0, cfg.vocab_size,
                                   int(rng.integers(9, 64))).astype(np.int32)
             tier = int(rng.choice(tiers))
-        req = Request(rid=rid, prompt=prompt,
-                      max_new_tokens=int(rng.integers(4, 16)), tier=tier)
-        eng.submit(req)
+        workload.append((prompt, int(rng.integers(4, 16)), tier))
         print(f"  req {rid}: prompt={len(prompt):3d} "
-              f"new={req.max_new_tokens:2d} tier=s{req.tier}"
+              f"new={workload[-1][1]:2d} tier=s{tier}"
               + ("  [shared system prompt]"
                  if args.share_prefixes and rid % 2 == 0 else ""))
 
+    def submit_all(engine):
+        for rid, (prompt, max_new, tier) in enumerate(workload):
+            engine.submit(Request(rid=rid, prompt=prompt,
+                                  max_new_tokens=max_new, tier=tier))
+
+    base_done = base_prefill = None
+    if args.fused_omp:
+        # baseline first: the identical workload through the ref encoder,
+        # so the prefill-phase before/after below is apples to apples
+        base_eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            dataclasses.replace(engine_cfg, fused_omp=False, obs=None))
+        submit_all(base_eng)
+        base_done = base_eng.run()
+        base_prefill = base_eng.metrics.to_dict()["phase_times"].get("prefill")
+        if base_eng.prefix_index is not None:
+            base_eng.prefix_index.clear(
+                base_eng.allocator,
+                host=base_eng.swap.host if base_eng.swap else None)
+
+    submit_all(eng)
     done = eng.run()
     stats = eng.metrics.to_dict()
 
@@ -196,6 +224,22 @@ def main():
                   f"{summary['p99'] * 1e3:7.2f}  (n={summary['count']})")
     print(f"setup {stats['setup_s']:.2f}s, compile {stats['compile_s']:.2f}s "
           f"-> {stats['tokens_per_s_ex_compile']:.1f} tok/s ex-compile")
+    if args.fused_omp:
+        fused_prefill = stats["phase_times"].get("prefill")
+        same = ({r: base_done[r].generated_tokens for r in base_done}
+                == {r: done[r].generated_tokens for r in done})
+        print("\nfused batched-OMP prefill (before = ref encoder, "
+              "after = fused):")
+        for label, summary in (("before", base_prefill),
+                               ("after", fused_prefill)):
+            if summary:
+                print(f"  {label:6s} p50 {summary['p50'] * 1e3:7.2f} ms / "
+                      f"p99 {summary['p99'] * 1e3:7.2f} ms "
+                      f"(n={summary['count']})")
+            else:
+                print(f"  {label:6s} no steady-state prefill samples "
+                      "(every bucket compiled fresh)")
+        print(f"  identical tokens vs baseline: {same}")
 
     if args.trace:
         eng.save_trace(args.trace)

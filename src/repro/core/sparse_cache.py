@@ -179,7 +179,7 @@ def _encode_store(vals: Array, idx: Array, val_dtype) -> Tuple[Array, Array]:
 
 
 def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
-                          G_k, G_v, s_cap, start=0):
+                          G_k, G_v, s_cap, start=0, omp_backend="ref"):
     """Shared prefill core: OMP-encode prompt positions ``[start, T - n_b)``.
 
     Args:
@@ -191,6 +191,9 @@ def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
         held as shared pages, so their OMP is skipped entirely. OMP is
         per-vector independent, so the tail codes are bitwise identical to
         the same positions of a full (``start=0``) encode.
+      omp_backend: encoder implementation for the prompt-head OMP — see
+        ``omp_batch(backend=)``. Prefill is the OMP-dominated phase; decode's
+        single-evictee encode stays on the default path.
 
     Returns ``(kv, ki, vv, vi, k_tail, v_tail, n_comp)`` — encoded sparse
     stores for positions ``[start, n_comp)`` (shape ``(B, KV, n_comp-start,
@@ -212,9 +215,9 @@ def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
     cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None, None]
 
     rk = omp_mod.omp_batch(k_head.astype(jnp.float32), D_k, s, use_gram=use_gram,
-                           delta=delta, G=G_k, s_cap=cap)
+                           delta=delta, G=G_k, s_cap=cap, backend=omp_backend)
     rv = omp_mod.omp_batch(v_head.astype(jnp.float32), D_v, s, use_gram=use_gram,
-                           delta=delta, G=G_v, s_cap=cap)
+                           delta=delta, G=G_v, s_cap=cap, backend=omp_backend)
     kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
     vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
     return kv, ki, vv, vi, k_tail, v_tail, n_comp
@@ -231,6 +234,7 @@ def prefill_compress(
     G_k=None, G_v=None,
     s_cap: Optional[Array] = None,
     start: int = 0,
+    omp_backend: str = "ref",
 ) -> LexicoLayerCache:
     """Compress a prefilled prompt into the cache (Algorithm 2, Prefilling).
 
@@ -243,6 +247,7 @@ def prefill_compress(
         Positions ``[0, start)`` are left untouched (a prefix-sharing caller
         already holds their codes elsewhere); only ``[start, T - n_b)`` are
         OMP-encoded and written. ``start=0`` is the full prefill.
+      omp_backend: prompt-head encoder — see ``omp_batch(backend=)``.
 
     The last ``n_b`` tokens go to the ring buffer; positions ``[start,
     T - n_b)`` are OMP-compressed into the sparse stores. Bookkeeping
@@ -255,7 +260,7 @@ def prefill_compress(
     B = K.shape[0]
     kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
         cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
+        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start, omp_backend=omp_backend)
 
     def put(store, new):
         return jax.lax.dynamic_update_slice(store, new, (0, 0, int(start), 0))
@@ -302,6 +307,7 @@ def paged_prefill_compress(
     G_k=None, G_v=None,
     s_cap: Optional[Array] = None,
     start: int = 0,
+    omp_backend: str = "ref",
 ) -> PagedLexicoLayerCache:
     """Paged twin of :func:`prefill_compress` (restartable).
 
@@ -317,7 +323,7 @@ def paged_prefill_compress(
     B = K.shape[0]
     kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
         cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
+        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start, omp_backend=omp_backend)
 
     stores = {}
     if kv is not None:

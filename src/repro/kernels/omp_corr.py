@@ -1,15 +1,37 @@
-"""Pallas TPU kernel: fused OMP correlation + masked abs-argmax.
+"""Pallas TPU kernels: fused OMP correlation + masked abs-argmax.
 
 The inner step of batched OMP (Algorithm 1 line 3): for a batch of residuals,
 ``n* = argmax_n |(Dᵀ r)_n|`` excluding already-selected atoms. Fusing the
-(m x N) matvec with the masked argmax avoids materialising the (B, N)
+correlation with the masked argmax avoids materialising the (B, N)
 correlation matrix in HBM — the block-local max/argmax reduce in VMEM and
 only (B,) scalars leave the kernel.
 
-Tiling: grid over (batch tiles x atom tiles). D is streamed as (m, N_blk)
-tiles (the MXU does the (B_blk, m) x (m, N_blk) product); a running
-(B_blk,) max + argmax pair is carried in the output refs across the atom
-grid dimension (sequential on TPU, so the reduction is race-free).
+Two kernels, one per correlation backend of ``core/omp.py``:
+
+  * ``omp_corr_argmax`` — Gram-free: the (m x N) matvec ``|Dᵀ r|`` fused with
+    the masked argmax. Tiled over (batch tiles x atom tiles); D is streamed
+    as (m, N_blk) tiles (the MXU does the (B_blk, m) x (m, N_blk) product); a
+    running (B_blk,) max + argmax pair is carried in the output refs across
+    the atom grid dimension (sequential on TPU, so the reduction is
+    race-free). Ragged B / N are padded to the block grid and masked (pad
+    rows are sliced off, pad atoms enter as ``selected``).
+
+  * ``omp_gram_argmax`` — the Gram path the serving engine actually uses:
+    ``c = alpha0 − Σ_k y_k · G[idx_k, :]`` fused with the masked abs-argmax.
+    The selected-atom Gram rows are streamed one (1, N_blk) tile per grid
+    step through a scalar-prefetch BlockSpec (``idx`` rides in SMEM and
+    addresses G's row directly — the same page-table-walk idiom as
+    ``paged_sparse_attn``), so neither the (B, N) correlation matrix nor a
+    gathered (B, s, N) copy of G ever hits HBM: the only G traffic is the
+    ``B·s`` rows actually subtracted, read once. The running correlation for
+    one atom tile accumulates in VMEM scratch across the ``s`` grid steps and
+    reduces to the carried (max, argmax) on the last one.
+
+Both kernels mask with a large negative finite (``NEG``) rather than -inf;
+since ``|c| >= 0`` for every unselected atom, the masked lanes can never win
+the argmax, and ties between equal correlations resolve to the lowest atom
+index on every path (``jnp.argmax`` picks the first maximum inside a tile,
+and the cross-tile merge is strictly-greater).
 """
 from __future__ import annotations
 
@@ -18,6 +40,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 NEG = -1e30
@@ -46,18 +69,37 @@ def _corr_kernel(r_ref, d_ref, sel_ref, max_ref, arg_ref):
                              arg_ref[...])
 
 
+def _pad_to(x: Array, axis: int, mult: int, value) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
 def omp_corr_argmax(residual: Array, D: Array, selected: Array, *,
                     block_b: int = 128, block_n: int = 512,
                     interpret: bool = False):
     """residual (B, m); D (m, N); selected (B, N) bool -> (argmax (B,) i32,
-    max (B,) f32) of |D^T r| over unselected atoms."""
+    max (B,) f32) of |D^T r| over unselected atoms.
+
+    B and N may be ragged: the batch is zero-padded to a whole number of
+    ``block_b`` tiles (pad rows are sliced off the outputs) and the atom axis
+    to ``block_n`` tiles (pad atoms stream through as ``selected`` with zero
+    columns, so they can never win the argmax).
+    """
     B, m = residual.shape
     N = D.shape[1]
     block_b = min(block_b, B)
     block_n = min(block_n, N)
-    assert B % block_b == 0 and N % block_n == 0, (B, block_b, N, block_n)
-    grid = (B // block_b, N // block_n)
+    r = _pad_to(residual.astype(jnp.float32), 0, block_b, 0.0)
+    d = _pad_to(D.astype(jnp.float32), 1, block_n, 0.0)
+    sel = _pad_to(_pad_to(selected, 1, block_n, True), 0, block_b, True)
+    Bp, Np = sel.shape
+    grid = (Bp // block_b, Np // block_n)
     out_max, out_arg = pl.pallas_call(
         _corr_kernel,
         grid=grid,
@@ -71,9 +113,93 @@ def omp_corr_argmax(residual: Array, D: Array, selected: Array, *,
             pl.BlockSpec((block_b,), lambda i, j: (i,)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(r, d, sel)
+    return out_arg[:B], out_max[:B]
+
+
+def _gram_kernel(idx_ref, a_ref, g_ref, y_ref, sel_ref, max_ref, arg_ref,
+                 acc_ref, *, block_n: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        max_ref[...] = jnp.full_like(max_ref, NEG)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    @pl.when(k == 0)
+    def _load():
+        # fresh atom tile: start the running correlation from alpha0
+        acc_ref[...] = a_ref[0].astype(jnp.float32)
+
+    y_k = jax.lax.dynamic_index_in_dim(
+        y_ref[0].astype(jnp.float32), k, keepdims=False)
+    acc_ref[...] = acc_ref[...] - y_k * g_ref[0].astype(jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _reduce():
+        c = jnp.where(sel_ref[0], NEG, jnp.abs(acc_ref[...]))
+        local_arg = jnp.argmax(c)
+        local_max = jnp.max(c)
+        better = local_max > max_ref[0]
+        max_ref[0] = jnp.where(better, local_max, max_ref[0])
+        arg_ref[0] = jnp.where(
+            better, (j * block_n + local_arg).astype(jnp.int32), arg_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def omp_gram_argmax(alpha0: Array, G: Array, idx: Array, y: Array,
+                    selected: Array, *, block_n: int = 512,
+                    interpret: bool = False):
+    """Gram-path OMP selection: streamed ``|alpha0 − Σ_k y_k·G[idx_k]|``.
+
+    alpha0 (B, N) f32; G (N, N); idx (B, s) i32; y (B, s) f32 (zero past the
+    filled prefix, so trailing slots subtract nothing); selected (B, N) bool.
+    Returns ``(argmax (B,) i32, max (B,) f32)`` over unselected atoms.
+
+    Grid is (B, atom tiles, s): ``idx`` is scalar-prefetched into SMEM and
+    drives G's BlockSpec row index, so each step DMAs exactly one
+    (1, block_n) Gram-row tile; the correlation accumulates in VMEM scratch
+    and only the (B,) max/argmax carry leaves the kernel. N may be ragged
+    (pad atoms enter selected with zero G columns).
+    """
+    B, N = alpha0.shape
+    s = idx.shape[1]
+    block_n = min(block_n, N)
+    a = _pad_to(alpha0.astype(jnp.float32), 1, block_n, 0.0)
+    g = _pad_to(G.astype(jnp.float32), 1, block_n, 0.0)
+    sel = _pad_to(selected, 1, block_n, True)
+    Np = a.shape[1]
+    grid = (B, Np // block_n, s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                        # idx
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda b, j, k, idx_ref: (b, j)),
+            pl.BlockSpec((1, block_n),
+                         lambda b, j, k, idx_ref: (idx_ref[b, k], j)),
+            pl.BlockSpec((1, s), lambda b, j, k, idx_ref: (b, 0)),
+            pl.BlockSpec((1, block_n), lambda b, j, k, idx_ref: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b, j, k, idx_ref: (b,)),
+            pl.BlockSpec((1,), lambda b, j, k, idx_ref: (b,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
+    )
+    out_max, out_arg = pl.pallas_call(
+        functools.partial(_gram_kernel, block_n=block_n),
+        grid_spec=grid_spec,
+        out_shape=[
             jax.ShapeDtypeStruct((B,), jnp.float32),
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(residual.astype(jnp.float32), D.astype(jnp.float32), selected)
+    )(jnp.clip(jnp.asarray(idx, jnp.int32), 0, N - 1), a, g,
+      y.astype(jnp.float32), sel)
     return out_arg, out_max

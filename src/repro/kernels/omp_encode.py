@@ -1,0 +1,218 @@
+"""Fused tile-batched OMP encoder — the prefill-compression hot loop.
+
+``core/omp.py`` is the oracle: a per-vector Cholesky-incremental OMP vmapped
+over the batch, running all ``s_max`` ``fori_loop`` iterations even after
+every row has hit its ``delta`` / ``s_cap`` stop. This module is the fused
+production path behind ``omp_batch(backend="fused")``:
+
+  * **Tile-batched iteration** — the batch is cut into ``tile_b``-row tiles
+    and each tile runs ONE iteration loop: the atom selection, the Cholesky
+    append (rank-1 row update of the (tile_b, s, s) factor), the pair of
+    triangular solves and the ``G[idx, n]`` gathers are all batched over the
+    tile, so the factor tile stays resident in VMEM between iterations
+    instead of being re-streamed per vector.
+  * **Fused selection** — the argmax over atoms goes through
+    ``kernels.ops`` dispatch: ``omp_gram_select_op`` (Gram path — Gram rows
+    streamed by a scalar-prefetch Pallas kernel, the (B, N) correlation
+    matrix never hits HBM) or ``omp_select_op`` on the explicit residual
+    (Gram-free path). Off-TPU the jnp oracles run unless ``force_kernel``
+    pins the interpret-mode kernel.
+  * **Early exit** — the iteration is a ``lax.while_loop`` that stops as
+    soon as no row in the tile is still active (``nnz == i`` and
+    ``r2 > delta²·‖k‖²`` and ``i < s_cap``). Inactive rows are no-ops inside
+    the body, so the early-exited state is bitwise identical to running the
+    same body for all ``s_max`` steps (``early_exit=False`` swaps in a
+    ``fori_loop`` over the identical body — the always-``s_max`` baseline
+    the benchmark measures against). One compile either way, and the output
+    contract is the oracle's padded ``OMPResult``.
+
+Per-row ``s_cap`` tiers, ``delta`` early stop, Gram and Gram-free
+correlation, and arbitrary leading batch shape all match ``omp_batch``;
+tests/test_omp_encode.py pins the differential (idx exact, vals ≤ 2e-5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.omp import OMPResult
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+def _tri_solve(L: Array, b: Array, *, trans: bool = False) -> Array:
+    """Batched lower-triangular solve: L (B, s, s), b (B, s)."""
+    x = jax.scipy.linalg.solve_triangular(
+        L, b[..., None], lower=True, trans=1 if trans else 0)
+    return x[..., 0]
+
+
+def _encode_tile(
+    K: Array,                       # (B, m) f32
+    D: Array,                       # (m, N) f32
+    s_max: int,
+    *,
+    G: Optional[Array],             # (N, N) f32 or None (Gram-free)
+    delta: float,
+    eps: float,
+    cap: Array,                     # (B,) i32 per-row atom cap
+    early_exit: bool,
+    force_kernel: bool,
+    interpret: Optional[bool],
+) -> OMPResult:
+    """One token tile through the batched iteration loop."""
+    B, m = K.shape
+    N = D.shape[1]
+    alpha0 = K @ D                                     # (B, N)
+    kk = jnp.sum(K * K, axis=-1)                       # (B,)
+    thresh2 = (delta * delta) * kk
+    pos = jnp.arange(s_max)
+
+    L0 = jnp.broadcast_to(jnp.eye(s_max, dtype=jnp.float32),
+                          (B, s_max, s_max))
+    state0 = (
+        jnp.int32(0),                                  # i
+        L0,                                            # Cholesky factor
+        jnp.zeros((B, s_max), jnp.int32),              # idx
+        jnp.zeros((B, s_max), jnp.float32),            # y
+        jnp.zeros((B, N), jnp.bool_),                  # selected
+        jnp.zeros((B,), jnp.int32),                    # nnz
+        kk,                                            # r2
+    )
+
+    def active_rows(i, nnz, r2):
+        return (nnz == i) & (r2 > thresh2) & (i < cap)
+
+    def body(state):
+        i, L, idx, y, sel, nnz, r2 = state
+        active = active_rows(i, nnz, r2)
+
+        # Atom selection — dispatched kernel/oracle per backend. y is zero
+        # past the filled prefix so trailing idx slots subtract nothing.
+        if G is not None:
+            n, _ = ops.omp_gram_select_op(
+                alpha0, G, idx, y, sel,
+                force_kernel=force_kernel, interpret=interpret)
+            g_col = G[n[:, None], idx]                 # (B, s)
+            gnn = G[n, n]                              # (B,)
+        else:
+            atoms = jnp.take(D.T, idx, axis=0)         # (B, s, m)
+            r = K - jnp.einsum("bs,bsm->bm", y, atoms)
+            n, _ = ops.omp_select_op(
+                r, D, sel, force_kernel=force_kernel, interpret=interpret)
+            d_n = D[:, n].T                            # (B, m)
+            g_col = jnp.einsum("bsm,bm->bs", atoms, d_n)
+            gnn = jnp.sum(d_n * d_n, axis=-1)
+
+        # Batched Cholesky append: w = L^{-1} G[idx, n] over the prefix.
+        g_col = jnp.where(pos[None, :] < i, g_col, 0.0)
+        w = _tri_solve(L, g_col)
+        w = jnp.where(pos[None, :] < i, w, 0.0)
+        d2 = jnp.maximum(gnn - jnp.sum(w * w, axis=-1), eps)
+        row = jnp.where(pos[None, :] < i, w,
+                        jnp.where(pos[None, :] == i,
+                                  jnp.sqrt(d2)[:, None], 0.0))
+        L_new = jax.lax.dynamic_update_slice(L, row[:, None, :], (0, i, 0))
+        idx_new = jnp.where(pos[None, :] == i, n[:, None], idx)
+        sel_new = sel.at[jnp.arange(B), n].set(True)
+
+        # Solve (L L^T) y = alpha0[idx] on the filled prefix.
+        alpha_idx = jnp.take_along_axis(alpha0, idx_new, axis=1)
+        rhs = jnp.where(pos[None, :] <= i, alpha_idx, 0.0)
+        z = _tri_solve(L_new, rhs)
+        z = jnp.where(pos[None, :] <= i, z, 0.0)
+        y_new = _tri_solve(L_new, z, trans=True)
+        y_new = jnp.where(pos[None, :] <= i, y_new, 0.0)
+        r2_new = jnp.maximum(kk - jnp.sum(y_new * alpha_idx, axis=-1), 0.0)
+
+        a1 = active[:, None]
+        return (
+            i + 1,
+            jnp.where(a1[..., None], L_new, L),
+            jnp.where(a1, idx_new, idx),
+            jnp.where(a1, y_new, y),
+            jnp.where(a1, sel_new, sel),
+            jnp.where(active, nnz + 1, nnz),
+            jnp.where(active, r2_new, r2),
+        )
+
+    if early_exit:
+        def cond(state):
+            i, _, _, _, _, nnz, r2 = state
+            return (i < s_max) & jnp.any(active_rows(i, nnz, r2))
+        _, _, idx, y, _, nnz, r2 = jax.lax.while_loop(cond, body, state0)
+    else:
+        _, _, idx, y, _, nnz, r2 = jax.lax.fori_loop(
+            0, s_max, lambda _, st: body(st), state0)
+
+    vals = jnp.where(pos[None, :] < nnz[:, None], y, 0.0)
+    idx = jnp.where(pos[None, :] < nnz[:, None], idx, 0)
+    return OMPResult(vals=vals, idx=idx, nnz=nnz, resid2=r2)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "s_max", "delta", "eps", "tile_b", "early_exit", "force_kernel",
+    "interpret"))
+def omp_encode_batch(
+    K: Array,
+    D: Array,
+    s_max: int,
+    *,
+    G: Optional[Array] = None,
+    delta: float = 0.0,
+    s_cap: Optional[Array] = None,
+    eps: float = 1e-12,
+    tile_b: int = 256,
+    early_exit: bool = True,
+    force_kernel: bool = False,
+    interpret: Optional[bool] = None,
+) -> OMPResult:
+    """Fused tile-batched OMP over ``K`` (..., m) — drop-in for ``omp_batch``.
+
+    ``G=None`` selects the Gram-free correlation (``use_gram=False`` path).
+    ``tile_b`` rows share one iteration loop (and one early-exit decision);
+    tiles run sequentially via ``lax.map`` so each tile stops at its own
+    deepest row. The trailing partial tile is zero-padded — pad rows have
+    ``‖k‖ = 0`` so they are never active and are sliced off the outputs.
+    """
+    batch_shape = K.shape[:-1]
+    m = K.shape[-1]
+    K32 = K.astype(jnp.float32).reshape(-1, m)
+    D32 = D.astype(jnp.float32)
+    G32 = None if G is None else G.astype(jnp.float32)
+    B = K32.shape[0]
+    if s_cap is None:
+        cap = jnp.full((B,), s_max, jnp.int32)
+    else:
+        cap = jnp.broadcast_to(
+            jnp.asarray(s_cap, jnp.int32), batch_shape).reshape(-1)
+
+    tb = max(1, min(tile_b, B))
+    n_tiles = -(-B // tb)
+    pad = n_tiles * tb - B
+    if pad:
+        K32 = jnp.pad(K32, ((0, pad), (0, 0)))
+        cap = jnp.pad(cap, (0, pad))
+
+    encode = functools.partial(
+        _encode_tile, D=D32, s_max=s_max, G=G32, delta=float(delta),
+        eps=float(eps), early_exit=early_exit, force_kernel=force_kernel,
+        interpret=interpret)
+    if n_tiles == 1:
+        out = encode(K32, cap=cap)
+    else:
+        out = jax.lax.map(
+            lambda t: encode(t[0], cap=t[1]),
+            (K32.reshape(n_tiles, tb, m), cap.reshape(n_tiles, tb)))
+        out = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_tiles * tb,) + x.shape[2:]), out)
+    return OMPResult(
+        vals=out.vals[:B].reshape(batch_shape + (s_max,)),
+        idx=out.idx[:B].reshape(batch_shape + (s_max,)),
+        nnz=out.nnz[:B].reshape(batch_shape),
+        resid2=out.resid2[:B].reshape(batch_shape),
+    )

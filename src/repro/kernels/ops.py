@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.omp_corr import omp_corr_argmax
+from repro.kernels.omp_corr import omp_corr_argmax, omp_gram_argmax
 from repro.kernels.paged_sparse_attn import paged_sparse_attention
 from repro.kernels.sparse_scores import sparse_scores
 from repro.kernels.sparse_values import sparse_values
@@ -77,6 +77,18 @@ def omp_select_op(residual: Array, D: Array, selected: Array, *,
     if use_kernel:
         return omp_corr_argmax(residual, D, selected, interpret=interp)
     return ref.omp_corr_ref(D, residual, selected)
+
+
+def omp_gram_select_op(alpha0: Array, G: Array, idx: Array, y: Array,
+                       selected: Array, *, force_kernel: bool = False,
+                       interpret: bool | None = None):
+    """Gram-path OMP selection step: ``argmax_n |alpha0 − Σ_k y_k·G[idx_k]|``
+    over unselected atoms — streamed kernel on TPU (Gram rows addressed
+    through a scalar-prefetch BlockSpec), gathered jnp oracle elsewhere."""
+    use_kernel, interp = resolve_dispatch(force_kernel, interpret)
+    if use_kernel:
+        return omp_gram_argmax(alpha0, G, idx, y, selected, interpret=interp)
+    return ref.omp_gram_corr_ref(alpha0, G, idx, y, selected)
 
 
 def paged_attention_op(

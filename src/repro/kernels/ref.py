@@ -70,3 +70,22 @@ def omp_corr_ref(D: Array, residual: Array, selected_mask: Array) -> tuple:
     c = jnp.abs(residual.astype(jnp.float32) @ D.astype(jnp.float32))  # (B, N)
     c = jnp.where(selected_mask, -jnp.inf, c)
     return jnp.argmax(c, axis=-1).astype(jnp.int32), jnp.max(c, axis=-1)
+
+
+def omp_gram_corr_ref(alpha0: Array, G: Array, idx: Array, y: Array,
+                      selected_mask: Array) -> tuple:
+    """Gram-path OMP selection oracle: gathered ``|alpha0 − Σ y_k·G[idx_k]|``.
+
+    alpha0 (B, N) f32; G (N, N); idx (B, s) int; y (B, s) f32 (zero past the
+    filled prefix); selected_mask (B, N) bool -> (argmax (B,) i32, max (B,)).
+
+    This is the gather-then-reduce form the streamed ``omp_gram_argmax``
+    kernel exists to avoid: it materialises the (B, s, N) row gather of G
+    and the full (B, N) correlation matrix. ``jnp.argmax`` breaks ties to
+    the lowest atom index, matching the kernel's strictly-greater merge.
+    """
+    rows = G.astype(jnp.float32)[idx.astype(jnp.int32)]        # (B, s, N)
+    c = alpha0.astype(jnp.float32) - jnp.einsum(
+        "bs,bsn->bn", y.astype(jnp.float32), rows)
+    c = jnp.where(selected_mask, -jnp.inf, jnp.abs(c))
+    return jnp.argmax(c, axis=-1).astype(jnp.int32), jnp.max(c, axis=-1)

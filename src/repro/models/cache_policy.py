@@ -42,10 +42,19 @@ class CachePolicy(Protocol):
 # ---------------------------------------------------------------------------
 
 class LexicoPolicy:
-    """The paper's policy: OMP sparse codes + recency buffer."""
+    """The paper's policy: OMP sparse codes + recency buffer.
 
-    def __init__(self, cfg: LexicoConfig):
+    ``omp_backend`` selects the prefill encoder implementation (see
+    ``repro.core.omp.omp_batch(backend=)``): ``"ref"`` (default, vmapped
+    oracle), ``"fused"`` (tile-batched early-exit encoder, Pallas selection
+    on TPU) or ``"fused_kernel"`` (selection kernels forced, interpret mode
+    off-TPU). Decode's single-evictee encode always uses the ref path — its
+    batch is one vector per slot and the vmap form is already optimal there.
+    """
+
+    def __init__(self, cfg: LexicoConfig, *, omp_backend: str = "ref"):
         self.cfg = cfg
+        self.omp_backend = omp_backend
 
     def init(self, batch, kv_heads, head_dim, t_max):
         c = self.cfg
@@ -70,7 +79,8 @@ class LexicoPolicy:
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.prefill_compress(cache, K, V, D_k, D_v, s=self.cfg.s,
                                    use_gram=self.cfg.use_gram, delta=self.cfg.delta,
-                                   G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
+                                   G_k=G_k, G_v=G_v, s_cap=s_cap, start=start,
+                                   omp_backend=self.omp_backend)
 
     def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         D_k, D_v, G_k, G_v = self._unpack(ctx)
@@ -104,7 +114,8 @@ class PagedLexicoPolicy:
     """
 
     def __init__(self, cfg: LexicoConfig, *, n_pages: int, page_size: int,
-                 fused: bool = False, fused_force_kernel: bool = False):
+                 fused: bool = False, fused_force_kernel: bool = False,
+                 omp_backend: str = "ref"):
         self.cfg = cfg
         self.n_pages = n_pages
         self.page_size = page_size
@@ -114,6 +125,8 @@ class PagedLexicoPolicy:
         # mode off-TPU) instead of the jnp oracle.
         self.fused = fused
         self.fused_force_kernel = fused_force_kernel
+        # prefill encoder backend — same contract as LexicoPolicy
+        self.omp_backend = omp_backend
 
     def max_pages_for(self, t_max: int) -> int:
         """Page-table width covering a slot of ``t_max`` tokens (t_max - n_b
@@ -137,7 +150,8 @@ class PagedLexicoPolicy:
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.paged_prefill_compress(
             cache, K, V, D_k, D_v, s=self.cfg.s, use_gram=self.cfg.use_gram,
-            delta=self.cfg.delta, G_k=G_k, G_v=G_v, s_cap=s_cap, start=start)
+            delta=self.cfg.delta, G_k=G_k, G_v=G_v, s_cap=s_cap, start=start,
+            omp_backend=self.omp_backend)
 
     def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
         D_k, D_v, G_k, G_v = self._unpack(ctx)

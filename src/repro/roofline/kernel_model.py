@@ -142,3 +142,106 @@ def compare_paged_attention(shape: PagedAttnShape,
         "bytes_ratio": f["total_bytes"] / g["total_bytes"],
         "bytes_saved": g["total_bytes"] - f["total_bytes"],
     }
+
+
+# ---------------------------------------------------------------------------
+# OMP prefill encoder (the compress write path — PR 8's twin of the above)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OMPEncodeShape:
+    """Static shape of one Gram-path OMP selection iteration.
+
+    One prefill encodes ``batch = B·KV·T_head`` vectors against ``n_dict``
+    atoms; each iteration subtracts ``s`` (padded) selected-atom Gram rows
+    from ``alpha0`` and argmaxes over atoms. Both paths below stream all
+    ``s`` padded slots every iteration (trailing y's are zero), so
+    per-iteration bytes are iteration-independent and the early-exit win
+    multiplies on top.
+    """
+    batch: int              # vectors encoded together (B·KV·T_head)
+    head_dim: int           # m
+    n_dict: int             # N dictionary atoms
+    s: int                  # s_max padded selection slots
+    acc_bytes: int = 4      # f32 accumulation
+    sel_bytes: int = 1      # bool selected mask
+
+    @property
+    def flops(self) -> int:
+        """Shared per-iteration arithmetic: the Gram-row MACs of the
+        correlation (2·B·N·s) plus the pair of batched triangular solves
+        (O(B·s²) — noise next to the correlation at N >> s)."""
+        return (2 * self.batch * self.n_dict * self.s
+                + 2 * self.batch * self.s * self.s)
+
+
+def omp_gathered_bytes(shape: OMPEncodeShape) -> Dict[str, int]:
+    """Per-iteration HBM bytes of the gathered-Gram oracle correlation.
+
+    The reference path (``ref.omp_gram_corr_ref`` / the vmapped
+    ``core.omp`` encoder) gathers the selected rows ``G[idx]`` into a
+    (B, s, N) f32 copy (pool read + copy write + matvec re-read), then
+    materialises the (B, N) correlation matrix, which the masked argmax
+    re-reads."""
+    bn = shape.batch * shape.n_dict * shape.acc_bytes
+    out = {
+        "gram_rows_read": shape.s * bn,     # G[idx] streamed out of G
+        "gather_write": shape.s * bn,       # ...into the (B, s, N) copy
+        "gather_reread": shape.s * bn,      # ...re-read by the y·rows matvec
+        "alpha0_read": bn,
+        "corr_matrix": 2 * bn,              # c written f32 + argmax re-read
+        "sel_read": shape.batch * shape.n_dict * shape.sel_bytes,
+    }
+    out["total_bytes"] = sum(out.values())
+    return out
+
+
+def omp_streamed_bytes(shape: OMPEncodeShape) -> Dict[str, int]:
+    """Per-iteration HBM bytes of the streamed-tile kernel
+    (``kernels/omp_corr.omp_gram_argmax``): Gram rows cross HBM once,
+    the running correlation lives in VMEM scratch, and only the (B,)
+    max/argmax carry leaves the kernel."""
+    bn = shape.batch * shape.n_dict * shape.acc_bytes
+    small = shape.batch * (2 * shape.s + 2) * shape.acc_bytes  # idx,y + out
+    out = {
+        "gram_rows_read": shape.s * bn,     # read once, never copied
+        "alpha0_read": bn,
+        "sel_read": shape.batch * shape.n_dict * shape.sel_bytes,
+        "carry": small,
+    }
+    out["total_bytes"] = sum(out.values())
+    return out
+
+
+def compare_omp_encode(shape: OMPEncodeShape, hw: HW = V5E,
+                       iters: int | None = None) -> Dict[str, object]:
+    """Gathered-Gram vs streamed-tile selection cost per OMP iteration.
+
+    ``bytes_ratio`` < 1 is the fused win (≈ (s+1)/(3s+3) at f32 — the
+    three Gram-row crossings collapse to one and the (B, N) correlation
+    matrix disappears); the strict inequality is pinned in
+    tests/test_omp_encode.py. ``iters`` (default ``shape.s``) scales the
+    per-iteration terms to a whole encode — early exit lowers it to the
+    mean ``nnz``, multiplying on top of the per-iteration win.
+    """
+    g, f = omp_gathered_bytes(shape), omp_streamed_bytes(shape)
+    flops = shape.flops
+    n_it = shape.s if iters is None else iters
+
+    def terms(b):
+        return {"t_mem_s": b["total_bytes"] / hw.hbm_bw,
+                "t_compute_s": flops / hw.peak_flops,
+                "t_roofline_s": max(b["total_bytes"] / hw.hbm_bw,
+                                    flops / hw.peak_flops),
+                "encode_total_bytes": n_it * b["total_bytes"]}
+
+    return {
+        "shape": dataclasses.asdict(shape),
+        "flops_per_iter": flops,
+        "iters": n_it,
+        "hw": hw.name,
+        "gathered": {**g, **terms(g)},
+        "streamed": {**f, **terms(f)},
+        "bytes_ratio": f["total_bytes"] / g["total_bytes"],
+        "bytes_saved_per_iter": g["total_bytes"] - f["total_bytes"],
+    }

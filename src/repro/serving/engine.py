@@ -141,6 +141,14 @@ class EngineConfig:
     # its jnp oracle — parity testing / TPU-shaped runs; implies nothing
     # unless fused_attention is set
     fused_force_kernel: bool = False
+    # fused OMP prefill encoder (either layout): prompt compression runs the
+    # tile-batched early-exit encoder (kernels/omp_encode.py) with Pallas
+    # correlation/select kernels instead of the vmapped per-vector oracle;
+    # same codes (idx exact), same one-trace-per-(bucket, start) prefill
+    fused_omp: bool = False
+    # force the OMP selection kernels (interpret mode off-TPU) rather than
+    # their jnp oracles; implies nothing unless fused_omp is set
+    fused_omp_force_kernel: bool = False
 
 
 def _bucket(prompt_len: int, min_bucket: int) -> int:
@@ -193,7 +201,9 @@ class ContinuousBatchingEngine:
         self.engine_cfg = engine_cfg
         # the contiguous policy always exists: it runs B=1 prefill in both
         # layouts (and is the paged layout's differential oracle)
-        self.policy = LexicoPolicy(lex_cfg)
+        omp_backend = ("fused_kernel" if engine_cfg.fused_omp_force_kernel
+                       else "fused") if engine_cfg.fused_omp else "ref"
+        self.policy = LexicoPolicy(lex_cfg, omp_backend=omp_backend)
         self.pool = SlotPool(engine_cfg.n_slots)
         self.completed: Dict[int, SlotInfo] = {}
         self.metrics = EngineMetrics()
@@ -213,7 +223,8 @@ class ContinuousBatchingEngine:
             decode_policy = PagedLexicoPolicy(
                 lex_cfg, n_pages=n_pages, page_size=P,
                 fused=engine_cfg.fused_attention,
-                fused_force_kernel=engine_cfg.fused_force_kernel)
+                fused_force_kernel=engine_cfg.fused_force_kernel,
+                omp_backend=omp_backend)
             self._max_pages = max_pages
             if engine_cfg.share_prefixes:
                 self.prefix_index = PrefixIndex(
@@ -820,6 +831,10 @@ class ContinuousBatchingEngine:
             # a new (bucket, compress_start) trace: the elapsed time is
             # dominated by compilation, not prefill work
             self.metrics.record_compile(t1 - t0)
+        else:
+            # steady-state prompt compression: the phase timer feeds the
+            # prefill p50/p99 the fused-OMP before/after comparison reads
+            self.metrics.record_phase("prefill", t1 - t0)
         if self.tracer is not None:
             self.tracer.complete("prefill", self._tid(req.rid), t0, t1,
                                  bucket=bucket, compress_start=int(start))

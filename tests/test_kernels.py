@@ -52,6 +52,23 @@ def test_omp_corr_sweep(rng, B, m, N, bb, bn):
     np.testing.assert_allclose(np.asarray(mx), np.asarray(rmx), rtol=1e-6)
 
 
+@pytest.mark.parametrize("B,N,bb,bn", [(13, 72, 8, 32), (21, 100, 16, 64),
+                                       (5, 33, 8, 16), (1, 17, 4, 16)])
+def test_omp_corr_ragged(rng, B, N, bb, bn):
+    """B and N that don't divide the block sizes: pad rows are sliced off,
+    pad atoms stream through as selected and can never win."""
+    m = 12
+    D = jnp.asarray(make_unit_dict(rng, m, N), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(B, m)), jnp.float32)
+    sel = jnp.zeros((B, N), bool)
+    sel = sel.at[:, rng.integers(0, N, 3)].set(True)
+    arg, mx = omp_corr_argmax(r, D, sel, block_b=bb, block_n=bn, interpret=True)
+    assert arg.shape == mx.shape == (B,)
+    rarg, rmx = ref.omp_corr_ref(D, r, sel)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(rarg))
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(rmx), rtol=1e-6)
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**16), T=st.sampled_from([16, 48, 64]),
        s=st.sampled_from([2, 8]))

@@ -408,7 +408,9 @@ def test_observed_metrics_capture_compile_and_phases(traced_run):
     assert md["setup_s"] > 0.0
     assert md["tokens_per_s_ex_compile"] > md["tokens_per_s"]
     pt = md["phase_times"]
-    assert set(pt) == set(PHASES)          # swap engine runs all six phases
+    # swap engine runs all six step phases; the admission-path "prefill"
+    # timer appears too once any bucket prefills steady-state (post-compile)
+    assert set(PHASES) <= set(pt) <= set(PHASES) | {"prefill"}
     for name in PHASES:
         assert pt[name]["count"] > 0 and pt[name]["p99"] >= pt[name]["p50"]
     assert md["queue_latency_s_p99"] >= md["queue_latency_s_p50"] >= 0.0

@@ -7,7 +7,10 @@ import pytest
 
 from tests.conftest import given, settings, st
 
-from repro.core.omp import omp_batch, omp_multi_dict, reconstruct
+from repro.core.omp import (
+    clear_gram_cache, gram_cache_info, gram_for, omp_batch, omp_multi_dict,
+    reconstruct,
+)
 from repro.core.ref_omp import omp_ref_batch
 from tests.conftest import make_unit_dict
 
@@ -32,6 +35,41 @@ def test_omp_precomputed_gram_matches(rng):
     b = omp_batch(K, D, 5, use_gram=True, G=G)
     np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
     np.testing.assert_allclose(np.asarray(a.vals), np.asarray(b.vals), atol=1e-6)
+
+
+def test_gram_cache_single_materialisation(rng):
+    """Repeated omp_batch calls with G=None materialise DᵀD exactly once per
+    concrete dictionary; dropping the dictionary evicts its entry."""
+    clear_gram_cache()
+    D = jnp.asarray(make_unit_dict(rng, 16, 64), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    for _ in range(4):
+        omp_batch(K, D, 5, use_gram=True)
+    info = gram_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 3, info
+    # cached G is the real Gram, and identity-keyed: a copy recomputes
+    np.testing.assert_allclose(np.asarray(gram_for(D)),
+                               np.asarray(D.T @ D), atol=1e-6)
+    D2 = jnp.array(D)
+    omp_batch(K, D2, 5, use_gram=True)
+    assert gram_cache_info()["misses"] == 2
+    # weakref eviction: dropping the dictionaries empties the cache
+    del D, D2
+    import gc
+    gc.collect()
+    assert gram_cache_info()["size"] == 0
+    clear_gram_cache()
+
+
+def test_gram_cache_inline_under_trace(rng):
+    """Tracers can't be host-cached — gram_for computes inline under jit
+    without touching the cache."""
+    clear_gram_cache()
+    D = jnp.asarray(make_unit_dict(rng, 8, 32), jnp.float32)
+    G = jax.jit(gram_for)(D)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(D.T @ D), atol=1e-6)
+    assert gram_cache_info()["size"] == 0
+    clear_gram_cache()
 
 
 def test_exact_recovery_of_sparse_signals(rng):

@@ -1,0 +1,302 @@
+"""Fused batched-OMP prefill encoder: the encoder-parity contract.
+
+Four layers of pinning, mirroring tests/test_paged_sparse_attn.py and
+docs/kernels.md:
+
+  * differential sweep — ``omp_batch(backend="fused"/"fused_kernel")`` vs
+    the vmapped per-vector oracle (``backend="ref"``) across Gram /
+    Gram-free correlation, ``delta`` early stop, per-row ``s_cap`` tiers,
+    fp32/bf16 inputs and multi-tile batches. idx must match EXACTLY (the
+    greedy support is discrete — one flipped atom cascades), vals to fp32
+    accumulation-order tolerance;
+  * selection-kernel parity — ``omp_gram_argmax`` (interpret mode) vs
+    ``ref.omp_gram_corr_ref`` at ragged N, padded idx slots, and
+    tie-breaking pinned to the lowest atom index via duplicated atoms;
+  * property harness (hypothesis, optional) — s_cap-truncated codes equal
+    the smaller-s run, rows are independent (batch permutation equivariance),
+    and the early-exit ``while_loop`` is bitwise the ``fori_loop`` result;
+  * engine acceptance — ``fused_omp`` on (oracle AND forced kernel)
+    reproduces the baseline engine's greedy tokens exactly on a
+    prefix-shared + swap-tiered workload, with the prefill compile count
+    unchanged and decode still compiling once.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.core.omp import omp_batch
+from repro.kernels import ops, ref
+from repro.kernels.omp_corr import omp_gram_argmax
+from repro.kernels.omp_encode import omp_encode_batch
+from repro.models import model as M
+from repro.roofline.kernel_model import (
+    OMPEncodeShape, compare_omp_encode, omp_gathered_bytes,
+    omp_streamed_bytes,
+)
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, Request, SwapConfig,
+)
+from tests.conftest import given, settings, st, make_unit_dict
+
+# The fused path batches the matmuls/solves the oracle runs per-vector, so
+# vals differ by fp32 accumulation order only; the selected support must be
+# identical atom-for-atom.
+VTOL = dict(atol=2e-5, rtol=1e-5)
+
+
+def _setup(rng, B=21, m=16, N=72, dtype=jnp.float32):
+    D = jnp.asarray(make_unit_dict(rng, m, N), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(B, m)), jnp.float32).astype(dtype)
+    return K, D
+
+
+def _assert_same(res, exp):
+    np.testing.assert_array_equal(np.asarray(res.idx), np.asarray(exp.idx))
+    np.testing.assert_array_equal(np.asarray(res.nnz), np.asarray(exp.nnz))
+    np.testing.assert_allclose(np.asarray(res.vals), np.asarray(exp.vals),
+                               **VTOL)
+    np.testing.assert_allclose(np.asarray(res.resid2), np.asarray(exp.resid2),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# differential sweep vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["fused", "fused_kernel"])
+@pytest.mark.parametrize("use_gram", [True, False])
+@pytest.mark.parametrize("delta", [0.0, 0.35])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_ref_sweep(rng, backend, use_gram, delta, dtype):
+    K, D = _setup(rng, dtype=dtype)
+    exp = omp_batch(K, D, 6, use_gram=use_gram, delta=delta, backend="ref")
+    res = omp_batch(K, D, 6, use_gram=use_gram, delta=delta, backend=backend)
+    _assert_same(res, exp)
+    if delta > 0:
+        # the sweep actually exercises early stop: some rows terminate short
+        assert int(np.min(np.asarray(res.nnz))) < 6
+
+
+@pytest.mark.parametrize("backend", ["fused", "fused_kernel"])
+def test_fused_s_cap_tiers(rng, backend):
+    """Per-row sparsity tiers ride on one s_max-shaped call, both paths."""
+    K, D = _setup(rng)
+    cap = jnp.asarray(rng.integers(1, 7, K.shape[0]), jnp.int32)
+    exp = omp_batch(K, D, 6, s_cap=cap, backend="ref")
+    res = omp_batch(K, D, 6, s_cap=cap, backend=backend)
+    _assert_same(res, exp)
+    assert np.all(np.asarray(res.nnz) <= np.asarray(cap))
+
+
+def test_fused_multi_tile_and_batch_shape(rng):
+    """tile_b smaller than B exercises the pad + lax.map tile loop, and the
+    leading batch shape round-trips like the oracle's."""
+    D = jnp.asarray(make_unit_dict(rng, 16, 64), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(3, 2, 7, 16)), jnp.float32)
+    exp = omp_batch(K, D, 5, backend="ref")
+    res = omp_batch(K, D, 5, backend="fused", tile_b=8)  # 42 rows -> 6 tiles
+    assert res.vals.shape == (3, 2, 7, 5) and res.nnz.shape == (3, 2, 7)
+    _assert_same(res, exp)
+
+
+@pytest.mark.parametrize("backend", ["fused", "fused_kernel"])
+def test_tie_breaking_lowest_index(rng, backend):
+    """Duplicated atoms correlate exactly equally; every path must resolve
+    the tie to the lowest atom index (jnp.argmax first-max == the kernel's
+    strictly-greater cross-tile merge)."""
+    D = np.asarray(make_unit_dict(rng, 8, 32))
+    D[:, 19] = D[:, 3]
+    D[:, 27] = D[:, 3]  # triple tie spanning tiles at block_n <= 16
+    D = jnp.asarray(D, jnp.float32)
+    K = jnp.asarray(rng.normal(size=(9, 8)), jnp.float32)
+    exp = omp_batch(K, D, 4, backend="ref")
+    res = omp_batch(K, D, 4, backend=backend)
+    np.testing.assert_array_equal(np.asarray(res.idx), np.asarray(exp.idx))
+    assert not np.any(np.isin(np.asarray(res.idx), [19, 27]))
+
+
+# ---------------------------------------------------------------------------
+# selection-kernel parity (interpret mode) vs the gathered oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,N,s,bn", [(7, 72, 5, 32), (16, 64, 8, 64),
+                                      (3, 100, 4, 48), (1, 33, 2, 16)])
+def test_gram_argmax_parity_ragged(rng, B, N, s, bn):
+    """Streamed kernel == gathered oracle at ragged N (pad atoms masked),
+    partially-filled idx slots (trailing y zero), random selected masks."""
+    alpha0 = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+    G = jnp.asarray(rng.normal(size=(N, N)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, N, (B, s)), jnp.int32)
+    y = np.asarray(rng.normal(size=(B, s)), np.float32)
+    y[:, s // 2:] = 0.0  # unfilled suffix: idx there must be inert
+    y = jnp.asarray(y)
+    sel = jnp.zeros((B, N), bool).at[:, rng.integers(0, N, 3)].set(True)
+    arg, mx = omp_gram_argmax(alpha0, G, idx, y, sel, block_n=bn,
+                              interpret=True)
+    rarg, rmx = ref.omp_gram_corr_ref(alpha0, G, idx, y, sel)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(rarg))
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(rmx), **VTOL)
+
+
+def test_gram_select_op_dispatch(monkeypatch):
+    """omp_gram_select_op routes through resolve_dispatch: oracle only when
+    nothing asked for the kernel, force_kernel/interpret pin the kernel."""
+    calls = []
+    monkeypatch.setattr(ops, "_on_tpu", lambda: False)
+    monkeypatch.setattr(ops, "omp_gram_argmax",
+                        lambda *a, **k: calls.append("kernel"))
+    monkeypatch.setattr(ops.ref, "omp_gram_corr_ref",
+                        lambda *a, **k: calls.append("oracle"))
+    for kw, want in [(dict(), "oracle"),
+                     (dict(force_kernel=True), "kernel"),
+                     (dict(interpret=True), "kernel")]:
+        calls.clear()
+        ops.omp_gram_select_op(None, None, None, None, None, **kw)
+        assert calls == [want], (kw, calls)
+
+
+# ---------------------------------------------------------------------------
+# property harness (hypothesis optional — skips when not installed)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), c=st.integers(1, 5))
+def test_property_truncation_equals_smaller_s(seed, c):
+    """Greedy nesting survives fusion: capping at c inside an s_max-shaped
+    run yields exactly the code of an s_max=c run (paper §4.2.1)."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(make_unit_dict(rng, 12, 48), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(5, 12)), jnp.float32)
+    capped = omp_batch(K, D, 6, s_cap=jnp.full((5,), c, jnp.int32),
+                       backend="fused")
+    small = omp_batch(K, D, c, backend="fused")
+    np.testing.assert_array_equal(np.asarray(capped.idx)[:, :c],
+                                  np.asarray(small.idx))
+    np.testing.assert_allclose(np.asarray(capped.vals)[:, :c],
+                               np.asarray(small.vals), atol=1e-6)
+    assert np.all(np.asarray(capped.vals)[:, c:] == 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_row_independence(seed):
+    """Rows don't interact: permuting the batch permutes the outputs
+    bitwise (single tile, so the early-exit decision sees the same set)."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(make_unit_dict(rng, 12, 48), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(8, 12)), jnp.float32)
+    perm = jnp.asarray(rng.permutation(8))
+    a = omp_encode_batch(K, D, 5, G=D.T @ D, delta=0.3, tile_b=64)
+    b = omp_encode_batch(K[perm], D, 5, G=D.T @ D, delta=0.3, tile_b=64)
+    np.testing.assert_array_equal(np.asarray(a.vals)[perm], np.asarray(b.vals))
+    np.testing.assert_array_equal(np.asarray(a.idx)[perm], np.asarray(b.idx))
+    np.testing.assert_array_equal(np.asarray(a.nnz)[perm], np.asarray(b.nnz))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), delta=st.floats(0.0, 0.8))
+def test_property_while_equals_fori_bitwise(seed, delta):
+    """Early exit is a pure wall-clock win: inactive rows are no-ops in the
+    body, so stopping when no row is active is bitwise running all s_max
+    steps (the always-s_max baseline the benchmark measures against)."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(make_unit_dict(rng, 12, 48), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(6, 12)), jnp.float32)
+    G = D.T @ D
+    kw = dict(G=G, delta=float(delta), tile_b=64)
+    a = omp_encode_batch(K, D, 6, early_exit=True, **kw)
+    b = omp_encode_batch(K, D, 6, early_exit=False, **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# analytic kernel model: streamed selection must predict strictly fewer bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    OMPEncodeShape(batch=8, head_dim=16, n_dict=64, s=2),
+    OMPEncodeShape(batch=256, head_dim=64, n_dict=4096, s=16),
+    OMPEncodeShape(batch=4096, head_dim=128, n_dict=8192, s=32),
+])
+def test_kernel_model_streamed_strictly_fewer_bytes(shape):
+    g, f = omp_gathered_bytes(shape), omp_streamed_bytes(shape)
+    assert f["total_bytes"] < g["total_bytes"], shape
+    # the win is the dropped gather copy/reread + the (B, N) corr matrix
+    assert g["total_bytes"] - f["total_bytes"] >= (
+        g["gather_write"] + g["gather_reread"])
+    cmp = compare_omp_encode(shape)
+    assert cmp["bytes_ratio"] < 1.0
+    assert cmp["streamed"]["t_roofline_s"] <= cmp["gathered"]["t_roofline_s"]
+    assert cmp["flops_per_iter"] == shape.flops
+    # iters scales whole-encode bytes linearly (early exit's multiplier)
+    half = compare_omp_encode(shape, iters=max(1, shape.s // 2))
+    assert (half["streamed"]["encode_total_bytes"]
+            < cmp["streamed"]["encode_total_bytes"])
+
+
+# ---------------------------------------------------------------------------
+# engine acceptance: fused_omp on/off token identity, compile counts unchanged
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _shared_prefix_requests(rng, n=5):
+    system = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
+    reqs = []
+    for rid in range(n):
+        tail = rng.integers(0, CFG.vocab_size,
+                            int(rng.integers(2, 14))).astype(np.int32)
+        reqs.append(Request(rid=rid, prompt=np.concatenate([system, tail]),
+                            max_new_tokens=int(rng.integers(3, 6)), tier=8))
+    return reqs
+
+
+def test_engine_fused_omp_token_identity(served):
+    """The acceptance gate: fused_omp on (oracle AND forced kernel)
+    reproduces the baseline engine's greedy tokens exactly on a workload
+    exercising prefix sharing and the host swap tier; the prefill compile
+    count is unchanged (the backend is a static policy attribute, and the
+    while_loop traces once per bucket like the fori_loop) and decode still
+    compiles exactly once."""
+    params, bank = served
+    base = EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                        page_size=8, n_pages=18, share_prefixes=True,
+                        swap=SwapConfig())
+    tokens, engines = {}, {}
+    for mode, over in (("off", {}),
+                       ("fused", dict(fused_omp=True)),
+                       ("fused_kernel", dict(fused_omp=True,
+                                             fused_omp_force_kernel=True))):
+        eng = ContinuousBatchingEngine(params, CFG, LEX, bank,
+                                       dataclasses.replace(base, **over))
+        for r in _shared_prefix_requests(np.random.default_rng(11)):
+            eng.submit(r)
+        done = eng.run()
+        tokens[mode] = {rid: done[rid].generated_tokens for rid in done}
+        engines[mode] = eng
+    assert tokens["fused"] == tokens["off"]
+    assert tokens["fused_kernel"] == tokens["off"]
+    prefill_counts = {m: e.compile_counts["prefill"]
+                      for m, e in engines.items()}
+    assert prefill_counts["fused"] == prefill_counts["off"], prefill_counts
+    assert prefill_counts["fused_kernel"] == prefill_counts["off"], \
+        prefill_counts
+    for mode, eng in engines.items():
+        cc = eng.compile_counts
+        assert cc["decode"] == 1, (mode, cc)
+        assert eng.metrics.to_dict()["requests_completed"] == 5, mode

@@ -301,16 +301,19 @@ def test_all_ops_share_dispatch(rng, monkeypatch):
     monkeypatch.setattr(ops, "sparse_scores", stub("kernel"))
     monkeypatch.setattr(ops, "sparse_values", stub("kernel"))
     monkeypatch.setattr(ops, "omp_corr_argmax", stub("kernel"))
+    monkeypatch.setattr(ops, "omp_gram_argmax", stub("kernel"))
     monkeypatch.setattr(ops, "paged_sparse_attention", stub("kernel"))
     monkeypatch.setattr(ops.ref, "sparse_scores_ref", stub("oracle"))
     monkeypatch.setattr(ops.ref, "sparse_values_ref", stub("oracle"))
     monkeypatch.setattr(ops.ref, "omp_corr_ref", stub("oracle"))
+    monkeypatch.setattr(ops.ref, "omp_gram_corr_ref", stub("oracle"))
     monkeypatch.setattr(ops.ref, "paged_attention_ref", stub("oracle"))
 
     every_op = [
         lambda **kw: ops.scores_op(None, None, None, **kw),
         lambda **kw: ops.values_op(None, None, None, N=8, **kw),
         lambda **kw: ops.omp_select_op(None, None, None, **kw),
+        lambda **kw: ops.omp_gram_select_op(None, None, None, None, None, **kw),
         lambda **kw: ops.paged_attention_op(
             None, None, None, None, None, None, None, None,
             N=8, scale=1.0, **kw),
