@@ -45,6 +45,13 @@ identity, prefill tokens/s per mode from the steady-state phase timer, the
 streamed-vs-gathered selection bytes model, and the early-exit vs
 always-``s_max`` CPU wall clock with the ``nnz`` histogram.
 
+A seventh scenario (``--scenario router``) runs a staged two-wave family
+workload through a 3-replica ``ReplicaRouter`` under each routing policy
+(rr, load, affinity) plus a solo single-engine oracle: every policy's
+tokens must be bitwise identical to the solo run, and prefix-affinity
+routing must beat round-robin on BOTH aggregate tokens/s (ex-compile) and
+shared-page hit rate (exit non-zero otherwise — the CI gate).
+
     PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario all]
 """
 from __future__ import annotations
@@ -506,6 +513,131 @@ def run_omp_kernel_bench(*, n_requests: int = 12, n_slots: int = 4,
     }
 
 
+def _router_waves(cfg, seed: int, *, n_families: int = 3,
+                  n_followers: int = 12):
+    """Two-wave fleet workload: wave 1 is one seeder request per system-
+    prompt family (cold view — any policy spreads them), wave 2 is
+    ``n_followers`` requests over the same families in *random* family
+    order (so round-robin's cursor can't accidentally align with the
+    family that seeded each replica). The 64-token system prompts make the
+    family prefix's OMP the dominant per-request cost — exactly the regime
+    where routing a follower away from its family's cache re-buys the
+    whole prefix compression. Fresh Request objects every call."""
+    rng = np.random.default_rng(seed)
+    families = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+                for _ in range(n_families)]
+    wave1, wave2, rid = [], [], 0
+    for fam in families:
+        tail = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        wave1.append(Request(rid=rid, prompt=np.concatenate([fam, tail]),
+                             max_new_tokens=3, tier=16))
+        rid += 1
+    for _ in range(n_followers):
+        fam = families[int(rng.integers(0, n_families))]
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, 7))).astype(np.int32)
+        wave2.append(Request(rid=rid, prompt=np.concatenate([fam, tail]),
+                             max_new_tokens=int(rng.integers(3, 6)), tier=16))
+        rid += 1
+    return wave1, wave2
+
+
+def run_router_bench(*, n_replicas: int = 3, n_slots: int = 2,
+                     t_max: int = 96, seed: int = 0,
+                     page_size: int = 8, warm_steps: int = 16) -> dict:
+    """Multi-replica routing scenario: the same staged two-wave family
+    workload through a 3-replica ``ReplicaRouter`` under each routing
+    policy (rr, load, affinity), plus a solo single-engine oracle.
+
+    Wave 1 seeds each replica's prefix cache; after ``warm_steps`` fleet
+    steps the ``GlobalPrefixView`` is warm and wave 2 arrives. The headline
+    claims: (a) every policy's tokens are bitwise identical to the solo
+    run — routing decides *where* a request computes, never *what* (the
+    dictionary is universal, each request runs on exactly one engine);
+    (b) prefix-affinity routing beats round-robin on BOTH aggregate
+    tokens/s (ex-compile — in-process replicas compile sequentially) and
+    shared-page hit rate, because it concentrates each family on the
+    replica that already caches it while rr re-runs the family prefix's
+    OMP on every replica it sprays."""
+    import dataclasses
+
+    from repro.serving import ReplicaRouter
+
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+    engine_cfg = EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                              layout="paged", page_size=page_size,
+                              share_prefixes=True)
+
+    def staged(submit, step):
+        wave1, wave2 = _router_waves(cfg, seed)
+        for req in wave1:
+            submit(req)
+        for _ in range(warm_steps):
+            step()
+        for req in wave2:
+            submit(req)
+
+    # solo oracle: one engine with the fleet's total slots serves everything
+    solo = ContinuousBatchingEngine(
+        params, cfg, lex, bank,
+        dataclasses.replace(engine_cfg, n_slots=n_replicas * n_slots))
+    staged(solo.submit, solo.step)
+    done = solo.run()
+    solo_tokens = {rid: done[rid].generated_tokens for rid in done}
+    solo_stats = solo.metrics.to_dict()
+    solo.prefix_index.clear(solo.allocator)
+
+    sides, tokens = {}, {}
+    for policy in ("rr", "load", "affinity"):
+        router = ReplicaRouter(params, cfg, lex, bank, engine_cfg,
+                               n_replicas=n_replicas, policy=policy)
+        staged(router.submit, router.step)
+        done = router.run()
+        tokens[policy] = {rid: done[rid].generated_tokens for rid in done}
+        md = router.to_dict()
+        router.drain_caches()
+        md["pages_balanced"] = all(eng.allocator.check_balanced()
+                                   for eng in router.engines)
+        sides[policy] = md
+
+    rr, aff = sides["rr"], sides["affinity"]
+    return {
+        "solo": {k: solo_stats[k]
+                 for k in ("tokens_per_s", "tokens_per_s_ex_compile",
+                           "shared_page_hit_rate", "prefill_tokens_skipped",
+                           "requests_completed")},
+        "rr": rr,
+        "load": sides["load"],
+        "affinity": aff,
+        "routing": {
+            # the headline: same tokens everywhere, affinity wins both axes
+            "same_tokens_vs_solo": all(tokens[p] == solo_tokens
+                                       for p in sides),
+            "tokens_per_s_ex_compile_rr": rr["tokens_per_s_ex_compile"],
+            "tokens_per_s_ex_compile_load": (
+                sides["load"]["tokens_per_s_ex_compile"]),
+            "tokens_per_s_ex_compile_affinity": aff["tokens_per_s_ex_compile"],
+            "affinity_speedup_vs_rr": (
+                aff["tokens_per_s_ex_compile"]
+                / max(rr["tokens_per_s_ex_compile"], 1e-9)),
+            "shared_page_hit_rate_rr": rr["shared_page_hit_rate"],
+            "shared_page_hit_rate_affinity": aff["shared_page_hit_rate"],
+            "prefill_tokens_skipped_rr": rr["prefill_tokens_skipped"],
+            "prefill_tokens_skipped_affinity": aff["prefill_tokens_skipped"],
+            "requests_routed_affinity": aff["requests_routed"],
+            "affinity_wins_throughput": bool(
+                aff["tokens_per_s_ex_compile"]
+                > rr["tokens_per_s_ex_compile"]),
+            "affinity_wins_hit_rate": bool(
+                aff["shared_page_hit_rate"] > rr["shared_page_hit_rate"]),
+        },
+    }
+
+
 def run_layout_comparison(**kw) -> dict:
     """Same workload through both layouts + the memory/throughput deltas."""
     cont = run_serving_bench(layout="contiguous", **kw)
@@ -556,6 +688,11 @@ def run(emit):
     tiering = run_swap_bench()["tiering"]
     for key, val in tiering.items():
         emit(f"serving/swap/{key}", float(val))
+    routing = run_router_bench()["routing"]
+    for key, val in routing.items():
+        if key == "requests_routed_affinity":
+            continue                      # per-replica list, not a scalar row
+        emit(f"serving/router/{key}", float(val))
 
 
 def main():
@@ -569,7 +706,7 @@ def main():
                     default="both")
     ap.add_argument("--scenario",
                     choices=["mix", "prefix", "swap", "obs", "fused-kernel",
-                             "omp-kernel", "both", "all"],
+                             "omp-kernel", "router", "both", "all"],
                     default="mix",
                     help="mix: short/long layout comparison; prefix: many "
                          "clients sharing one system prompt (shared vs "
@@ -583,6 +720,10 @@ def main():
                          "prefill encoder off vs on vs forced-kernel "
                          "(token identity, prefill tokens/s, streamed-vs-"
                          "gathered bytes model, early-exit wall clock); "
+                         "router: 3-replica fleet, rr vs load vs affinity "
+                         "routing (token identity vs a solo engine; affinity "
+                         "must win tokens/s AND hit rate — exit non-zero "
+                         "otherwise, the CI gate); "
                          "both: mix+prefix; all: everything")
     ap.add_argument("--repeats", type=int, default=2,
                     help="obs scenario: runs per mode (overhead = best-of)")
@@ -621,9 +762,22 @@ def main():
             t_max=args.t_max, seed=args.seed, page_size=args.page_size,
             repeats=args.repeats, trace_path=args.trace,
             journal_path=args.journal, metrics_path=args.metrics_snapshot)
+    if args.scenario in ("router", "all"):
+        stats["router"] = run_router_bench(
+            t_max=args.t_max, seed=args.seed, page_size=args.page_size)
     if len(stats) == 1:
         stats = next(iter(stats.values()))
     print(json.dumps(stats, indent=2, default=float))
+    router_stats = stats.get("router", stats)
+    if "routing" in router_stats:
+        routing = router_stats["routing"]
+        failures = [claim for claim in ("same_tokens_vs_solo",
+                                        "affinity_wins_throughput",
+                                        "affinity_wins_hit_rate")
+                    if not routing[claim]]
+        if failures:
+            print(f"router scenario FAILED: {failures}", file=sys.stderr)
+            sys.exit(1)
     obs_stats = stats.get("obs", stats)
     if (args.overhead_budget is not None
             and "tracing_overhead" in obs_stats):

@@ -25,6 +25,15 @@ the overflow: cold pages demote to a pinned numpy mirror, promote back
 tier metrics (pages demoted/promoted, host bytes peak, promote stalls) are
 printed at the end.
 
+With ``--replicas N`` (implies paged + prefix sharing) the same workload
+streams through a ``ReplicaRouter`` fronting N engine replicas that share
+ONE dictionary bank; ``--route {rr,load,affinity}`` picks the routing
+policy. Prefix-affinity routing scores each request's expected
+prefix-page hits (from the cross-replica ``GlobalPrefixView``) against
+load skew, so requests sharing the system prompt herd onto the replica
+whose cache is already warm — the per-replica occupancy and hit-rate
+table at the end makes the difference visible against ``--route rr``.
+
 With ``--trace out.json`` the run records a request-lifecycle span tree
 (queued/prefill/per-step decode per request, demote/promote/stall instants)
 and writes Chrome/Perfetto trace JSON — open it at https://ui.perfetto.dev.
@@ -46,7 +55,8 @@ from benchmarks.common import BENCH_CFG, trained_params
 from benchmarks.memory_fidelity import trained_bank
 from repro.configs.base import LexicoConfig
 from repro.serving import (
-    ContinuousBatchingEngine, EngineConfig, ObsConfig, Request, SwapConfig,
+    ContinuousBatchingEngine, EngineConfig, ObsConfig, ReplicaRouter,
+    Request, SwapConfig,
 )
 from repro.serving.obs import replay_check
 
@@ -73,6 +83,16 @@ def main():
                          "device pool below the concurrent working set and "
                          "spill cold pages to a host-memory tier, promoting "
                          "them back on access — same tokens, smaller pool")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N engine replicas with a ReplicaRouter "
+                         "(implies --share-prefixes); ONE dictionary bank "
+                         "is shared by reference, everything stateful is "
+                         "per-replica")
+    ap.add_argument("--route", choices=["rr", "load", "affinity"],
+                    default="affinity",
+                    help="routing policy for --replicas: round-robin, "
+                         "least-loaded, or prefix-affinity (expected "
+                         "prefix-page hits vs load skew)")
     ap.add_argument("--fused-omp", action="store_true",
                     help="prefill through the fused batched-OMP encoder "
                          "(tile-batched early-exit iteration, Pallas "
@@ -91,6 +111,8 @@ def main():
                          "it as JSONL (post-hoc invariant replay)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.replicas > 1:
+        args.share_prefixes = True
     if args.share_prefixes or args.swap:
         args.layout = "paged"
 
@@ -118,8 +140,10 @@ def main():
              if (args.trace or args.journal) else None),
         kv_byte_budget=(args.budget_kb * 1024
                         if args.budget_kb else None))
-    eng = ContinuousBatchingEngine(params, cfg, lex, bank, engine_cfg)
-    if args.swap:
+    eng = None
+    if args.replicas == 1:
+        eng = ContinuousBatchingEngine(params, cfg, lex, bank, engine_cfg)
+    if args.swap and eng is not None:
         print(f"swap tier on: device pool {eng.allocator.capacity} usable "
               f"pages vs {args.n_slots * max_pages} fully provisioned — "
               "oversubscribed on purpose")
@@ -152,6 +176,41 @@ def main():
         for rid, (prompt, max_new, tier) in enumerate(workload):
             engine.submit(Request(rid=rid, prompt=prompt,
                                   max_new_tokens=max_new, tier=tier))
+
+    if args.replicas > 1:
+        router = ReplicaRouter(params, cfg, lex, bank, engine_cfg,
+                               n_replicas=args.replicas, policy=args.route)
+        submit_all(router)
+        done = router.run()
+        stats = router.to_dict()
+        print(f"\ncompleted {len(done)}/{args.n_requests} requests across "
+              f"{args.replicas} replicas (policy={stats['policy']}) "
+              f"in {stats['steps']} fleet decode steps")
+        for rid in sorted(done):
+            print(f"  req {rid} -> replica {router.replica_of(rid)} "
+                  f"(tier s{done[rid].request.tier}): "
+                  f"{done[rid].generated_tokens}")
+        print(f"\nfleet throughput: "
+              f"{stats['tokens_per_s_ex_compile']:.1f} tok/s ex-compile, "
+              f"{stats['tokens_generated']} tokens")
+        print("per-replica occupancy + prefix-cache hit rates:")
+        for sub in stats["per_replica"]:
+            admits = sub["prefix_hits"] + sub["prefix_misses"]
+            print(f"  replica {sub['replica']}: "
+                  f"routed {sub['requests_routed']:2d}  "
+                  f"occupancy mean {sub['slot_occupancy_mean']:.2f}  "
+                  f"hit rate {sub['shared_page_hit_rate']:.0%} "
+                  f"({sub['prefix_hits']}/{admits})  "
+                  f"prefill OMP skipped {sub['prefill_tokens_skipped']}")
+        print(f"fleet: hit rate {stats['shared_page_hit_rate']:.0%}, "
+              f"{stats['pages_aliased']} pages aliased, "
+              f"{stats['prefill_tokens_skipped']} prefill tokens skipped, "
+              f"{stats['bytes_deduped']} B deduplicated")
+        router.drain_caches()
+        balanced = all(e.allocator.check_balanced() for e in router.engines)
+        print(f"after dropping every replica's prefix pins: "
+              f"balanced={balanced}, global view empty={len(router.view) == 0}")
+        return
 
     base_done = base_prefill = None
     if args.fused_omp:

@@ -26,16 +26,28 @@ page-lifecycle event journal with a post-hoc replay invariant checker, and
 roofline analysis of the compiled decode/prefill hot loop — all opt-in per
 engine via ``EngineConfig(obs=ObsConfig(...))``.
 
+Scale-out (``router.py``, docs/routing.md): ``ReplicaRouter`` fronts N
+engine replicas — one dictionary bank shared by reference, everything
+stateful per-replica — with a pluggable routing policy (round-robin,
+least-loaded, prefix-affinity) scoring each request's expected prefix-page
+hits from a cross-replica ``GlobalPrefixView`` against load skew.
+
 See docs/serving.md and docs/tiered_memory.md for the full subsystem design.
 """
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
-from repro.serving.metrics import EngineMetrics
+from repro.serving.metrics import EngineMetrics, merge_snapshots
 from repro.serving.obs import ObsConfig
 from repro.serving.pages import (
     NULL_PAGE, PageAllocator, PagePoolExhausted, RefcountOverflow,
     pages_needed,
 )
-from repro.serving.prefix import PrefixIndex, SharePlan
+from repro.serving.prefix import (
+    GlobalPrefixView, PrefixIndex, SharePlan, prefix_paths,
+)
+from repro.serving.router import (
+    LeastLoadedPolicy, PrefixAffinityPolicy, ReplicaRouter, ReplicaSnapshot,
+    RoundRobinPolicy, RoutingPolicy, make_policy,
+)
 from repro.serving.scheduler import (
     FCFSScheduler, Request, request_kv_bytes, request_kv_bytes_paged,
     request_page_count,
@@ -48,10 +60,13 @@ from repro.serving.swap import (
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
-    "FCFSScheduler", "HostPageStore", "HostTierFull", "NULL_PAGE",
+    "FCFSScheduler", "GlobalPrefixView", "HostPageStore", "HostTierFull",
+    "LeastLoadedPolicy", "NULL_PAGE",
     "ObsConfig", "PageAllocator", "PageHandle", "PagePoolExhausted",
-    "PrefixIndex",
-    "RefcountOverflow", "Request", "SharePlan", "SlotInfo", "SlotPool",
-    "SwapConfig", "SwapManager", "SwapPolicy", "pages_needed",
+    "PrefixAffinityPolicy", "PrefixIndex",
+    "RefcountOverflow", "ReplicaRouter", "ReplicaSnapshot", "Request",
+    "RoundRobinPolicy", "RoutingPolicy", "SharePlan", "SlotInfo", "SlotPool",
+    "SwapConfig", "SwapManager", "SwapPolicy", "make_policy",
+    "merge_snapshots", "pages_needed", "prefix_paths",
     "request_kv_bytes", "request_kv_bytes_paged", "request_page_count",
 ]

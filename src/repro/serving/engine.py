@@ -254,6 +254,14 @@ class ContinuousBatchingEngine:
         self.scheduler.on_reject = self._on_reject
         if self.prefix_index is not None:
             self.prefix_index.on_evict = self._on_prefix_evict
+            if self.journal is not None:
+                # mirror prefix-pin lifecycle into the journal: the
+                # cross-replica replay check (replay_check_multi) compares
+                # these against the router's GlobalPrefixView events
+                j = self.journal
+                self.prefix_index.add_observer(
+                    lambda path: j.emit("prefix_publish", path=path.hex()),
+                    lambda path: j.emit("prefix_drop", path=path.hex()))
         # first-trace compile detection: the decode step compiles exactly
         # once, prefill once per (bucket, compress_start) pair — when a
         # timed call grew the jit cache, the elapsed time is compile time,
@@ -432,6 +440,22 @@ class ContinuousBatchingEngine:
         bytes move here, a promoted page's bytes move back, and no page is
         ever counted in both (tests/test_memory_accounting.py)."""
         return self.swap.host.bytes_resident if self.swap is not None else 0
+
+    def load_state(self) -> Dict[str, int]:
+        """Instantaneous load signals a multi-replica router snapshots
+        before each routing decision (pure host-side reads, no device
+        sync): queue depth + projected backlog bytes, slot occupancy, and
+        the two residency pressures (device bytes, pool free pages)."""
+        return {
+            "queue_depth": len(self.scheduler),
+            "queued_bytes": self.scheduler.queued_bytes(),
+            "active_slots": len(self.pool.active_slots()),
+            "n_slots": self.engine_cfg.n_slots,
+            "kv_bytes_resident": self.kv_bytes_resident(),
+            "host_bytes_resident": self.host_bytes_resident(),
+            "free_pages": self.allocator.n_free if self.paged else 0,
+            "total_pages": self.allocator.capacity if self.paged else 0,
+        }
 
     # -------------------------------------------------- observability bits
 

@@ -409,3 +409,109 @@ class EngineMetrics:
         out["compile_s"] = self.compile_s
         out["tokens_per_s_ex_compile"] = self.tokens_generated / el_ex_compile
         return out
+
+
+def _wmean(snaps: List[Dict], key: str, weights: List[float]) -> float:
+    pairs = [(s[key], w) for s, w in zip(snaps, weights) if key in s]
+    total = sum(w for _, w in pairs)
+    if total <= 0:
+        vals = [v for v, _ in pairs]
+        return sum(vals) / len(vals) if vals else 0.0
+    return sum(v * w for v, w in pairs) / total
+
+
+def _merge_phase(summaries: List[Dict]) -> Dict[str, float]:
+    """Pool one phase's per-replica count/mean/p50/p99/max summaries."""
+    counts = [s.get("count", 0) for s in summaries]
+    n = sum(counts)
+    out = {"count": n,
+           "mean": (sum(s["mean"] * c for s, c in zip(summaries, counts)) / n
+                    if n else 0.0)}
+    for q in ("p50", "p99"):
+        out[q] = (sum(s[q] * c for s, c in zip(summaries, counts)) / n
+                  if n else 0.0)
+    out["max"] = max((s.get("max", 0.0) for s in summaries), default=0.0)
+    if any("p999" in s for s in summaries):
+        have = [(s, c) for s, c in zip(summaries, counts) if "p999" in s]
+        hn = sum(c for _, c in have)
+        out["p999"] = (sum(s["p999"] * c for s, c in have) / hn
+                       if hn else 0.0)
+    return out
+
+
+def merge_snapshots(snaps: List[Dict]) -> Dict:
+    """Combine per-replica ``EngineMetrics.to_dict()`` snapshots into one
+    fleet-level dict with the **same key schema** as a single engine's.
+
+    Semantics per metric class: counters sum; peaks and wall-clock gauges
+    take the max (never summed — per-replica peaks at different instants
+    don't coexist); per-step means pool step-weighted; per-admission
+    latency stats pool prefill-weighted (percentiles approximately — pool
+    raw samples for exact fleet percentiles); rates are *recomputed* from
+    the merged numerators/denominators, never averaged. ``tokens_per_s`` =
+    total tokens / slowest replica's elapsed — the fleet's aggregate
+    throughput under concurrent replicas. ``tokens_per_s_ex_compile``
+    subtracts the summed compile time: replicas compiled in one process
+    compile sequentially, so total compile wall time is the sum.
+    """
+    if not snaps:
+        raise ValueError("merge_snapshots needs at least one snapshot")
+    steps = [float(s.get("steps", 0)) for s in snaps]
+    prefills = [float(s.get("prefills", 0)) for s in snaps]
+    out: Dict = {}
+    out["elapsed_s"] = max(s["elapsed_s"] for s in snaps)
+    for k in ("steps", "prefills", "requests_completed", "tokens_generated",
+              "prompt_tokens_processed"):
+        out[k] = sum(s[k] for s in snaps)
+    el = max(out["elapsed_s"], 1e-9)
+    out["tokens_per_s"] = out["tokens_generated"] / el
+    out["decode_tokens_per_step"] = (out["tokens_generated"] / out["steps"]
+                                     if out["steps"] else 0.0)
+    out["slot_occupancy_mean"] = _wmean(snaps, "slot_occupancy_mean", steps)
+    out["slot_occupancy_peak"] = max(s["slot_occupancy_peak"] for s in snaps)
+    out["kv_bytes_in_flight_mean"] = _wmean(
+        snaps, "kv_bytes_in_flight_mean", steps)
+    out["kv_bytes_in_flight_peak"] = max(
+        s["kv_bytes_in_flight_peak"] for s in snaps)
+    out["kv_bytes_resident_mean"] = _wmean(
+        snaps, "kv_bytes_resident_mean", steps)
+    out["kv_bytes_resident_peak"] = max(
+        s["kv_bytes_resident_peak"] for s in snaps)
+    out["pages_in_use_peak"] = max(s["pages_in_use_peak"] for s in snaps)
+    out["queue_latency_s_mean"] = _wmean(
+        snaps, "queue_latency_s_mean", prefills)
+    out["queue_latency_s_max"] = max(
+        s["queue_latency_s_max"] for s in snaps)
+    for k in ("prefill_tokens_compressed", "prefill_tokens_skipped",
+              "prefix_hits", "prefix_misses"):
+        out[k] = sum(s[k] for s in snaps)
+    lookups = out["prefix_hits"] + out["prefix_misses"]
+    out["shared_page_hit_rate"] = (out["prefix_hits"] / lookups
+                                   if lookups else 0.0)
+    for k in ("pages_aliased", "pages_copied", "bytes_deduped"):
+        out[k] = sum(s[k] for s in snaps)
+    out["shared_pages_peak"] = max(s["shared_pages_peak"] for s in snaps)
+    for k in ("pages_demoted", "pages_promoted", "promote_stall_steps"):
+        out[k] = sum(s[k] for s in snaps)
+    out["host_bytes_resident_mean"] = _wmean(
+        snaps, "host_bytes_resident_mean", steps)
+    out["host_bytes_resident_peak"] = max(
+        s["host_bytes_resident_peak"] for s in snaps)
+    out["queue_latency_s_p50"] = _wmean(
+        snaps, "queue_latency_s_p50", prefills)
+    out["queue_latency_s_p99"] = _wmean(
+        snaps, "queue_latency_s_p99", prefills)
+    if any("queue_latency_s_p999" in s for s in snaps):
+        out["queue_latency_s_p999"] = _wmean(
+            snaps, "queue_latency_s_p999", prefills)
+    phases: Dict[str, List[Dict]] = {}
+    for s in snaps:
+        for name, summary in s.get("phase_times", {}).items():
+            phases.setdefault(name, []).append(summary)
+    out["phase_times"] = {name: _merge_phase(v) for name, v in phases.items()}
+    out["admission_rejections"] = sum(s["admission_rejections"] for s in snaps)
+    out["setup_s"] = sum(s["setup_s"] for s in snaps)
+    out["compile_s"] = sum(s["compile_s"] for s in snaps)
+    el_ex = max(el - out["compile_s"], 1e-9)
+    out["tokens_per_s_ex_compile"] = out["tokens_generated"] / el_ex
+    return out

@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.serving.obs.journal import (
-    EventJournal, JournalViolation, replay_check,
+    EventJournal, JournalViolation, replay_check, replay_check_multi,
 )
 from repro.serving.obs.registry import (
     Counter, Gauge, Histogram, MetricsRegistry, percentile,
@@ -40,6 +40,7 @@ __all__ = [
     "EventJournal",
     "JournalViolation",
     "replay_check",
+    "replay_check_multi",
     "MetricsRegistry",
     "Counter",
     "Gauge",

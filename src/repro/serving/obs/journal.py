@@ -26,12 +26,22 @@ Event schema (one JSON object per line in the saved JSONL):
 ``stall``           ``rid``, ``slot`` (promote-stall: pool too full)
 ``retire``          ``rid``, ``slot``
 ``reject``          ``rid`` (admission reservation check failed)
+``prefix_publish``  ``path`` (hex chain digest: prefix-index pin created)
+``prefix_drop``     ``path`` (pin released — evict/trim/clear)
 ==================  =====================================================
+
+A multi-replica deployment adds the **router log** (one journal for the
+whole fleet): ``route`` (``rid``, ``replica``, ``policy``, ``hit_pages``)
+plus the ``GlobalPrefixView``'s mirror of every replica's prefix pins —
+``view_publish`` / ``view_drop`` (``replica``, ``path``).
 
 Every event also carries a monotonically increasing ``seq``.
 :func:`replay_check` replays a journal and reports every invariant
 violation it finds — refcount conservation, double alloc/free, use after
 free, tier-transfer mismatches, and end-of-trace leaks on either tier.
+:func:`replay_check_multi` replays per-replica journals against the router
+log and adds the cross-replica invariants (single admission per request,
+route/admit agreement, view/index consistency).
 """
 from __future__ import annotations
 
@@ -40,7 +50,8 @@ import json
 from collections import Counter as _Multiset
 from typing import Dict, Iterable, List, Sequence
 
-__all__ = ["EventJournal", "JournalViolation", "replay_check"]
+__all__ = ["EventJournal", "JournalViolation", "replay_check",
+           "replay_check_multi"]
 
 
 class EventJournal:
@@ -216,4 +227,100 @@ def replay_check(events: Iterable[Dict]) -> List[JournalViolation]:
         bad(-1, "device-leak", f"page {page} still holds {refs} ref(s)")
     for hid, refs in sorted(host.items()):
         bad(-1, "host-leak", f"handle {hid} still holds {refs} ref(s)")
+    return out
+
+
+def replay_check_multi(replica_events: Dict[object, Sequence[Dict]],
+                       router_events: Iterable[Dict]) -> List[JournalViolation]:
+    """Cross-replica replay: per-replica journals + the router's log.
+
+    ``replica_events`` maps replica id -> that engine's journal (the full
+    per-replica :func:`replay_check` runs on each, violations prefixed with
+    the replica id). ``router_events`` is the router's admission log:
+    ``route`` events (``rid``, ``replica``) plus the
+    :class:`~repro.serving.prefix.GlobalPrefixView`'s ``view_publish`` /
+    ``view_drop`` events (``replica``, ``path``).
+
+    Cross-replica invariants, on top of the per-replica ones:
+
+      * each ``rid`` routed at most once (``duplicate-route``) and admitted
+        on at most one replica across the fleet (``duplicate-admission``);
+      * every admission was routed, and to the replica that admitted it
+        (``unrouted-admission`` / ``route-mismatch``);
+      * the view's lifecycle is sane: no double publish, no drop of an
+        unknown entry (``view-double-publish`` / ``view-drop-missing``);
+      * end of trace: each replica's live prefix pins (its journal's
+        ``prefix_publish`` minus ``prefix_drop``) equal exactly the paths
+        the view holds for it — a resident chunk the view doesn't know
+        about is ``view-missing-path`` (routing can never find it), a view
+        entry the replica no longer backs is ``view-stale-path`` (a view
+        entry outlived its index pin).
+    """
+    out: List[JournalViolation] = []
+
+    def bad(seq: int, kind: str, detail: str) -> None:
+        out.append(JournalViolation(seq=seq, kind=kind, detail=detail))
+
+    routed: Dict[object, object] = {}       # rid -> replica
+    view_live: Dict[object, set] = {}       # replica -> live paths
+    for e in router_events:
+        seq = int(e.get("seq", -1))
+        ev = e["ev"]
+        if ev == "route":
+            rid = e["rid"]
+            if rid in routed:
+                bad(seq, "duplicate-route",
+                    f"rid {rid} routed to replica {e['replica']} after "
+                    f"replica {routed[rid]}")
+            else:
+                routed[rid] = e["replica"]
+        elif ev == "view_publish":
+            live = view_live.setdefault(e["replica"], set())
+            if e["path"] in live:
+                bad(seq, "view-double-publish",
+                    f"replica {e['replica']} path {e['path']}")
+            live.add(e["path"])
+        elif ev == "view_drop":
+            live = view_live.setdefault(e["replica"], set())
+            if e["path"] not in live:
+                bad(seq, "view-drop-missing",
+                    f"replica {e['replica']} path {e['path']}")
+            live.discard(e["path"])
+
+    admitted: Dict[object, object] = {}     # rid -> replica
+    for replica, events in replica_events.items():
+        for v in replay_check(events):
+            bad(v.seq, v.kind, f"replica {replica}: {v.detail}")
+        live_paths: set = set()
+        for e in events:
+            seq = int(e.get("seq", -1))
+            ev = e["ev"]
+            if ev == "admit":
+                rid = e["rid"]
+                if rid in admitted:
+                    bad(seq, "duplicate-admission",
+                        f"rid {rid} admitted on replica {replica} after "
+                        f"replica {admitted[rid]}")
+                else:
+                    admitted[rid] = replica
+                if rid not in routed:
+                    bad(seq, "unrouted-admission",
+                        f"rid {rid} admitted on replica {replica} with no "
+                        "route event")
+                elif routed[rid] != replica:
+                    bad(seq, "route-mismatch",
+                        f"rid {rid} routed to replica {routed[rid]} but "
+                        f"admitted on replica {replica}")
+            elif ev == "prefix_publish":
+                live_paths.add(e["path"])
+            elif ev == "prefix_drop":
+                live_paths.discard(e["path"])
+        known = view_live.get(replica, set())
+        for path in sorted(live_paths - known):
+            bad(-1, "view-missing-path",
+                f"replica {replica} caches {path} but the view doesn't "
+                "know it")
+        for path in sorted(known - live_paths):
+            bad(-1, "view-stale-path",
+                f"view entry {path} outlived replica {replica}'s pin")
     return out

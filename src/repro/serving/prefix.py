@@ -69,6 +69,40 @@ def _chunk_hash(tokens: Tuple[int, ...]) -> bytes:
     return h.digest()
 
 
+def _tier_seed(tier: int) -> bytes:
+    """Root path digest of one tier's trie (tiers never share pages, so the
+    same token chunks under different tiers get disjoint path digests)."""
+    return hashlib.blake2b(b"lexico-tier:%d" % int(tier),
+                           digest_size=16).digest()
+
+
+def _chain(parent_path: bytes, chunk_key: bytes) -> bytes:
+    """Path digest of a child node: digest of the whole root-to-node chunk
+    chain, computed incrementally from the parent's path."""
+    return hashlib.blake2b(parent_path + chunk_key, digest_size=16).digest()
+
+
+def prefix_paths(tokens: Sequence[int], tier: int, n_codes: int,
+                 page_size: int) -> List[bytes]:
+    """Cumulative path digests of a token key's page chunks.
+
+    ``paths[j]`` identifies the trie node holding compressed positions
+    ``[j*P, (j+1)*P)`` for this exact token prefix and tier — the same
+    digest :meth:`PrefixIndex.register` stamps on the node it creates, so a
+    :class:`GlobalPrefixView` keyed on these digests can answer "which
+    replica already caches this prefix" without any token or page state.
+    """
+    if n_codes <= 0:
+        return []
+    chunks = PrefixIndex._chunks(tokens[:n_codes], page_size)
+    path = _tier_seed(tier)
+    out: List[bytes] = []
+    for chunk in chunks:
+        path = _chain(path, _chunk_hash(chunk))
+        out.append(path)
+    return out
+
+
 @dataclasses.dataclass
 class _Node:
     """One trie node = one cached physical page at one page position.
@@ -88,6 +122,10 @@ class _Node:
     last_used: int = 0
     hits: int = 0
     children: Dict[bytes, "_Node"] = dataclasses.field(default_factory=dict)
+    # root-to-node chain digest (see prefix_paths); roots carry the tier
+    # seed so children chain off it. The digest survives swap_out/swap_in —
+    # it names the *cache entry*, not the physical page backing it.
+    path: bytes = b""
 
 
 @dataclasses.dataclass
@@ -138,7 +176,24 @@ class PrefixIndex:
         # after every destructive evict() pass that dropped a pin (the
         # engine routes it into metrics + the request trace)
         self.on_evict = None
+        # observers: (on_publish, on_drop) pairs called with the node's path
+        # digest when a pin is created / dropped. Pure notifications — they
+        # carry no page ids, so an observer can never hold a page ref.
+        self._observers: List[Tuple] = []
         self._clock = 0
+
+    def add_observer(self, on_publish, on_drop) -> None:
+        """Subscribe to pin lifecycle: ``on_publish(path)`` fires when
+        :meth:`register` pins a new page, ``on_drop(path)`` when
+        :meth:`_unpin` releases one (evict/trim/clear). ``path`` is the
+        node's chain digest (:func:`prefix_paths`) — observers see *which
+        prefix chunk* is cached, never the physical page behind it."""
+        self._observers.append((on_publish, on_drop))
+
+    def live_paths(self) -> set:
+        """Chain digests of every currently-pinned cache entry (both
+        device- and host-tier resident)."""
+        return {node.path for node in self._registered.values()}
 
     # ------------------------------------------------------------- internals
 
@@ -148,7 +203,8 @@ class PrefixIndex:
 
     def _root(self, tier: int) -> _Node:
         if tier not in self._roots:
-            self._roots[tier] = _Node(tokens=(), page=NULL_PAGE, valid=0)
+            self._roots[tier] = _Node(tokens=(), page=NULL_PAGE, valid=0,
+                                      path=_tier_seed(tier))
         return self._roots[tier]
 
     @staticmethod
@@ -307,11 +363,13 @@ class PrefixIndex:
             if page in self._registered:   # one pin per physical page
                 break
             child = _Node(tokens=chunks[j], page=page, valid=valid,
-                          last_used=now)
+                          last_used=now, path=_chain(node.path, key))
             node.children[key] = child
             self._registered[page] = child
             allocator.incref(page)
             pinned += 1
+            for on_publish, _ in self._observers:
+                on_publish(child.path)
             node = child
         if self.max_cached_pages is not None:
             over = len(self._registered) - self.max_cached_pages
@@ -339,6 +397,8 @@ class PrefixIndex:
             freed = allocator.refcount(page) == 1
             allocator.decref(page)
         node.page, node.valid = NULL_PAGE, 0
+        for _, on_drop in self._observers:
+            on_drop(node.path)
         return freed
 
     def evict(self, allocator: PageAllocator, *, max_pages: int,
@@ -422,3 +482,112 @@ class PrefixIndex:
                 freed += 1
         self._roots.clear()
         return freed
+
+
+class GlobalPrefixView:
+    """Cross-replica index of cached prefix chunks: path digest → replica.
+
+    A router fronting N engine replicas :meth:`attach`\\ es each replica's
+    :class:`PrefixIndex`; from then on every pin the replica publishes or
+    drops updates this view synchronously through the observer hooks. The
+    view stores **only** chain digests, replica ids, and hit counters —
+    never tokens, page ids, or :class:`~repro.serving.swap.PageHandle`\\ s —
+    so it can never pin a page or leak one: a view entry exists exactly as
+    long as the replica's own index pin does.
+
+    Routing reads it through :meth:`hit_pages`: given a request's digest
+    chain (:func:`prefix_paths`), how many leading pages does each replica
+    already cache? The answer is *advisory* — exactness never depends on
+    it, because whichever replica admits the request runs its own
+    :meth:`PrefixIndex.lookup` (which re-checks raw tokens, not digests)
+    and its own prefill. A stale or collided view entry costs at most a
+    missed sharing opportunity on the routed replica.
+
+    ``journal`` (optional :class:`~repro.serving.obs.EventJournal`)
+    receives ``view_publish`` / ``view_drop`` events, the router-side half
+    of the cross-replica replay check
+    (:func:`repro.serving.obs.replay_check_multi`).
+    """
+
+    def __init__(self, journal=None):
+        self._paths: Dict[bytes, Dict[int, int]] = {}  # path -> {replica: hits}
+        self._replicas: List[int] = []
+        self.journal = journal
+
+    def attach(self, replica_id: int, index: PrefixIndex) -> None:
+        """Wire one replica's index into the view (call once per replica,
+        before any admissions register pages)."""
+        if replica_id in self._replicas:
+            raise ValueError(f"replica {replica_id} already attached")
+        self._replicas.append(replica_id)
+        index.add_observer(
+            lambda path: self.note_publish(replica_id, path),
+            lambda path: self.note_drop(replica_id, path))
+
+    # ------------------------------------------------------- observer inputs
+
+    def note_publish(self, replica_id: int, path: bytes) -> None:
+        self._paths.setdefault(path, {}).setdefault(replica_id, 0)
+        if self.journal is not None:
+            self.journal.emit("view_publish", replica=replica_id,
+                              path=path.hex())
+
+    def note_drop(self, replica_id: int, path: bytes) -> None:
+        entry = self._paths.get(path)
+        if entry is None or replica_id not in entry:
+            raise KeyError(
+                f"replica {replica_id} dropped unknown path {path.hex()}")
+        del entry[replica_id]
+        if not entry:
+            del self._paths[path]
+        if self.journal is not None:
+            self.journal.emit("view_drop", replica=replica_id,
+                              path=path.hex())
+
+    # --------------------------------------------------------- routing reads
+
+    @property
+    def replicas(self) -> List[int]:
+        return list(self._replicas)
+
+    def __len__(self) -> int:
+        return len(self._paths)
+
+    def knows(self, replica_id: int, path: bytes) -> bool:
+        return replica_id in self._paths.get(path, ())
+
+    def hit_frequency(self, path: bytes, replica_id: int) -> int:
+        return self._paths.get(path, {}).get(replica_id, 0)
+
+    def paths_for(self, replica_id: int) -> set:
+        """All digests the view believes ``replica_id`` caches (mirror of
+        that replica's ``PrefixIndex.live_paths()``)."""
+        return {p for p, entry in self._paths.items() if replica_id in entry}
+
+    def hit_pages(self, paths: Sequence[bytes]) -> Dict[int, int]:
+        """Expected aliasable pages per replica for a request whose digest
+        chain is ``paths``: the length of the longest *leading* run of
+        digests each replica caches (sharing is prefix-aligned, so a cached
+        chunk behind a missing one is unreachable)."""
+        hits = {r: 0 for r in self._replicas}
+        live = set(hits)
+        for path in paths:
+            if not live:
+                break
+            entry = self._paths.get(path, ())
+            for r in list(live):
+                if r in entry:
+                    hits[r] += 1
+                else:
+                    live.discard(r)
+        return hits
+
+    def record_hits(self, replica_id: int, paths: Sequence[bytes]) -> None:
+        """Bump hit frequency on the leading run of ``paths`` cached by
+        ``replica_id`` (called by the router when it routes a request
+        there)."""
+        for path in paths:
+            entry = self._paths.get(path)
+            if entry is None or replica_id not in entry:
+                break
+            entry[replica_id] += 1

@@ -1,0 +1,401 @@
+"""Multi-replica serving: N engine replicas behind a prefix-affinity router.
+
+Lexico's universal dictionary is the property that makes data-parallel
+scale-out trivial to keep *exact*: the dictionary is input-agnostic, so N
+replicas share one replicated :class:`~repro.core.dictionary.DictionaryBank`
+(constructed once, passed to every engine by reference) while everything
+stateful — slot pool, page allocator, prefix index, swap tier, scheduler —
+stays strictly per-replica. A request is computed end-to-end by exactly one
+replica, and every per-engine exactness gate (prefix sharing, swap, fused
+kernels) already proves that one engine's tokens match the solo oracle;
+routing therefore cannot change tokens, only *where* they are computed.
+``tests/test_router.py`` pins that argument with a cross-replica
+differential for every policy.
+
+What routing *can* change is efficiency. Prefix sharing is per-replica: a
+system prompt cached on replica 0 is invisible to replica 1, which must
+re-run the prefix's OMP from scratch. The router keeps a
+:class:`~repro.serving.prefix.GlobalPrefixView` — a cross-replica mirror of
+every replica's prefix-index pins, keyed on chain digests
+(:func:`~repro.serving.prefix.prefix_paths`), holding no page references —
+and the :class:`PrefixAffinityPolicy` scores each replica by expected
+aliasable pages minus load, so same-prefix traffic lands where the pages
+already are. :class:`RoundRobinPolicy` and :class:`LeastLoadedPolicy` are
+the baselines the benchmark compares against
+(``benchmarks/serving_throughput.py --scenario router``).
+
+Policies are deterministic pure functions of ``(request, snapshots,
+hit-pages)`` — no clocks, no randomness — so routing decisions are
+replayable and property-testable (monotone in hits, anti-monotone in load,
+lowest-replica-id tie-breaks; ``tests/test_router.py``). See
+``docs/routing.md`` for the topology, the view's staleness contract, and
+the exactness argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, _bucket
+from repro.serving.metrics import merge_snapshots
+from repro.serving.obs import EventJournal, TraceRecorder
+from repro.serving.obs.registry import MetricsRegistry, percentile
+from repro.serving.prefix import GlobalPrefixView, prefix_paths
+from repro.serving.scheduler import Request
+
+__all__ = [
+    "ReplicaRouter", "ReplicaSnapshot", "RoutingPolicy",
+    "RoundRobinPolicy", "LeastLoadedPolicy", "PrefixAffinityPolicy",
+]
+
+# the router's trace track (requests get per-rid tracks on their replica's
+# recorder; the router records only routing instants)
+ROUTER_TID = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSnapshot:
+    """One replica's load signals at routing time (pure host-side reads —
+    see ``ContinuousBatchingEngine.load_state``)."""
+    replica_id: int
+    queue_depth: int
+    active_slots: int
+    n_slots: int
+    queued_bytes: int
+    kv_bytes_resident: int
+    host_bytes_resident: int
+    free_pages: int
+    total_pages: int
+
+    @property
+    def load(self) -> float:
+        """Scalar load: queued requests (each >= one future slot-tenancy)
+        plus two bounded [0, 1] pressure terms — slot occupancy and
+        resident-page pressure — so queue depth dominates and the pressure
+        terms break ties between equally-backlogged replicas. Deterministic
+        in the snapshot; no clocks."""
+        occupancy = self.active_slots / self.n_slots if self.n_slots else 0.0
+        if self.total_pages:
+            resident = (self.total_pages - self.free_pages) / self.total_pages
+        else:
+            resident = 0.0
+        return self.queue_depth + occupancy + resident
+
+
+class RoutingPolicy:
+    """Pluggable routing decision: ``route(request, snapshots, hit_pages)
+    -> replica_id``.
+
+    ``snapshots`` is one :class:`ReplicaSnapshot` per replica;
+    ``hit_pages`` maps replica id -> expected aliasable prefix pages for
+    this request (``GlobalPrefixView.hit_pages``; all zeros when sharing is
+    off). Implementations must be deterministic given their inputs — any
+    state they keep (round-robin's cursor) must advance the same way for
+    the same call sequence.
+    """
+
+    name = "base"
+
+    def route(self, request: Request, snapshots: Sequence[ReplicaSnapshot],
+              hit_pages: Dict[int, int]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinPolicy(RoutingPolicy):
+    """Cycle through replicas in id order, ignoring load and prefix state."""
+
+    name = "rr"
+
+    def __init__(self) -> None:
+        self._cursor = 0
+
+    def route(self, request: Request, snapshots: Sequence[ReplicaSnapshot],
+              hit_pages: Dict[int, int]) -> int:
+        ids = sorted(s.replica_id for s in snapshots)
+        choice = ids[self._cursor % len(ids)]
+        self._cursor += 1
+        return choice
+
+
+class LeastLoadedPolicy(RoutingPolicy):
+    """Lowest :attr:`ReplicaSnapshot.load`; lowest replica id on ties."""
+
+    name = "load"
+
+    def route(self, request: Request, snapshots: Sequence[ReplicaSnapshot],
+              hit_pages: Dict[int, int]) -> int:
+        return min(snapshots, key=lambda s: (s.load, s.replica_id)).replica_id
+
+
+class PrefixAffinityPolicy(RoutingPolicy):
+    """Score = ``affinity_weight * hit_pages - load``; highest wins.
+
+    The score is monotone in a replica's expected prefix-hit pages and
+    anti-monotone in its load, with lowest-replica-id tie-breaks — and with
+    zero hits everywhere it degenerates *exactly* to
+    :class:`LeastLoadedPolicy` (argmax of ``-load`` with the same
+    tie-break). ``affinity_weight`` prices one aliasable page in load
+    units: the default 1.0 means one cached page outweighs one queued
+    request, which is the right order of magnitude because a hit page
+    saves a whole page of prefill OMP on the routed replica.
+    """
+
+    name = "affinity"
+
+    def __init__(self, affinity_weight: float = 1.0) -> None:
+        if affinity_weight <= 0:
+            raise ValueError("affinity_weight must be positive")
+        self.affinity_weight = affinity_weight
+
+    def score(self, hit_pages: int, load: float) -> float:
+        return self.affinity_weight * hit_pages - load
+
+    def route(self, request: Request, snapshots: Sequence[ReplicaSnapshot],
+              hit_pages: Dict[int, int]) -> int:
+        return min(
+            snapshots,
+            key=lambda s: (-self.score(hit_pages.get(s.replica_id, 0),
+                                       s.load),
+                           s.replica_id)).replica_id
+
+
+_POLICIES = {
+    "rr": RoundRobinPolicy,
+    "load": LeastLoadedPolicy,
+    "affinity": PrefixAffinityPolicy,
+}
+
+
+def make_policy(name: str) -> RoutingPolicy:
+    """Fresh policy instance from its CLI name (rr | load | affinity)."""
+    try:
+        return _POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown routing policy {name!r}; choose from "
+            f"{sorted(_POLICIES)}") from None
+
+
+class ReplicaRouter:
+    """N independent engine replicas behind one routing decision.
+
+    One dictionary bank, constructed once by the caller, is shared by
+    reference across every replica (it is immutable at serve time — the
+    paper's universal-dictionary property); everything else is per-replica.
+    ``submit`` routes each request to exactly one replica's queue;
+    ``step``/``run`` drive all replicas; ``completed`` and ``to_dict``
+    aggregate.
+
+    Observability: the router keeps its own labeled
+    :class:`~repro.serving.obs.registry.MetricsRegistry` (per-replica
+    ``router_*`` families), an admission log (:class:`EventJournal` of
+    ``route`` events interleaved with the view's ``view_publish`` /
+    ``view_drop``) feeding
+    :func:`~repro.serving.obs.replay_check_multi`, and — when the engine
+    config enables tracing — a router-level
+    :class:`~repro.serving.obs.TraceRecorder` with one instant per routing
+    decision.
+    """
+
+    def __init__(self, params, cfg, lex_cfg, bank, engine_cfg: EngineConfig,
+                 *, n_replicas: int = 2,
+                 policy: Union[str, RoutingPolicy] = "affinity") -> None:
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self.policy = (make_policy(policy) if isinstance(policy, str)
+                       else policy)
+        self.bank = bank
+        self.engine_cfg = engine_cfg
+        obs = engine_cfg.obs
+        self.log = EventJournal()
+        self.view = GlobalPrefixView(journal=self.log)
+        self.tracer: Optional[TraceRecorder] = (
+            TraceRecorder(process_name="lexico-router")
+            if obs is not None and obs.trace else None)
+        if self.tracer is not None:
+            self.tracer.declare_thread(ROUTER_TID, "router")
+        self.registry = MetricsRegistry()
+        # every replica gets the SAME bank object — no copy, no re-init
+        self.engines: List[ContinuousBatchingEngine] = [
+            ContinuousBatchingEngine(params, cfg, lex_cfg, bank, engine_cfg)
+            for _ in range(n_replicas)]
+        for k, eng in enumerate(self.engines):
+            assert eng.bank is bank
+            if eng.prefix_index is not None:
+                self.view.attach(k, eng.prefix_index)
+        self._routed: Dict[int, int] = {}    # rid -> replica id
+
+    # ------------------------------------------------------------- routing
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def snapshots(self) -> List[ReplicaSnapshot]:
+        """Fresh load snapshot of every replica, in replica-id order."""
+        return [ReplicaSnapshot(replica_id=k, **eng.load_state())
+                for k, eng in enumerate(self.engines)]
+
+    def _request_paths(self, req: Request) -> List[bytes]:
+        """The request's prefix chain digests, computed exactly the way an
+        admitting engine keys its prefix index (meta sentinels + bucketed
+        prompt, compressed span ``n_meta + bucket - n_b``) — so a view hit
+        predicts a real index hit on that replica."""
+        eng = self.engines[0]
+        if eng.prefix_index is None:
+            return []
+        bucket = _bucket(req.prompt_len, self.engine_cfg.min_bucket)
+        n_comp = eng.cfg.num_meta_tokens + bucket - eng.lex_cfg.n_b
+        return prefix_paths(eng._key_tokens(req, bucket), req.tier, n_comp,
+                            self.engine_cfg.page_size)
+
+    def submit(self, req: Request) -> int:
+        """Route ``req`` to one replica and enqueue it there. Returns the
+        chosen replica id. Request ids must be unique fleet-wide (each rid
+        is admitted on exactly one replica — the replay check's first
+        invariant)."""
+        if req.rid in self._routed:
+            raise ValueError(f"rid {req.rid} already routed fleet-wide")
+        snaps = self.snapshots()
+        paths = self._request_paths(req)
+        hits = self.view.hit_pages(paths) if paths else (
+            {s.replica_id: 0 for s in snaps})
+        choice = self.policy.route(req, snaps, hits)
+        if not 0 <= choice < len(self.engines):
+            raise ValueError(
+                f"policy {self.policy.name!r} routed rid {req.rid} to "
+                f"nonexistent replica {choice}")
+        self._routed[req.rid] = choice
+        self.view.record_hits(choice, paths)
+        self.log.emit("route", rid=req.rid, replica=choice,
+                      policy=self.policy.name,
+                      hit_pages=hits.get(choice, 0))
+        self.registry.counter(
+            "router_requests_routed_total",
+            "requests routed, by replica", replica=choice).inc()
+        self.registry.counter(
+            "router_prefix_hit_pages_total",
+            "expected aliasable pages at routing time, by replica",
+            replica=choice).inc(hits.get(choice, 0))
+        if self.tracer is not None:
+            self.tracer.instant("route", ROUTER_TID, rid=req.rid,
+                                replica=choice, policy=self.policy.name,
+                                hit_pages=hits.get(choice, 0))
+        self.engines[choice].submit(req)
+        return choice
+
+    def replica_of(self, rid: int) -> int:
+        """Which replica a routed request landed on."""
+        return self._routed[rid]
+
+    # ------------------------------------------------------------- driving
+
+    def step(self) -> bool:
+        """One step of every replica that has work. True while any replica
+        still has queued or in-flight requests."""
+        any_work = False
+        for eng in self.engines:
+            if eng.pool.active_slots() or len(eng.scheduler):
+                any_work |= eng.step()
+        return any_work
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, "object"]:
+        """Drive all replicas until every queue drains; returns the merged
+        ``completed`` map (rids are fleet-unique, so no key collides)."""
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.completed
+
+    @property
+    def completed(self) -> Dict[int, "object"]:
+        out: Dict[int, object] = {}
+        for eng in self.engines:
+            out.update(eng.completed)
+        return out
+
+    def drain_caches(self) -> None:
+        """Drop every replica's prefix-cache pins (shutdown / leak check).
+        After a drained run this returns all index-pinned pages to each
+        replica's free list and empties the ``GlobalPrefixView`` — the
+        journals then replay with zero end-of-trace leaks
+        (``replay_check_multi``)."""
+        for eng in self.engines:
+            if eng.prefix_index is not None:
+                host = eng.swap.host if eng.swap is not None else None
+                eng.prefix_index.clear(eng.allocator, host)
+
+    # ------------------------------------------------------------- exports
+
+    def to_dict(self) -> Dict:
+        """Fleet-level metrics: ``merge_snapshots`` over the per-replica
+        ``EngineMetrics.to_dict()`` snapshots (counters summed, peaks
+        maxed), with the queue-latency percentiles recomputed *exactly*
+        from the pooled raw samples (the snapshot-level merge can only
+        weight per-replica percentiles), plus the router's own keys
+        appended: ``n_replicas``, ``policy``, ``requests_routed`` (per
+        replica, id order), and ``per_replica`` sub-dicts."""
+        snaps = [eng.metrics.to_dict() for eng in self.engines]
+        out = merge_snapshots(snaps)
+        pooled = sorted(
+            s for eng in self.engines for s in eng.metrics.queue_latency_s)
+        if pooled:
+            out["queue_latency_s_mean"] = sum(pooled) / len(pooled)
+            out["queue_latency_s_max"] = max(pooled)
+            out["queue_latency_s_p50"] = percentile(pooled, 0.50)
+            out["queue_latency_s_p99"] = percentile(pooled, 0.99)
+            if len(pooled) >= 1000:
+                out["queue_latency_s_p999"] = percentile(pooled, 0.999)
+        out["n_replicas"] = self.n_replicas
+        out["policy"] = self.policy.name
+        out["requests_routed"] = [self.requests_routed(k)
+                                  for k in range(self.n_replicas)]
+        out["per_replica"] = [
+            {"replica": k,
+             "requests_routed": self.requests_routed(k),
+             "tokens_generated": s["tokens_generated"],
+             "prefix_hits": s["prefix_hits"],
+             "prefix_misses": s["prefix_misses"],
+             "shared_page_hit_rate": s["shared_page_hit_rate"],
+             "prefill_tokens_skipped": s["prefill_tokens_skipped"],
+             "slot_occupancy_mean": s["slot_occupancy_mean"]}
+            for k, s in enumerate(snaps)]
+        return out
+
+    def requests_routed(self, replica_id: int) -> int:
+        c = self.registry.get("router_requests_routed_total",
+                              replica=replica_id)
+        return int(c.value) if c is not None else 0
+
+    def to_prometheus(self) -> str:
+        """The router's own ``router_*`` families (per-replica labels).
+        Replica engines each expose their full registry via
+        ``engine.metrics.to_prometheus()`` — in a real deployment each
+        replica is its own scrape target, so concatenating them here would
+        collide family names."""
+        return self.registry.to_prometheus()
+
+    def save_admission_log(self, path: str) -> None:
+        """Write the router's admission log (route + view events) as JSONL
+        — the ``router_events`` input of ``replay_check_multi``."""
+        self.log.save(path)
+
+    def save_trace(self, path: str) -> None:
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is off — construct with "
+                "EngineConfig(obs=ObsConfig(trace=True))")
+        self.tracer.save(path)
+
+    def replica_journals(self) -> Dict[int, List[Dict]]:
+        """Per-replica journal events keyed by replica id — the
+        ``replica_events`` input of ``replay_check_multi`` (requires
+        journaling enabled on the engine config)."""
+        out: Dict[int, List[Dict]] = {}
+        for k, eng in enumerate(self.engines):
+            if eng.journal is None:
+                raise RuntimeError(
+                    "journaling is off — construct with "
+                    "EngineConfig(obs=ObsConfig(journal=True))")
+            out[k] = eng.journal.events
+        return out

@@ -134,6 +134,13 @@ class FCFSScheduler:
     def __len__(self) -> int:
         return len(self.queue)
 
+    def queued_bytes(self) -> int:
+        """Projected completion-time bytes of everything still queued — the
+        backlog pressure a multi-replica router weighs against other
+        replicas (queue *depth* alone treats a 8-token and a 2048-token
+        request as equal load)."""
+        return sum(self.projected_bytes(r) for r in self.queue)
+
     def projected_bytes(self, req: Request) -> int:
         total = req.total_tokens + self.meta_tokens
         if self.page_size is not None:

@@ -18,7 +18,8 @@ REPO = Path(__file__).resolve().parent.parent
 DOCS = REPO / "docs"
 
 REQUIRED_PAGES = ["architecture.md", "serving.md", "memory_accounting.md",
-                  "tiered_memory.md", "observability.md", "kernels.md"]
+                  "tiered_memory.md", "observability.md", "kernels.md",
+                  "routing.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 

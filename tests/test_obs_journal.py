@@ -17,14 +17,29 @@ single events — and assert :func:`replay_check` pins each corruption:
                                   ``tier-transfer-mismatch``
   * ``page_alloc`` of page 0    -> ``null-page-alloc``
   * use-after-free incref       -> ``incref-after-free``
+
+The multi-replica half does the same to :func:`replay_check_multi`: a real
+two-replica trace (per-replica allocator + prefix index + journal, a
+``GlobalPrefixView`` feeding the router log) replays clean, then single
+tampered events pin each cross-replica invariant:
+
+  * admit copied to the other replica -> ``duplicate-admission``
+  * deleted ``route``                 -> ``unrouted-admission``
+  * rewritten route target            -> ``route-mismatch``
+  * duplicated ``route``              -> ``duplicate-route``
+  * duplicated ``view_publish``       -> ``view-double-publish``
+  * deleted ``prefix_drop``           -> ``view-missing-path``
+  * deleted ``view_drop``             -> ``view-stale-path``
 """
 import copy
 
 import numpy as np
 import pytest
 
-from repro.serving import HostPageStore, PageAllocator
-from repro.serving.obs import EventJournal, replay_check
+from repro.serving import (
+    GlobalPrefixView, HostPageStore, PageAllocator, PrefixIndex,
+)
+from repro.serving.obs import EventJournal, replay_check, replay_check_multi
 
 
 def _journaled_pair(n_pages=8):
@@ -180,6 +195,116 @@ def test_promote_onto_live_page_flagged():
     ]
     kinds = _kinds(replay_check(evs))
     assert "promote-onto-live-page" in kinds
+
+
+# ---------------------------------------------------------------------------
+# cross-replica replay: real two-replica traces, tampered router/replica logs
+# ---------------------------------------------------------------------------
+
+def _clean_multi():
+    """A real two-replica trace: per-replica allocator + prefix index +
+    journal, one ``GlobalPrefixView`` feeding the router log. Three routed
+    and admitted requests, every pin dropped at drain — replays clean."""
+    router_log = EventJournal()
+    view = GlobalPrefixView(journal=router_log)
+    reps = {}
+    for k in range(2):
+        alloc, host, journal = _journaled_pair()
+        index = PrefixIndex(page_size=2)
+        index.add_observer(
+            lambda p, j=journal: j.emit("prefix_publish", path=p.hex()),
+            lambda p, j=journal: j.emit("prefix_drop", path=p.hex()))
+        view.attach(k, index)
+        reps[k] = (alloc, host, index, journal)
+    for rid, k in [(0, 0), (1, 1), (2, 0)]:
+        alloc, host, index, journal = reps[k]
+        router_log.emit("route", rid=rid, replica=k, policy="rr", hit_pages=0)
+        pages = alloc.alloc(2)
+        journal.emit("admit", rid=rid, slot=0, pages=len(pages), aliased=0)
+        index.register(np.arange(4) + 10 * rid, 8, pages, 4, alloc)
+        alloc.free(pages)           # the slot retires; the index pin stays
+    for alloc, host, index, journal in reps.values():
+        index.clear(alloc, host)
+        assert alloc.check_balanced()
+    return ({k: copy.deepcopy(r[3].events) for k, r in reps.items()},
+            copy.deepcopy(router_log.events))
+
+
+def test_clean_multi_trace_replays_clean():
+    replica_evs, router_evs = _clean_multi()
+    assert any(e["ev"] == "prefix_publish"
+               for evs in replica_evs.values() for e in evs)
+    assert any(e["ev"] == "view_publish" for e in router_evs)
+    assert replay_check_multi(replica_evs, router_evs) == []
+
+
+def test_admit_copied_across_replicas_is_duplicate_admission():
+    replica_evs, router_evs = _clean_multi()
+    admit = next(e for e in replica_evs[0] if e["ev"] == "admit")
+    replica_evs[1].append(dict(admit))
+    kinds = _kinds(replay_check_multi(replica_evs, router_evs))
+    assert "duplicate-admission" in kinds
+    # the copy also landed on a replica the route never named
+    assert "route-mismatch" in kinds
+
+
+def test_dropped_route_is_unrouted_admission():
+    replica_evs, router_evs = _clean_multi()
+    route = next(e for e in router_evs if e["ev"] == "route")
+    router_evs.remove(route)
+    v = replay_check_multi(replica_evs, router_evs)
+    assert "unrouted-admission" in _kinds(v)
+    offender = next(x for x in v if x.kind == "unrouted-admission")
+    assert f"rid {route['rid']}" in offender.detail
+
+
+def test_rewritten_route_target_is_route_mismatch():
+    replica_evs, router_evs = _clean_multi()
+    route = next(e for e in router_evs if e["ev"] == "route")
+    route["replica"] = 1 - route["replica"]
+    kinds = _kinds(replay_check_multi(replica_evs, router_evs))
+    assert "route-mismatch" in kinds
+
+
+def test_duplicated_route_flagged():
+    replica_evs, router_evs = _clean_multi()
+    route = next(e for e in router_evs if e["ev"] == "route")
+    router_evs.insert(router_evs.index(route) + 1, dict(route))
+    kinds = _kinds(replay_check_multi(replica_evs, router_evs))
+    assert "duplicate-route" in kinds
+
+
+def test_duplicated_view_publish_flagged():
+    replica_evs, router_evs = _clean_multi()
+    pub = next(e for e in router_evs if e["ev"] == "view_publish")
+    router_evs.insert(router_evs.index(pub) + 1, dict(pub))
+    kinds = _kinds(replay_check_multi(replica_evs, router_evs))
+    assert "view-double-publish" in kinds
+
+
+def test_dropped_prefix_drop_is_view_missing_path():
+    # the replica's journal says the chunk is still resident at end of
+    # trace, but the view (which saw the real drop) no longer lists it:
+    # routing could never find that cached chunk
+    replica_evs, router_evs = _clean_multi()
+    drop = next(e for e in replica_evs[0] if e["ev"] == "prefix_drop")
+    replica_evs[0].remove(drop)
+    v = replay_check_multi(replica_evs, router_evs)
+    assert "view-missing-path" in _kinds(v)
+    offender = next(x for x in v if x.kind == "view-missing-path")
+    assert offender.seq == -1 and drop["path"] in offender.detail
+
+
+def test_dropped_view_drop_is_view_stale_path():
+    # the mirror image: the view still advertises a chunk whose index pin
+    # is gone — a router would keep routing at a phantom prefix
+    replica_evs, router_evs = _clean_multi()
+    drop = next(e for e in router_evs if e["ev"] == "view_drop")
+    router_evs.remove(drop)
+    v = replay_check_multi(replica_evs, router_evs)
+    assert "view-stale-path" in _kinds(v)
+    offender = next(x for x in v if x.kind == "view-stale-path")
+    assert offender.seq == -1 and drop["path"] in offender.detail
 
 
 def test_allocator_emits_nothing_when_journal_absent():

@@ -1,0 +1,386 @@
+"""Multi-replica routing: policy properties, merged metrics, differential.
+
+Three layers of proof, cheapest first:
+
+  * **Policy properties** (hypothesis, no engines): routing is
+    deterministic given (request, snapshots, hits); the affinity score is
+    monotone in prefix-hit pages and anti-monotone in load; ties break to
+    the lowest replica id; with zero hits the affinity policy degenerates
+    *exactly* to least-loaded.
+  * **Merged metrics**: ``merge_snapshots`` keeps the single-engine
+    ``to_dict`` key schema (golden-key pin), sums counters, maxes peaks
+    (never sums a gauge), and recomputes rates from merged totals.
+  * **Cross-replica differential** (the acceptance gate): for each of the
+    three policies, every request served through a 2-replica router —
+    under swap pressure and prefix aliasing — emits tokens bitwise equal
+    to a solo single-engine run of that request; the global prefix view
+    mirrors each replica's index exactly; and the per-replica journals +
+    router admission log replay clean through ``replay_check_multi``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, EngineMetrics, ObsConfig,
+    ReplicaRouter, ReplicaSnapshot, Request, SwapConfig, make_policy,
+    merge_snapshots,
+)
+from repro.serving.obs import replay_check_multi
+from repro.serving.router import LeastLoadedPolicy, PrefixAffinityPolicy
+from tests.conftest import given, settings, st
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+# a request object for policy calls (policies may not depend on anything
+# but what the router hands them, so any request works)
+REQ = Request(rid=0, prompt=np.arange(16, dtype=np.int32),
+              max_new_tokens=1, tier=4)
+
+
+# ---------------------------------------------------------------------------
+# routing-policy properties (pure host code, no engines)
+# ---------------------------------------------------------------------------
+
+def _mk_snapshots(rng, n):
+    snaps = []
+    for k in range(n):
+        total = int(rng.integers(4, 17))
+        snaps.append(ReplicaSnapshot(
+            replica_id=k,
+            queue_depth=int(rng.integers(0, 6)),
+            active_slots=int(rng.integers(0, 5)),
+            n_slots=4,
+            queued_bytes=int(rng.integers(0, 1 << 16)),
+            kv_bytes_resident=int(rng.integers(0, 1 << 20)),
+            host_bytes_resident=int(rng.integers(0, 1 << 18)),
+            free_pages=int(rng.integers(0, total + 1)),
+            total_pages=total))
+    return snaps
+
+
+def _mk_hits(rng, n):
+    return {k: int(rng.integers(0, 6)) for k in range(n)}
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 5),
+       name=st.sampled_from(["rr", "load", "affinity"]))
+def test_routing_deterministic(seed, n, name):
+    """Same (request, snapshots, hits) call sequence -> same decisions:
+    two fresh policy instances agree call-for-call (round-robin's cursor
+    is state, but it advances identically for identical sequences)."""
+    rng = np.random.default_rng(seed)
+    traces = [(_mk_snapshots(rng, n), _mk_hits(rng, n)) for _ in range(4)]
+    a, b = make_policy(name), make_policy(name)
+    for snaps, hits in traces:
+        assert a.route(REQ, snaps, hits) == b.route(REQ, snaps, hits)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 5))
+def test_stateless_policies_snapshot_order_invariant(seed, n):
+    """load/affinity decisions depend on snapshot *contents*, not the
+    order the router happened to list replicas in."""
+    rng = np.random.default_rng(seed)
+    snaps, hits = _mk_snapshots(rng, n), _mk_hits(rng, n)
+    for name in ("load", "affinity"):
+        pol = make_policy(name)
+        assert (pol.route(REQ, snaps, hits)
+                == pol.route(REQ, list(reversed(snaps)), dict(hits)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 5),
+       delta=st.integers(1, 8))
+def test_affinity_monotone_in_hit_pages(seed, n, delta):
+    """Raising the chosen replica's expected hit pages never un-chooses
+    it (the affinity score is monotone increasing in hits)."""
+    rng = np.random.default_rng(seed)
+    snaps, hits = _mk_snapshots(rng, n), _mk_hits(rng, n)
+    pol = PrefixAffinityPolicy()
+    choice = pol.route(REQ, snaps, hits)
+    boosted = dict(hits)
+    boosted[choice] = boosted.get(choice, 0) + delta
+    assert pol.route(REQ, snaps, boosted) == choice
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 5),
+       delta=st.integers(1, 8))
+def test_affinity_anti_monotone_in_load(seed, n, delta):
+    """Loading up a *different* replica never steals the choice (the
+    affinity score is monotone decreasing in load)."""
+    rng = np.random.default_rng(seed)
+    snaps, hits = _mk_snapshots(rng, n), _mk_hits(rng, n)
+    pol = PrefixAffinityPolicy()
+    choice = pol.route(REQ, snaps, hits)
+    loser = int(rng.choice([s.replica_id for s in snaps
+                            if s.replica_id != choice]))
+    bumped = [dataclasses.replace(s, queue_depth=s.queue_depth + delta)
+              if s.replica_id == loser else s for s in snaps]
+    assert pol.route(REQ, bumped, hits) == choice
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 5))
+def test_tie_break_is_lowest_replica_id(seed, n):
+    """Indistinguishable replicas -> deterministic lowest-id choice, for
+    both score-based policies."""
+    rng = np.random.default_rng(seed)
+    proto = _mk_snapshots(rng, 1)[0]
+    snaps = [dataclasses.replace(proto, replica_id=k) for k in range(n)]
+    hits = {k: 3 for k in range(n)}
+    assert LeastLoadedPolicy().route(REQ, snaps, hits) == 0
+    assert PrefixAffinityPolicy().route(REQ, snaps, hits) == 0
+    # ids shifted: the tie-break tracks the *lowest id present*, not 0
+    shifted = [dataclasses.replace(proto, replica_id=k + 5)
+               for k in range(n)]
+    assert LeastLoadedPolicy().route(REQ, shifted, {}) == 5
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 5))
+def test_affinity_degenerates_to_least_loaded_on_zero_hits(seed, n):
+    """With no prefix hits anywhere the affinity score is exactly -load,
+    so the two policies agree — including the tie-break."""
+    rng = np.random.default_rng(seed)
+    snaps = _mk_snapshots(rng, n)
+    zero = {k: 0 for k in range(n)}
+    assert (PrefixAffinityPolicy().route(REQ, snaps, zero)
+            == LeastLoadedPolicy().route(REQ, snaps, zero))
+
+
+def test_make_policy_rejects_unknown_name():
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        make_policy("random")
+
+
+# ---------------------------------------------------------------------------
+# merged metrics: golden key schema, counter/gauge semantics
+# ---------------------------------------------------------------------------
+
+def _busy_metrics(occupancies, tokens, latency):
+    m = EngineMetrics()
+    for occ in occupancies:
+        m.sample_step(occupancy=occ, kv_bytes_in_flight=occ * 100,
+                      kv_bytes_resident=occ * 80, pages_in_use=occ,
+                      shared_pages=1, host_bytes_resident=occ * 10)
+    for _ in range(tokens):
+        m.record_token(tier=4)
+    m.record_admission(latency)
+    m.record_prompt_tokens(9)
+    m.record_prefill_compressed(7)
+    m.record_prefix_share(aliased=2, copied=1, skipped_codes=16,
+                          bytes_deduped=512)
+    m.record_swap(demoted=1, promoted=1, stalls=2)
+    m.record_phase("admit", 0.01)
+    m.record_phase("decode_dispatch", 0.02)
+    m.record_compile(0.5)
+    m.record_rejection()
+    m.record_completion(tier=4)
+    return m
+
+
+def test_merge_snapshots_pins_single_engine_schema():
+    """Golden-key gate: the merged dict has exactly the single-engine
+    to_dict key sequence — a new engine metric must teach the merge how it
+    pools, or this fails."""
+    s1 = _busy_metrics([1, 2, 3], tokens=5, latency=0.1).to_dict()
+    s2 = _busy_metrics([4, 1], tokens=3, latency=0.3).to_dict()
+    merged = merge_snapshots([s1, s2])
+    assert list(merged.keys()) == list(s1.keys())
+    assert set(merged["phase_times"]) == set(s1["phase_times"])
+    for phase in merged["phase_times"]:
+        assert (list(merged["phase_times"][phase].keys())
+                == list(s1["phase_times"][phase].keys()))
+
+
+def test_merge_snapshots_counters_sum_gauges_max():
+    s1 = _busy_metrics([1, 2, 3], tokens=5, latency=0.1).to_dict()
+    s2 = _busy_metrics([4, 1], tokens=3, latency=0.3).to_dict()
+    merged = merge_snapshots([s1, s2])
+    # counters sum
+    assert merged["steps"] == 5
+    assert merged["tokens_generated"] == 8
+    assert merged["prefills"] == 2
+    assert merged["pages_aliased"] == 4
+    assert merged["pages_demoted"] == 2
+    assert merged["admission_rejections"] == 2
+    assert merged["compile_s"] == pytest.approx(1.0)
+    # gauges/peaks take the max — NEVER the sum
+    assert merged["slot_occupancy_peak"] == 4
+    assert merged["kv_bytes_in_flight_peak"] == 400
+    assert merged["pages_in_use_peak"] == 4
+    assert merged["queue_latency_s_max"] == pytest.approx(0.3)
+    assert merged["elapsed_s"] == pytest.approx(
+        max(s1["elapsed_s"], s2["elapsed_s"]))
+    # means pool step-weighted: 5 steps of [1,2,3,4,1]
+    assert merged["slot_occupancy_mean"] == pytest.approx(11 / 5)
+    # rates recomputed from merged totals, not averaged
+    assert merged["tokens_per_s"] == pytest.approx(
+        merged["tokens_generated"] / merged["elapsed_s"])
+    assert merged["decode_tokens_per_step"] == pytest.approx(8 / 5)
+    assert merged["shared_page_hit_rate"] == pytest.approx(1.0)
+
+
+def test_merge_snapshots_single_is_identity_on_counters():
+    s1 = _busy_metrics([2, 2], tokens=4, latency=0.2).to_dict()
+    merged = merge_snapshots([s1])
+    for key, val in s1.items():
+        if key in ("tokens_per_s", "tokens_per_s_ex_compile", "elapsed_s"):
+            continue  # recomputed against max-elapsed; equal up to clock read
+        if isinstance(val, (int, float)):
+            assert merged[key] == pytest.approx(val), key
+
+
+def test_merge_snapshots_rejects_empty():
+    with pytest.raises(ValueError, match="at least one"):
+        merge_snapshots([])
+
+
+# ---------------------------------------------------------------------------
+# cross-replica engine differential (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+# tight pool (5 usable pages/replica) + swap: concurrent slots force
+# demotions; two prompt families force aliasing; journal feeds the replay
+ENGINE_CFG = EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                          page_size=8, n_pages=6, share_prefixes=True,
+                          swap=SwapConfig(), obs=ObsConfig(journal=True))
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _workload():
+    """Two shared-prefix families + long singletons, working set sized to
+    oversubscribe each replica's pool. Returns (wave1, wave2): the second
+    wave arrives after the first is in flight, so the prefix view is warm
+    for affinity routing."""
+    rng = np.random.default_rng(42)
+    sys_a = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
+    sys_b = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
+
+    def fam(rid, sys_prompt, tier):
+        tail = rng.integers(0, CFG.vocab_size, 6).astype(np.int32)
+        return Request(rid=rid, prompt=np.concatenate([sys_prompt, tail]),
+                       max_new_tokens=3, tier=tier)
+
+    def single(rid, plen, tier):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, CFG.vocab_size,
+                                           plen).astype(np.int32),
+                       max_new_tokens=3, tier=tier)
+
+    wave1 = [fam(0, sys_a, 8), fam(1, sys_b, 4), single(2, 30, 8)]
+    wave2 = [fam(3, sys_a, 8), fam(4, sys_a, 8), fam(5, sys_b, 4),
+             single(6, 26, 6), fam(7, sys_a, 8)]
+    return wave1, wave2
+
+
+@pytest.fixture(scope="module")
+def solo_tokens(served):
+    """Each request served alone in a single-slot engine — the oracle every
+    policy's routed run must match bitwise."""
+    params, bank = served
+    solo_cfg = dataclasses.replace(ENGINE_CFG, n_slots=1, obs=None)
+    out = {}
+    for req in [*_workload()[0], *_workload()[1]]:
+        eng = ContinuousBatchingEngine(params, CFG, LEX, bank, solo_cfg)
+        eng.submit(dataclasses.replace(req))
+        done = eng.run()
+        out[req.rid] = done[req.rid].generated_tokens
+    return out
+
+
+def _route_workload(params, bank, policy):
+    router = ReplicaRouter(params, CFG, LEX, bank, ENGINE_CFG,
+                           n_replicas=2, policy=policy)
+    wave1, wave2 = _workload()
+    for req in wave1:
+        router.submit(dataclasses.replace(req))
+    for _ in range(16):          # wave 1 in flight; prefixes registering
+        router.step()
+    for req in wave2:
+        router.submit(dataclasses.replace(req))
+    router.run()
+    return router
+
+
+@pytest.mark.parametrize("policy", ["rr", "load", "affinity"])
+def test_cross_replica_differential(served, solo_tokens, policy):
+    """Tokens through the routed fleet == solo single-engine run, bitwise,
+    per request — under swap pressure and prefix aliasing — and the run
+    leaves a clean cross-replica journal."""
+    params, bank = served
+    router = _route_workload(params, bank, policy)
+    done = router.completed
+    assert sorted(done) == sorted(solo_tokens)
+    for rid, tokens in solo_tokens.items():
+        assert done[rid].generated_tokens == tokens, (policy, rid)
+    # the workload genuinely exercised both features somewhere in the fleet
+    d = router.to_dict()
+    assert d["pages_aliased"] > 0, "no prefix aliasing happened"
+    assert d["pages_demoted"] > 0, "no swap pressure happened"
+    assert d["policy"] == policy
+    assert sum(d["requests_routed"]) == len(solo_tokens)
+    # both replicas actually served traffic (it's a router, not a bypass)
+    assert all(n > 0 for n in d["requests_routed"]), d["requests_routed"]
+    # global view == each replica's live index, both directions
+    for k, eng in enumerate(router.engines):
+        assert eng.prefix_index.live_paths() == router.view.paths_for(k)
+    # journals replay clean once the shutdown drop empties the caches
+    router.drain_caches()
+    assert len(router.view) == 0
+    assert replay_check_multi(router.replica_journals(),
+                              router.log.events) == []
+    for eng in router.engines:
+        eng.allocator.check_balanced()
+
+
+def test_replicas_share_one_bank_object(served):
+    """The dictionary bank is constructed once and shared by reference —
+    the universal-dictionary property the scale-out design leans on."""
+    params, bank = served
+    router = ReplicaRouter(params, CFG, LEX, bank, ENGINE_CFG,
+                           n_replicas=2, policy="rr")
+    assert all(eng.bank is bank for eng in router.engines)
+    assert router.bank is bank
+
+
+def test_router_to_dict_golden_keys(served):
+    """Router-level to_dict = the merged single-engine schema plus exactly
+    the router's own appended keys."""
+    params, bank = served
+    router = _route_workload(params, bank, "affinity")
+    d = router.to_dict()
+    single = router.engines[0].metrics.to_dict()
+    assert list(d.keys()) == (list(single.keys())
+                              + ["n_replicas", "policy", "requests_routed",
+                                 "per_replica"])
+    assert d["n_replicas"] == 2
+    assert len(d["per_replica"]) == 2
+    # per-replica counters sum to the fleet totals (no double counting)
+    assert sum(r["tokens_generated"] for r in d["per_replica"]) \
+        == d["tokens_generated"]
+
+
+def test_router_rejects_duplicate_rid(served):
+    params, bank = served
+    router = ReplicaRouter(params, CFG, LEX, bank, ENGINE_CFG,
+                           n_replicas=2, policy="rr")
+    req = _workload()[0][0]
+    router.submit(dataclasses.replace(req))
+    with pytest.raises(ValueError, match="already routed"):
+        router.submit(dataclasses.replace(req))

@@ -30,9 +30,23 @@ id was re-handed out, a swapped page (a ``PageHandle``) is never what
 ``alloc`` returns, and at drain BOTH tiers balance (``check_balanced`` on
 the allocator and the host store).
 
+A fourth trace family (``_run_router_trace``) goes multi-replica: 2-3
+independent replica states (each its own allocator / index / scheduler /
+pool / host tier / journal) behind a real routing policy from
+``repro.serving.router`` and a ``GlobalPrefixView`` wired through the
+index observer hooks. Randomized route/admit/step/retire/demote traces;
+per-step invariants per replica (refcounts, reservation) PLUS the
+cross-replica ones: the view's entries for a replica always equal that
+replica's live index paths (neither side outlives the other — including
+across swap_out/swap_in, which re-keys the page but not the path), every
+request is admitted on exactly the replica it was routed to, and at drain
+every replica's tiers balance and the per-replica journals + router log
+replay clean through ``replay_check_multi``.
+
 The engine-integrated version of the same contract (real device pool) is
 ``tests/test_paged_cache.py::test_engine_paged_matches_contiguous_oracle``
-plus ``tests/test_prefix_sharing.py`` and ``tests/test_swap.py``.
+plus ``tests/test_prefix_sharing.py`` and ``tests/test_swap.py`` (and
+``tests/test_router.py`` for the multi-replica differential).
 """
 from collections import Counter
 
@@ -40,10 +54,13 @@ import numpy as np
 import pytest
 
 from repro.serving import (
-    FCFSScheduler, HostPageStore, PageAllocator, PageHandle, PrefixIndex,
-    Request, SlotInfo, SlotPool, pages_needed,
+    FCFSScheduler, GlobalPrefixView, HostPageStore, PageAllocator,
+    PageHandle, PrefixIndex, Request, SlotInfo, SlotPool, make_policy,
+    pages_needed, prefix_paths,
 )
 from repro.serving.engine import _bucket   # the engine's own bucketing
+from repro.serving.obs import EventJournal, replay_check_multi
+from repro.serving.router import ReplicaSnapshot
 
 M_DIM, N_LAYERS, KV_HEADS = 16, 2, 2
 
@@ -445,6 +462,317 @@ def test_swap_lifecycle_fuzz_many_traces():
     assert sum(x["demotions"] for x in stats) > 200
     assert sum(x["promotions"] for x in stats) > 100
     assert sum(x["completed"] for x in stats) > 250
+
+
+# ---------------------------------------------------------------------------
+# multi-replica: routed traces against independent replica states
+# ---------------------------------------------------------------------------
+
+class _Replica:
+    """One replica's full host-side serving state for the router fuzz:
+    allocator + prefix index + scheduler + slot pool + host swap tier, all
+    journaled, running the ``_run_shared_trace`` admission/advance loop with
+    the swap-aware extras (promote-at-admission for plan entries demoted to
+    the host tier, random demotions of index-pin-only pages)."""
+
+    def __init__(self, rid_: int, rng, *, n_b, min_bucket, page_size):
+        self.k = rid_
+        self.n_b, self.min_bucket, self.page_size = n_b, min_bucket, page_size
+        self.n_slots = int(rng.integers(1, 4))
+        self.journal = EventJournal()
+        self.allocator = PageAllocator(int(rng.integers(16, 40)), page_size)
+        self.allocator.journal = self.journal
+        self.host = HostPageStore()
+        self.host.journal = self.journal
+        self.index = PrefixIndex(page_size)
+        self.index.add_observer(
+            lambda p: self.journal.emit("prefix_publish", path=p.hex()),
+            lambda p: self.journal.emit("prefix_drop", path=p.hex()))
+        self.sched = FCFSScheduler(
+            kv_byte_budget=None, n_b=n_b, m=M_DIM, num_layers=N_LAYERS,
+            kv_heads=KV_HEADS, page_size=page_size,
+            page_budget=self.allocator.capacity)
+        self.pool = SlotPool(self.n_slots)
+        self.plans = {}
+        self.completed = 0
+        self.admitted = 0
+        self.hits = self.demotions = self.promotions = 0
+
+    @property
+    def busy(self) -> bool:
+        return bool(len(self.sched) or self.pool.active_slots())
+
+    def snapshot(self) -> ReplicaSnapshot:
+        return ReplicaSnapshot(
+            replica_id=self.k, queue_depth=len(self.sched),
+            active_slots=len(self.pool.active_slots()), n_slots=self.n_slots,
+            queued_bytes=self.sched.queued_bytes(),
+            kv_bytes_resident=0, host_bytes_resident=0,
+            free_pages=self.allocator.n_free,
+            total_pages=self.allocator.capacity)
+
+    # ------------------------------------------------------- admission loop
+
+    def _shared_fn(self, req):
+        bucket = _bucket(req.prompt_len, self.min_bucket)
+        plan = self.index.lookup(req.prompt[:bucket], req.tier,
+                                 bucket - self.n_b)
+        self.plans[req.rid] = plan
+        refs = list(plan.aliased)
+        if plan.copy_src is not None:
+            refs.append(plan.copy_src)
+        promote = sum(1 for p in refs if isinstance(p, PageHandle))
+        return len(plan.aliased), plan.shared_codes, len(refs) - promote, \
+            promote
+
+    def _pool_state_fn(self):
+        owned = sum(self.pool.slots[i].pages_owned
+                    for i in self.pool.active_slots())
+        return {"free": self.allocator.n_free,
+                "evictable": self.index.evictable_pages(self.allocator),
+                "owned": owned}
+
+    def _alloc(self, n):
+        if n > self.allocator.n_free:
+            self.index.evict(self.allocator,
+                             max_pages=n - self.allocator.n_free,
+                             host=self.host)
+        return self.allocator.alloc(n)      # must never exhaust
+
+    def _promote(self, handle):
+        """Promote one host-tier plan entry back to a device page. The
+        caller already holds a temp host ref on ``handle``, so a concurrent
+        eviction dropping its index pin cannot free it; the transferred
+        temp ref becomes the caller's hold on the device page."""
+        if self.allocator.n_free == 0:
+            self.index.evict(self.allocator, max_pages=1, host=self.host)
+        stores, refs = self.host.pop(handle)
+        page = self.allocator.promote(refs)
+        self.index.swap_in(handle, page)    # no-op if the pin was evicted
+        self.promotions += 1
+        return page
+
+    def admit_all(self):
+        while self.pool.free_slots():
+            got = self.sched.admit(1, shared_fn=self._shared_fn,
+                                   pool_state_fn=self._pool_state_fn)
+            if not got:
+                break
+            req = got[0]
+            bucket = _bucket(req.prompt_len, self.min_bucket)
+            plan = self.plans.pop(req.rid)
+            n_comp = bucket - self.n_b
+            n_prompt = pages_needed(n_comp, self.page_size)
+            info = SlotInfo(request=req, fed=bucket, cache_len=bucket,
+                            pages_reserved=max(
+                                self.sched.projected_pages(req)
+                                - len(plan.aliased), 0))
+            aliased = list(plan.aliased)
+            copy_src = plan.copy_src
+            # pin every device plan page, temp-ref every host-tier one:
+            # eviction triggered by the promotes/allocs below can then
+            # neither recycle nor drop a page this admission is using
+            for p in aliased:
+                if isinstance(p, PageHandle):
+                    self.host.incref(p)
+                else:
+                    self.allocator.incref(p)
+            if copy_src is not None:
+                if isinstance(copy_src, PageHandle):
+                    self.host.incref(copy_src)
+                else:
+                    self.allocator.incref(copy_src)
+            # prefix hit on a swapped page: promote it back instead of
+            # recompressing (the scheduler's reservation check priced it)
+            for j, p in enumerate(aliased):
+                if isinstance(p, PageHandle):
+                    aliased[j] = self._promote(p)
+            if isinstance(copy_src, PageHandle):
+                copy_src = self._promote(copy_src)
+            new_pages = self._alloc(n_prompt - len(aliased))
+            info.pages = aliased + new_pages
+            info.pages_shared = len(aliased)
+            if copy_src is not None:
+                assert new_pages, "CoW needs a destination page"
+                self.allocator.decref(copy_src)
+            slot = self.pool.allocate(info)
+            self.index.commit(plan)
+            self.hits += 1 if plan.hit else 0
+            self.index.register(req.prompt[:bucket], req.tier, info.pages,
+                                n_comp, self.allocator, host=self.host)
+            self.admitted += 1
+            self.journal.emit("admit", rid=req.rid, slot=slot,
+                              pages=len(info.pages),
+                              aliased=info.pages_shared)
+
+    # --------------------------------------------------------- decode + swap
+
+    def advance(self, rng):
+        # random demotions of pages only the index pins (cold cache entries
+        # moving to the host tier; the cache entry — and its view path —
+        # survives the move)
+        for page in [p for p, nd in list(self.index._registered.items())
+                     if not isinstance(p, PageHandle)
+                     and self.allocator.refcount(p) == 1]:
+            if rng.random() < 0.2:
+                refs = self.allocator.refcount(page)
+                handle = self.host.put((np.zeros(1, np.float32),), refs=refs)
+                self.allocator.demote(page)
+                self.index.swap_out(page, handle)
+                self.demotions += 1
+
+        for slot in self.pool.active_slots():
+            info = self.pool.slots[slot]
+            need = pages_needed(info.cache_len - self.n_b + 1, self.page_size)
+            while len(info.pages) < need:
+                info.pages += self._alloc(1)
+            assert info.pages_owned <= info.pages_reserved, \
+                "slot outgrew its admission reservation"
+            info.cache_len += 1
+            if info.in_prompt_phase:
+                info.fed += 1
+            else:
+                info.generated += 1
+            if info.done:
+                self.pool.retire(slot)
+                self.allocator.free(info.pages)
+                info.pages, info.pages_shared = [], 0
+                self.sched.release(info.request)
+                self.completed += 1
+
+    # ------------------------------------------------------------ invariants
+
+    def check_invariants(self, seed):
+        held = Counter(p for i in self.pool.active_slots()
+                       for p in self.pool.slots[i].pages)
+        assert not any(isinstance(p, PageHandle) for p in held), \
+            "slots hold device pages only in this trace family"
+        dev_pins = {p for p in self.index._registered
+                    if not isinstance(p, PageHandle)}
+        swapped = {p for p in self.index._registered
+                   if isinstance(p, PageHandle)}
+        resident = set(held) | dev_pins
+        assert self.allocator.n_used == len(resident), \
+            f"stray allocated pages (replica {self.k}, seed {seed})"
+        for p in resident:
+            expect = held.get(p, 0) + (1 if p in dev_pins else 0)
+            assert self.allocator.refcount(p) == expect, (self.k, p, seed)
+        # every host-tier page is exactly one index pin (slots never hold
+        # handles here, and temp refs never outlive an admission)
+        assert self.host.n_pages == len(swapped), \
+            f"host-tier leak (replica {self.k}, seed {seed})"
+        for h in swapped:
+            assert self.host.refcount(h) == 1, (self.k, h, seed)
+        owned = sum(self.pool.slots[i].pages_owned
+                    for i in self.pool.active_slots())
+        assert (self.sched.pages_admitted - owned
+                <= self.allocator.n_free
+                + self.index.evictable_pages(self.allocator)), \
+            f"reservation invariant (replica {self.k}, seed {seed})"
+        assert self.sched.pages_admitted <= self.allocator.capacity
+
+
+def _run_router_trace(seed: int) -> dict:
+    """Multi-replica routed traces: N independent replica states behind a
+    real routing policy and a ``GlobalPrefixView`` wired through the index
+    observers, requests drawn from fleet-shared prompt families."""
+    rng = np.random.default_rng(seed)
+    n_b = int(rng.integers(2, 6))
+    min_bucket = n_b + int(rng.integers(1, 5))
+    page_size = int(rng.choice([2, 4]))
+    n_replicas = int(rng.integers(2, 4))
+    replicas = [_Replica(k, rng, n_b=n_b, min_bucket=min_bucket,
+                         page_size=page_size) for k in range(n_replicas)]
+
+    router_log = EventJournal()
+    view = GlobalPrefixView(journal=router_log)
+    for rep in replicas:
+        view.attach(rep.k, rep.index)
+    policy = make_policy(str(rng.choice(["rr", "load", "affinity"])))
+
+    min_cap = min(rep.allocator.capacity for rep in replicas)
+    families = [rng.integers(0, 1000, 64).astype(np.int64) for _ in range(3)]
+    pending = []
+    for rid in range(int(rng.integers(6, 20))):
+        prompt_len = int(rng.integers(min_bucket, 4 * page_size + min_bucket))
+        prompt = families[int(rng.integers(0, 3))][:prompt_len].copy()
+        if rng.random() < 0.3:
+            cut = int(rng.integers(0, prompt_len))
+            prompt[cut:] = rng.integers(0, 1000, prompt_len - cut)
+        req = Request(rid=rid, prompt=prompt.astype(np.int32),
+                      max_new_tokens=int(rng.integers(1, 9)),
+                      tier=int(rng.choice([4, 8])))
+        # must be admissible on ANY replica: the policy is free to pick one
+        if replicas[0].sched.projected_pages(req) > min_cap:
+            continue
+        pending.append(req)
+    submitted = len(pending)
+
+    steps = 0
+    while (pending or any(rep.busy for rep in replicas)) and steps < 10_000:
+        steps += 1
+        # --- route a few arrivals through the real policy ---
+        for _ in range(int(rng.integers(0, 3))):
+            if not pending:
+                break
+            req = pending.pop(0)
+            bucket = _bucket(req.prompt_len, min_bucket)
+            paths = prefix_paths(req.prompt[:bucket], req.tier,
+                                 bucket - n_b, page_size)
+            hits = view.hit_pages(paths)
+            choice = policy.route(req, [rep.snapshot() for rep in replicas],
+                                  hits)
+            view.record_hits(choice, paths)
+            router_log.emit("route", rid=req.rid, replica=choice,
+                            policy=policy.name,
+                            hit_pages=hits.get(choice, 0))
+            replicas[choice].sched.submit(req)
+
+        # --- each replica runs its own admission + decode tick ---
+        for rep in replicas:
+            rep.admit_all()
+            rep.advance(rng)
+
+        # --- per-step invariants: per replica, then cross-replica ---
+        for rep in replicas:
+            rep.check_invariants(seed)
+            # a view entry exists exactly as long as the replica's pin does
+            assert rep.index.live_paths() == view.paths_for(rep.k), \
+                f"view/index divergence (replica {rep.k}, seed {seed})"
+
+    completed = sum(rep.completed for rep in replicas)
+    assert completed == submitted, (completed, submitted, seed)
+    for rep in replicas:
+        rep.index.clear(rep.allocator, host=rep.host)
+        assert rep.allocator.check_balanced(), \
+            f"device page leak (replica {rep.k}, seed {seed})"
+        assert rep.host.check_balanced(), \
+            f"host page leak (replica {rep.k}, seed {seed})"
+        assert rep.sched.bytes_admitted == 0 and rep.sched.pages_admitted == 0
+        assert not view.paths_for(rep.k)
+    assert len(view) == 0, f"view outlived every pin (seed {seed})"
+
+    violations = replay_check_multi(
+        {rep.k: rep.journal.events for rep in replicas}, router_log.events)
+    assert violations == [], (seed, [str(v) for v in violations])
+    return {"steps": steps, "completed": completed, "policy": policy.name,
+            "replicas_used": sum(1 for rep in replicas if rep.admitted),
+            "hits": sum(rep.hits for rep in replicas),
+            "demotions": sum(rep.demotions for rep in replicas),
+            "promotions": sum(rep.promotions for rep in replicas)}
+
+
+def test_router_lifecycle_fuzz_many_traces():
+    stats = [_run_router_trace(seed) for seed in range(110)]
+    # every routing policy got fuzzed, and traffic genuinely spread: some
+    # trace had two or more replicas admit requests
+    assert {x["policy"] for x in stats} == {"rr", "load", "affinity"}
+    assert max(x["replicas_used"] for x in stats) >= 2
+    # sharing and tiering genuinely happened inside the routed traces
+    assert sum(x["hits"] for x in stats) > 40
+    assert sum(x["demotions"] for x in stats) > 50
+    assert sum(x["promotions"] for x in stats) > 5
+    assert sum(x["completed"] for x in stats) > 300
 
 
 def test_allocator_demote_promote_state_machine():
