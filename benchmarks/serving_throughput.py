@@ -52,6 +52,15 @@ tokens must be bitwise identical to the solo run, and prefix-affinity
 routing must beat round-robin on BOTH aggregate tokens/s (ex-compile) and
 shared-page hit rate (exit non-zero otherwise — the CI gate).
 
+An eighth scenario (``--scenario quality``) is the compression-quality
+gate: the swap workload with quality telemetry off vs on (identical
+tokens, decode still one compile, measured overhead against
+``--overhead-budget``), dictionary-drift score of a calibration-like
+rerun against a frozen baseline (must stay below ``--drift-budget``),
+clean ``page_quality`` journal replay, and the bounded-error tolerance
+harness — a lossless rerun must pass a tight ``ToleranceGate`` while an
+injected int8 value requantization must be flagged.
+
     PYTHONPATH=src python benchmarks/serving_throughput.py [--scenario all]
 """
 from __future__ import annotations
@@ -317,6 +326,124 @@ def run_obs_bench(*, n_requests: int = 10, n_slots: int = 4,
         "setup_s": md_on["setup_s"],
         "roofline": roofline,
         "on": md_on,
+    }
+
+
+def run_quality_bench(*, n_requests: int = 10, n_slots: int = 4,
+                      t_max: int = 96, seed: int = 0, page_size: int = 8,
+                      repeats: int = 2, journal_path: str = None) -> dict:
+    """Compression-quality scenario: the swap workload with quality
+    telemetry OFF vs ON, plus drift and the tolerance harness.
+
+    Reports (a) measured telemetry overhead on steady-state tokens/s
+    (best-of-``repeats`` per mode) with token identity and the one-compile
+    decode invariant, (b) the live quality summary (residual/nnz stats,
+    per-tier delta attainment) and the ``page_quality`` journal replay
+    verdict, (c) the drift score of a fresh calibration-like run scored
+    against the first run's frozen baseline (snapshot round trip included —
+    ≈ 0 means the dictionary still fits the traffic), and (d) the
+    bounded-error tolerance harness: a lossless decode rerun must produce
+    an all-zero DiffReport that passes a tight gate, while an injected int8
+    value requantization of the cache must be flagged."""
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+    from repro.models.cache_policy import LexicoPolicy
+    from repro.serving.obs import (
+        ToleranceGate, diff_runs, int8_requantize_cache,
+    )
+
+    cfg = BENCH_CFG
+    params, _ = trained_params()
+    N, s_max = 192, 16
+    bank = trained_bank(params, cfg, N, s_max)
+    lex = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp8")
+    n_pages = 15    # tight pool, same as run_swap_bench: tags cross tiers
+
+    def one_run(obs, run_seed):
+        eng = ContinuousBatchingEngine(
+            params, cfg, lex, bank,
+            EngineConfig(n_slots=n_slots, t_max=t_max, min_bucket=8,
+                         layout="paged", page_size=page_size,
+                         n_pages=n_pages, swap=SwapConfig(), obs=obs))
+        _submit_workload(eng, cfg, n_requests=n_requests, seed=run_seed)
+        done = eng.run()
+        return eng, {rid: done[rid].generated_tokens for rid in done}
+
+    # (a) telemetry off vs on: same tokens, one decode compile, overhead.
+    # Quality only on the "on" side — the journal's own overhead is the obs
+    # scenario's budget, not this one's
+    best, tokens, last_eng = {}, {}, {}
+    for mode, obs in (("off", None), ("on", ObsConfig(quality=True))):
+        rates = []
+        for _ in range(repeats):
+            eng, toks = one_run(obs, seed)
+            rates.append(eng.metrics.to_dict()["tokens_per_s_ex_compile"])
+            last_eng[mode], tokens[mode] = eng, toks
+        best[mode] = max(rates)
+    overhead = 1.0 - best["on"] / max(best["off"], 1e-9)
+
+    # artifacts run: quality + journal, so page tags are journaled and the
+    # replay checker sees the page_quality events
+    eng_on, toks_j = one_run(ObsConfig(quality=True, journal=True), seed)
+    same_tokens = tokens["off"] == tokens["on"] == toks_j
+    violations = replay_check(eng_on.journal.events)
+    if journal_path:
+        eng_on.save_journal(journal_path)
+
+    # (b) drift: freeze this run's residual distribution as the calibration
+    # baseline, round-trip it through the snapshot dict, score a fresh run
+    # of the same traffic mix (different seed) against it
+    eng_on.quality.set_baseline()
+    baseline = eng_on.quality.baseline_dict()
+    eng_b, _ = one_run(ObsConfig(quality=True), seed + 1)
+    eng_b.quality.load_baseline(baseline)
+    drift = eng_b.quality.drift_score()
+
+    # (c) tolerance harness at the model level. codec fp16: the fp8 grid is
+    # coarser than per-vector-scaled int8, so the injection would be a
+    # no-op under the serving codec above
+    lex16 = LexicoConfig(N=N, s=s_max, n_b=4, chunk=None, codec="fp16")
+    pol = LexicoPolicy(lex16)
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 24)), jnp.int32)
+    lg, state = M.prefill(params, cfg, pol, {"tokens": toks}, bank=bank,
+                          t_max=48)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg_ref, _ = M.decode_step(params, cfg, pol, state, tok, bank=bank)
+    lg_rerun, _ = M.decode_step(params, cfg, pol, state, tok, bank=bank)
+    state_q = state._replace(cache=int8_requantize_cache(state.cache))
+    lg_lossy, _ = M.decode_step(params, cfg, pol, state_q, tok, bank=bank)
+    gate = ToleranceGate(max_abs=1e-6, require_token_match=True)
+    lossless = diff_runs(lg_ref, lg_rerun,
+                         jnp.argmax(lg_ref, -1), jnp.argmax(lg_rerun, -1))
+    lossy = diff_runs(lg_ref, lg_lossy,
+                      jnp.argmax(lg_ref, -1), jnp.argmax(lg_lossy, -1))
+
+    return {
+        "tokens_per_s_ex_compile_off": best["off"],
+        "tokens_per_s_ex_compile_on": best["on"],
+        "quality_overhead": overhead,
+        "same_tokens": same_tokens,
+        "decode_one_compile": (
+            last_eng["off"].compile_counts["decode"] == 1
+            and eng_on.compile_counts["decode"] == 1),
+        "journal_violations": [str(v) for v in violations],
+        "page_quality_events": sum(e["ev"] == "page_quality"
+                                   for e in eng_on.journal.events),
+        "drift_score": drift,
+        "tolerance": {
+            "gate": gate.to_dict(),
+            "lossless": lossless.to_dict(),
+            "lossy": lossy.to_dict(),
+            "lossless_ok": gate.ok(lossless),
+            "lossy_flagged": not gate.ok(lossy),
+            "lossy_violations": gate.check(lossy),
+        },
+        # NOT under the key "quality": when this scenario runs alone the
+        # outer {"quality": ...} wrapper is unwrapped, and the gate lookup
+        # `stats.get("quality", stats)` must not land on this block
+        "summary": eng_on.metrics.to_dict()["quality"],
     }
 
 
@@ -706,7 +833,8 @@ def main():
                     default="both")
     ap.add_argument("--scenario",
                     choices=["mix", "prefix", "swap", "obs", "fused-kernel",
-                             "omp-kernel", "router", "both", "all"],
+                             "omp-kernel", "router", "quality", "both",
+                             "all"],
                     default="mix",
                     help="mix: short/long layout comparison; prefix: many "
                          "clients sharing one system prompt (shared vs "
@@ -724,6 +852,10 @@ def main():
                          "routing (token identity vs a solo engine; affinity "
                          "must win tokens/s AND hit rate — exit non-zero "
                          "otherwise, the CI gate); "
+                         "quality: compression-quality telemetry off vs on "
+                         "(token identity, overhead, drift vs a frozen "
+                         "baseline, page_quality journal replay, tolerance "
+                         "harness — the quality-gate CI job); "
                          "both: mix+prefix; all: everything")
     ap.add_argument("--repeats", type=int, default=2,
                     help="obs scenario: runs per mode (overhead = best-of)")
@@ -734,8 +866,14 @@ def main():
     ap.add_argument("--metrics-snapshot", metavar="PATH", default=None,
                     help="obs scenario: write a Prometheus text snapshot")
     ap.add_argument("--overhead-budget", type=float, default=None,
-                    help="obs scenario: exit non-zero if measured tracing "
-                         "overhead exceeds this fraction (CI gate: 0.02)")
+                    help="obs/quality scenarios: exit non-zero if measured "
+                         "recording overhead exceeds this fraction "
+                         "(CI gate: 0.02)")
+    ap.add_argument("--drift-budget", type=float, default=0.25,
+                    help="quality scenario: exit non-zero if the drift "
+                         "score of the calibration-like rerun exceeds this "
+                         "(the workload hasn't changed, so the score must "
+                         "be ~0 up to sampling noise)")
     ap.add_argument("--json-only", action="store_true")
     args = ap.parse_args()
     kw = dict(n_requests=args.n_requests, n_slots=args.n_slots,
@@ -765,6 +903,11 @@ def main():
     if args.scenario in ("router", "all"):
         stats["router"] = run_router_bench(
             t_max=args.t_max, seed=args.seed, page_size=args.page_size)
+    if args.scenario in ("quality", "all"):
+        stats["quality"] = run_quality_bench(
+            n_requests=args.n_requests, n_slots=args.n_slots,
+            t_max=args.t_max, seed=args.seed, page_size=args.page_size,
+            repeats=args.repeats, journal_path=args.journal)
     if len(stats) == 1:
         stats = next(iter(stats.values()))
     print(json.dumps(stats, indent=2, default=float))
@@ -789,6 +932,32 @@ def main():
             print(f"tracing overhead {obs_stats['tracing_overhead']:.4f} "
                   f"exceeds budget {args.overhead_budget:.4f}",
                   file=sys.stderr)
+            sys.exit(1)
+    quality_stats = stats.get("quality", stats)
+    if "quality_overhead" in quality_stats:
+        failures = []
+        if not quality_stats["same_tokens"]:
+            failures.append("same_tokens")
+        if not quality_stats["decode_one_compile"]:
+            failures.append("decode_one_compile")
+        if quality_stats["journal_violations"]:
+            failures.append(
+                f"journal replay: {quality_stats['journal_violations']}")
+        if not quality_stats["tolerance"]["lossless_ok"]:
+            failures.append("tolerance gate rejected the lossless rerun")
+        if not quality_stats["tolerance"]["lossy_flagged"]:
+            failures.append("tolerance gate missed the int8 requantization")
+        if quality_stats["drift_score"] > args.drift_budget:
+            failures.append(
+                f"drift {quality_stats['drift_score']:.4f} exceeds "
+                f"budget {args.drift_budget:.4f}")
+        if (args.overhead_budget is not None
+                and quality_stats["quality_overhead"] > args.overhead_budget):
+            failures.append(
+                f"quality overhead {quality_stats['quality_overhead']:.4f} "
+                f"exceeds budget {args.overhead_budget:.4f}")
+        if failures:
+            print(f"quality scenario FAILED: {failures}", file=sys.stderr)
             sys.exit(1)
 
 

@@ -40,6 +40,15 @@ and writes Chrome/Perfetto trace JSON — open it at https://ui.perfetto.dev.
 ``--metrics-snapshot out.prom`` writes the labeled metrics registry as
 Prometheus text, and ``--journal out.jsonl`` the page-lifecycle event
 journal (replayable with ``repro.serving.obs.replay_check``).
+
+With ``--quality`` the engine records live compression-quality telemetry
+(per-encode relative residual and nnz, streamed into exact mergeable
+sketches) and, after the drain, prints the per-layer residual/nnz table
+plus a dictionary-drift score: the decode-phase residual distribution is
+scored against the run's own prefill residuals as a calibration baseline
+(total-variation distance — near 0 when the universal dictionary covers
+decode-time keys/values as well as it covered the prompts). Works with
+``--replicas`` too, where the table is the exact fleet merge.
 """
 import argparse
 import dataclasses
@@ -58,7 +67,35 @@ from repro.serving import (
     ContinuousBatchingEngine, EngineConfig, ObsConfig, ReplicaRouter,
     Request, SwapConfig,
 )
-from repro.serving.obs import replay_check
+from repro.serving.obs import DriftMonitor, layer_table_from_block, replay_check
+
+
+def print_quality(recorders, rows, block):
+    """Per-layer residual/nnz table plus an in-run drift score.
+
+    The drift baseline is the run's own prefill residual distribution —
+    decode-time encodes drifting away from it is exactly the signal a
+    stale calibration set would show in production.
+    """
+    print("\ncompression quality (live telemetry):")
+    print("  layer   k_rel mean/p99    v_rel mean/p99    k_nnz   v_nnz")
+    for row in rows:
+        print(f"  {row['layer']:5d}   "
+              f"{row['k_rel_mean']:.4f}/{row['k_rel_p99']:.4f}    "
+              f"{row['v_rel_mean']:.4f}/{row['v_rel_p99']:.4f}    "
+              f"{row['k_nnz_mean']:5.2f}   {row['v_nnz_mean']:5.2f}")
+    print(f"  {block['encodes']} encodes, delta attained on "
+          f"{block['delta_attained_rate']:.0%} "
+          f"(tiers: {', '.join('s' + t for t in sorted(block['tiers'], key=int))})")
+    base = recorders[0].rel_hist(phase="prefill")
+    live = recorders[0].rel_hist(phase="decode")
+    for rec in recorders[1:]:
+        base = base.merge(rec.rel_hist(phase="prefill"))
+        live = live.merge(rec.rel_hist(phase="decode"))
+    if base.count and live.count:
+        score = DriftMonitor(base).score(live)
+        print(f"  drift score (decode residuals vs prefill calibration "
+              f"baseline, TV distance): {score:.3f}")
 
 
 def main():
@@ -109,6 +146,11 @@ def main():
     ap.add_argument("--journal", metavar="PATH", default=None,
                     help="record the page-lifecycle event journal and write "
                          "it as JSONL (post-hoc invariant replay)")
+    ap.add_argument("--quality", action="store_true",
+                    help="record live compression-quality telemetry and "
+                         "print the per-layer residual/nnz table plus a "
+                         "dictionary-drift score (decode residuals vs the "
+                         "run's prefill calibration baseline) after drain")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.replicas > 1:
@@ -136,8 +178,9 @@ def main():
         swap=SwapConfig() if args.swap else None,
         fused_omp=args.fused_omp,
         obs=(ObsConfig(trace=args.trace is not None,
-                       journal=args.journal is not None)
-             if (args.trace or args.journal) else None),
+                       journal=args.journal is not None,
+                       quality=args.quality)
+             if (args.trace or args.journal or args.quality) else None),
         kv_byte_budget=(args.budget_kb * 1024
                         if args.budget_kb else None))
     eng = None
@@ -210,6 +253,10 @@ def main():
         balanced = all(e.allocator.check_balanced() for e in router.engines)
         print(f"after dropping every replica's prefix pins: "
               f"balanced={balanced}, global view empty={len(router.view) == 0}")
+        if args.quality:
+            block = router.quality_summary()   # exact fleet merge
+            print_quality([e.quality for e in router.engines if e.quality],
+                          layer_table_from_block(block), block)
         return
 
     base_done = base_prefill = None
@@ -299,6 +346,10 @@ def main():
                 print(f"  {label:6s} no steady-state prefill samples "
                       "(every bucket compiled fresh)")
         print(f"  identical tokens vs baseline: {same}")
+
+    if args.quality:
+        print_quality([eng.quality], eng.quality.layer_table(),
+                      stats["quality"])
 
     if args.trace:
         eng.save_trace(args.trace)

@@ -108,7 +108,13 @@ def dict_train_step(
 
 
 def relative_error(D: Array, K: Array, s: int, *, use_gram: bool = True, delta: float = 0.0) -> Array:
-    """Per-vector relative reconstruction error (Table 1 metric)."""
+    """Per-vector relative reconstruction error (Table 1 metric).
+
+    Delegates the ``sqrt(resid2)/||k||`` normalisation to
+    ``omp.relative_residual`` — the same helper the serving-time quality
+    telemetry uses, so offline Table-1 numbers and live telemetry agree
+    exactly on the same dictionary/inputs.
+    """
     res = omp_mod.omp_batch(K.astype(jnp.float32), D.astype(jnp.float32), s,
                             use_gram=use_gram, delta=delta)
-    return jnp.sqrt(res.resid2) / (jnp.linalg.norm(K, axis=-1) + 1e-12)
+    return omp_mod.relative_residual(res.resid2, K)

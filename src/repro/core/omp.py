@@ -287,6 +287,20 @@ def omp_multi_dict(
     return jax.vmap(lambda k, dd: omp_batch(k, dd, s_max, use_gram=use_gram, delta=delta))(K, D)
 
 
+def relative_residual(resid2: Array, k: Array, *, eps: float = 1e-12) -> Array:
+    """Relative reconstruction error ``sqrt(resid2) / (||k|| + eps)``.
+
+    The Table-1 quality metric, shared by the offline evaluator
+    (``core.dict_learning.relative_error``) and the serving-time quality
+    telemetry (``serving/obs/quality.py``) so the two report the *same*
+    number on the same inputs. ``resid2`` is ``OMPResult.resid2`` (any batch
+    shape); ``k`` the matching original vectors (..., m).
+    """
+    r2 = jnp.maximum(jnp.asarray(resid2, jnp.float32), 0.0)
+    norm = jnp.linalg.norm(jnp.asarray(k, jnp.float32), axis=-1)
+    return jnp.sqrt(r2) / (norm + eps)
+
+
 def reconstruct(res: OMPResult, D: Array) -> Array:
     """Decode a padded sparse code back to dense vectors: sum_j vals_j * D[:, idx_j]."""
     atoms = jnp.take(D, res.idx, axis=1)  # (m, ..., s)

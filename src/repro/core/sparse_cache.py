@@ -179,7 +179,8 @@ def _encode_store(vals: Array, idx: Array, val_dtype) -> Tuple[Array, Array]:
 
 
 def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
-                          G_k, G_v, s_cap, start=0, omp_backend="ref"):
+                          G_k, G_v, s_cap, start=0, omp_backend="ref",
+                          return_quality=False):
     """Shared prefill core: OMP-encode prompt positions ``[start, T - n_b)``.
 
     Args:
@@ -194,12 +195,19 @@ def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
       omp_backend: encoder implementation for the prompt-head OMP — see
         ``omp_batch(backend=)``. Prefill is the OMP-dominated phase; decode's
         single-evictee encode stays on the default path.
+      return_quality: static bool — also return the per-position quality aux
+        (see below) instead of discarding ``resid2``/``nnz``.
 
-    Returns ``(kv, ki, vv, vi, k_tail, v_tail, n_comp)`` — encoded sparse
-    stores for positions ``[start, n_comp)`` (shape ``(B, KV, n_comp-start,
-    s)``) plus the ``(B, KV, n_b, m)`` buffer tail — identically for both
-    storage layouts, so the layouts can only differ in *where* codes land.
-    ``start >= n_comp`` (everything shared) returns ``None`` stores.
+    Returns ``(kv, ki, vv, vi, k_tail, v_tail, n_comp, qual)`` — encoded
+    sparse stores for positions ``[start, n_comp)`` (shape ``(B, KV,
+    n_comp-start, s)``) plus the ``(B, KV, n_b, m)`` buffer tail —
+    identically for both storage layouts, so the layouts can only differ in
+    *where* codes land. ``start >= n_comp`` (everything shared) returns
+    ``None`` stores. ``qual`` is ``None`` unless ``return_quality``; then a
+    dict of ``(B, KV, n_comp-start)`` arrays — ``k_rel``/``v_rel`` (relative
+    residual via ``omp.relative_residual``) and ``k_nnz``/``v_nnz`` (int32
+    effective sparsity = OMP iterations actually run) — zero-length on the
+    last axis when everything was shared.
     """
     B, KV, T, m = K.shape
     n_b = cache.n_b
@@ -209,18 +217,30 @@ def _compress_prompt_head(cache, K, V, D_k, D_v, *, s, use_gram, delta,
         raise ValueError(f"start must be >= 0, got {start}")
     k_tail, v_tail = K[:, :, n_comp:], V[:, :, n_comp:]
     if start >= n_comp:       # fully shared prefix: nothing left to encode
-        return None, None, None, None, k_tail, v_tail, n_comp
-    k_head = K[:, :, start:n_comp]
-    v_head = V[:, :, start:n_comp]
+        qual = None
+        if return_quality:
+            qual = {"k_rel": jnp.zeros((B, KV, 0), jnp.float32),
+                    "k_nnz": jnp.zeros((B, KV, 0), jnp.int32),
+                    "v_rel": jnp.zeros((B, KV, 0), jnp.float32),
+                    "v_nnz": jnp.zeros((B, KV, 0), jnp.int32)}
+        return None, None, None, None, k_tail, v_tail, n_comp, qual
+    k_head = K[:, :, start:n_comp].astype(jnp.float32)
+    v_head = V[:, :, start:n_comp].astype(jnp.float32)
     cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None, None]
 
-    rk = omp_mod.omp_batch(k_head.astype(jnp.float32), D_k, s, use_gram=use_gram,
+    rk = omp_mod.omp_batch(k_head, D_k, s, use_gram=use_gram,
                            delta=delta, G=G_k, s_cap=cap, backend=omp_backend)
-    rv = omp_mod.omp_batch(v_head.astype(jnp.float32), D_v, s, use_gram=use_gram,
+    rv = omp_mod.omp_batch(v_head, D_v, s, use_gram=use_gram,
                            delta=delta, G=G_v, s_cap=cap, backend=omp_backend)
     kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
     vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
-    return kv, ki, vv, vi, k_tail, v_tail, n_comp
+    qual = None
+    if return_quality:
+        qual = {"k_rel": omp_mod.relative_residual(rk.resid2, k_head),
+                "k_nnz": rk.nnz.astype(jnp.int32),
+                "v_rel": omp_mod.relative_residual(rv.resid2, v_head),
+                "v_nnz": rv.nnz.astype(jnp.int32)}
+    return kv, ki, vv, vi, k_tail, v_tail, n_comp, qual
 
 
 def prefill_compress(
@@ -235,7 +255,8 @@ def prefill_compress(
     s_cap: Optional[Array] = None,
     start: int = 0,
     omp_backend: str = "ref",
-) -> LexicoLayerCache:
+    return_quality: bool = False,
+):
     """Compress a prefilled prompt into the cache (Algorithm 2, Prefilling).
 
     Args:
@@ -248,6 +269,9 @@ def prefill_compress(
         already holds their codes elsewhere); only ``[start, T - n_b)`` are
         OMP-encoded and written. ``start=0`` is the full prefill.
       omp_backend: prompt-head encoder — see ``omp_batch(backend=)``.
+      return_quality: static bool — also return the encode-quality aux
+        (``_compress_prompt_head``'s ``qual`` dict) instead of discarding
+        ``resid2``/``nnz``. The cache contents are identical either way.
 
     The last ``n_b`` tokens go to the ring buffer; positions ``[start,
     T - n_b)`` are OMP-compressed into the sparse stores. Bookkeeping
@@ -255,12 +279,14 @@ def prefill_compress(
     compressed — the skipped prefix is the caller's responsibility.
     Assumes ``T >= n_b`` and ``T - n_b <= T_max``.
 
-    Returns the updated ``LexicoLayerCache``.
+    Returns the updated ``LexicoLayerCache`` (or ``(cache, qual)`` when
+    ``return_quality``).
     """
     B = K.shape[0]
-    kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
+    kv, ki, vv, vi, k_tail, v_tail, n_comp, qual = _compress_prompt_head(
         cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start, omp_backend=omp_backend)
+        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start, omp_backend=omp_backend,
+        return_quality=return_quality)
 
     def put(store, new):
         return jax.lax.dynamic_update_slice(store, new, (0, 0, int(start), 0))
@@ -270,12 +296,13 @@ def prefill_compress(
         stores = dict(k_vals=put(cache.k_vals, kv), k_idx=put(cache.k_idx, ki),
                       v_vals=put(cache.v_vals, vv), v_idx=put(cache.v_idx, vi))
     fill = lambda v: jnp.full((B,), v, jnp.int32)
-    return cache._replace(
+    out = cache._replace(
         k_buf=k_tail.astype(cache.k_buf.dtype),
         v_buf=v_tail.astype(cache.v_buf.dtype),
         t_c=fill(n_comp), buf_len=fill(cache.n_b), buf_start=fill(0),
         **stores,
     )
+    return (out, qual) if return_quality else out
 
 
 def scatter_into_pages(pool: Array, page_table: Array, dense: Array,
@@ -308,7 +335,8 @@ def paged_prefill_compress(
     s_cap: Optional[Array] = None,
     start: int = 0,
     omp_backend: str = "ref",
-) -> PagedLexicoLayerCache:
+    return_quality: bool = False,
+):
     """Paged twin of :func:`prefill_compress` (restartable).
 
     The caller owns page placement: every row's ``page_table`` must already
@@ -318,12 +346,14 @@ def paged_prefill_compress(
     of an already-shared prefix — table entries below ``start // page_size``
     are never written, so they may alias pages owned by other rows.
     Encoding is bit-identical to the contiguous path — only the scatter
-    destination differs.
+    destination differs. ``return_quality`` returns ``(cache, qual)`` with
+    the same quality aux as :func:`prefill_compress`.
     """
     B = K.shape[0]
-    kv, ki, vv, vi, k_tail, v_tail, n_comp = _compress_prompt_head(
+    kv, ki, vv, vi, k_tail, v_tail, n_comp, qual = _compress_prompt_head(
         cache, K, V, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start, omp_backend=omp_backend)
+        G_k=G_k, G_v=G_v, s_cap=s_cap, start=start, omp_backend=omp_backend,
+        return_quality=return_quality)
 
     stores = {}
     if kv is not None:
@@ -334,12 +364,13 @@ def paged_prefill_compress(
             v_vals=scatter_into_pages(cache.v_vals, table, vv, start=start),
             v_idx=scatter_into_pages(cache.v_idx, table, vi, start=start))
     fill = lambda v: jnp.full((B,), v, jnp.int32)
-    return cache._replace(
+    out = cache._replace(
         k_buf=k_tail.astype(cache.k_buf.dtype),
         v_buf=v_tail.astype(cache.v_buf.dtype),
         t_c=fill(n_comp), buf_len=fill(cache.n_b), buf_start=fill(0),
         **stores,
     )
+    return (out, qual) if return_quality else out
 
 
 def decode_update(
@@ -353,7 +384,8 @@ def decode_update(
     G_k=None, G_v=None,
     active: Optional[Array] = None,
     s_cap: Optional[Array] = None,
-) -> LexicoLayerCache:
+    return_quality: bool = False,
+):
     """Insert the new token; if the buffer is full, OMP-compress the oldest
     entry into the sparse store first (Algorithm 2, Decoding, n_a = 1).
 
@@ -362,10 +394,13 @@ def decode_update(
     independently inside one jitted step.
     ``active`` (B,) bool: rows set False are left untouched (idle slots of the
     continuous-batching pool). ``s_cap`` (B,) caps the per-row sparsity tier.
+    ``return_quality`` returns ``(cache, qual)`` with the evictee-encode
+    quality aux (see ``_compress_evictee``); the cache is identical either way.
     """
-    kv, ki, vv, vi, act, full, evict = _compress_evictee(
+    kv, ki, vv, vi, act, full, evict, qual = _compress_evictee(
         cache, k_t, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+        G_k=G_k, G_v=G_v, active=active, s_cap=s_cap,
+        return_quality=return_quality)
     B = k_t.shape[0]
     b_idx = jnp.arange(B)
 
@@ -378,18 +413,26 @@ def decode_update(
         payload = jnp.where(evict[:, None, None], new.astype(store.dtype), cur)
         return store.at[b_idx, :, t_w].set(payload)
 
-    return cache._replace(
+    out = cache._replace(
         k_vals=maybe_store(cache.k_vals, kv), k_idx=maybe_store(cache.k_idx, ki),
         v_vals=maybe_store(cache.v_vals, vv), v_idx=maybe_store(cache.v_idx, vi),
         **_ring_append(cache, k_t, v_t, act, full, evict))
+    return (out, qual) if return_quality else out
 
 
 def _compress_evictee(cache, k_t, D_k, D_v, *, s, use_gram, delta, G_k, G_v,
-                      active, s_cap):
+                      active, s_cap, return_quality=False):
     """Shared decode core: OMP-encode the oldest ring-buffer entry.
 
-    Returns the encoded stores plus the (act, full, evict) row masks; both
-    storage layouts consume these, differing only in the write destination.
+    Returns the encoded stores plus the (act, full, evict) row masks and a
+    quality aux; both storage layouts consume these, differing only in the
+    write destination. ``qual`` is ``None`` unless ``return_quality``; then a
+    dict of ``(B, KV)`` arrays (``k_rel``/``v_rel``/``k_nnz``/``v_nnz``, same
+    semantics as the prefill aux) plus ``wrote`` — the (B,) evict mask, since
+    the encode runs unconditionally for every row but only rows whose buffer
+    was full *and* active actually wrote the code. This closes the decode-path
+    quality blind spot without changing what is computed: the ``resid2``/
+    ``nnz`` the encode already produced simply stop being discarded.
     """
     B = k_t.shape[0]
     b_idx = jnp.arange(B)
@@ -397,16 +440,24 @@ def _compress_evictee(cache, k_t, D_k, D_v, *, s, use_gram, delta, G_k, G_v,
            else jnp.asarray(active, jnp.bool_))
     full = cache.buf_len >= cache.n_b
 
-    old_k = cache.k_buf[b_idx, :, cache.buf_start]          # (B, KV, m)
-    old_v = cache.v_buf[b_idx, :, cache.buf_start]
+    old_k = cache.k_buf[b_idx, :, cache.buf_start].astype(jnp.float32)  # (B, KV, m)
+    old_v = cache.v_buf[b_idx, :, cache.buf_start].astype(jnp.float32)
     cap = None if s_cap is None else jnp.asarray(s_cap, jnp.int32)[:, None]
-    rk = omp_mod.omp_batch(old_k.astype(jnp.float32), D_k, s, use_gram=use_gram,
+    rk = omp_mod.omp_batch(old_k, D_k, s, use_gram=use_gram,
                            delta=delta, G=G_k, s_cap=cap)
-    rv = omp_mod.omp_batch(old_v.astype(jnp.float32), D_v, s, use_gram=use_gram,
+    rv = omp_mod.omp_batch(old_v, D_v, s, use_gram=use_gram,
                            delta=delta, G=G_v, s_cap=cap)
     kv, ki = _encode_store(rk.vals, rk.idx, cache.k_vals.dtype)
     vv, vi = _encode_store(rv.vals, rv.idx, cache.v_vals.dtype)
-    return kv, ki, vv, vi, act, full, full & act
+    evict = full & act
+    qual = None
+    if return_quality:
+        qual = {"k_rel": omp_mod.relative_residual(rk.resid2, old_k),
+                "k_nnz": rk.nnz.astype(jnp.int32),
+                "v_rel": omp_mod.relative_residual(rv.resid2, old_v),
+                "v_nnz": rv.nnz.astype(jnp.int32),
+                "wrote": evict}
+    return kv, ki, vv, vi, act, full, evict, qual
 
 
 def _ring_append(cache, k_t, v_t, act, full, evict) -> dict:
@@ -440,7 +491,8 @@ def paged_decode_update(
     G_k=None, G_v=None,
     active: Optional[Array] = None,
     s_cap: Optional[Array] = None,
-) -> PagedLexicoLayerCache:
+    return_quality: bool = False,
+):
     """Paged twin of :func:`decode_update`.
 
     The evicted token lands at position ``t_c`` of the row's page table —
@@ -449,10 +501,13 @@ def paged_decode_update(
     their current contents back (evicting rows own their destination page
     exclusively; non-evicting rows resolve to the trash page or their own
     cell, so same-payload writes are the only possible collisions).
+    ``return_quality`` returns ``(cache, qual)`` exactly as
+    :func:`decode_update` does.
     """
-    kv, ki, vv, vi, act, full, evict = _compress_evictee(
+    kv, ki, vv, vi, act, full, evict, qual = _compress_evictee(
         cache, k_t, D_k, D_v, s=s, use_gram=use_gram, delta=delta,
-        G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+        G_k=G_k, G_v=G_v, active=active, s_cap=s_cap,
+        return_quality=return_quality)
 
     t_w = jnp.clip(cache.t_c, 0, cache.T_max - 1)
     pg, off = _page_dest(cache.page_table, t_w, cache.page_size, cache.n_pages)
@@ -462,10 +517,11 @@ def paged_decode_update(
         payload = jnp.where(evict[:, None, None], new.astype(pool.dtype), cur)
         return pool.at[pg, :, off].set(payload)
 
-    return cache._replace(
+    out = cache._replace(
         k_vals=maybe_store(cache.k_vals, kv), k_idx=maybe_store(cache.k_idx, ki),
         v_vals=maybe_store(cache.v_vals, vv), v_idx=maybe_store(cache.v_idx, vi),
         **_ring_append(cache, k_t, v_t, act, full, evict))
+    return (out, qual) if return_quality else out
 
 
 def attend(

@@ -69,24 +69,30 @@ class LexicoPolicy:
         D_k, D_v = ctx
         return D_k, D_v, None, None
 
-    def prefill(self, cache, K, V, ctx, *, s_cap=None, start=0):
+    def prefill(self, cache, K, V, ctx, *, s_cap=None, start=0,
+                return_quality=False):
         """Compress prompt K/V ``(B, KV, T, m)`` into ``cache``.
 
         ``s_cap`` (B,) caps per-row sparsity tiers; ``start`` (static int)
         restarts compression at that compressed position (prefix sharing) —
-        positions below it are left untouched.
+        positions below it are left untouched. ``return_quality`` (static
+        bool) returns ``(cache, qual)`` with the encode-quality aux (see
+        ``sc.prefill_compress``); cache contents are identical either way.
         """
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.prefill_compress(cache, K, V, D_k, D_v, s=self.cfg.s,
                                    use_gram=self.cfg.use_gram, delta=self.cfg.delta,
                                    G_k=G_k, G_v=G_v, s_cap=s_cap, start=start,
-                                   omp_backend=self.omp_backend)
+                                   omp_backend=self.omp_backend,
+                                   return_quality=return_quality)
 
-    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None,
+               return_quality=False):
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.decode_update(cache, k_t, v_t, D_k, D_v, s=self.cfg.s,
                                 use_gram=self.cfg.use_gram, delta=self.cfg.delta,
-                                G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+                                G_k=G_k, G_v=G_v, active=active, s_cap=s_cap,
+                                return_quality=return_quality)
 
     def attend(self, cache, q, ctx, *, window=None):
         D_k, D_v = ctx[0], ctx[1]
@@ -143,7 +149,8 @@ class PagedLexicoPolicy:
 
     _unpack = staticmethod(LexicoPolicy._unpack)
 
-    def prefill(self, cache, K, V, ctx, *, s_cap=None, start=0):
+    def prefill(self, cache, K, V, ctx, *, s_cap=None, start=0,
+                return_quality=False):
         """Paged twin of :meth:`LexicoPolicy.prefill`: scatters through the
         cache's existing page tables. ``start`` must be page-aligned when the
         skipped prefix aliases pages owned by other rows."""
@@ -151,13 +158,15 @@ class PagedLexicoPolicy:
         return sc.paged_prefill_compress(
             cache, K, V, D_k, D_v, s=self.cfg.s, use_gram=self.cfg.use_gram,
             delta=self.cfg.delta, G_k=G_k, G_v=G_v, s_cap=s_cap, start=start,
-            omp_backend=self.omp_backend)
+            omp_backend=self.omp_backend, return_quality=return_quality)
 
-    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None):
+    def decode(self, cache, k_t, v_t, ctx, *, active=None, s_cap=None,
+               return_quality=False):
         D_k, D_v, G_k, G_v = self._unpack(ctx)
         return sc.paged_decode_update(
             cache, k_t, v_t, D_k, D_v, s=self.cfg.s, use_gram=self.cfg.use_gram,
-            delta=self.cfg.delta, G_k=G_k, G_v=G_v, active=active, s_cap=s_cap)
+            delta=self.cfg.delta, G_k=G_k, G_v=G_v, active=active, s_cap=s_cap,
+            return_quality=return_quality)
 
     def attend(self, cache, q, ctx, *, window=None):
         D_k, D_v = ctx[0], ctx[1]

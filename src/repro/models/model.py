@@ -584,7 +584,8 @@ def init_serve_cache(cfg: ModelConfig, policy: CachePolicy, batch: int,
 def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
             *, bank: Optional[DictionaryBank], t_max: int,
             s_cap: Optional[Array] = None,
-            compress_start: int = 0) -> Tuple[Array, ServeState]:
+            compress_start: int = 0,
+            collect_quality: bool = False):
     """Run the prompt, build the (compressed) cache.
 
     Args:
@@ -596,10 +597,20 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
         over the whole prompt — only the OMP encode is skipped — so logits
         and the encoded tail are bitwise identical to a ``compress_start=0``
         run. Lexico attention-stack policies only.
+      collect_quality: static bool — additionally return the layer-stacked
+        encode-quality aux (``k_rel``/``v_rel``/``k_nnz``/``v_nnz``, each
+        ``(L, B, KV, n_encoded)``) as a third output. The aux rides the
+        existing scan as extra ys, so logits and cache stay bitwise identical
+        and no extra trace is introduced. Lexico attention-stack only.
 
     Returns ``(last-token logits (B, vocab), ServeState)`` where the state's
-    ``length`` is ``(B,)`` (meta tokens included).
+    ``length`` is ``(B,)`` (meta tokens included) — plus the quality aux dict
+    when ``collect_quality``.
     """
+    if collect_quality and (cfg.rwkv is not None or cfg.mla is not None
+                            or not _is_lexico(policy)):
+        raise NotImplementedError(
+            "collect_quality covers attention-stack Lexico policies only")
     tokens = batch["tokens"]
     B, T = tokens.shape
     x = _embed_tokens(params, cfg, tokens)
@@ -643,6 +654,7 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
         h, kv, new_ssm, cross_kv = layer_seq(lp, cfg, h, positions, w,
                                              ssm_state=ssm_in, enc_out=enc_out)
         ctx = _dict_ctx(cfg, bank, Dl, Gl)
+        qaux = None
         if cfg.mla is not None:
             if compress_start:
                 raise NotImplementedError(
@@ -651,6 +663,10 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
             new_cache = mla_mod.mla_prefill_compress(
                 cache_l, kv, ctx[0], s=policy.cfg.s, use_gram=policy.cfg.use_gram,
                 delta=policy.cfg.delta, G=ctx[1], s_cap=s_cap)
+        elif collect_quality:
+            new_cache, qaux = policy.prefill(cache_l, kv[0], kv[1], ctx,
+                                             s_cap=s_cap, start=compress_start,
+                                             return_quality=True)
         elif compress_start:
             new_cache = policy.prefill(cache_l, kv[0], kv[1], ctx,
                                        s_cap=s_cap, start=compress_start)
@@ -667,33 +683,48 @@ def prefill(params: dict, cfg: ModelConfig, policy: CachePolicy, batch: dict,
                 s=policy.cfg.s if compressed else 0,
                 use_gram=getattr(policy.cfg, "use_gram", True) if compressed else True,
                 compressed=compressed)
-        outs = (new_cache, new_ssm, cross_c)
+        outs = (new_cache, new_ssm, cross_c, qaux)
         return h, outs
 
     xs = (params["layers"],
           windows if windows is not None else jnp.zeros((cfg.num_layers,), jnp.int32),
           bank_D, bank_G, attn_cache0, ssm_cache0 if cfg.parallel_ssm else
           jnp.zeros((cfg.num_layers,), jnp.int32))
-    x, (new_cache, new_ssm, cross_c) = jax.lax.scan(body, x, xs)
+    x, (new_cache, new_ssm, cross_c, qaux) = jax.lax.scan(body, x, xs)
     logits = _unembed(params, cfg, x[:, -1])
     cache_out = {"attn": new_cache, "ssm": new_ssm} if cfg.parallel_ssm else new_cache
-    return logits, ServeState(cache=cache_out,
-                              length=jnp.full((B,), Ttot, jnp.int32),
-                              cross=cross_c)
+    state = ServeState(cache=cache_out,
+                       length=jnp.full((B,), Ttot, jnp.int32),
+                       cross=cross_c)
+    if collect_quality:
+        return logits, state, qaux
+    return logits, state
 
 
 def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
                 state: ServeState, token: Array,
                 *, bank: Optional[DictionaryBank],
                 active: Optional[Array] = None,
-                s_cap: Optional[Array] = None) -> Tuple[Array, ServeState]:
+                s_cap: Optional[Array] = None,
+                collect_quality: bool = False):
     """One autoregressive step. token (B,) int32 -> (logits (B,V), state).
 
     ``active`` (B,) bool: slots set False are carried through unchanged (their
     cache, counters and length don't advance) — the continuous-batching
     engine decodes a partially-occupied slot pool with one compiled step.
     ``s_cap`` (B,) int32: per-request sparsity tiers (Lexico policies only).
+    ``collect_quality`` (static bool): additionally return the layer-stacked
+    evictee-encode quality aux (``k_rel``/``v_rel``/``k_nnz``/``v_nnz`` each
+    ``(L, B, KV)`` plus the ``(L, B)`` ``wrote`` mask) as a third output —
+    the decode-path quality signal, riding the existing scan as extra ys so
+    logits/cache stay bitwise identical within the same single trace. Lexico
+    attention-stack policies only (not the fused ``decode_attend`` path).
     """
+    if collect_quality and (cfg.rwkv is not None or cfg.mla is not None
+                            or hasattr(policy, "decode_attend")
+                            or not _is_lexico(policy)):
+        raise NotImplementedError(
+            "collect_quality covers attention-stack Lexico policies only")
     B = token.shape[0]
     x = _embed_tokens(params, cfg, token)           # (B, d)
     x = shard_hint(x, BATCH_AXES, None)
@@ -729,6 +760,7 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
         h = shard_hint(h, BATCH_AXES, None)
         hn = norm_apply(cfg.norm, h, lp["ln1"])
         new_ssm = None
+        qaux = None
         if cfg.mla is not None:
             attn_out, new_cache = mla_mod.mla_decode_step(
                 lp["attn"], cache_l, hn, cfg, position, ctx[0],
@@ -743,6 +775,11 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
                 att, new_cache = policy.decode_attend(cache_l, q, k_t, v_t, ctx,
                                                       window=w_eff, active=active,
                                                       s_cap=s_cap)
+            elif collect_quality:
+                new_cache, qaux = policy.decode(cache_l, k_t, v_t, ctx,
+                                                active=active, s_cap=s_cap,
+                                                return_quality=True)
+                att = policy.attend(new_cache, q, ctx, window=w_eff)
             else:
                 new_cache = policy.decode(cache_l, k_t, v_t, ctx,
                                           active=active, s_cap=s_cap)
@@ -761,7 +798,7 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
                                       policy.cfg.N if _is_lexico(policy) else 0)
         h2 = norm_apply(cfg.norm, h, lp["ln2"])
         h = h + _ffn(lp, cfg, h2)
-        return h, (new_cache, new_ssm)
+        return h, (new_cache, new_ssm, qaux)
 
     L = cfg.num_layers
     xs = (params["layers"],
@@ -769,9 +806,12 @@ def decode_step(params: dict, cfg: ModelConfig, policy: CachePolicy,
           bank_D, bank_G, attn_cache,
           ssm_cache if cfg.parallel_ssm else jnp.zeros((L,), jnp.int32),
           state.cross if cfg.enc_dec else jnp.zeros((L,), jnp.int32))
-    x, (new_cache, new_ssm) = jax.lax.scan(body, x, xs)
+    x, (new_cache, new_ssm, qaux) = jax.lax.scan(body, x, xs)
     logits = _unembed(params, cfg, x)
     cache_out = ({"attn": new_cache, "ssm": new_ssm} if cfg.parallel_ssm
                  else new_cache)
-    return logits, ServeState(cache=cache_out, length=state.length + step_inc,
-                              cross=state.cross)
+    new_state = ServeState(cache=cache_out, length=state.length + step_inc,
+                           cross=state.cross)
+    if collect_quality:
+        return logits, new_state, qaux
+    return logits, new_state

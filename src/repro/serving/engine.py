@@ -93,7 +93,8 @@ from repro.serving import slots as slots_mod
 from repro.serving import swap as swap_mod
 from repro.serving.metrics import EngineMetrics
 from repro.serving.obs import (
-    ENGINE_TID, EventJournal, ObsConfig, TraceRecorder,
+    ENGINE_TID, EventJournal, ObsConfig, PageQuality, QualityRecorder,
+    TraceRecorder,
 )
 from repro.serving.pages import (
     NULL_PAGE, PageAllocator, PagePoolExhausted, pages_needed,
@@ -128,9 +129,10 @@ class EngineConfig:
     # pages demote to a pinned numpy mirror under free-list pressure and
     # promote back — bitwise — on access; None disables tiering
     swap: Optional[SwapConfig] = None
-    # observability switches (repro.serving.obs): request-lifecycle tracing
-    # and/or page-lifecycle journaling; None records nothing and pays
-    # nothing (phase timers and the metrics registry are always on)
+    # observability switches (repro.serving.obs): request-lifecycle tracing,
+    # page-lifecycle journaling and/or compression-quality telemetry; None
+    # records nothing and pays nothing (phase timers and the metrics
+    # registry are always on)
     obs: Optional[ObsConfig] = None
     # fused paged sparse-attention (paged layout only): decode attention
     # computes directly from the packed pool codes through the page tables
@@ -246,6 +248,15 @@ class ContinuousBatchingEngine:
             TraceRecorder() if obs is not None and obs.trace else None)
         self.journal: Optional[EventJournal] = (
             EventJournal() if obs is not None and obs.journal else None)
+        # compression-quality telemetry (ObsConfig(quality=True)): the
+        # recorder is the ONLY quality state — when None the compiled
+        # functions don't even return the quality aux
+        self.quality: Optional[QualityRecorder] = None
+        if obs is not None and obs.quality:
+            self.quality = QualityRecorder(
+                n_layers=cfg.num_layers, s_max=lex_cfg.s,
+                registry=self.metrics.registry)
+            self.metrics.quality = self.quality
         if self.journal is not None:
             if self.allocator is not None:
                 self.allocator.journal = self.journal
@@ -274,6 +285,11 @@ class ContinuousBatchingEngine:
 
         # --- the compiled entry points ------------------------------------
         policy = self.policy
+        # static Python bool fixed at construction: quality-on and
+        # quality-off engines trace DIFFERENT functions (one returns the
+        # aux, one doesn't), but each engine still traces its decode step
+        # exactly once and its prefill once per (bucket, start) pair
+        collect_quality = self.quality is not None
 
         def prefill_fn(params, bank, tokens, s_cap, compress_start):
             # compress_start is static: each distinct (bucket, start) pair is
@@ -282,11 +298,13 @@ class ContinuousBatchingEngine:
             # in practice (start=0 dominates; see docs/serving.md)
             return M.prefill(params, cfg, policy, {"tokens": tokens},
                              bank=bank, t_max=t_max, s_cap=s_cap,
-                             compress_start=compress_start)
+                             compress_start=compress_start,
+                             collect_quality=collect_quality)
 
         def decode_fn(params, bank, state, token, active, s_cap):
             return M.decode_step(params, cfg, decode_policy, state, token,
-                                 bank=bank, active=active, s_cap=s_cap)
+                                 bank=bank, active=active, s_cap=s_cap,
+                                 collect_quality=collect_quality)
 
         # every jitted entry point closes over a function object unique to
         # THIS engine: jax.jit keyed on a shared module-level function would
@@ -608,7 +626,10 @@ class ContinuousBatchingEngine:
         stores = self._extract_fn(self.state, jnp.int32(page))
         stores_np = tuple(np.asarray(x) for x in stores)
         refs = self.allocator.refcount(page)
-        handle = self.swap.host.put(stores_np, refs=refs)
+        # the quality tag rides the page across the tier move (None when
+        # quality telemetry is off — the allocator dict is simply empty)
+        handle = self.swap.host.put(stores_np, refs=refs,
+                                    quality=self.allocator.pop_quality(page))
         holders = 0
         for i in self.pool.active_slots():
             info = self.pool.slots[i]
@@ -643,8 +664,15 @@ class ContinuousBatchingEngine:
         None when no device page can be freed (the caller stalls)."""
         if self.allocator.n_free == 0 and not self._make_free(1, hot):
             return None
+        tag = self.swap.host.pop_quality(handle)
         stores, refs = self.swap.host.pop(handle)
         page = self.allocator.promote(refs)
+        if tag is not None:
+            # the tag returns with the codes; re-stamp the journal so replay
+            # sees the tag re-attach to the (freshly allocated) device id
+            self.allocator.set_quality(page, tag)
+            if self.journal is not None:
+                self.journal.emit("page_quality", page=page, **tag.to_event())
         self.state = self._inject_fn(self.state, jnp.int32(page),
                                      *(jnp.asarray(x) for x in stores))
         holders = 0
@@ -848,8 +876,13 @@ class ContinuousBatchingEngine:
         cap = jnp.full((1,), req.tier, jnp.int32)
         n_traces = self._jit_traces(self._prefill_fn)
         t0 = time.perf_counter()
-        logits, one = self._prefill_fn(self.params, self.bank, tokens, cap,
-                                       int(start))
+        qaux = None
+        if self.quality is not None:
+            logits, one, qaux = self._prefill_fn(self.params, self.bank,
+                                                 tokens, cap, int(start))
+        else:
+            logits, one = self._prefill_fn(self.params, self.bank, tokens,
+                                           cap, int(start))
         t1 = time.perf_counter()
         if self._jit_traces(self._prefill_fn) > n_traces:
             # a new (bucket, compress_start) trace: the elapsed time is
@@ -933,6 +966,14 @@ class ContinuousBatchingEngine:
                 if self.tracer is not None:
                     self.tracer.instant("cow_copy", self._tid(req.rid),
                                         src=copy_src, dst=new_pages[0])
+                if self.quality is not None:
+                    # the private copy inherits the donor page's tag (the
+                    # copied codes ARE the donor's); the recipient's own
+                    # encode span is folded in by _record_prefill_quality
+                    src_tag = self.allocator.get_quality(copy_src)
+                    if src_tag is not None:
+                        self.allocator.set_quality(new_pages[0],
+                                                   src_tag.copy())
                 self.allocator.decref(copy_src)
             row = np.zeros((self._max_pages,), np.int32)
             row[:n_prompt] = info.pages
@@ -962,7 +1003,92 @@ class ContinuousBatchingEngine:
                               pages=[p for p in info.pages
                                      if not isinstance(p, PageHandle)],
                               aliased=info.pages_shared)
+        if self.quality is not None:
+            self._record_prefill_quality(qaux, req, info, int(start), n_comp)
         self._consume_logits(slot, np.asarray(logits[0]))
+
+    def _record_prefill_quality(self, qaux, req: Request, info: SlotInfo,
+                                start: int, n_comp: int) -> None:
+        """Feed one admission's prefill encode-quality aux (layer-stacked
+        numpy-able dict from ``M.prefill(collect_quality=True)``) into the
+        recorder, stamp the slot's freshly-encoded pages with quality tags,
+        and emit ``page_quality`` journal events + a trace counter sample."""
+        q = {k: np.asarray(v) for k, v in qaux.items()}
+        self.quality.record_prefill(q, tier=req.tier)
+        if q["k_rel"].size == 0:
+            return          # fully shared-prefix-skipped: nothing encoded
+        if self.tracer is not None:
+            self.tracer.counter("prefill_rel_residual", ENGINE_TID,
+                                k=float(q["k_rel"].mean()),
+                                v=float(q["v_rel"].mean()))
+        if not self.paged:
+            return
+        P = self.engine_cfg.page_size
+        # page pi holds compressed positions [pi*P, (pi+1)*P); this encode
+        # produced [start, n_comp) — aliased prefix pages keep the donor's
+        # tag (the codes are physically shared, so the quality is too)
+        for pi, page in enumerate(info.pages):
+            lo, hi = max(pi * P, start), min((pi + 1) * P, n_comp)
+            if hi <= lo or isinstance(page, PageHandle):
+                continue
+            sl = slice(lo - start, hi - start)
+            tag = self.allocator.get_quality(page)
+            if tag is None:
+                tag = PageQuality()
+            tag.add(np.concatenate([q["k_rel"][..., sl].ravel(),
+                                    q["v_rel"][..., sl].ravel()]),
+                    np.concatenate([q["k_nnz"][..., sl].ravel(),
+                                    q["v_nnz"][..., sl].ravel()]))
+            self.allocator.set_quality(page, tag)
+            if self.journal is not None:
+                self.journal.emit("page_quality", page=page, **tag.to_event())
+
+    def _record_decode_quality(self, qnp: Dict[str, np.ndarray],
+                               step_ids: List[int], pre_pos: Dict[int, int],
+                               s_cap: np.ndarray) -> None:
+        """Feed one decode step's single-evictee encode quality into the
+        recorder and roll the written positions into their pages' tags.
+        ``pre_pos`` maps slot -> the compressed position the evictee landed
+        at (captured before the per-slot ``cache_len`` increments)."""
+        self.quality.record_decode(qnp, tiers=s_cap)
+        wrote = np.asarray(qnp["wrote"])
+        w = np.asarray(wrote[0] if wrote.ndim == 2 else wrote, bool)
+        rows = [i for i in step_ids if w[i]]
+        if not rows:
+            return          # every row's recency buffer still filling
+        if self.tracer is not None:
+            self.tracer.counter("encode_rel_residual", ENGINE_TID,
+                                k=float(qnp["k_rel"][:, rows].mean()),
+                                v=float(qnp["v_rel"][:, rows].mean()))
+            self.tracer.counter("encode_nnz", ENGINE_TID,
+                                k=float(qnp["k_nnz"][:, rows].mean()),
+                                v=float(qnp["v_nnz"][:, rows].mean()))
+        if not self.paged:
+            return
+        P = self.engine_cfg.page_size
+        for i in rows:
+            info = self.pool.slots[i]
+            if info is None or not info.pages:
+                continue    # retired this very step — its pages are gone
+            pos = pre_pos[i]
+            pi = pos // P
+            if pi >= len(info.pages):
+                continue
+            page = info.pages[pi]
+            if isinstance(page, PageHandle) or page == NULL_PAGE:
+                continue
+            tag = self.allocator.get_quality(page)
+            if tag is None:
+                tag = PageQuality()
+            tag.add(np.concatenate([qnp["k_rel"][:, i].ravel(),
+                                    qnp["v_rel"][:, i].ravel()]),
+                    np.concatenate([qnp["k_nnz"][:, i].ravel(),
+                                    qnp["v_nnz"][:, i].ravel()]))
+            self.allocator.set_quality(page, tag)
+            if self.journal is not None and pos % P == P - 1:
+                # the page just sealed (last position written): one journal
+                # stamp per page, not one per decoded token
+                self.journal.emit("page_quality", page=page, **tag.to_event())
 
     def step(self) -> bool:
         """Admit + advance every active slot one token (swap mode: every
@@ -1007,10 +1133,23 @@ class ContinuousBatchingEngine:
         touched = [p for i in step_ids
                    for p in self.pool.slots[i].device_pages]
 
+        pre_pos: Dict[int, int] = {}
+        if self.quality is not None:
+            # evictee write position per slot (the pre-step compressed
+            # count) — captured BEFORE cache_len increments below
+            pre_pos = {i: self.pool.slots[i].cache_len - self.lex_cfg.n_b
+                       for i in step_ids}
+
         t_disp0 = time.perf_counter()
-        logits, self.state = self._decode_fn(
-            self.params, self.bank, self.state,
-            jnp.asarray(token), jnp.asarray(active), jnp.asarray(s_cap))
+        qaux = None
+        if self.quality is not None:
+            logits, self.state, qaux = self._decode_fn(
+                self.params, self.bank, self.state,
+                jnp.asarray(token), jnp.asarray(active), jnp.asarray(s_cap))
+        else:
+            logits, self.state = self._decode_fn(
+                self.params, self.bank, self.state,
+                jnp.asarray(token), jnp.asarray(active), jnp.asarray(s_cap))
         t_disp1 = time.perf_counter()
         self._phase("decode_dispatch", t_disp0, t_disp1)
         if not self._decode_compiled:
@@ -1018,6 +1157,8 @@ class ContinuousBatchingEngine:
             if self._jit_traces(self._decode_fn) >= 1:
                 self.metrics.record_compile(t_disp1 - t_disp0)
         logits_np = np.asarray(logits)
+        qnp = (None if qaux is None
+               else {k: np.asarray(v) for k, v in qaux.items()})
         t_sync = time.perf_counter()
         self._phase("host_sync", t_disp1, t_sync)
 
@@ -1031,6 +1172,8 @@ class ContinuousBatchingEngine:
                 info.fed += 1
                 self.metrics.record_prompt_tokens(1)
             self._consume_logits(i, logits_np[i])
+        if qnp is not None:
+            self._record_decode_quality(qnp, step_ids, pre_pos, s_cap)
         t_consume = time.perf_counter()
         self._phase("consume_logits", t_sync, t_consume)
 

@@ -125,6 +125,11 @@ class EngineMetrics:
         self.created_at: float = time.perf_counter()
         self.started_at: Optional[float] = None
 
+        # set by the engine when ObsConfig(quality=True): the
+        # QualityRecorder whose summary() block rides to_dict(); None keeps
+        # the snapshot schema quality-free (and byte-compatible)
+        self.quality = None
+
         self.occupancy_samples: List[int] = []
         self.kv_bytes_samples: List[int] = []
         self.kv_bytes_resident_samples: List[int] = []
@@ -408,6 +413,8 @@ class EngineMetrics:
         out["setup_s"] = self.setup_s
         out["compile_s"] = self.compile_s
         out["tokens_per_s_ex_compile"] = self.tokens_generated / el_ex_compile
+        if self.quality is not None:
+            out["quality"] = self.quality.summary()
         return out
 
 
@@ -514,4 +521,8 @@ def merge_snapshots(snaps: List[Dict]) -> Dict:
     out["compile_s"] = sum(s["compile_s"] for s in snaps)
     el_ex = max(el - out["compile_s"], 1e-9)
     out["tokens_per_s_ex_compile"] = out["tokens_generated"] / el_ex
+    quality_blocks = [s["quality"] for s in snaps if s.get("quality")]
+    if quality_blocks:
+        from repro.serving.obs.quality import merge_quality_blocks
+        out["quality"] = merge_quality_blocks(quality_blocks)
     return out

@@ -14,17 +14,43 @@ documented in ``docs/observability.md``:
     checker (refcount conservation, leaks, two-tier balance).
   * :mod:`~repro.serving.obs.roofline` — AOT roofline of the engine's
     compiled decode/prefill hot loop via ``repro.roofline``.
+  * :mod:`~repro.serving.obs.quality` — compression-quality telemetry:
+    streaming residual/nnz histograms per layer/role/phase/tier
+    (:class:`QualityRecorder`), per-page quality tags
+    (:class:`PageQuality`), and dictionary-drift scoring against a
+    calibration baseline (:class:`DriftMonitor`).
+  * :mod:`~repro.serving.obs.tolerance` — bounded-error differential
+    harness: logit max-abs/KL/top-k-overlap diffs between runs
+    (:func:`diff_runs`) gated by :class:`ToleranceGate`, plus the
+    :func:`int8_requantize_cache` lossy perturbation used to prove the
+    gate trips.
 
-Tracing and journaling are opt-in per engine via :class:`ObsConfig`
-(``EngineConfig(obs=ObsConfig(trace=True))``); when disabled the engine
-carries no recording state at all — every emission site is behind an
-``is not None`` check. Phase timers and the metrics registry are always on
-(a handful of ``perf_counter`` calls per step).
+Tracing, journaling, and quality telemetry are opt-in per engine via
+:class:`ObsConfig` (``EngineConfig(obs=ObsConfig(trace=True))``); when
+disabled the engine carries no recording state at all — every emission
+site is behind an ``is not None`` check. Phase timers and the metrics
+registry are always on (a handful of ``perf_counter`` calls per step).
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.serving.obs.quality import (
+    DriftMonitor,
+    PageQuality,
+    QualityRecorder,
+    StreamingHist,
+    layer_table_from_block,
+    merge_quality_blocks,
+)
+from repro.serving.obs.tolerance import (
+    DiffReport,
+    ToleranceGate,
+    compare_logits,
+    diff_runs,
+    int8_requantize_cache,
+    token_divergence,
+)
 from repro.serving.obs.journal import (
     EventJournal, JournalViolation, replay_check, replay_check_multi,
 )
@@ -48,6 +74,18 @@ __all__ = [
     "percentile",
     "engine_decode_roofline",
     "engine_prefill_roofline",
+    "StreamingHist",
+    "PageQuality",
+    "DriftMonitor",
+    "QualityRecorder",
+    "merge_quality_blocks",
+    "layer_table_from_block",
+    "DiffReport",
+    "ToleranceGate",
+    "compare_logits",
+    "token_divergence",
+    "diff_runs",
+    "int8_requantize_cache",
 ]
 
 
@@ -59,11 +97,17 @@ class ObsConfig:
     into a :class:`TraceRecorder` (``engine.tracer``), exportable as
     Chrome/Perfetto JSON. ``journal``: record every slot/page lifecycle
     transition into an :class:`EventJournal` (``engine.journal``) for
-    post-hoc invariant replay. Both default off; a default-constructed
-    engine records nothing and pays nothing.
+    post-hoc invariant replay. ``quality``: record per-encode compression
+    quality (relative residual, nnz, delta attainment) into a
+    :class:`QualityRecorder` (``engine.quality``), stamp per-page quality
+    tags, and emit ``page_quality`` journal events when journaling is
+    also on. All default off; a default-constructed engine records
+    nothing and pays nothing — with ``quality=False`` the compiled
+    prefill/decode functions don't even return the quality aux.
     """
     trace: bool = False
     journal: bool = False
+    quality: bool = False
 
 
 def engine_decode_roofline(*args, **kwargs):

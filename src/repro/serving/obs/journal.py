@@ -28,6 +28,9 @@ Event schema (one JSON object per line in the saved JSONL):
 ``reject``          ``rid`` (admission reservation check failed)
 ``prefix_publish``  ``path`` (hex chain digest: prefix-index pin created)
 ``prefix_drop``     ``path`` (pin released — evict/trim/clear)
+``page_quality``    ``page``, ``count``, ``rel_mean``, ``rel_max``,
+                    ``nnz_mean`` (encode-quality tag stamped/updated on a
+                    live device page — admission, page seal, or promote)
 ==================  =====================================================
 
 A multi-replica deployment adds the **router log** (one journal for the
@@ -106,6 +109,9 @@ def replay_check(events: Iterable[Dict]) -> List[JournalViolation]:
         ``host_put`` carrying the identical transferred refcount, every
         ``page_promote`` with a ``host_pop`` (multiset match — ordering
         within a transfer is not constrained);
+      * ``page_quality`` tags land only on live device pages (never the
+        null page, never a freed page) and carry sane statistics
+        (``count >= 1``, ``0 <= rel_mean <= rel_max``, all finite);
       * end-of-trace leaks: any page or handle still live when the journal
         ends.
     """
@@ -213,6 +219,27 @@ def replay_check(events: Iterable[Dict]) -> List[JournalViolation]:
                         f"replay holds {host[hid]}")
                 del host[hid]
             pop_refs[refs] += 1
+        elif ev == "page_quality":
+            page = e["page"]
+            if page == 0:
+                bad(seq, "quality-null-page",
+                    "quality tag on page 0 (the trash page)")
+            elif page not in device:
+                bad(seq, "quality-on-dead-page", f"page {page} not live")
+            count = e.get("count", 1)
+            rel_mean = e.get("rel_mean", 0.0)
+            rel_max = e.get("rel_max", rel_mean)
+            nnz_mean = e.get("nnz_mean", 0.0)
+            finite = all(isinstance(x, (int, float)) and x == x
+                         and abs(x) != float("inf")
+                         for x in (count, rel_mean, rel_max, nnz_mean))
+            if not finite:
+                bad(seq, "bad-quality-value",
+                    f"page {page}: non-finite quality fields")
+            elif count < 1 or rel_mean < 0 or rel_max < rel_mean - 1e-9:
+                bad(seq, "bad-quality-value",
+                    f"page {page}: count={count} rel_mean={rel_mean} "
+                    f"rel_max={rel_max}")
         # submit/admit/stall/retire/reject are context, not invariants
 
     if demote_refs != put_refs:

@@ -1,0 +1,641 @@
+"""Compression-quality telemetry: streaming residual/nnz sketches, page
+quality tags, and dictionary-drift detection.
+
+Lexico's bet is that a universal dictionary keeps reconstruction error low
+across inputs. The encoder already computes the evidence — ``OMPResult.resid2``
+(squared residual) and ``nnz`` (iterations actually run before the delta
+target) — and until now the serving stack discarded both. This module is the
+aggregation side of that signal:
+
+* ``StreamingHist`` — a fixed-bin histogram sketch with *exact* integer-count
+  merge (associative/commutative), bounded-error quantiles (right bin edge,
+  so at most one bin width above the empirical quantile for in-range data),
+  and NaN/under/overflow accounting. Serializable, so snapshots merge across
+  a replica fleet.
+* ``QualityRecorder`` — per-(layer, role, phase, tier) residual and nnz
+  sketches plus delta-attainment counters, fed by the engine from the
+  prefill and decode encode paths. Exposes Prometheus families through the
+  shared :class:`~repro.serving.obs.registry.MetricsRegistry` and a
+  ``summary()`` block that rides ``EngineMetrics.to_dict()``.
+* ``PageQuality`` — the per-page tag (count / mean / max relative residual,
+  mean nnz) stamped at encode and carried by the allocator and host store
+  across alias, CoW, demote and promote.
+* ``DriftMonitor`` — total-variation distance between the live residual
+  distribution and a frozen calibration baseline: the dictionary-staleness
+  signal (ROADMAP item 5). Score ≈ 0 on calibration-like traffic; → 1 as
+  live residuals stop looking like the baseline.
+* ``merge_quality_blocks`` — fleet merge used by
+  ``metrics.merge_snapshots`` / ``router.quality_summary``; exact for every
+  counter because the underlying sketches merge exactly.
+
+Everything here is plain numpy on host — nothing is jitted, nothing imports
+jax. The device side only threads ``(resid2, nnz)`` out of existing encodes
+(see ``core/sparse_cache.py``), so enabling quality telemetry changes no
+compiled computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "StreamingHist",
+    "PageQuality",
+    "DriftMonitor",
+    "QualityRecorder",
+    "merge_quality_blocks",
+    "layer_table_from_block",
+]
+
+# Default sketch layout for relative residuals: rel = sqrt(resid2)/||k|| is
+# ~always in [0, 1); 1.5 leaves headroom for pathological vectors without
+# wasting resolution, and 64 bins bounds quantile error at ~0.023.
+REL_BINS = 64
+REL_HI = 1.5
+
+_ROLES = ("k", "v")
+
+
+class StreamingHist:
+    """Fixed-bin streaming histogram with exact merge and bounded quantiles.
+
+    ``n_bins`` uniform bins over ``[lo, hi)`` plus underflow/overflow buckets
+    and a NaN counter. All counts are integers, so :meth:`merge` is exact —
+    associative and commutative — which is what lets per-replica snapshots
+    combine into a fleet view without approximation error. ``quantile``
+    returns the right edge of the bin holding the requested rank: an upper
+    bound on the empirical quantile, tight to one bin width for in-range
+    values (the overflow bucket reports the exactly-tracked max).
+    """
+
+    __slots__ = ("lo", "hi", "n_bins", "counts", "underflow", "overflow",
+                 "nan_count", "vmin", "vmax", "total_sum")
+
+    def __init__(self, lo: float, hi: float, n_bins: int):
+        if not hi > lo:
+            raise ValueError(f"need hi > lo, got [{lo}, {hi})")
+        if n_bins < 1:
+            raise ValueError(f"need n_bins >= 1, got {n_bins}")
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.n_bins = int(n_bins)
+        self.counts = np.zeros(self.n_bins, np.int64)
+        self.underflow = 0
+        self.overflow = 0
+        self.nan_count = 0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self.total_sum = 0.0
+
+    @property
+    def count(self) -> int:
+        """Finite observations recorded (NaNs are counted separately)."""
+        return self.underflow + self.overflow + int(self.counts.sum())
+
+    @property
+    def mean(self) -> float:
+        n = self.count
+        return self.total_sum / n if n else math.nan
+
+    def add(self, values: Any) -> None:
+        a = np.asarray(values, np.float64).ravel()
+        if a.size == 0:
+            return
+        nan = np.isnan(a)
+        n_nan = int(nan.sum())
+        if n_nan:
+            self.nan_count += n_nan
+            a = a[~nan]
+        if a.size == 0:
+            return
+        self.vmin = min(self.vmin, float(a.min()))
+        self.vmax = max(self.vmax, float(a.max()))
+        self.total_sum += float(a.sum())
+        scaled = (a - self.lo) / (self.hi - self.lo) * self.n_bins
+        # clip before the int cast so +/-inf land in the flow buckets instead
+        # of wrapping through undefined float->int64 conversion
+        idx = np.clip(np.floor(scaled), -1, self.n_bins).astype(np.int64)
+        self.underflow += int((idx < 0).sum())
+        self.overflow += int((idx >= self.n_bins).sum())
+        inr = idx[(idx >= 0) & (idx < self.n_bins)]
+        if inr.size:
+            self.counts += np.bincount(inr, minlength=self.n_bins)
+
+    def _check_layout(self, other: "StreamingHist") -> None:
+        if (self.lo, self.hi, self.n_bins) != (other.lo, other.hi, other.n_bins):
+            raise ValueError(
+                f"bin layout mismatch: [{self.lo},{self.hi})x{self.n_bins} vs "
+                f"[{other.lo},{other.hi})x{other.n_bins}")
+
+    def merge(self, other: "StreamingHist") -> "StreamingHist":
+        """Exact combined histogram (new object; neither input mutated)."""
+        self._check_layout(other)
+        out = StreamingHist(self.lo, self.hi, self.n_bins)
+        out.counts = self.counts + other.counts
+        out.underflow = self.underflow + other.underflow
+        out.overflow = self.overflow + other.overflow
+        out.nan_count = self.nan_count + other.nan_count
+        out.vmin = min(self.vmin, other.vmin)
+        out.vmax = max(self.vmax, other.vmax)
+        out.total_sum = self.total_sum + other.total_sum
+        return out
+
+    def quantile(self, q: float) -> float:
+        """Upper bound on the empirical q-quantile (NaN if empty).
+
+        In-range ranks resolve to the right edge of their bin; the underflow
+        bucket resolves to ``lo`` and the overflow bucket to the exact
+        observed max.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        n = self.count
+        if n == 0:
+            return math.nan
+        rank = min(n - 1, max(0, int(math.ceil(q * n)) - 1))
+        if rank < self.underflow:
+            return self.lo
+        c = self.underflow
+        width = (self.hi - self.lo) / self.n_bins
+        for i in range(self.n_bins):
+            c += int(self.counts[i])
+            if rank < c:
+                edge = self.lo + (i + 1) * width
+                return min(edge, self.vmax)
+        return self.vmax
+
+    def distance(self, other: "StreamingHist") -> float:
+        """Total-variation distance between the normalized histograms, in
+        [0, 1]. NaN if either side is empty."""
+        self._check_layout(other)
+        n1, n2 = self.count, other.count
+        if n1 == 0 or n2 == 0:
+            return math.nan
+        p = np.concatenate(([self.underflow], self.counts, [self.overflow])) / n1
+        q = np.concatenate(([other.underflow], other.counts, [other.overflow])) / n2
+        return float(0.5 * np.abs(p - q).sum())
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "lo": self.lo, "hi": self.hi, "n_bins": self.n_bins,
+            "counts": [int(c) for c in self.counts],
+            "underflow": int(self.underflow), "overflow": int(self.overflow),
+            "nan_count": int(self.nan_count),
+            "vmin": self.vmin, "vmax": self.vmax, "sum": self.total_sum,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "StreamingHist":
+        h = cls(d["lo"], d["hi"], d["n_bins"])
+        counts = np.asarray(d["counts"], np.int64)
+        if counts.shape != (h.n_bins,):
+            raise ValueError(f"counts shape {counts.shape} != ({h.n_bins},)")
+        h.counts = counts.copy()
+        h.underflow = int(d["underflow"])
+        h.overflow = int(d["overflow"])
+        h.nan_count = int(d["nan_count"])
+        h.vmin = float(d["vmin"])
+        h.vmax = float(d["vmax"])
+        h.total_sum = float(d["sum"])
+        return h
+
+
+@dataclasses.dataclass
+class PageQuality:
+    """Per-page quality tag: running stats over every (layer, head, role)
+    encode whose code landed on the page.
+
+    Stamped by the engine at prefill admission, updated on every decode
+    evictee write, copied on CoW, and carried by value across demote /
+    promote (the host store holds it while the page lives on the host tier).
+    Aliased pages share one tag — the codes are physically shared, so the
+    quality is too.
+    """
+    count: int = 0
+    rel_sum: float = 0.0
+    rel_max: float = 0.0
+    nnz_sum: int = 0
+
+    def add(self, rel: Any, nnz: Any) -> None:
+        r = np.asarray(rel, np.float64).ravel()
+        z = np.asarray(nnz, np.int64).ravel()
+        if r.size == 0:
+            return
+        self.count += int(r.size)
+        self.rel_sum += float(r.sum())
+        self.rel_max = max(self.rel_max, float(r.max()))
+        self.nnz_sum += int(z.sum())
+
+    @property
+    def rel_mean(self) -> float:
+        return self.rel_sum / self.count if self.count else 0.0
+
+    @property
+    def nnz_mean(self) -> float:
+        return self.nnz_sum / self.count if self.count else 0.0
+
+    def merge(self, other: "PageQuality") -> "PageQuality":
+        return PageQuality(
+            count=self.count + other.count,
+            rel_sum=self.rel_sum + other.rel_sum,
+            rel_max=max(self.rel_max, other.rel_max),
+            nnz_sum=self.nnz_sum + other.nnz_sum,
+        )
+
+    def copy(self) -> "PageQuality":
+        return dataclasses.replace(self)
+
+    def to_event(self) -> Dict[str, Any]:
+        """Fields for a ``page_quality`` journal event."""
+        return {
+            "count": int(self.count),
+            "rel_mean": float(self.rel_mean),
+            "rel_max": float(self.rel_max),
+            "nnz_mean": float(self.nnz_mean),
+        }
+
+
+class DriftMonitor:
+    """Dictionary-staleness signal: live residual distribution vs a frozen
+    calibration baseline.
+
+    The baseline is a :class:`StreamingHist` of relative residuals captured
+    on calibration traffic (or loaded from a saved snapshot). ``score`` is
+    the total-variation distance in [0, 1]: ≈ 0 when live traffic encodes as
+    well as calibration did, approaching 1 when the residual mass has moved —
+    the trigger for retraining/hot-swapping the dictionary (ROADMAP item 5).
+    """
+
+    def __init__(self, baseline: StreamingHist):
+        if baseline.count == 0:
+            raise ValueError("drift baseline histogram is empty")
+        self.baseline = baseline
+
+    def score(self, live: StreamingHist) -> float:
+        return live.distance(self.baseline)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"baseline": self.baseline.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DriftMonitor":
+        return cls(StreamingHist.from_dict(d["baseline"]))
+
+
+def _hist_stats(h: StreamingHist) -> Dict[str, Any]:
+    if h.count == 0:
+        return {"count": 0, "mean": None, "p50": None, "p99": None, "max": None}
+    return {
+        "count": int(h.count),
+        "mean": float(h.mean),
+        "p50": float(h.quantile(0.5)),
+        "p99": float(h.quantile(0.99)),
+        "max": float(h.vmax),
+    }
+
+
+class QualityRecorder:
+    """Host-side aggregator for live encode-quality telemetry.
+
+    One per engine when ``ObsConfig(quality=True)``; holds a
+    :class:`StreamingHist` pair (relative residual, nnz) per
+    ``(layer, role, phase, tier)`` plus delta-attainment counters per tier.
+    The engine feeds it numpy views of the quality aux returned by the
+    jitted prefill/decode functions; nothing here touches jax.
+    """
+
+    def __init__(self, n_layers: int, s_max: int, *, registry: Any = None,
+                 rel_hi: float = REL_HI, rel_bins: int = REL_BINS):
+        self.n_layers = int(n_layers)
+        self.s_max = int(s_max)
+        self.registry = registry
+        self.rel_hi = float(rel_hi)
+        self.rel_bins = int(rel_bins)
+        # key: (layer, role, phase, tier)
+        self._rel: Dict[Tuple[int, str, str, int], StreamingHist] = {}
+        self._nnz: Dict[Tuple[int, str, str, int], StreamingHist] = {}
+        # tier -> [encodes, delta_attained]
+        self._tier_counts: Dict[int, List[int]] = {}
+        self._drift: Optional[DriftMonitor] = None
+        # decode-path deferral: the hot loop appends (rel, nnz) slices per
+        # (role, tier) here and the sketch fold happens lazily on access —
+        # per-step numpy overhead on (L, 1, KV)-sized arrays costs more than
+        # the decode dispatch tolerates (see the quality-gate 2% budget)
+        self._pending: Dict[Tuple[str, int],
+                            List[Tuple[np.ndarray, np.ndarray]]] = {}
+        self._pending_steps = 0
+
+    # -- recording ---------------------------------------------------------
+
+    def _record(self, *, phase: str, layer: int, role: str, tier: int,
+                rel: np.ndarray, nnz: np.ndarray, cap: int) -> Tuple[int, int]:
+        key = (layer, role, phase, tier)
+        h = self._rel.get(key)
+        if h is None:
+            h = self._rel[key] = StreamingHist(0.0, self.rel_hi, self.rel_bins)
+        h.add(rel)
+        hn = self._nnz.get(key)
+        if hn is None:
+            # one unit-width bin per nnz value 0..s_max => exact counts
+            hn = self._nnz[key] = StreamingHist(0.0, float(self.s_max + 1),
+                                                self.s_max + 1)
+        hn.add(nnz)
+        n = int(nnz.size)
+        attained = int((np.asarray(nnz, np.int64) < cap).sum())
+        tc = self._tier_counts.setdefault(int(tier), [0, 0])
+        tc[0] += n
+        tc[1] += attained
+        return n, attained
+
+    def _emit_registry(self, phase: str, role: str, n: int, attained: int,
+                       rel_mean: float) -> None:
+        # one registry touch per (phase, role) per engine call — NOT per
+        # layer; the family labels don't carry the layer, so batching the
+        # increments keeps the hot-loop cost flat in n_layers
+        if self.registry is None or n == 0:
+            return
+        self.registry.counter(
+            "lexico_quality_encodes_total",
+            "Sparse-code encodes observed by quality telemetry.",
+            phase=phase, role=role).inc(n)
+        self.registry.counter(
+            "lexico_quality_delta_attained_total",
+            "Encodes that met the delta target before the sparsity cap.",
+            phase=phase, role=role).inc(attained)
+        self.registry.gauge(
+            "lexico_quality_rel_residual_mean",
+            "Mean relative residual of the latest encode batch.",
+            phase=phase, role=role).set(rel_mean)
+
+    def record_prefill(self, aux: Mapping[str, np.ndarray], *, tier: int) -> None:
+        """Record one admission's prefill encode quality.
+
+        ``aux`` arrays are layer-stacked: ``k_rel``/``v_rel``/``k_nnz``/
+        ``v_nnz`` of shape (L, B, KV, n) where n is the number of compressed
+        positions (0 when the whole head was shared-prefix-skipped).
+        """
+        k_rel = np.asarray(aux["k_rel"])
+        if k_rel.size == 0:
+            return
+        cap = min(int(tier), self.s_max)
+        arrs = {k: np.asarray(aux[k]) for k in ("k_rel", "k_nnz", "v_rel", "v_nnz")}
+        for role in _ROLES:
+            n = att = 0
+            for layer in range(k_rel.shape[0]):
+                dn, da = self._record(
+                    phase="prefill", layer=layer, role=role, tier=int(tier),
+                    rel=arrs[f"{role}_rel"][layer],
+                    nnz=arrs[f"{role}_nnz"][layer], cap=cap)
+                n += dn
+                att += da
+            self._emit_registry("prefill", role, n, att,
+                                float(arrs[f"{role}_rel"].mean()))
+
+    def record_decode(self, aux: Mapping[str, np.ndarray], *,
+                      tiers: np.ndarray) -> None:
+        """Record one decode step's evictee encode quality.
+
+        ``aux`` arrays are (L, B, KV); ``aux["wrote"]`` is (L, B) (identical
+        across layers) marking slots whose evictee was actually encoded and
+        written this step — rows with a non-full recency buffer or an
+        inactive slot ran the encode as a masked no-op and are excluded.
+        ``tiers`` is the per-slot (B,) sparsity-tier vector.
+        """
+        wrote = np.asarray(aux["wrote"])
+        w = np.asarray(wrote[0] if wrote.ndim == 2 else wrote, bool)
+        rows = np.nonzero(w)[0]
+        if rows.size == 0:
+            return
+        tiers = np.asarray(tiers)
+        arrs = {k: np.asarray(aux[k]) for k in ("k_rel", "k_nnz", "v_rel", "v_nnz")}
+        for role in _ROLES:
+            n = att = 0
+            for t in np.unique(tiers[rows]):
+                sel = rows[tiers[rows] == t]
+                cap = min(int(t), self.s_max)
+                rel = arrs[f"{role}_rel"][:, sel]          # (L, |sel|, KV)
+                nnz = arrs[f"{role}_nnz"][:, sel]
+                self._pending.setdefault((role, int(t)), []).append((rel, nnz))
+                dn = int(nnz.size)
+                da = int((nnz < cap).sum())
+                tc = self._tier_counts.setdefault(int(t), [0, 0])
+                tc[0] += dn
+                tc[1] += da
+                n += dn
+                att += da
+            self._emit_registry("decode", role, n, att,
+                                float(arrs[f"{role}_rel"][:, rows].mean()))
+        self._pending_steps += 1
+        if self._pending_steps >= 512:      # bound deferred memory
+            self._flush()
+
+    def _flush(self) -> None:
+        """Fold deferred decode-path slices into the per-layer sketches.
+
+        Concatenating a tier's backlog first means each histogram sees one
+        large array instead of one tiny array per step — identical counts
+        (StreamingHist.add is order-insensitive), amortized numpy overhead.
+        """
+        pending, self._pending = self._pending, {}
+        self._pending_steps = 0
+        for (role, tier), blocks in pending.items():
+            rel = np.concatenate([r for r, _ in blocks], axis=1)
+            nnz = np.concatenate([z for _, z in blocks], axis=1)
+            for layer in range(rel.shape[0]):
+                key = (layer, role, "decode", tier)
+                h = self._rel.get(key)
+                if h is None:
+                    h = self._rel[key] = StreamingHist(0.0, self.rel_hi,
+                                                       self.rel_bins)
+                h.add(rel[layer])
+                hn = self._nnz.get(key)
+                if hn is None:
+                    hn = self._nnz[key] = StreamingHist(
+                        0.0, float(self.s_max + 1), self.s_max + 1)
+                hn.add(nnz[layer])
+
+    # -- aggregation -------------------------------------------------------
+
+    def _merged(self, table: Mapping[Tuple[int, str, str, int], StreamingHist],
+                lo: float, hi: float, bins: int, *,
+                layer: Optional[int] = None, role: Optional[str] = None,
+                phase: Optional[str] = None,
+                tier: Optional[int] = None) -> StreamingHist:
+        if self._pending:
+            self._flush()
+        out = StreamingHist(lo, hi, bins)
+        for (l, r, p, t), h in table.items():
+            if layer is not None and l != layer:
+                continue
+            if role is not None and r != role:
+                continue
+            if phase is not None and p != phase:
+                continue
+            if tier is not None and t != tier:
+                continue
+            out = out.merge(h)
+        return out
+
+    def rel_hist(self, **filt: Any) -> StreamingHist:
+        """Merged relative-residual sketch over the selected keys."""
+        return self._merged(self._rel, 0.0, self.rel_hi, self.rel_bins, **filt)
+
+    def nnz_hist(self, **filt: Any) -> StreamingHist:
+        """Merged nnz sketch over the selected keys."""
+        return self._merged(self._nnz, 0.0, float(self.s_max + 1),
+                            self.s_max + 1, **filt)
+
+    @property
+    def encodes(self) -> int:
+        return sum(c for c, _ in self._tier_counts.values())
+
+    @property
+    def delta_attained(self) -> int:
+        return sum(a for _, a in self._tier_counts.values())
+
+    # -- drift -------------------------------------------------------------
+
+    def set_baseline(self) -> None:
+        """Freeze the current aggregate residual distribution as the
+        calibration baseline."""
+        self._drift = DriftMonitor(self.rel_hist())
+
+    def load_baseline(self, d: Mapping[str, Any]) -> None:
+        """Load a baseline from :meth:`baseline_dict` output."""
+        self._drift = DriftMonitor(StreamingHist.from_dict(d))
+
+    def baseline_dict(self) -> Optional[Dict[str, Any]]:
+        return None if self._drift is None else self._drift.baseline.to_dict()
+
+    def drift_score(self) -> Optional[float]:
+        """TV distance of live residuals vs the baseline; None until both a
+        baseline and live data exist."""
+        if self._drift is None:
+            return None
+        live = self.rel_hist()
+        if live.count == 0:
+            return None
+        return self._drift.score(live)
+
+    # -- export ------------------------------------------------------------
+
+    def layer_table(self) -> List[Dict[str, Any]]:
+        """Per-layer residual/nnz stats, for human-facing printouts."""
+        rows = []
+        for layer in range(self.n_layers):
+            row: Dict[str, Any] = {"layer": layer}
+            for role in _ROLES:
+                rh = self.rel_hist(layer=layer, role=role)
+                nh = self.nnz_hist(layer=layer, role=role)
+                row[f"{role}_rel_mean"] = rh.mean if rh.count else math.nan
+                row[f"{role}_rel_p99"] = rh.quantile(0.99)
+                row[f"{role}_rel_max"] = rh.vmax if rh.count else math.nan
+                row[f"{role}_nnz_mean"] = nh.mean if nh.count else math.nan
+            rows.append(row)
+        return rows
+
+    def summary(self) -> Dict[str, Any]:
+        """The ``quality`` block appended to ``EngineMetrics.to_dict()``.
+
+        Carries the full per-layer sketches (as dicts) so fleet merges via
+        :func:`merge_quality_blocks` stay exact.
+        """
+        encodes = self.encodes
+        attained = self.delta_attained
+        per_layer = []
+        for layer in range(self.n_layers):
+            per_layer.append({
+                "layer": layer,
+                "k_rel": self.rel_hist(layer=layer, role="k").to_dict(),
+                "v_rel": self.rel_hist(layer=layer, role="v").to_dict(),
+                "k_nnz": self.nnz_hist(layer=layer, role="k").to_dict(),
+                "v_nnz": self.nnz_hist(layer=layer, role="v").to_dict(),
+            })
+        return {
+            "encodes": int(encodes),
+            "delta_attained": int(attained),
+            "delta_attained_rate": attained / encodes if encodes else 0.0,
+            "tiers": {str(t): {"encodes": int(c), "delta_attained": int(a)}
+                      for t, (c, a) in sorted(self._tier_counts.items())},
+            "rel_residual": _hist_stats(self.rel_hist()),
+            "nnz": _hist_stats(self.nnz_hist()),
+            "drift_score": self.drift_score(),
+            "per_layer": per_layer,
+        }
+
+
+def _merge_hists(dicts: Sequence[Mapping[str, Any]]) -> StreamingHist:
+    h = StreamingHist.from_dict(dicts[0])
+    for d in dicts[1:]:
+        h = h.merge(StreamingHist.from_dict(d))
+    return h
+
+
+def merge_quality_blocks(blocks: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
+    """Merge per-engine ``quality`` snapshot blocks into one fleet block.
+
+    Counters sum exactly; distribution stats are recomputed from the merged
+    per-layer sketches (exact, because :meth:`StreamingHist.merge` is exact);
+    ``drift_score`` is the worst (max) per-replica score — one stale replica
+    should surface, not be averaged away.
+    """
+    blocks = [b for b in blocks if b]
+    if not blocks:
+        return {}
+    tiers: Dict[str, Dict[str, int]] = {}
+    for b in blocks:
+        for t, d in b.get("tiers", {}).items():
+            cur = tiers.setdefault(t, {"encodes": 0, "delta_attained": 0})
+            cur["encodes"] += int(d["encodes"])
+            cur["delta_attained"] += int(d["delta_attained"])
+    encodes = sum(d["encodes"] for d in tiers.values())
+    attained = sum(d["delta_attained"] for d in tiers.values())
+
+    n_layers = max(len(b.get("per_layer", [])) for b in blocks)
+    per_layer: List[Dict[str, Any]] = []
+    rel_all: Optional[StreamingHist] = None
+    nnz_all: Optional[StreamingHist] = None
+    for layer in range(n_layers):
+        entry: Dict[str, Any] = {"layer": layer}
+        for key in ("k_rel", "v_rel", "k_nnz", "v_nnz"):
+            h = _merge_hists([b["per_layer"][layer][key] for b in blocks
+                              if layer < len(b.get("per_layer", []))])
+            entry[key] = h.to_dict()
+            if key.endswith("_rel"):
+                rel_all = h if rel_all is None else rel_all.merge(h)
+            else:
+                nnz_all = h if nnz_all is None else nnz_all.merge(h)
+        per_layer.append(entry)
+
+    drifts = [b["drift_score"] for b in blocks if b.get("drift_score") is not None]
+    empty = {"count": 0, "mean": None, "p50": None, "p99": None, "max": None}
+    return {
+        "encodes": int(encodes),
+        "delta_attained": int(attained),
+        "delta_attained_rate": attained / encodes if encodes else 0.0,
+        "tiers": {t: dict(d) for t, d in sorted(tiers.items())},
+        "rel_residual": _hist_stats(rel_all) if rel_all is not None else dict(empty),
+        "nnz": _hist_stats(nnz_all) if nnz_all is not None else dict(empty),
+        "drift_score": max(drifts) if drifts else None,
+        "per_layer": per_layer,
+    }
+
+
+def layer_table_from_block(block: Mapping[str, Any]) -> List[Dict[str, Any]]:
+    """Rebuild :meth:`QualityRecorder.layer_table` rows from a (possibly
+    fleet-merged) ``quality`` snapshot block."""
+    rows = []
+    for entry in block.get("per_layer", []):
+        row: Dict[str, Any] = {"layer": int(entry["layer"])}
+        for role in _ROLES:
+            rh = StreamingHist.from_dict(entry[f"{role}_rel"])
+            nh = StreamingHist.from_dict(entry[f"{role}_nnz"])
+            row[f"{role}_rel_mean"] = rh.mean if rh.count else math.nan
+            row[f"{role}_rel_p99"] = rh.quantile(0.99)
+            row[f"{role}_rel_max"] = rh.vmax if rh.count else math.nan
+            row[f"{role}_nnz_mean"] = nh.mean if nh.count else math.nan
+        rows.append(row)
+    return rows

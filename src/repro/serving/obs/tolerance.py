@@ -1,0 +1,181 @@
+"""Bounded-error differential harness: compare a test run against a
+reference run and gate on explicit tolerances.
+
+Every serving feature so far is held to *bitwise* token identity against a
+feature-off oracle. Deliberately lossy features — cold-tier recompression
+(ROADMAP item 4), dictionary hot-swap — break that gate by design, so they
+need the next-best contract: a quantified diff (logit max-abs, KL, top-k
+overlap, first divergent token) plus a :class:`ToleranceGate` that turns the
+diff into a pass/fail with named violations.
+
+The contract the gate enforces:
+
+* a **lossless** run (same computation twice) produces an all-zero
+  :class:`DiffReport` and passes any gate;
+* an injected lossy perturbation — e.g. :func:`int8_requantize_cache`, which
+  round-trips stored sparse-code values through the int8 codec — produces a
+  nonzero report that a tight gate *flags* with human-readable violations.
+
+Pure numpy at import time; :func:`int8_requantize_cache` imports jax lazily
+so this module stays cheap for host-only consumers (CI artifact checks,
+offline journal analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "DiffReport",
+    "ToleranceGate",
+    "compare_logits",
+    "token_divergence",
+    "diff_runs",
+    "int8_requantize_cache",
+]
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffReport:
+    """Quantified difference between a test run and a reference run.
+
+    ``first_divergent_token`` is the earliest position where the two runs'
+    emitted tokens differ (-1 = identical; a length mismatch diverges at the
+    shorter length). All other fields aggregate over compared positions.
+    """
+    n_positions: int
+    max_abs: float               # max |ref_logit - test_logit| anywhere
+    mean_kl: float               # mean KL(softmax(ref) || softmax(test))
+    max_kl: float
+    topk_overlap: float          # mean fraction of ref top-k kept in test top-k
+    first_divergent_token: int   # -1 = token streams identical
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def compare_logits(ref: Any, test: Any, *, k: int = 5,
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-position diff metrics between two logit sequences.
+
+    ``ref``/``test`` are (T, V) (a single (V,) row is treated as T=1).
+    Returns ``(max_abs, kl, topk_overlap)``, each of shape (T,).
+    """
+    ref = np.atleast_2d(np.asarray(ref, np.float64))
+    test = np.atleast_2d(np.asarray(test, np.float64))
+    if ref.shape != test.shape:
+        raise ValueError(f"logit shape mismatch: {ref.shape} vs {test.shape}")
+    max_abs = np.abs(ref - test).max(axis=-1)
+    p = _softmax(ref)
+    q = _softmax(test)
+    kl = np.sum(p * (np.log(p + 1e-12) - np.log(q + 1e-12)), axis=-1)
+    k = min(int(k), ref.shape[-1])
+    ref_top = np.argsort(-ref, axis=-1)[:, :k]
+    test_top = np.argsort(-test, axis=-1)[:, :k]
+    overlap = np.array([len(set(a.tolist()) & set(b.tolist())) / k
+                        for a, b in zip(ref_top, test_top)], np.float64)
+    return max_abs, kl, overlap
+
+
+def token_divergence(ref_tokens: Any, test_tokens: Any) -> int:
+    """First position where the token streams differ; -1 if identical.
+
+    A length mismatch counts as divergence at the shorter length.
+    """
+    a = np.asarray(ref_tokens).ravel()
+    b = np.asarray(test_tokens).ravel()
+    n = min(a.size, b.size)
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    if neq.size:
+        return int(neq[0])
+    if a.size != b.size:
+        return n
+    return -1
+
+
+def diff_runs(ref_logits: Any, test_logits: Any,
+              ref_tokens: Any = None, test_tokens: Any = None, *,
+              k: int = 5) -> DiffReport:
+    """Build a :class:`DiffReport` from two runs' logits (and optionally
+    their emitted token streams)."""
+    max_abs, kl, overlap = compare_logits(ref_logits, test_logits, k=k)
+    div = -1
+    if ref_tokens is not None and test_tokens is not None:
+        div = token_divergence(ref_tokens, test_tokens)
+    return DiffReport(
+        n_positions=int(max_abs.size),
+        max_abs=float(max_abs.max()),
+        mean_kl=float(kl.mean()),
+        max_kl=float(kl.max()),
+        topk_overlap=float(overlap.mean()),
+        first_divergent_token=div,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ToleranceGate:
+    """Pass/fail contract over a :class:`DiffReport`.
+
+    Defaults are fully permissive; a caller opts into each bound. ``check``
+    returns the list of violated bounds (empty = pass) so a failed gate can
+    report *why* — the API a lossy cold tier wires into its promotion path.
+    """
+    max_abs: float = math.inf
+    max_mean_kl: float = math.inf
+    min_topk_overlap: float = 0.0
+    require_token_match: bool = False
+
+    def check(self, report: DiffReport) -> List[str]:
+        v: List[str] = []
+        if report.max_abs > self.max_abs:
+            v.append(f"max_abs {report.max_abs:.3e} > {self.max_abs:.3e}")
+        if report.mean_kl > self.max_mean_kl:
+            v.append(f"mean_kl {report.mean_kl:.3e} > {self.max_mean_kl:.3e}")
+        if report.topk_overlap < self.min_topk_overlap:
+            v.append(f"topk_overlap {report.topk_overlap:.3f} < "
+                     f"{self.min_topk_overlap:.3f}")
+        if self.require_token_match and report.first_divergent_token != -1:
+            v.append(f"tokens diverge at position {report.first_divergent_token}")
+        return v
+
+    def ok(self, report: DiffReport) -> bool:
+        return not self.check(report)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def int8_requantize_cache(cache: Any) -> Any:
+    """Injected lossy perturbation: round-trip a Lexico cache's stored code
+    values through the int8 codec (``core/quant.py``).
+
+    Works on any cache NamedTuple exposing ``k_vals``/``k_idx``/``v_vals``/
+    ``v_idx`` (contiguous or paged, single-layer or layer-stacked). Values
+    are decoded to fp32, requantized to int8 with a per-vector scale, decoded
+    again, and cast back to the original storage dtype. Assumes a scale-free
+    storage codec (fp8/fp16); the int8 *storage* codec keeps its scale
+    outside the vals array and is not supported here. Note the fp8 grid is
+    coarser than a per-vector-scaled int8, so the roundtrip only perturbs
+    fp16 (and wider) storage — use ``codec="fp16"`` to inject a visible
+    error.
+    """
+    import jax.numpy as jnp
+    from repro.core import quant
+
+    def rq(vals: Any, idx: Any) -> Any:
+        code = quant.encode_int8(vals.astype(jnp.float32), idx)
+        return quant.decode_vals(code).astype(vals.dtype)
+
+    return cache._replace(
+        k_vals=rq(cache.k_vals, cache.k_idx),
+        v_vals=rq(cache.v_vals, cache.v_idx),
+    )

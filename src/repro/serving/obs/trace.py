@@ -16,6 +16,12 @@ Track layout
   step the request participated in, and instants for page aliasing, CoW
   copies, and promote stalls.
 
+Counter ("C") tracks ride the engine track when quality telemetry is on
+(``ObsConfig(quality=True)``): ``prefill_rel_residual`` per admission and
+``encode_rel_residual`` / ``encode_nnz`` per decode step with at least one
+evictee write, each with ``k``/``v`` series — Perfetto renders them as
+stacked time-series lanes above the spans.
+
 Timestamps are ``time.perf_counter`` deltas from recorder construction,
 scaled to microseconds as the format requires.
 """
@@ -87,6 +93,12 @@ class TraceRecorder:
         if args:
             ev["args"] = args
         self.events.append(ev)
+
+    def counter(self, name: str, tid: int, **values: float) -> None:
+        """Counter ("C") sample: each kwarg becomes a series on the
+        ``name`` counter track (Perfetto draws them as a time series)."""
+        self.events.append({"name": name, "ph": "C", "pid": _PID, "tid": tid,
+                            "ts": self._ts(), "args": dict(values)})
 
     # -- export -----------------------------------------------------------
     def to_chrome_trace(self) -> Dict:

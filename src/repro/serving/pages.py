@@ -66,6 +66,10 @@ class PageAllocator:
         # optional lifecycle journal (repro.serving.obs.EventJournal); None
         # keeps every operation hook-free
         self.journal = None
+        # optional per-page encode-quality tags (repro.serving.obs.PageQuality)
+        # — populated only when the engine runs with ObsConfig(quality=True);
+        # tags die with the page (freed) or travel with it (demote)
+        self.quality: Dict[int, object] = {}
 
     @property
     def capacity(self) -> int:
@@ -131,6 +135,7 @@ class PageAllocator:
         if refs == 0:
             del self._refs[page]
             self._free.append(page)
+            self.quality.pop(page, None)
         if self.journal is not None:
             self.journal.emit("page_decref", page=page, refs=refs)
 
@@ -143,6 +148,26 @@ class PageAllocator:
     def refcount(self, page: int) -> int:
         """Current reference count (0 = free or never allocated)."""
         return self._refs.get(page, 0)
+
+    # ------------------------------------------------- encode-quality tags
+
+    def set_quality(self, page: int, tag: object) -> None:
+        """Attach an encode-quality tag to a *live* page (quality telemetry
+        only — no-op semantics are the caller's business when disabled)."""
+        if page == NULL_PAGE:
+            raise ValueError("the null/trash page 0 carries no quality tag")
+        if page not in self._refs:
+            raise KeyError(f"page {page} is not allocated")
+        self.quality[page] = tag
+
+    def get_quality(self, page: int):
+        """The page's quality tag, or ``None`` when untagged/free."""
+        return self.quality.get(page)
+
+    def pop_quality(self, page: int):
+        """Detach and return the page's tag (``None`` when untagged) — used
+        by demotion to hand the tag to the host tier."""
+        return self.quality.pop(page, None)
 
     def allocated_pages(self) -> List[int]:
         """Page ids currently allocated (the demotion candidate set)."""
@@ -167,6 +192,7 @@ class PageAllocator:
             raise KeyError(f"page {page} is not allocated (demote after free?)")
         refs = self._refs.pop(page)
         self._free.append(page)
+        self.quality.pop(page, None)  # caller pops first to carry the tag
         self.pages_demoted += 1
         if self.journal is not None:
             self.journal.emit("page_demote", page=page, refs=refs)

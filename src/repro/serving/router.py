@@ -362,6 +362,17 @@ class ReplicaRouter:
             for k, s in enumerate(snaps)]
         return out
 
+    def quality_summary(self) -> Dict:
+        """Fleet-merged compression-quality block: exact counter/sketch
+        merge over every replica's :class:`QualityRecorder` summary (see
+        ``obs.merge_quality_blocks``; ``drift_score`` is the worst replica's
+        score — one stale replica should surface, not be averaged away).
+        Empty dict when quality telemetry is off."""
+        from repro.serving.obs.quality import merge_quality_blocks
+        return merge_quality_blocks(
+            [eng.quality.summary() for eng in self.engines
+             if eng.quality is not None])
+
     def requests_routed(self, replica_id: int) -> int:
         c = self.registry.get("router_requests_routed_total",
                               replica=replica_id)

@@ -80,6 +80,7 @@ class _HostPage:
     stores: HostStores            # (k_vals, k_idx, v_vals, v_idx) numpy
     refs: int                     # holders (slot table entries + index pins)
     nbytes: int
+    quality: object = None        # optional PageQuality tag riding the page
 
 
 class HostPageStore:
@@ -121,10 +122,12 @@ class HostPageStore:
         """Live handles (promotion-candidate enumeration)."""
         return list(self._pages)
 
-    def put(self, stores: HostStores, refs: int) -> PageHandle:
+    def put(self, stores: HostStores, refs: int,
+            quality: object = None) -> PageHandle:
         """Admit one demoted page holding ``refs`` transferred references.
-        Raises :class:`HostTierFull` at ``max_pages`` — the caller falls
-        back to destructive eviction."""
+        ``quality`` carries the page's encode-quality tag across the tier
+        move (``None`` when telemetry is off). Raises :class:`HostTierFull`
+        at ``max_pages`` — the caller falls back to destructive eviction."""
         if refs < 1:
             raise ValueError(f"a demoted page needs >= 1 holder, got {refs}")
         if self.room() <= 0:
@@ -134,7 +137,7 @@ class HostPageStore:
         self._next_hid += 1
         nbytes = int(sum(np.asarray(a).nbytes for a in stores))
         self._pages[handle] = _HostPage(stores=stores, refs=refs,
-                                        nbytes=nbytes)
+                                        nbytes=nbytes, quality=quality)
         self.bytes_resident += nbytes
         if self.journal is not None:
             self.journal.emit("host_put", hid=handle.hid, refs=refs)
@@ -171,6 +174,20 @@ class HostPageStore:
             self.bytes_resident -= page.nbytes
             return True
         return False
+
+    def get_quality(self, handle: PageHandle):
+        """The page's encode-quality tag (``None`` when untagged)."""
+        page = self._pages.get(handle)
+        return page.quality if page is not None else None
+
+    def pop_quality(self, handle: PageHandle):
+        """Detach and return a resident page's tag (``None`` when untagged)
+        — promotion hands it back to the device allocator *before* pop."""
+        page = self._pages.get(handle)
+        if page is None:
+            return None
+        tag, page.quality = page.quality, None
+        return tag
 
     def pop(self, handle: PageHandle) -> Tuple[HostStores, int]:
         """Remove ``handle`` for promotion: returns ``(stores, refs)`` — the

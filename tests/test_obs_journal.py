@@ -198,6 +198,50 @@ def test_promote_onto_live_page_flagged():
 
 
 # ---------------------------------------------------------------------------
+# page_quality events (compression-quality tags)
+# ---------------------------------------------------------------------------
+
+def _quality_trace(**tag_overrides):
+    tag = {"seq": 1, "ev": "page_quality", "page": 3, "count": 4,
+           "rel_mean": 0.2, "rel_max": 0.4, "nnz_mean": 3.0}
+    tag.update(tag_overrides)
+    return [{"seq": 0, "ev": "page_alloc", "page": 3}, tag,
+            {"seq": 2, "ev": "page_decref", "page": 3, "refs": 0}]
+
+
+def test_clean_quality_tag_replays_clean():
+    assert replay_check(_quality_trace()) == []
+
+
+def test_quality_on_null_page_flagged():
+    v = replay_check([{"seq": 0, "ev": "page_quality", "page": 0,
+                       "count": 4, "rel_mean": 0.2, "rel_max": 0.4,
+                       "nnz_mean": 3.0}])
+    assert "quality-null-page" in _kinds(v)
+
+
+def test_quality_on_dead_page_flagged():
+    evs = [
+        {"seq": 0, "ev": "page_alloc", "page": 3},
+        {"seq": 1, "ev": "page_decref", "page": 3, "refs": 0},
+        {"seq": 2, "ev": "page_quality", "page": 3, "count": 1,
+         "rel_mean": 0.1, "rel_max": 0.1, "nnz_mean": 2.0},
+    ]
+    v = replay_check(evs)
+    assert _kinds(v) == {"quality-on-dead-page"}
+    assert v[0].seq == 2
+
+
+def test_bad_quality_values_flagged():
+    # each tamper breaks one statistic-sanity invariant: zero count,
+    # negative residual, max below mean, non-finite fields
+    for bad in ({"count": 0}, {"rel_mean": -0.5}, {"rel_max": 0.1},
+                {"rel_mean": float("nan")}, {"nnz_mean": float("inf")}):
+        kinds = _kinds(replay_check(_quality_trace(**bad)))
+        assert "bad-quality-value" in kinds, bad
+
+
+# ---------------------------------------------------------------------------
 # cross-replica replay: real two-replica traces, tampered router/replica logs
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,567 @@
+"""Compression-quality observability: sketch correctness, the live↔offline
+agreement anchor, engine differential, page tags, drift, and the
+bounded-error tolerance harness.
+
+The proof obligations (ISSUE PR 10):
+
+  * ``StreamingHist`` — exact associative/commutative merge, bounded
+    quantiles (at most one bin width above the empirical quantile for
+    in-range data), NaN/±inf/empty handling, dict round trip;
+  * agreement — the live telemetry residual (``omp.relative_residual`` over
+    the resid2 threaded out of ``prefill_compress``) matches the offline
+    Table-1 number (``dict_learning.relative_error``) on the same
+    dictionary/inputs to 1e-6;
+  * engine differential — tokens are bitwise identical with quality
+    telemetry on vs off, decode still compiles exactly once, and with
+    quality *off* the engine holds zero recording state;
+  * page tags — stamped at encode, carried across demote/promote, and every
+    emitted ``page_quality`` journal event replays clean;
+  * tolerance gate — a lossless rerun produces an all-zero DiffReport that
+    passes a tight gate; an injected int8 value-requantization is flagged.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import LexicoConfig
+from repro.core import dict_learning as dl
+from repro.core import omp
+from repro.core import sparse_cache as sc
+from repro.models import model as M
+from repro.models.cache_policy import LexicoPolicy
+from repro.serving import (
+    ContinuousBatchingEngine, EngineConfig, ObsConfig, Request, SwapConfig,
+)
+from repro.serving.obs import (
+    DiffReport, DriftMonitor, MetricsRegistry, PageQuality, QualityRecorder,
+    StreamingHist, ToleranceGate, compare_logits, diff_runs,
+    int8_requantize_cache, layer_table_from_block, merge_quality_blocks,
+    replay_check, token_divergence,
+)
+from tests.conftest import given, settings, st
+
+# ---------------------------------------------------------------------------
+# StreamingHist
+# ---------------------------------------------------------------------------
+
+
+def test_hist_counts_flows_and_moments():
+    h = StreamingHist(0.0, 1.0, 4)
+    h.add([0.1, 0.3, 0.3, 0.9])
+    h.add(np.array([-0.5, 2.0]))            # one under, one over
+    assert h.count == 6
+    assert h.underflow == 1 and h.overflow == 1
+    assert list(h.counts) == [1, 2, 0, 1]
+    assert h.vmin == -0.5 and h.vmax == 2.0
+    assert h.mean == pytest.approx((0.1 + 0.3 + 0.3 + 0.9 - 0.5 + 2.0) / 6)
+
+
+def test_hist_nan_and_inf():
+    h = StreamingHist(0.0, 1.0, 4)
+    h.add([math.nan, 0.5, math.inf, -math.inf, math.nan])
+    assert h.nan_count == 2
+    assert h.count == 3                      # NaNs excluded from count
+    assert h.overflow == 1 and h.underflow == 1
+    assert h.vmax == math.inf and h.vmin == -math.inf
+
+
+def test_hist_empty():
+    h = StreamingHist(0.0, 1.0, 8)
+    assert h.count == 0
+    assert math.isnan(h.mean)
+    assert math.isnan(h.quantile(0.5))
+    assert math.isnan(h.distance(StreamingHist(0.0, 1.0, 8)))
+    h.add([])                                # no-op, not an error
+    assert h.count == 0
+
+
+def test_hist_quantile_upper_bound(rng):
+    """quantile(q) is an upper bound on the empirical q-quantile, tight to
+    one bin width for in-range values."""
+    vals = np.sort(rng.uniform(0.0, 1.0, 500))
+    h = StreamingHist(0.0, 1.0, 64)
+    h.add(vals)
+    width = 1.0 / 64
+    n = vals.size
+    for q in (0.0, 0.1, 0.5, 0.9, 0.99, 1.0):
+        rank = min(n - 1, max(0, math.ceil(q * n) - 1))
+        emp = vals[rank]
+        got = h.quantile(q)
+        assert emp - 1e-12 <= got <= emp + width + 1e-12, q
+    assert h.quantile(1.0) == pytest.approx(h.vmax)
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+
+
+def test_hist_merge_matches_bulk_add(rng):
+    a_vals = rng.normal(0.5, 0.3, 200)
+    b_vals = np.concatenate([rng.normal(0.2, 0.1, 150), [math.nan, 9.0, -9.0]])
+    a = StreamingHist(0.0, 1.0, 32)
+    b = StreamingHist(0.0, 1.0, 32)
+    both = StreamingHist(0.0, 1.0, 32)
+    a.add(a_vals)
+    b.add(b_vals)
+    both.add(a_vals)
+    both.add(b_vals)
+    m = a.merge(b)
+    assert list(m.counts) == list(both.counts)
+    assert (m.underflow, m.overflow, m.nan_count) == \
+        (both.underflow, both.overflow, both.nan_count)
+    assert m.vmin == both.vmin and m.vmax == both.vmax
+    assert m.total_sum == pytest.approx(both.total_sum)
+    # inputs not mutated
+    assert a.count == np.isfinite(a_vals).sum()
+
+
+def test_hist_layout_mismatch_raises():
+    with pytest.raises(ValueError, match="bin layout"):
+        StreamingHist(0.0, 1.0, 8).merge(StreamingHist(0.0, 2.0, 8))
+    with pytest.raises(ValueError, match="hi > lo"):
+        StreamingHist(1.0, 1.0, 8)
+    with pytest.raises(ValueError, match="n_bins"):
+        StreamingHist(0.0, 1.0, 0)
+
+
+def test_hist_dict_roundtrip():
+    h = StreamingHist(0.0, 1.5, 16)
+    h.add([0.1, 0.7, 5.0, -1.0, math.nan])
+    back = StreamingHist.from_dict(h.to_dict())
+    assert back.to_dict() == h.to_dict()
+    bad = h.to_dict()
+    bad["counts"] = bad["counts"][:-1]
+    with pytest.raises(ValueError, match="counts shape"):
+        StreamingHist.from_dict(bad)
+
+
+def test_hist_distance_total_variation():
+    a = StreamingHist(0.0, 1.0, 2)
+    b = StreamingHist(0.0, 1.0, 2)
+    a.add([0.1, 0.2])                        # all mass in bin 0
+    b.add([0.8, 0.9])                        # all mass in bin 1
+    assert a.distance(b) == pytest.approx(1.0)
+    assert a.distance(a) == 0.0
+    assert b.distance(a) == a.distance(b)    # symmetric
+
+
+@given(st.lists(st.floats(-2.0, 3.0), max_size=40),
+       st.lists(st.floats(-2.0, 3.0), max_size=40),
+       st.lists(st.floats(-2.0, 3.0), max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_hist_merge_associative_commutative(xs, ys, zs):
+    def mk(vals):
+        h = StreamingHist(0.0, 1.0, 8)
+        h.add(vals)
+        return h
+    a, b, c = mk(xs), mk(ys), mk(zs)
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    assert left.to_dict() == right.to_dict()
+    assert a.merge(b).to_dict() == b.merge(a).to_dict()
+
+
+# ---------------------------------------------------------------------------
+# PageQuality / DriftMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_page_quality_tag():
+    t = PageQuality()
+    t.add([0.1, 0.3], [2, 4])
+    t.add(np.array([0.5]), np.array([8]))
+    assert t.count == 3
+    assert t.rel_mean == pytest.approx(0.3)
+    assert t.rel_max == pytest.approx(0.5)
+    assert t.nnz_mean == pytest.approx(14 / 3)
+    t.add([], [])                            # no-op
+    assert t.count == 3
+
+    other = PageQuality()
+    other.add([0.9], [1])
+    m = t.merge(other)
+    assert (m.count, m.rel_max) == (4, pytest.approx(0.9))
+    assert t.count == 3                      # merge does not mutate
+
+    c = t.copy()
+    c.add([1.0], [1])
+    assert t.count == 3 and c.count == 4     # copy is independent
+
+    ev = t.to_event()
+    assert set(ev) == {"count", "rel_mean", "rel_max", "nnz_mean"}
+    assert ev["count"] == 3
+
+
+def test_drift_monitor(rng):
+    base = StreamingHist(0.0, 1.5, 64)
+    base.add(rng.uniform(0.1, 0.3, 400))
+    mon = DriftMonitor(base)
+    like = StreamingHist(0.0, 1.5, 64)
+    like.add(rng.uniform(0.1, 0.3, 400))
+    shifted = StreamingHist(0.0, 1.5, 64)
+    shifted.add(rng.uniform(0.9, 1.1, 400))
+    assert mon.score(like) < 0.15            # calibration-like traffic
+    assert mon.score(shifted) > 0.9          # residual mass moved
+    with pytest.raises(ValueError, match="empty"):
+        DriftMonitor(StreamingHist(0.0, 1.5, 64))
+    back = DriftMonitor.from_dict(mon.to_dict())
+    assert back.baseline.to_dict() == base.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# QualityRecorder (unit: fake aux)
+# ---------------------------------------------------------------------------
+
+L, B, KV = 2, 3, 2
+
+
+def _prefill_aux(rng, n=4):
+    return {
+        "k_rel": rng.uniform(0.0, 0.5, (L, 1, KV, n)).astype(np.float32),
+        "k_nnz": rng.integers(1, 9, (L, 1, KV, n)).astype(np.int32),
+        "v_rel": rng.uniform(0.0, 0.5, (L, 1, KV, n)).astype(np.float32),
+        "v_nnz": rng.integers(1, 9, (L, 1, KV, n)).astype(np.int32),
+    }
+
+
+def _decode_aux(rng, wrote):
+    return {
+        "k_rel": rng.uniform(0.0, 0.5, (L, B, KV)).astype(np.float32),
+        "k_nnz": rng.integers(1, 9, (L, B, KV)).astype(np.int32),
+        "v_rel": rng.uniform(0.0, 0.5, (L, B, KV)).astype(np.float32),
+        "v_nnz": rng.integers(1, 9, (L, B, KV)).astype(np.int32),
+        "wrote": np.broadcast_to(np.asarray(wrote, bool), (L, B)),
+    }
+
+
+def test_recorder_prefill_and_decode_accounting(rng):
+    rec = QualityRecorder(n_layers=L, s_max=8)
+    aux = _prefill_aux(rng)
+    rec.record_prefill(aux, tier=8)
+    assert rec.encodes == L * 2 * KV * 4     # both roles, every position
+    # delta attainment bookkeeping matches a direct count against the cap
+    expect = int((aux["k_nnz"] < 8).sum()) + int((aux["v_nnz"] < 8).sum())
+    assert rec.delta_attained == expect
+
+    # fully-shared admission (zero compressed positions) records nothing
+    rec.record_prefill(_prefill_aux(rng, n=0), tier=8)
+    assert rec.encodes == L * 2 * KV * 4
+
+    # decode: only `wrote` rows count, grouped by per-slot tier
+    daux = _decode_aux(rng, [True, False, True])
+    rec.record_decode(daux, tiers=np.array([2, 4, 8]))
+    assert rec.encodes == L * 2 * KV * 4 + L * 2 * KV * 2
+    s = rec.summary()
+    assert set(s["tiers"]) == {"2", "8"}     # tier 4's row never wrote
+    assert s["tiers"]["2"]["encodes"] == L * 2 * KV
+
+    # a step where nothing wrote records nothing
+    before = rec.encodes
+    rec.record_decode(_decode_aux(rng, [False] * B), tiers=np.array([2, 4, 8]))
+    assert rec.encodes == before
+
+
+def test_recorder_filters_and_layer_table(rng):
+    rec = QualityRecorder(n_layers=L, s_max=8)
+    rec.record_prefill(_prefill_aux(rng), tier=4)
+    whole = rec.rel_hist()
+    by_layer = sum(rec.rel_hist(layer=i).count for i in range(L))
+    by_role = sum(rec.rel_hist(role=r).count for r in ("k", "v"))
+    assert whole.count == by_layer == by_role
+    assert rec.rel_hist(phase="decode").count == 0
+    assert rec.nnz_hist(tier=4).count == whole.count
+    # nnz sketch uses unit bins => exact integral counts
+    assert rec.nnz_hist().quantile(1.0) == rec.nnz_hist().vmax
+
+    table = rec.layer_table()
+    assert [r["layer"] for r in table] == list(range(L))
+    assert all(0.0 <= r["k_rel_mean"] <= 1.5 for r in table)
+
+
+def test_recorder_drift_baseline_roundtrip(rng):
+    rec = QualityRecorder(n_layers=L, s_max=8)
+    assert rec.drift_score() is None         # no baseline yet
+    rec.record_prefill(_prefill_aux(rng, n=400), tier=8)
+    rec.set_baseline()
+    assert rec.drift_score() == 0.0          # live == baseline right now
+
+    # snapshot -> fresh recorder -> load: same-distribution traffic scores ~0
+    saved = rec.baseline_dict()
+    rec2 = QualityRecorder(n_layers=L, s_max=8)
+    rec2.load_baseline(saved)
+    assert rec2.drift_score() is None        # baseline but no live data
+    rec2.record_prefill(_prefill_aux(rng, n=400), tier=8)
+    assert rec2.drift_score() < 0.25
+
+
+def test_recorder_registry_families(rng):
+    reg = MetricsRegistry()
+    rec = QualityRecorder(n_layers=L, s_max=8, registry=reg)
+    rec.record_prefill(_prefill_aux(rng), tier=8)
+    text = reg.to_prometheus()
+    assert "lexico_quality_encodes_total" in text
+    assert "lexico_quality_delta_attained_total" in text
+    assert "lexico_quality_rel_residual_mean" in text
+    assert 'phase="prefill"' in text and 'role="k"' in text
+
+
+def test_merge_quality_blocks_exact(rng):
+    r1 = QualityRecorder(n_layers=L, s_max=8)
+    r2 = QualityRecorder(n_layers=L, s_max=8)
+    both = QualityRecorder(n_layers=L, s_max=8)
+    a1, a2 = _prefill_aux(rng), _prefill_aux(rng, n=6)
+    r1.record_prefill(a1, tier=4)
+    r2.record_prefill(a2, tier=8)
+    both.record_prefill(a1, tier=4)
+    both.record_prefill(a2, tier=8)
+
+    merged = merge_quality_blocks([r1.summary(), r2.summary()])
+    ref = both.summary()
+    assert merged["encodes"] == ref["encodes"]
+    assert merged["tiers"] == ref["tiers"]
+    assert merged["per_layer"] == ref["per_layer"]      # sketch-exact
+    assert merged["rel_residual"] == ref["rel_residual"]
+    assert layer_table_from_block(merged) == layer_table_from_block(ref)
+
+    assert merge_quality_blocks([]) == {}
+    assert merge_quality_blocks([{}, r1.summary()])["encodes"] == r1.encodes
+
+    # drift merges as the worst replica, not the average
+    r1.set_baseline()
+    r2.record_prefill(_prefill_aux(rng), tier=8)
+    s1, s2 = r1.summary(), r2.summary()
+    s2["drift_score"] = 0.7
+    assert merge_quality_blocks([s1, s2])["drift_score"] == 0.7
+
+
+# ---------------------------------------------------------------------------
+# agreement: live telemetry == offline Table-1 numbers (same dict, same keys)
+# ---------------------------------------------------------------------------
+
+AGREE_TOL = 1e-6
+
+
+def test_relative_residual_matches_offline_relative_error(rng):
+    """The live path (resid2 threaded out of OMP -> omp.relative_residual)
+    and the offline Table-1 path (dict_learning.relative_error) are the same
+    number on the same dictionary/inputs — the shared-helper contract."""
+    d, N, s = 16, 64, 4
+    D = jnp.asarray(rng.normal(size=(d, N)), jnp.float32)
+    D = D / jnp.linalg.norm(D, axis=0, keepdims=True)
+    K = jnp.asarray(rng.normal(size=(24, d)), jnp.float32)
+    res = omp.omp_batch(K, D, s)
+    live = np.asarray(omp.relative_residual(res.resid2, K))
+    offline = np.asarray(dl.relative_error(D, K, s))
+    np.testing.assert_allclose(live, offline, atol=AGREE_TOL)
+
+
+def test_prefill_quality_aux_matches_offline(rng):
+    """The per-position k_rel/v_rel the engine records equals the offline
+    relative error of the exact same rows."""
+    d, N, s, kv, T = 16, 64, 4, 2, 12
+    D = jnp.asarray(rng.normal(size=(d, N)), jnp.float32)
+    D = D / jnp.linalg.norm(D, axis=0, keepdims=True)
+    K = jnp.asarray(rng.normal(size=(1, kv, T, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(1, kv, T, d)), jnp.float32)
+    cache = sc.init_layer_cache(1, kv, d, t_max=16, n_b=4, s=s,
+                                val_dtype=jnp.float32)
+    _, qaux = sc.prefill_compress(cache, K, V, D, D, s=s, return_quality=True)
+    k_rel = np.asarray(qaux["k_rel"])[0]            # (kv, n_comp)
+    n_comp = k_rel.shape[-1]
+    assert n_comp == T - 4                           # n_b stays uncompressed
+    for role, X in (("k_rel", K), ("v_rel", V)):
+        got = np.asarray(qaux[role])[0]
+        ref = np.asarray(dl.relative_error(
+            D, X[0, :, :n_comp].reshape(-1, d), s)).reshape(kv, n_comp)
+        np.testing.assert_allclose(got, ref, atol=AGREE_TOL, err_msg=role)
+    assert np.all(np.asarray(qaux["k_nnz"]) <= s)
+    assert np.all(np.asarray(qaux["k_nnz"]) >= 1)
+
+
+# ---------------------------------------------------------------------------
+# engine differential (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+CFG = configs.get_smoke("llama3.2-1b")
+LEX = LexicoConfig(N=64, s=8, n_b=4, chunk=None)
+
+
+@pytest.fixture(scope="module")
+def served():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, LEX)
+    return params, bank
+
+
+def _requests(rng):
+    spec = [(9, 3, 2), (30, 4, 8), (12, 2, 4), (26, 3, 6), (8, 2, 2)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, tier=tier)
+            for i, (pl, mn, tier) in enumerate(spec)]
+
+
+def _run(params, bank, reqs, **cfg_kw):
+    eng = ContinuousBatchingEngine(
+        params, CFG, LEX, bank,
+        EngineConfig(n_slots=3, t_max=64, min_bucket=8, layout="paged",
+                     page_size=8, **cfg_kw))
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    done = eng.run()
+    return {rid: done[rid].generated_tokens for rid in done}, eng
+
+
+def test_engine_quality_differential(served):
+    """Tokens bitwise identical with quality telemetry on vs off; zero
+    recording state when disabled; decode still compiles exactly once; every
+    page_quality journal event replays clean."""
+    params, bank = served
+    reqs = _requests(np.random.default_rng(7))
+
+    plain, off_eng = _run(params, bank, reqs)
+    on, eng = _run(params, bank, reqs,
+                   obs=ObsConfig(quality=True, journal=True))
+
+    assert sorted(on) == sorted(plain)
+    for rid in plain:
+        assert on[rid] == plain[rid], rid
+
+    # zero recording state when disabled
+    assert off_eng.quality is None
+    assert "quality" not in off_eng.metrics.to_dict()
+
+    # decode is still a single compile on both engines
+    assert off_eng.compile_counts["decode"] == 1
+    assert eng.compile_counts["decode"] == 1
+
+    q = eng.metrics.to_dict()["quality"]
+    assert q["encodes"] > 0
+    assert set(q["tiers"]) <= {"2", "4", "6", "8"}   # the request tiers
+    assert sum(d["encodes"] for d in q["tiers"].values()) == q["encodes"]
+    # delta=0.0 => OMP never early-exits => attainment is exactly zero
+    assert q["delta_attained_rate"] == 0.0
+    assert q["rel_residual"]["count"] == q["encodes"]
+    assert 0.0 < q["rel_residual"]["mean"] < 1.5
+    assert len(q["per_layer"]) == CFG.num_layers
+    # both phases observed: admissions and decode evictee writes
+    assert eng.quality.rel_hist(phase="prefill").count > 0
+    assert eng.quality.rel_hist(phase="decode").count > 0
+
+    # page tags were stamped and journaled, and the journal replays clean
+    evs = eng.journal.events
+    assert sum(e["ev"] == "page_quality" for e in evs) > 0
+    assert replay_check(evs) == []
+
+    # the human-facing table is well-formed
+    table = eng.quality.layer_table()
+    assert len(table) == CFG.num_layers
+    assert all(np.isfinite(r["k_rel_mean"]) for r in table)
+
+
+def test_engine_quality_tags_survive_swap(served):
+    """Quality tags ride demote/promote: a swap-constrained quality run still
+    matches the unconstrained oracle bitwise, pages genuinely round-trip
+    device→host→device, and the journal (including the re-stamped
+    page_quality events after promote) replays clean."""
+    params, bank = served
+    reqs = _requests(np.random.default_rng(7))
+
+    oracle, _ = _run(params, bank, reqs)
+    swapped, eng = _run(params, bank, reqs, n_pages=6, swap=SwapConfig(),
+                        obs=ObsConfig(quality=True, journal=True))
+
+    assert sorted(swapped) == sorted(oracle)
+    for rid in oracle:
+        assert swapped[rid] == oracle[rid], rid
+
+    md = eng.metrics.to_dict()
+    assert md["pages_demoted"] > 0 and md["pages_promoted"] > 0
+    assert md["quality"]["encodes"] > 0
+    evs = eng.journal.events
+    assert sum(e["ev"] == "page_quality" for e in evs) > 0
+    assert replay_check(evs) == []
+
+
+# ---------------------------------------------------------------------------
+# bounded-error differential harness
+# ---------------------------------------------------------------------------
+
+
+def test_compare_logits_and_diff_report(rng):
+    ref = rng.normal(size=(6, 32))
+    max_abs, kl, overlap = compare_logits(ref, ref)
+    assert np.all(max_abs == 0) and np.all(kl == 0) and np.all(overlap == 1)
+
+    test = ref.copy()
+    test[3] += 0.5 * rng.normal(size=32)
+    r = diff_runs(ref, test, [1, 2, 3, 9, 5, 6], [1, 2, 3, 4, 5, 6])
+    assert r.n_positions == 6
+    assert r.max_abs > 0 and r.mean_kl > 0
+    assert r.first_divergent_token == 3
+    assert isinstance(r, DiffReport) and r.to_dict()["max_abs"] == r.max_abs
+
+    with pytest.raises(ValueError, match="shape mismatch"):
+        compare_logits(ref, ref[:3])
+
+
+def test_token_divergence():
+    assert token_divergence([1, 2, 3], [1, 2, 3]) == -1
+    assert token_divergence([1, 2, 3], [1, 9, 3]) == 1
+    assert token_divergence([1, 2, 3], [1, 2]) == 2      # length mismatch
+    assert token_divergence([], []) == -1
+
+
+def test_tolerance_gate_violations():
+    rep = DiffReport(n_positions=4, max_abs=0.1, mean_kl=0.01, max_kl=0.02,
+                     topk_overlap=0.6, first_divergent_token=2)
+    loose = ToleranceGate()
+    assert loose.ok(rep)                     # fully permissive defaults
+    tight = ToleranceGate(max_abs=1e-6, max_mean_kl=1e-6,
+                          min_topk_overlap=0.9, require_token_match=True)
+    v = tight.check(rep)
+    assert len(v) == 4
+    assert any("max_abs" in s for s in v)
+    assert any("diverge at position 2" in s for s in v)
+    zero = DiffReport(n_positions=1, max_abs=0.0, mean_kl=0.0, max_kl=0.0,
+                      topk_overlap=1.0, first_divergent_token=-1)
+    assert tight.ok(zero)
+
+
+def test_tolerance_harness_flags_int8_requant(rng):
+    """The acceptance gate: a lossless rerun passes a tight gate; an injected
+    int8 value requantization of the cache produces a nonzero diff the same
+    gate flags. (codec="fp16": the fp8 grid is coarser than per-vector int8,
+    so the default codec would make the injection a no-op.)"""
+    lex = LexicoConfig(N=64, s=8, n_b=4, chunk=None, codec="fp16")
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    bank = M.init_dictionary_bank(jax.random.PRNGKey(1), CFG, lex)
+    pol = LexicoPolicy(lex)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, 12)), jnp.int32)
+    lg, state = M.prefill(params, CFG, pol, {"tokens": toks}, bank=bank,
+                          t_max=32)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    lg_ref, _ = M.decode_step(params, CFG, pol, state, tok, bank=bank)
+    lg_rerun, _ = M.decode_step(params, CFG, pol, state, tok, bank=bank)
+    state_q = state._replace(cache=int8_requantize_cache(state.cache))
+    lg_lossy, _ = M.decode_step(params, CFG, pol, state_q, tok, bank=bank)
+
+    gate = ToleranceGate(max_abs=1e-6, require_token_match=True)
+    lossless = diff_runs(lg_ref, lg_rerun,
+                         jnp.argmax(lg_ref, -1), jnp.argmax(lg_rerun, -1))
+    assert lossless.max_abs == 0.0 and lossless.mean_kl == 0.0
+    assert gate.ok(lossless)
+
+    # the requantization genuinely moved stored values...
+    delta = np.abs(np.asarray(state.cache.k_vals, np.float32)
+                   - np.asarray(state_q.cache.k_vals, np.float32))
+    assert delta.max() > 0
+    # ...and the gate flags the resulting bounded logit error
+    lossy = diff_runs(lg_ref, lg_lossy)
+    assert lossy.max_abs > 1e-6
+    assert not gate.ok(lossy)
+    assert any("max_abs" in s for s in gate.check(lossy))
